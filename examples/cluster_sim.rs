@@ -1,0 +1,62 @@
+//! Cluster-scale simulation driver (paper Figs. 7, 9, 11 + Table 1).
+//!
+//!     cargo run --release --example cluster_sim -- [--experiment all]
+//!
+//! Prints each experiment in the paper's row/series format and writes the
+//! series to results/*.csv for plotting.
+
+use anyhow::Result;
+
+use mindspeed_rl::metrics::CsvWriter;
+use mindspeed_rl::sim;
+use mindspeed_rl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let which = args.str_or("experiment", "all");
+    let all = which == "all";
+
+    if all || which == "table1" {
+        sim::run_named_experiment("table1")?;
+        println!();
+    }
+    if all || which == "fig7" {
+        sim::run_named_experiment("fig7")?;
+        let mut csv = CsvWriter::new(&["model", "system", "tps", "speedup"]);
+        for r in sim::fig7_rows() {
+            csv.row(&[
+                r.model.name().to_string(),
+                r.system.name().to_string(),
+                format!("{:.1}", r.tps),
+                format!("{:.3}", r.speedup_vs_openrlhf),
+            ]);
+        }
+        csv.write("results/fig7.csv")?;
+        println!();
+    }
+    if all || which == "fig9" {
+        sim::run_named_experiment("fig9")?;
+        let mut csv = CsvWriter::new(&["system", "nodes", "npus", "tps_per_dev", "linearity"]);
+        for r in sim::fig9_rows() {
+            csv.row(&[
+                r.system.name().to_string(),
+                r.nodes.to_string(),
+                r.npus.to_string(),
+                format!("{:.2}", r.tps_per_device),
+                format!("{:.4}", r.linearity),
+            ]);
+        }
+        csv.write("results/fig9.csv")?;
+        println!();
+    }
+    if all || which == "fig11" {
+        sim::run_named_experiment("fig11")?;
+        let mut csv = CsvWriter::new(&["iteration", "tps"]);
+        for (i, tps) in sim::fig11_series(100, 0) {
+            csv.row_f64(&[i as f64, tps]);
+        }
+        csv.write("results/fig11.csv")?;
+    }
+    println!("\nCSV series written to results/");
+    Ok(())
+}

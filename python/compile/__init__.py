@@ -1,0 +1,5 @@
+"""Build-time Python for the MindSpeed RL reproduction (L1 kernels + L2 model).
+
+Never imported at runtime: `make artifacts` runs compile.aot once and the
+Rust binary is self-contained afterwards.
+"""

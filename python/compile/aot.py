@@ -1,0 +1,266 @@
+"""AOT export: lower the L2 programs to HLO text + manifest for Rust.
+
+Interchange format is HLO TEXT (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs per preset `<p>`:
+    artifacts/<p>/decode_step.hlo.txt   incremental decode (KV cache)
+    artifacts/<p>/logprobs.hlo.txt      per-token log-probs (ref + old-policy)
+    artifacts/<p>/train_step.hlo.txt    GRPO fwd/bwd + Adam
+    artifacts/<p>/params_init.bin       raw little-endian f32, manifest order
+    artifacts/<p>/manifest.json         shapes/orders/vocab — the Rust contract
+"""
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, generate, losses, model
+from .configs import PAD_ID, BOS_ID, EOS_ID, VOCAB, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(params: List[jax.Array]):
+    return [_sds(p.shape, p.dtype) for p in params]
+
+
+def _sig(entries):
+    return [
+        {"name": n, "shape": list(map(int, s)), "dtype": d} for (n, s, d) in entries
+    ]
+
+
+def export_preset(preset: str, out_dir: str, batch: int, seed: int,
+                  use_kernels_train: bool) -> dict:
+    cfg = configs.PRESETS[preset]
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(cfg, key)
+    names = model.param_names(cfg)
+    assert len(params) == len(names)
+    pdir = os.path.join(out_dir, preset)
+    os.makedirs(pdir, exist_ok=True)
+
+    s = cfg.max_seq
+    b = batch
+    np_count = len(params)
+    hyper = losses.TrainHyper()
+
+    # ------------------------------------------------ params_init.bin
+    offset = 0
+    pinfo = []
+    with open(os.path.join(pdir, "params_init.bin"), "wb") as f:
+        for n, p in zip(names, params):
+            arr = np.asarray(p, dtype=np.float32)
+            f.write(arr.tobytes())
+            pinfo.append(
+                {
+                    "name": n,
+                    "shape": list(arr.shape),
+                    "dtype": "f32",
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+
+    artifacts = []
+
+    # ------------------------------------------------ decode_step
+    kv_shape = (cfg.n_layers, 2, b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+    def decode_fn(params, kv, pos, token):
+        return generate.decode_step(cfg, params, kv, pos, token)
+
+    lowered = jax.jit(decode_fn).lower(
+        _param_specs(params),
+        _sds(kv_shape),
+        _sds((b,), jnp.int32),
+        _sds((b,), jnp.int32),
+    )
+    with open(os.path.join(pdir, "decode_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts.append(
+        {
+            "kind": "decode_step",
+            "file": "decode_step.hlo.txt",
+            "batch": b,
+            "seq": s,
+            "inputs": _sig(
+                [(n, p.shape, "f32") for n, p in zip(names, params)]
+                + [
+                    ("kv", kv_shape, "f32"),
+                    ("pos", (b,), "i32"),
+                    ("token", (b,), "i32"),
+                ]
+            ),
+            "outputs": _sig(
+                [("logits", (b, cfg.vocab_size), "f32"), ("kv", kv_shape, "f32")]
+            ),
+            "use_kernels": False,
+        }
+    )
+
+    # ------------------------------------------------ logprobs
+    def logprobs_fn(params, tokens):
+        return (model.logprobs(cfg, params, tokens, use_kernels=True),)
+
+    lowered = jax.jit(logprobs_fn).lower(_param_specs(params), _sds((b, s), jnp.int32))
+    with open(os.path.join(pdir, "logprobs.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts.append(
+        {
+            "kind": "logprobs",
+            "file": "logprobs.hlo.txt",
+            "batch": b,
+            "seq": s,
+            "inputs": _sig(
+                [(n, p.shape, "f32") for n, p in zip(names, params)]
+                + [("tokens", (b, s), "i32")]
+            ),
+            "outputs": _sig([("logprobs", (b, s - 1), "f32")]),
+            "use_kernels": True,
+        }
+    )
+
+    # ------------------------------------------------ train_step
+    def train_fn(params, m, v, step, lr, tokens, mask, old_lp, ref_lp, adv):
+        batch_t = (tokens, mask, old_lp, ref_lp, adv)
+        new_p, new_m, new_v, loss, kl, ratio = losses.train_step(
+            cfg, params, m, v, step, lr, batch_t, hyper, use_kernels_train
+        )
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, kl, ratio)
+
+    lowered = jax.jit(train_fn).lower(
+        _param_specs(params),
+        _param_specs(params),
+        _param_specs(params),
+        _sds((), jnp.float32),
+        _sds((), jnp.float32),
+        _sds((b, s), jnp.int32),
+        _sds((b, s - 1), jnp.float32),
+        _sds((b, s - 1), jnp.float32),
+        _sds((b, s - 1), jnp.float32),
+        _sds((b,), jnp.float32),
+    )
+    with open(os.path.join(pdir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts.append(
+        {
+            "kind": "train_step",
+            "file": "train_step.hlo.txt",
+            "batch": b,
+            "seq": s,
+            "inputs": _sig(
+                [(n, p.shape, "f32") for n, p in zip(names, params)]
+                + [(f"m.{n}", p.shape, "f32") for n, p in zip(names, params)]
+                + [(f"v.{n}", p.shape, "f32") for n, p in zip(names, params)]
+                + [
+                    ("step", (), "f32"),
+                    ("lr", (), "f32"),
+                    ("tokens", (b, s), "i32"),
+                    ("resp_mask", (b, s - 1), "f32"),
+                    ("old_lp", (b, s - 1), "f32"),
+                    ("ref_lp", (b, s - 1), "f32"),
+                    ("adv", (b,), "f32"),
+                ]
+            ),
+            "outputs": _sig(
+                [(n, p.shape, "f32") for n, p in zip(names, params)]
+                + [(f"m.{n}", p.shape, "f32") for n, p in zip(names, params)]
+                + [(f"v.{n}", p.shape, "f32") for n, p in zip(names, params)]
+                + [("loss", (), "f32"), ("kl", (), "f32"), ("ratio", (), "f32")]
+            ),
+            "use_kernels": use_kernels_train,
+        }
+    )
+
+    manifest = {
+        "preset": preset,
+        "model": {
+            "name": cfg.name,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "vocab_size": cfg.vocab_size,
+            "head_dim": cfg.head_dim,
+            "rope_base": cfg.rope_base,
+            "norm_eps": cfg.norm_eps,
+            "param_count": cfg.param_count(),
+            "moe": (
+                {"num_experts": cfg.moe.num_experts, "top_k": cfg.moe.top_k}
+                if cfg.moe
+                else None
+            ),
+        },
+        "vocab": VOCAB,
+        "pad_id": PAD_ID,
+        "bos_id": BOS_ID,
+        "eos_id": EOS_ID,
+        "hyper": {
+            "clip_eps": hyper.clip_eps,
+            "kl_coef": hyper.kl_coef,
+            "beta1": hyper.beta1,
+            "beta2": hyper.beta2,
+            "adam_eps": hyper.adam_eps,
+        },
+        "n_params": np_count,
+        "params": pinfo,
+        "params_file": "params_init.bin",
+        "artifacts": artifacts,
+        "seed": seed,
+    }
+    with open(os.path.join(pdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small,moe_tiny",
+        help="comma-separated preset names (see configs.PRESETS)",
+    )
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--train-kernels",
+        action="store_true",
+        help="lower the train_step through the Pallas kernels (slower CPU "
+        "lowering; logprobs always uses them)",
+    )
+    args = ap.parse_args()
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        m = export_preset(preset, args.out_dir, args.batch, args.seed, args.train_kernels)
+        sizes = {
+            a["kind"]: os.path.getsize(os.path.join(args.out_dir, preset, a["file"]))
+            for a in m["artifacts"]
+        }
+        print(f"[aot] {preset}: params={m['model']['param_count']:,} {sizes}")
+
+
+if __name__ == "__main__":
+    main()

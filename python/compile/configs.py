@@ -1,0 +1,101 @@
+"""Model + artifact configurations for the AOT pipeline.
+
+The vocabulary is defined HERE and exported through the artifact manifest;
+the Rust tokenizer (rust/src/tokenizer) is constructed from the manifest so
+the two sides cannot drift.
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+# Char-level vocab: PAD, BOS, EOS, then printable task characters.
+# Index == token id. Padded to 64 entries at the model level.
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+CHARS = "0123456789+-*/=()., ?xyabcdefghijklmnopqrstuvwz"
+VOCAB = SPECIALS + list(CHARS)
+VOCAB_SIZE = 64  # model embedding rows (>= len(VOCAB), MXU-friendly)
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 4
+    top_k: int = 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    vocab_size: int = VOCAB_SIZE
+    moe: Optional[MoEConfig] = None
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        per_layer = d + 3 * d * d + d * d + d  # norms + qkv + o
+        if self.moe is None:
+            per_layer += 3 * d * f
+        else:
+            e = self.moe.num_experts
+            per_layer += d * e + e * 3 * d * f
+        return v * d + self.n_layers * per_layer + d + d * v
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT-exported HLO program."""
+
+    kind: str  # "decode" | "logprobs" | "train_step"
+    batch: int
+    seq: int
+
+
+@dataclass(frozen=True)
+class BuildConfig:
+    model: ModelConfig
+    artifacts: tuple
+    seed: int = 0
+
+
+# ---------------------------------------------------------------- presets
+TINY = ModelConfig(name="tiny", d_model=64, n_layers=2, n_heads=4, d_ff=128, max_seq=64)
+SMALL = ModelConfig(name="small", d_model=256, n_layers=4, n_heads=8, d_ff=704, max_seq=128)
+# ~100M-class dense model for the end-to-end experiment (EXPERIMENTS.md)
+E2E = ModelConfig(name="e2e", d_model=512, n_layers=8, n_heads=8, d_ff=1408, max_seq=96)
+MOE_TINY = ModelConfig(
+    name="moe_tiny",
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    d_ff=128,
+    max_seq=64,
+    moe=MoEConfig(num_experts=4, top_k=2),
+)
+
+PRESETS = {m.name: m for m in [TINY, SMALL, E2E, MOE_TINY]}
+
+
+def build_config(name: str) -> BuildConfig:
+    """Default artifact set per preset: one decode shape, one logprobs shape,
+    one train-step shape, all sized to the model's max_seq."""
+    m = PRESETS[name]
+    arts = (
+        ArtifactSpec("decode", batch=8, seq=m.max_seq),
+        ArtifactSpec("logprobs", batch=8, seq=m.max_seq),
+        ArtifactSpec("train_step", batch=8, seq=m.max_seq),
+    )
+    return BuildConfig(model=m, artifacts=arts)

@@ -1,0 +1,109 @@
+"""Incremental (KV-cache) decode step — the generation-engine compute.
+
+The Rust generation engine (rust/src/generation) is a vLLM-style continuous
+batcher: each slot in the batch holds an independent sequence at its own
+position. The decode artifact therefore takes per-slot positions and a
+packed KV cache, exactly the interface a paged-attention engine presents:
+
+    decode_step(params, kv [L,2,B,H,Smax,hd], pos [B] i32, token [B] i32)
+        -> (logits [B, V], new_kv)
+
+Attention over the cache is masked per-slot (j <= pos), so slots at
+different depths coexist in one batch — this is what makes continuous
+batching work. The full-sequence Pallas flash kernel is the prefill/training
+path; this masked single-query attention is the decode path (the same
+prefill/decode kernel split vLLM and the paper's generation engine use).
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int) -> jax.Array:
+    return jnp.zeros(
+        (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim),
+        jnp.float32,
+    )
+
+
+def _rope_at(x: jax.Array, pos: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Apply RoPE to single-position vectors x: [B, H, hd] at angle pos[B]."""
+    d2 = cfg.head_dim // 2
+    inv_freq = 1.0 / (cfg.rope_base ** (jnp.arange(0, d2, dtype=jnp.float32) / d2))
+    angles = pos[:, None].astype(jnp.float32) * inv_freq[None, :]  # [B, d2]
+    cos = jnp.cos(angles)[:, None, :]  # [B, 1, d2]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decode_step(cfg: ModelConfig, params: List[jax.Array], kv: jax.Array,
+                pos: jax.Array, token: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One incremental decode step. Returns (logits [B, V], new_kv)."""
+    b = token.shape[0]
+    d, nh, hd, smax = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.max_seq
+    it = iter(params)
+    embed = next(it)
+    x = embed[token]  # [B, D]
+    scale = 1.0 / (hd**0.5)
+    col = jnp.arange(smax)  # [Smax]
+    attn_mask = (col[None, :] <= pos[:, None])[:, None, None, :]  # [B,1,1,Smax]
+
+    new_kv_layers = []
+    for li in range(cfg.n_layers):
+        attn_norm = next(it)
+        wqkv = next(it)
+        wo = next(it)
+        ffn_norm = next(it)
+
+        h = kernels.ref.rmsnorm(x, attn_norm, cfg.norm_eps)
+        qkv = h @ wqkv  # [B, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _rope_at(q.reshape(b, nh, hd), pos, cfg)  # [B, H, hd]
+        k = _rope_at(k.reshape(b, nh, hd), pos, cfg)
+        v = v.reshape(b, nh, hd)
+
+        # scatter k, v into the cache at each slot's position
+        k_cache = kv[li, 0]  # [B, H, Smax, hd]
+        v_cache = kv[li, 1]
+        onehot = (col[None, :] == pos[:, None]).astype(jnp.float32)  # [B, Smax]
+        oh = onehot[:, None, :, None]  # [B,1,Smax,1]
+        k_cache = k_cache * (1.0 - oh) + k[:, :, None, :] * oh
+        v_cache = v_cache * (1.0 - oh) + v[:, :, None, :] * oh
+        new_kv_layers.append(jnp.stack([k_cache, v_cache]))
+
+        scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale  # [B,H,Smax]
+        scores = jnp.where(attn_mask[:, :, 0, :], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhs,bhsd->bhd", p, v_cache).reshape(b, d)
+        x = x + o @ wo
+
+        h2 = kernels.ref.rmsnorm(x, ffn_norm, cfg.norm_eps)
+        if cfg.moe is None:
+            w_gate, w_up, w_down = next(it), next(it), next(it)
+            ff = kernels.ref.swiglu(h2 @ w_gate, h2 @ w_up) @ w_down
+        else:
+            router_w, e_gate, e_up, e_down = next(it), next(it), next(it), next(it)
+            # decode-time MoE: dense dispatch over top-k (B is small)
+            logits_r = h2 @ router_w
+            topv, topi = jax.lax.top_k(logits_r, cfg.moe.top_k)
+            gates = jax.nn.softmax(topv, axis=-1)  # [B, k]
+            eg = e_gate[topi]  # [B, k, D, F]
+            eu = e_up[topi]
+            ed = e_down[topi]  # [B, k, F, D]
+            gt = jnp.einsum("bd,bkdf->bkf", h2, eg)
+            up = jnp.einsum("bd,bkdf->bkf", h2, eu)
+            hidden = kernels.ref.swiglu(gt, up)
+            ff = jnp.einsum("bkf,bkfd,bk->bd", hidden, ed, gates)
+        x = x + ff
+
+    final_norm = next(it)
+    lm_head = next(it)
+    x = kernels.ref.rmsnorm(x, final_norm, cfg.norm_eps)
+    logits = x @ lm_head  # [B, V]
+    return logits, jnp.stack(new_kv_layers)

@@ -1,0 +1,25 @@
+"""L1 — Pallas kernels for the MindSpeed RL reproduction.
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and a hypothesis sweep in
+``python/tests/test_kernels.py``. All kernels run interpret=True (see
+common.py) and lower into the same HLO as the surrounding L2 model.
+"""
+
+from .attention import attention
+from .gmm import gmm
+from .grpo_loss import grpo_loss
+from .rmsnorm import rmsnorm
+from .rope import rope, rope_tables
+from .swiglu import swiglu
+from . import ref
+
+__all__ = [
+    "attention",
+    "gmm",
+    "grpo_loss",
+    "rmsnorm",
+    "rope",
+    "rope_tables",
+    "swiglu",
+    "ref",
+]

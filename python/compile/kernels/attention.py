@@ -1,0 +1,236 @@
+"""Blocked causal attention Pallas kernel (FlashAttention-style, fwd + bwd).
+
+Structure follows the TPU flash pattern (DESIGN.md §Hardware-Adaptation):
+
+- forward: grid (R, Q-blocks, K-blocks) with the K dimension innermost and
+  sequential; the output block and the online-softmax running statistics
+  (m, l) are carried across K steps by read-modify-write on output refs —
+  the interpret-mode equivalent of VMEM scratch accumulators. Emits both
+  the attention output and the per-row LSE for the backward pass.
+- backward: two kernels, both recomputing the probability blocks from
+  (q, k, lse) instead of materializing the S×S matrix (the flash trick):
+  a dQ pass with grid (R, Q-blocks, K-blocks) and a dK/dV pass with grid
+  (R, K-blocks, Q-blocks).
+
+Causal masking is done on global row/column indices, so padded rows/columns
+(sequence padded up to a block multiple) are masked exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+
+def _idx(axis_pid: int, block: int):
+    return pl.program_id(axis_pid) * block + jax.lax.broadcasted_iota(
+        jnp.int32, (block, 1), 0
+    )
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, lse_ref, *, scale, s_real, nk):
+    kb = pl.program_id(2)
+    q = q_ref[0]  # [bq, d]
+    k = k_ref[0]  # [bk, d]
+    v = v_ref[0]
+
+    bq = q.shape[0]
+    bk = k.shape[0]
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qi = _idx(1, bq)  # [bq, 1] global row ids
+    kj = _idx(2, bk)  # [bk, 1] global col ids
+    s = jnp.dot(q, k.T) * scale  # [bq, bk]
+    mask = (qi >= kj.T) & (kj.T < s_real)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]  # [bq, 1]
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = o_ref[0] * alpha + jnp.dot(p, v)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l_fin = l_ref[0]
+        l_safe = jnp.maximum(l_fin, 1e-30)
+        o_ref[0] = o_ref[0] / l_safe
+        lse_ref[0] = m_ref[0] + jnp.log(l_safe)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, scale, s_real, nk):
+    kb = pl.program_id(2)
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]  # [bq, 1]
+    delta = delta_ref[0]  # [bq, 1]
+    bq, bk = q.shape[0], k.shape[0]
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    qi = _idx(1, bq)
+    kj = _idx(2, bk)
+    s = jnp.dot(q, k.T) * scale
+    mask = (qi >= kj.T) & (kj.T < s_real)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # [bq, bk]
+    dp = jnp.dot(do, v.T)  # [bq, bk]
+    ds = p * (dp - delta)
+    dq_ref[0] = dq_ref[0] + jnp.dot(ds, k) * scale
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, scale, s_real, nq):
+    qb = pl.program_id(2)
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    bq, bk = q.shape[0], k.shape[0]
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    qi = pl.program_id(2) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    kj = pl.program_id(1) * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    s = jnp.dot(q, k.T) * scale
+    mask = (qi >= kj.T) & (kj.T < s_real) & (qi < s_real)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    dv_ref[0] = dv_ref[0] + jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    ds = p * (dp - delta)
+    dk_ref[0] = dk_ref[0] + jnp.dot(ds.T, q) * scale
+
+
+def _pad_rsd(x, sp):
+    return pad_axis(x, 1, sp)
+
+
+def _flash_fwd(q3, k3, v3, block_q, block_k):
+    r, s, d = q3.shape
+    bq = pick_block(s, block_q)
+    bk = pick_block(s, block_k)
+    sp = round_up(s, max(bq, bk))
+    nq, nk = sp // bq, sp // bk
+    scale = 1.0 / (d**0.5)
+    qp, kp, vp = _pad_rsd(q3, sp), _pad_rsd(k3, sp), _pad_rsd(v3, sp)
+    o, _m, _l, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, s_real=s, nk=nk),
+        grid=(r, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda rr, qq, kk: (rr, qq, 0)),
+            pl.BlockSpec((1, bk, d), lambda rr, qq, kk: (rr, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda rr, qq, kk: (rr, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda rr, qq, kk: (rr, qq, 0)),
+            pl.BlockSpec((1, bq, 1), lambda rr, qq, kk: (rr, qq, 0)),
+            pl.BlockSpec((1, bq, 1), lambda rr, qq, kk: (rr, qq, 0)),
+            pl.BlockSpec((1, bq, 1), lambda rr, qq, kk: (rr, qq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, sp, d), q3.dtype),
+            jax.ShapeDtypeStruct((r, sp, 1), q3.dtype),
+            jax.ShapeDtypeStruct((r, sp, 1), q3.dtype),
+            jax.ShapeDtypeStruct((r, sp, 1), q3.dtype),
+        ],
+        interpret=INTERPRET,
+    )(qp, kp, vp)
+    return o[:, :s], lse
+
+
+def _flash_bwd(q3, k3, v3, o3, lse3, do3, block_q, block_k):
+    r, s, d = q3.shape
+    bq = pick_block(s, block_q)
+    bk = pick_block(s, block_k)
+    sp = round_up(s, max(bq, bk))
+    nq, nk = sp // bq, sp // bk
+    scale = 1.0 / (d**0.5)
+    delta = jnp.sum(do3 * o3, axis=-1, keepdims=True)  # [r, s, 1]
+    qp, kp, vp = _pad_rsd(q3, sp), _pad_rsd(k3, sp), _pad_rsd(v3, sp)
+    dop = _pad_rsd(do3, sp)
+    lsep = _pad_rsd(lse3, sp)
+    deltap = _pad_rsd(delta, sp)
+
+    q_spec = pl.BlockSpec((1, bq, d), lambda rr, qq, kk: (rr, qq, 0))
+    k_spec = pl.BlockSpec((1, bk, d), lambda rr, qq, kk: (rr, kk, 0))
+    stat_spec = pl.BlockSpec((1, bq, 1), lambda rr, qq, kk: (rr, qq, 0))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, s_real=s, nk=nk),
+        grid=(r, nq, nk),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, stat_spec, stat_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((r, sp, d), q3.dtype),
+        interpret=INTERPRET,
+    )(qp, kp, vp, dop, lsep, deltap)
+
+    # dK/dV pass: grid iterates (r, k-block, q-block)
+    q_spec2 = pl.BlockSpec((1, bq, d), lambda rr, kk, qq: (rr, qq, 0))
+    k_spec2 = pl.BlockSpec((1, bk, d), lambda rr, kk, qq: (rr, kk, 0))
+    stat_spec2 = pl.BlockSpec((1, bq, 1), lambda rr, kk, qq: (rr, qq, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, s_real=s, nq=nq),
+        grid=(r, nk, nq),
+        in_specs=[q_spec2, k_spec2, k_spec2, q_spec2, stat_spec2, stat_spec2],
+        out_specs=[k_spec2, k_spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, sp, d), q3.dtype),
+            jax.ShapeDtypeStruct((r, sp, d), q3.dtype),
+        ],
+        interpret=INTERPRET,
+    )(qp, kp, vp, dop, lsep, deltap)
+    return dq[:, :s], dk[:, :s], dv[:, :s]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K):
+    """Causal multi-head attention. q, k, v: [B, H, S, D] → [B, H, S, D]."""
+    b, h, s, d = q.shape
+    o, _ = _flash_fwd(
+        q.reshape(-1, s, d), k.reshape(-1, s, d), v.reshape(-1, s, d), block_q, block_k
+    )
+    return o.reshape(b, h, s, d)
+
+
+def _vjp_fwd(q, k, v, block_q, block_k):
+    b, h, s, d = q.shape
+    q3, k3, v3 = (x.reshape(-1, s, d) for x in (q, k, v))
+    o, lse = _flash_fwd(q3, k3, v3, block_q, block_k)
+    return o.reshape(b, h, s, d), (q3, k3, v3, o, lse, (b, h, s, d))
+
+
+def _vjp_bwd(block_q, block_k, res, dy):
+    q3, k3, v3, o, lse, (b, h, s, d) = res
+    do3 = dy.reshape(-1, s, d)
+    dq, dk, dv = _flash_bwd(q3, k3, v3, o, lse, do3, block_q, block_k)
+    return (
+        dq.reshape(b, h, s, d),
+        dk.reshape(b, h, s, d),
+        dv.reshape(b, h, s, d),
+    )
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,35 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package run with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is how the kernels
+lower into plain HLO that the Rust runtime can load (see DESIGN.md
+§Hardware-Adaptation). Block sizes are nevertheless chosen as if for a real
+TPU — VMEM-resident blocks, MXU-friendly (multiple-of-128 where matmuls are
+involved) — because the BlockSpec structure is what we profile.
+"""
+
+import jax.numpy as jnp
+
+INTERPRET = True  # flipped to False only when targeting a real TPU backend
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m that is >= x."""
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x, axis: int, to: int, value=0.0):
+    """Zero-pad axis `axis` of x up to length `to`."""
+    if x.shape[axis] == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - x.shape[axis])
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Choose a block size: `preferred` when n is large, else the whole axis.
+
+    Keeps tiny test shapes on a single block while production shapes tile.
+    """
+    return preferred if n >= preferred else max(1, n)

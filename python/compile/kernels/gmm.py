@@ -1,0 +1,137 @@
+"""Grouped matmul (GMM) Pallas kernel for MoE expert dispatch.
+
+Rows of x are sorted by expert; ``group_sizes[e]`` rows belong to expert e
+and multiply its weight ``w[e]``. The kernel grid is (experts × M-tiles):
+each step computes one M-tile's contribution from one expert, masked to the
+rows that actually belong to that expert, and accumulates into the output
+tile (read-modify-write across the sequential expert dimension). This is
+the per-core tiling schedule the paper's Ascend GMM op expresses — here via
+BlockSpec (DESIGN.md §Hardware-Adaptation).
+
+Backward: dx is a GMM against the transposed weights (same kernel); dw is a
+per-expert [D, F] accumulation kernel with grid (experts × M-tiles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_M = 128
+
+
+def _row_bounds(group_sizes):
+    """start[e], end[e] row offsets per expert."""
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    return starts, ends
+
+
+def _gmm_kernel(x_ref, w_ref, start_ref, end_ref, o_ref, *, block_m):
+    e = pl.program_id(0)
+    x = x_ref[...]  # [bm, D]
+    w = w_ref[0]  # [D, F]
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = pl.program_id(1) * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], 1), 0
+    )
+    in_group = (row >= start_ref[0]) & (row < end_ref[0])
+    xm = jnp.where(in_group, x, 0.0)
+    o_ref[...] = o_ref[...] + jnp.dot(xm, w)
+
+
+def _dw_kernel(x_ref, dy_ref, start_ref, end_ref, dw_ref, *, block_m):
+    m = pl.program_id(1)
+    x = x_ref[...]  # [bm, D]
+    dy = dy_ref[...]  # [bm, F]
+
+    @pl.when(m == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    row = pl.program_id(1) * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], 1), 0
+    )
+    in_group = (row >= start_ref[0]) & (row < end_ref[0])
+    xm = jnp.where(in_group, x, 0.0)
+    dw_ref[0] = dw_ref[0] + jnp.dot(xm.T, dy)
+
+
+def _run_gmm(x, w, group_sizes, block_m):
+    t, d = x.shape
+    e, _, f = w.shape
+    bm = pick_block(t, block_m)
+    tp = round_up(t, bm)
+    xp = pad_axis(x, 0, tp)
+    starts, ends = _row_bounds(group_sizes)
+    starts = starts.astype(jnp.int32).reshape(e, 1)
+    ends = ends.astype(jnp.int32).reshape(e, 1)
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, block_m=bm),
+        grid=(e, tp // bm),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda ee, mm: (mm, 0)),
+            pl.BlockSpec((1, d, f), lambda ee, mm: (ee, 0, 0)),
+            pl.BlockSpec((1, 1), lambda ee, mm: (ee, 0)),
+            pl.BlockSpec((1, 1), lambda ee, mm: (ee, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda ee, mm: (mm, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, f), x.dtype),
+        interpret=INTERPRET,
+    )(xp, w, starts, ends)
+    return out[:t]
+
+
+def _run_dw(x, dy, group_sizes, e, block_m):
+    t, d = x.shape
+    f = dy.shape[-1]
+    bm = pick_block(t, block_m)
+    tp = round_up(t, bm)
+    xp = pad_axis(x, 0, tp)
+    dyp = pad_axis(dy, 0, tp)
+    starts, ends = _row_bounds(group_sizes)
+    starts = starts.astype(jnp.int32).reshape(e, 1)
+    ends = ends.astype(jnp.int32).reshape(e, 1)
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, block_m=bm),
+        grid=(e, tp // bm),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda ee, mm: (mm, 0)),
+            pl.BlockSpec((bm, f), lambda ee, mm: (mm, 0)),
+            pl.BlockSpec((1, 1), lambda ee, mm: (ee, 0)),
+            pl.BlockSpec((1, 1), lambda ee, mm: (ee, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, f), lambda ee, mm: (ee, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, d, f), x.dtype),
+        interpret=INTERPRET,
+    )(xp, dyp, starts, ends)
+    return dw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def gmm(x, w, group_sizes, block_m: int = DEFAULT_BLOCK_M):
+    """Grouped matmul. x: [T, D] (rows sorted by expert), w: [E, D, F],
+    group_sizes: [E] int32 with sum == T. Returns [T, F]."""
+    return _run_gmm(x, w, group_sizes, block_m)
+
+
+def _vjp_fwd(x, w, group_sizes, block_m):
+    return gmm(x, w, group_sizes, block_m), (x, w, group_sizes)
+
+
+def _vjp_bwd(block_m, res, dy):
+    x, w, group_sizes = res
+    # dx[t] = dy[t] @ w[e(t)].T  — a GMM against transposed weights
+    dx = _run_gmm(dy, jnp.swapaxes(w, 1, 2), group_sizes, block_m)
+    dw = _run_dw(x, dy, group_sizes, w.shape[0], block_m)
+    return dx, dw, None
+
+
+gmm.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,110 @@
+"""Fused per-token GRPO loss Pallas kernel (forward + custom-VJP backward).
+
+Fuses the importance ratio, the PPO-style clipped surrogate, and the k3 KL
+penalty into a single elementwise pass — the RL-specific fusion the paper's
+update stage relies on. Only lp_new (the current policy's log-probs) carries
+a gradient; lp_old / lp_ref / advantages are treated as constants, exactly
+as in GRPO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _fwd_kernel(lp_new_ref, lp_old_ref, lp_ref_ref, adv_ref, mask_ref, o_ref, *, clip_eps, kl_coef):
+    lp_new = lp_new_ref[...]
+    lp_old = lp_old_ref[...]
+    lp_ref = lp_ref_ref[...]
+    a = adv_ref[...]  # [rows, 1]
+    mask = mask_ref[...]
+    ratio = jnp.exp(lp_new - lp_old)
+    s1 = ratio * a
+    s2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * a
+    pg = -jnp.minimum(s1, s2)
+    d = lp_ref - lp_new
+    kl = jnp.exp(d) - d - 1.0
+    o_ref[...] = (pg + kl_coef * kl) * mask
+
+
+def _bwd_kernel(lp_new_ref, lp_old_ref, lp_ref_ref, adv_ref, mask_ref, dy_ref, dlp_ref, *, clip_eps, kl_coef):
+    lp_new = lp_new_ref[...]
+    lp_old = lp_old_ref[...]
+    lp_ref = lp_ref_ref[...]
+    a = adv_ref[...]
+    mask = mask_ref[...]
+    dy = dy_ref[...]
+    ratio = jnp.exp(lp_new - lp_old)
+    s1 = ratio * a
+    s2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * a
+    # d(pg)/d(lp_new): -ratio*a where the unclipped branch is active, else 0
+    unclipped = s1 <= s2
+    in_window = (ratio >= 1.0 - clip_eps) & (ratio <= 1.0 + clip_eps)
+    active = unclipped | in_window
+    dpg = jnp.where(active, -ratio * a, 0.0)
+    # d(kl)/d(lp_new) = -exp(ref-new) + 1
+    d = lp_ref - lp_new
+    dkl = 1.0 - jnp.exp(d)
+    dlp_ref[...] = dy * (dpg + kl_coef * dkl) * mask
+
+
+def _run(kernel, arrays, n_out_rows_cols, clip_eps, kl_coef, block_rows):
+    b, t = n_out_rows_cols
+    br = pick_block(b, block_rows)
+    bp = round_up(b, br)
+    padded = [pad_axis(x, 0, bp) for x in arrays]
+    row_spec = pl.BlockSpec((br, t), lambda i: (i, 0))
+    adv_spec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    specs = [row_spec, row_spec, row_spec, adv_spec, row_spec]
+    if len(arrays) == 6:
+        specs.append(row_spec)
+    out = pl.pallas_call(
+        functools.partial(kernel, clip_eps=clip_eps, kl_coef=kl_coef),
+        grid=(bp // br,),
+        in_specs=specs,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((bp, t), arrays[0].dtype),
+        interpret=INTERPRET,
+    )(*padded)
+    return out[:b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def grpo_loss(lp_new, lp_old, lp_ref, adv, mask, clip_eps: float = 0.2,
+              kl_coef: float = 0.01, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Per-token GRPO loss. lp_*: [B, T]; adv: [B]; mask: [B, T] → [B, T]."""
+    return _run(
+        _fwd_kernel,
+        [lp_new, lp_old, lp_ref, adv[:, None], mask],
+        lp_new.shape,
+        clip_eps,
+        kl_coef,
+        block_rows,
+    )
+
+
+def _vjp_fwd(lp_new, lp_old, lp_ref, adv, mask, clip_eps, kl_coef, block_rows):
+    y = grpo_loss(lp_new, lp_old, lp_ref, adv, mask, clip_eps, kl_coef, block_rows)
+    return y, (lp_new, lp_old, lp_ref, adv, mask)
+
+
+def _vjp_bwd(clip_eps, kl_coef, block_rows, res, dy):
+    lp_new, lp_old, lp_ref, adv, mask = res
+    dlp = _run(
+        _bwd_kernel,
+        [lp_new, lp_old, lp_ref, adv[:, None], mask, dy],
+        lp_new.shape,
+        clip_eps,
+        kl_coef,
+        block_rows,
+    )
+    return dlp, None, None, None, None
+
+
+grpo_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its oracle to float32 tolerance across a hypothesis-driven sweep of shapes
+(see python/tests/test_kernels.py). They are also used directly by the L2
+model when ``use_kernels=False`` so the model itself can be A/B-tested
+kernel-vs-reference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS normalization over the last axis: x / rms(x) * w."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """Fused SwiGLU activation: silu(gate) * up."""
+    return jax.nn.silu(gate) * up
+
+
+def rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotary position embedding.
+
+    x:   [..., S, D] with D even — pairs are (x[..., :D/2], x[..., D/2:])
+    cos/sin: [S, D/2]
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal multi-head attention.
+
+    q, k, v: [B, H, S, D]. Returns [B, H, S, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    s = q.shape[-2]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def grpo_loss(
+    lp_new: jax.Array,
+    lp_old: jax.Array,
+    lp_ref: jax.Array,
+    adv: jax.Array,
+    mask: jax.Array,
+    clip_eps: float = 0.2,
+    kl_coef: float = 0.01,
+) -> jax.Array:
+    """Fused per-token GRPO loss.
+
+    lp_*: [B, T] per-token log-probabilities; adv: [B] per-sequence
+    advantage; mask: [B, T] response mask. Returns per-token loss [B, T]
+    (clipped PG surrogate + k3 KL penalty, masked).
+    """
+    ratio = jnp.exp(lp_new - lp_old)
+    a = adv[:, None]
+    s1 = ratio * a
+    s2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * a
+    pg = -jnp.minimum(s1, s2)
+    # k3 KL estimator: exp(ref-new) - (ref-new) - 1  (>= 0)
+    d = lp_ref - lp_new
+    kl = jnp.exp(d) - d - 1.0
+    return (pg + kl_coef * kl) * mask
+
+
+def gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul (MoE expert dispatch).
+
+    x: [T, D] rows sorted by expert; w: [E, D, F]; group_sizes: [E] with
+    sum == T. Row t belonging to group e computes x[t] @ w[e].
+    """
+    t = x.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    # expert id per row: number of bounds <= row index
+    row = jnp.arange(t)
+    eid = jnp.sum(row[:, None] >= bounds[None, :], axis=-1)
+    return jnp.einsum("td,tdf->tf", x, w[eid])

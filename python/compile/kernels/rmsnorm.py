@@ -1,0 +1,111 @@
+"""Fused RMSNorm Pallas kernel (forward + custom-VJP backward).
+
+The Ascend fused RMSNorm op the paper integrates normalizes a row and
+applies the gain in one pass over the unified buffer; the TPU analogue keeps
+a row-block resident in VMEM and fuses the mean-square reduction, rsqrt and
+scale. Forward and backward are both Pallas kernels; the backward emits
+per-row-block partial dw which the wrapper reduces (the cross-row reduction
+is the only part XLA sees).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * w_ref[...]
+
+
+def _bwd_kernel(x_ref, w_ref, dy_ref, dx_ref, dwp_ref, *, eps: float):
+    x = x_ref[...]
+    w = w_ref[...]
+    dy = dy_ref[...]
+    d = x.shape[-1]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = x * inv
+    dxhat = dy * w
+    # dx = inv * (dxhat - xhat * mean(dxhat * xhat))
+    dx_ref[...] = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    dwp_ref[...] = jnp.sum(dy * xhat, axis=0, keepdims=True)
+    del d
+
+
+def _run_fwd(x2, w, eps, block_rows):
+    n, d = x2.shape
+    br = pick_block(n, block_rows)
+    np_ = round_up(n, br)
+    xp = pad_axis(x2, 0, np_)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(np_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), x2.dtype),
+        interpret=INTERPRET,
+    )(xp, w[None, :])
+    return out[:n]
+
+
+def _run_bwd(x2, w, dy2, eps, block_rows):
+    n, d = x2.shape
+    br = pick_block(n, block_rows)
+    np_ = round_up(n, br)
+    nblk = np_ // br
+    xp = pad_axis(x2, 0, np_)
+    dyp = pad_axis(dy2, 0, np_)
+    dx, dwp = pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, d), x2.dtype),
+            jax.ShapeDtypeStruct((nblk, d), x2.dtype),
+        ],
+        interpret=INTERPRET,
+    )(xp, w[None, :], dyp)
+    return dx[:n], jnp.sum(dwp, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, w, eps: float = 1e-6, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """RMSNorm over the last axis. x: [..., D], w: [D]."""
+    shape = x.shape
+    y = _run_fwd(x.reshape(-1, shape[-1]), w, eps, block_rows)
+    return y.reshape(shape)
+
+
+def _vjp_fwd(x, w, eps, block_rows):
+    return rmsnorm(x, w, eps, block_rows), (x, w)
+
+
+def _vjp_bwd(eps, block_rows, res, dy):
+    x, w = res
+    shape = x.shape
+    dx, dw = _run_bwd(
+        x.reshape(-1, shape[-1]), w, dy.reshape(-1, shape[-1]), eps, block_rows
+    )
+    return dx.reshape(shape), dw
+
+
+rmsnorm.defvjp(_vjp_fwd, _vjp_bwd)

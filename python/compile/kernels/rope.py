@@ -1,0 +1,81 @@
+"""Rotary position embedding (RoPE) Pallas kernel.
+
+Applies the rotation in half-split layout (x1, x2 halves of the head dim)
+with cos/sin tables streamed per sequence-block. The backward pass is the
+inverse rotation (angle negated), so the same kernel serves both directions
+— the custom VJP simply flips the sign of sin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_SEQ = 128
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...]  # [rows, S_blk, D]
+    cos = cos_ref[...]  # [1, S_blk, D/2]
+    sin = sin_ref[...]
+    d2 = x.shape[-1] // 2
+    x1 = x[..., :d2]
+    x2 = x[..., d2:]
+    o_ref[...] = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _run(x, cos, sin, block_seq):
+    """x: [R, S, D] (R = collapsed batch*heads), cos/sin: [S, D/2]."""
+    r, s, d = x.shape
+    bs = pick_block(s, block_seq)
+    sp = round_up(s, bs)
+    xp = pad_axis(x, 1, sp)
+    cosp = pad_axis(cos, 0, sp)[None]
+    sinp = pad_axis(sin, 0, sp)[None]
+    out = pl.pallas_call(
+        _rope_kernel,
+        grid=(sp // bs,),
+        in_specs=[
+            pl.BlockSpec((r, bs, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, bs, d // 2), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, bs, d // 2), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, bs, d), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, sp, d), x.dtype),
+        interpret=INTERPRET,
+    )(xp, cosp, sinp)
+    return out[:, :s]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def rope(x, cos, sin, block_seq: int = DEFAULT_BLOCK_SEQ):
+    """Apply RoPE. x: [..., S, D] (D even), cos/sin: [S, D/2]."""
+    shape = x.shape
+    y = _run(x.reshape(-1, shape[-2], shape[-1]), cos, sin, block_seq)
+    return y.reshape(shape)
+
+
+def _vjp_fwd(x, cos, sin, block_seq):
+    return rope(x, cos, sin, block_seq), (cos, sin)
+
+
+def _vjp_bwd(block_seq, res, dy):
+    cos, sin = res
+    # Rotation is orthogonal: the cotangent is rotated by the inverse angle.
+    dx = rope(dy, cos, -sin, block_seq)
+    return dx, None, None
+
+
+rope.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def rope_tables(seq_len: int, head_dim: int, base: float = 10000.0):
+    """Standard RoPE cos/sin tables: [S, D/2] each."""
+    d2 = head_dim // 2
+    inv_freq = 1.0 / (base ** (jnp.arange(0, d2, dtype=jnp.float32) / d2))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    angles = jnp.outer(t, inv_freq)
+    return jnp.cos(angles), jnp.sin(angles)

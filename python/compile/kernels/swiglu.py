@@ -1,0 +1,85 @@
+"""Fused SwiGLU activation Pallas kernel (forward + custom-VJP backward).
+
+Computes silu(gate) * up in one VMEM-resident pass, the fusion boundary the
+paper's Ascend SwiGLU op uses (the surrounding matmuls are left to the MXU /
+XLA dot fusion). Backward is also a Pallas kernel: both input cotangents are
+elementwise in the saved activations, so no cross-row reduction is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad_axis, pick_block, round_up
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _fwd_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = g * jax.nn.sigmoid(g) * u_ref[...]
+
+
+def _bwd_kernel(g_ref, u_ref, dy_ref, dg_ref, du_ref):
+    g = g_ref[...]
+    u = u_ref[...]
+    dy = dy_ref[...]
+    sig = jax.nn.sigmoid(g)
+    silu = g * sig
+    # d/dg silu(g) = sig(g) * (1 + g * (1 - sig(g)))
+    dg_ref[...] = dy * u * sig * (1.0 + g * (1.0 - sig))
+    du_ref[...] = dy * silu
+
+
+def _blocked_call(kernel, inputs, n_out, shape, dtype, block_rows):
+    n, d = shape
+    br = pick_block(n, block_rows)
+    np_ = round_up(n, br)
+    padded = [pad_axis(x, 0, np_) for x in inputs]
+    spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // br,),
+        in_specs=[spec] * len(inputs),
+        out_specs=spec if n_out == 1 else [spec] * n_out,
+        out_shape=(
+            jax.ShapeDtypeStruct((np_, d), dtype)
+            if n_out == 1
+            else [jax.ShapeDtypeStruct((np_, d), dtype)] * n_out
+        ),
+        interpret=INTERPRET,
+    )(*padded)
+    if n_out == 1:
+        return out[:n]
+    return tuple(o[:n] for o in out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def swiglu(gate, up, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused silu(gate) * up. gate, up: [..., F] of equal shape."""
+    shape = gate.shape
+    g2 = gate.reshape(-1, shape[-1])
+    u2 = up.reshape(-1, shape[-1])
+    y = _blocked_call(_fwd_kernel, [g2, u2], 1, g2.shape, gate.dtype, block_rows)
+    return y.reshape(shape)
+
+
+def _vjp_fwd(gate, up, block_rows):
+    return swiglu(gate, up, block_rows), (gate, up)
+
+
+def _vjp_bwd(block_rows, res, dy):
+    gate, up = res
+    shape = gate.shape
+    g2 = gate.reshape(-1, shape[-1])
+    u2 = up.reshape(-1, shape[-1])
+    dy2 = dy.reshape(-1, shape[-1])
+    dg, du = _blocked_call(
+        _bwd_kernel, [g2, u2, dy2], 2, g2.shape, gate.dtype, block_rows
+    )
+    return dg.reshape(shape), du.reshape(shape)
+
+
+swiglu.defvjp(_vjp_fwd, _vjp_bwd)

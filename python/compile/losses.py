@@ -1,0 +1,68 @@
+"""GRPO loss assembly + Adam — the body of the `train_step` artifact."""
+
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, model
+from .configs import ModelConfig
+from .kernels import ref
+
+
+class TrainHyper(NamedTuple):
+    clip_eps: float = 0.2
+    kl_coef: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+
+
+def grpo_objective(cfg: ModelConfig, params, batch, hyper: TrainHyper,
+                   use_kernels: bool = True):
+    """Scalar GRPO loss + aux metrics.
+
+    batch = (tokens [B,S] i32, resp_mask [B,S-1] f32, old_lp, ref_lp [B,S-1],
+    adv [B]).
+    """
+    tokens, resp_mask, old_lp, ref_lp, adv = batch
+    lp = model.logprobs(cfg, params, tokens, use_kernels)
+    loss_fn = kernels.grpo_loss if use_kernels else ref.grpo_loss
+    per_tok = loss_fn(lp, old_lp, ref_lp, adv, resp_mask, hyper.clip_eps, hyper.kl_coef)
+    denom = jnp.maximum(jnp.sum(resp_mask), 1.0)
+    loss = jnp.sum(per_tok) / denom
+    # aux metrics (no grad): mean k3-KL and mean ratio over response tokens
+    d = ref_lp - lp
+    kl = (jnp.exp(d) - d - 1.0) * resp_mask
+    ratio = jnp.exp(lp - old_lp) * resp_mask
+    return loss, (jnp.sum(kl) / denom, jnp.sum(ratio) / denom)
+
+
+def adam_update(params: List[jax.Array], grads, m, v, step, lr,
+                hyper: TrainHyper) -> Tuple[list, list, list]:
+    """One Adam step over the flat param list. step is 1-based (f32)."""
+    b1, b2, eps = hyper.beta1, hyper.beta2, hyper.adam_eps
+    c1 = 1.0 - b1**step
+    c2 = 1.0 - b2**step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * jnp.square(g)
+        update = (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+        new_p.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, lr, batch,
+               hyper: TrainHyper = TrainHyper(), use_kernels: bool = True):
+    """Full GRPO update: fwd/bwd + Adam.
+
+    Returns (new_params, new_m, new_v, loss, kl, ratio).
+    """
+    (loss, (kl, ratio)), grads = jax.value_and_grad(
+        lambda p: grpo_objective(cfg, p, batch, hyper, use_kernels), has_aux=True
+    )(params)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr, hyper)
+    return new_p, new_m, new_v, loss, kl, ratio

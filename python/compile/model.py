@@ -1,0 +1,162 @@
+"""L2 — the JAX transformer (dense + MoE) used by every RL worker state.
+
+The model is written against the L1 Pallas kernels (attention, rmsnorm,
+swiglu, rope, gmm, grpo_loss) so that `jax.jit(...).lower()` folds the
+kernels into the same HLO artifact the Rust runtime executes. Setting
+``use_kernels=False`` swaps in the pure-jnp oracles — used by the pytest
+suite to A/B the full model, and by the trainer artifact when a faster
+CPU lowering is preferred (numerics are verified identical either way).
+
+Parameters are a FLAT LIST of arrays with a parallel name list
+(`param_names`); the AOT manifest records the order, and the Rust side
+threads the same flat list through every execute call.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+
+
+def _ops(use_kernels: bool):
+    if use_kernels:
+        return kernels.rmsnorm, kernels.swiglu, kernels.rope, kernels.attention, kernels.gmm
+    return ref.rmsnorm, ref.swiglu, ref.rope, ref.attention, ref.gmm
+
+
+# ---------------------------------------------------------------- params
+def param_names(cfg: ModelConfig) -> List[str]:
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.attn_norm", f"l{i}.wqkv", f"l{i}.wo", f"l{i}.ffn_norm"]
+        if cfg.moe is None:
+            names += [f"l{i}.w_gate", f"l{i}.w_up", f"l{i}.w_down"]
+        else:
+            names += [f"l{i}.router", f"l{i}.e_gate", f"l{i}.e_up", f"l{i}.e_down"]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    std = 0.02
+    out_std = std / (2.0 * cfg.n_layers) ** 0.5
+    params: List[jax.Array] = []
+
+    def nrm(key, shape, s):
+        return jax.random.normal(key, shape, dtype=jnp.float32) * s
+
+    keys = iter(jax.random.split(key, 4 + cfg.n_layers * 8))
+    params.append(nrm(next(keys), (v, d), std))  # embed
+    for _ in range(cfg.n_layers):
+        params.append(jnp.ones((d,), jnp.float32))  # attn_norm
+        params.append(nrm(next(keys), (d, 3 * d), std))  # wqkv
+        params.append(nrm(next(keys), (d, d), out_std))  # wo
+        params.append(jnp.ones((d,), jnp.float32))  # ffn_norm
+        if cfg.moe is None:
+            params.append(nrm(next(keys), (d, f), std))  # w_gate
+            params.append(nrm(next(keys), (d, f), std))  # w_up
+            params.append(nrm(next(keys), (f, d), out_std))  # w_down
+        else:
+            e = cfg.moe.num_experts
+            params.append(nrm(next(keys), (d, e), std))  # router
+            params.append(nrm(next(keys), (e, d, f), std))  # e_gate
+            params.append(nrm(next(keys), (e, d, f), std))  # e_up
+            params.append(nrm(next(keys), (e, f, d), out_std))  # e_down
+    params.append(jnp.ones((d,), jnp.float32))  # final_norm
+    params.append(nrm(next(keys), (d, v), std))  # lm_head
+    return params
+
+
+# ---------------------------------------------------------------- forward
+def _moe_ffn(cfg, h, router_w, e_gate, e_up, e_down, swiglu_fn, gmm_fn):
+    """Top-k routed MoE FFN over flattened tokens via the GMM kernel."""
+    b, s, d = h.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    x = h.reshape(-1, d)  # [T, D]
+    t = x.shape[0]
+    logits = x @ router_w  # [T, E]
+    topv, topi = jax.lax.top_k(logits, k)  # [T, k]
+    gates = jax.nn.softmax(topv, axis=-1)  # [T, k]
+
+    flat_expert = topi.reshape(-1)  # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(t), k)  # [T*k]
+    order = jnp.argsort(flat_expert, stable=True)
+    xs = x[flat_tok[order]]  # [T*k, D] sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+
+    hidden = swiglu_fn(gmm_fn(xs, e_gate, group_sizes), gmm_fn(xs, e_up, group_sizes))
+    ys = gmm_fn(hidden, e_down, group_sizes)  # [T*k, D]
+
+    unsort = jnp.argsort(order)
+    ys = ys[unsort].reshape(t, k, d)
+    out = jnp.einsum("tkd,tk->td", ys, gates)
+    return out.reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+            use_kernels: bool = True) -> jax.Array:
+    """Token ids [B, S] → logits [B, S, V]."""
+    rmsnorm_fn, swiglu_fn, rope_fn, attn_fn, gmm_fn = _ops(use_kernels)
+    b, s = tokens.shape
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # [B, S, D]
+    cos, sin = kernels.rope_tables(s, hd, cfg.rope_base)
+    for _ in range(cfg.n_layers):
+        attn_norm = next(it)
+        wqkv = next(it)
+        wo = next(it)
+        ffn_norm = next(it)
+
+        h = rmsnorm_fn(x, attn_norm, cfg.norm_eps)
+        qkv = h @ wqkv  # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        q = rope_fn(q, cos, sin)
+        k = rope_fn(k, cos, sin)
+        o = attn_fn(q, k, v)  # [B, H, S, hd]
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ wo
+
+        h2 = rmsnorm_fn(x, ffn_norm, cfg.norm_eps)
+        if cfg.moe is None:
+            w_gate, w_up, w_down = next(it), next(it), next(it)
+            ff = swiglu_fn(h2 @ w_gate, h2 @ w_up) @ w_down
+        else:
+            router_w, e_gate, e_up, e_down = next(it), next(it), next(it), next(it)
+            ff = _moe_ffn(cfg, h2, router_w, e_gate, e_up, e_down, swiglu_fn, gmm_fn)
+        x = x + ff
+
+    final_norm = next(it)
+    lm_head = next(it)
+    x = rmsnorm_fn(x, final_norm, cfg.norm_eps)
+    return x @ lm_head  # [B, S, V]
+
+
+def logprobs(cfg: ModelConfig, params, tokens, use_kernels: bool = True) -> jax.Array:
+    """Per-token log-prob of the realized next token: [B, S-1]."""
+    logits = forward(cfg, params, tokens, use_kernels)
+    lsm = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predicts tokens[:,1:]
+    tgt = tokens[:, 1:]
+    return jnp.take_along_axis(lsm, tgt[..., None], axis=-1)[..., 0]
+
+
+def logprobs_and_entropy(cfg, params, tokens, use_kernels: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    logits = forward(cfg, params, tokens, use_kernels)
+    lsm = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    lp = jnp.take_along_axis(lsm, tgt[..., None], axis=-1)[..., 0]
+    entropy = -jnp.sum(jnp.exp(lsm) * lsm, axis=-1)  # [B, S-1]
+    return lp, entropy

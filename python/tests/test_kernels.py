@@ -1,0 +1,275 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its pure-jnp
+reference, including gradients through the custom VJPs, swept over shapes
+with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([8, 16, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(rows, d, seed):
+    k1, k2 = keys(2, seed)
+    x = rand(k1, rows, d)
+    w = rand(k2, d)
+    got = kernels.rmsnorm(x, w)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 130), d=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_grad_matches_ref(rows, d, seed):
+    k1, k2, k3 = keys(3, seed)
+    x = rand(k1, rows, d)
+    w = rand(k2, d)
+    dy = rand(k3, rows, d)
+
+    def f_kernel(x, w):
+        return jnp.sum(kernels.rmsnorm(x, w) * dy)
+
+    def f_ref(x, w):
+        return jnp.sum(ref.rmsnorm(x, w) * dy)
+
+    gx, gw = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_3d_shape():
+    k1, k2 = keys(2)
+    x = rand(k1, 2, 5, 16)
+    w = rand(k2, 16)
+    np.testing.assert_allclose(
+        kernels.rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------- swiglu
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    f=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_matches_ref(rows, f, seed):
+    k1, k2 = keys(2, seed)
+    g = rand(k1, rows, f)
+    u = rand(k2, rows, f)
+    np.testing.assert_allclose(
+        kernels.swiglu(g, u), ref.swiglu(g, u), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 130), seed=st.integers(0, 2**31 - 1))
+def test_swiglu_grad_matches_ref(rows, seed):
+    k1, k2, k3 = keys(3, seed)
+    g = rand(k1, rows, 16)
+    u = rand(k2, rows, 16)
+    dy = rand(k3, rows, 16)
+    gg, gu = jax.grad(lambda a, b: jnp.sum(kernels.swiglu(a, b) * dy), (0, 1))(g, u)
+    rg, ru = jax.grad(lambda a, b: jnp.sum(ref.swiglu(a, b) * dy), (0, 1))(g, u)
+    np.testing.assert_allclose(gg, rg, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gu, ru, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- rope
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 200),
+    d=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_matches_ref(s, d, seed):
+    (k1,) = keys(1, seed)
+    x = rand(k1, 2, 3, s, d)
+    cos, sin = kernels.rope_tables(s, d)
+    np.testing.assert_allclose(
+        kernels.rope(x, cos, sin), ref.rope(x, cos, sin), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rope_grad_is_inverse_rotation():
+    k1, k2 = keys(2)
+    x = rand(k1, 1, 2, 33, 8)
+    dy = rand(k2, 1, 2, 33, 8)
+    cos, sin = kernels.rope_tables(33, 8)
+    gx = jax.grad(lambda a: jnp.sum(kernels.rope(a, cos, sin) * dy))(x)
+    rx = jax.grad(lambda a: jnp.sum(ref.rope(a, cos, sin) * dy))(x)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+
+
+def test_rope_norm_preserved():
+    # rotation is orthogonal: per-pair norms must be preserved
+    (k1,) = keys(1)
+    x = rand(k1, 1, 1, 17, 8)
+    cos, sin = kernels.rope_tables(17, 8)
+    y = kernels.rope(x, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 120),
+    d=st.sampled_from([4, 8, 16]),
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(s, d, b, h, seed):
+    k1, k2, k3 = keys(3, seed)
+    q = rand(k1, b, h, s, d)
+    k = rand(k2, b, h, s, d)
+    v = rand(k3, b, h, s, d)
+    got = kernels.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(s=st.integers(2, 80), seed=st.integers(0, 2**31 - 1))
+def test_attention_grad_matches_ref(s, seed):
+    k1, k2, k3, k4 = keys(4, seed)
+    q = rand(k1, 1, 2, s, 8)
+    k = rand(k2, 1, 2, s, 8)
+    v = rand(k3, 1, 2, s, 8)
+    dy = rand(k4, 1, 2, s, 8)
+    gq, gk, gv = jax.grad(
+        lambda a, b_, c: jnp.sum(kernels.attention(a, b_, c) * dy), (0, 1, 2)
+    )(q, k, v)
+    rq, rk, rv = jax.grad(
+        lambda a, b_, c: jnp.sum(ref.attention(a, b_, c) * dy), (0, 1, 2)
+    )(q, k, v)
+    np.testing.assert_allclose(gq, rq, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gk, rk, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gv, rv, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_causality():
+    # changing a future token must not change earlier outputs
+    k1, k2, k3 = keys(3)
+    q = rand(k1, 1, 1, 16, 8)
+    k = rand(k2, 1, 1, 16, 8)
+    v = rand(k3, 1, 1, 16, 8)
+    out1 = kernels.attention(q, k, v)
+    k2_ = k.at[0, 0, 15].set(99.0)
+    v2_ = v.at[0, 0, 15].set(-99.0)
+    out2 = kernels.attention(q, k2_, v2_)
+    np.testing.assert_allclose(out1[0, 0, :15], out2[0, 0, :15], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- grpo_loss
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 100),
+    t=st.sampled_from([4, 16, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grpo_loss_matches_ref(b, t, seed):
+    k1, k2, k3, k4 = keys(4, seed)
+    lp_new = -jnp.abs(rand(k1, b, t))
+    lp_old = -jnp.abs(rand(k2, b, t))
+    lp_ref = -jnp.abs(rand(k3, b, t))
+    adv = rand(k4, b)
+    mask = (jnp.arange(t)[None, :] < (t - 1)).astype(jnp.float32).repeat(b, 0)
+    got = kernels.grpo_loss(lp_new, lp_old, lp_ref, adv, mask)
+    want = ref.grpo_loss(lp_new, lp_old, lp_ref, adv, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_grpo_loss_grad_matches_ref(b, seed):
+    t = 12
+    k1, k2, k3, k4 = keys(4, seed)
+    lp_new = -jnp.abs(rand(k1, b, t))
+    lp_old = -jnp.abs(rand(k2, b, t))
+    lp_ref = -jnp.abs(rand(k3, b, t))
+    adv = rand(k4, b)
+    mask = jnp.ones((b, t), dtype=jnp.float32)
+    g = jax.grad(lambda lp: jnp.sum(kernels.grpo_loss(lp, lp_old, lp_ref, adv, mask)))(lp_new)
+    r = jax.grad(lambda lp: jnp.sum(ref.grpo_loss(lp, lp_old, lp_ref, adv, mask)))(lp_new)
+    np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-5)
+
+
+def test_grpo_loss_zero_when_new_equals_old_equals_ref_zero_adv():
+    lp = -jnp.ones((2, 4))
+    adv = jnp.zeros(2)
+    mask = jnp.ones((2, 4))
+    out = kernels.grpo_loss(lp, lp, lp, adv, mask)
+    np.testing.assert_allclose(out, jnp.zeros((2, 4)), atol=1e-7)
+
+
+# ---------------------------------------------------------------- gmm
+@settings(**SETTINGS)
+@given(
+    e=st.integers(1, 6),
+    d=st.sampled_from([4, 16]),
+    f=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gmm_matches_ref(e, d, f, seed):
+    k1, k2, k3 = keys(3, seed)
+    sizes = jax.random.randint(k3, (e,), 0, 50)
+    t = int(jnp.sum(sizes))
+    if t == 0:
+        return
+    x = rand(k1, t, d)
+    w = rand(k2, e, d, f)
+    got = kernels.gmm(x, w, sizes.astype(jnp.int32))
+    want = ref.gmm(x, w, sizes)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_gmm_grad_matches_ref(e, seed):
+    d, f = 8, 8
+    k1, k2, k3, k4 = keys(4, seed)
+    sizes = jax.random.randint(k3, (e,), 1, 20)
+    t = int(jnp.sum(sizes))
+    x = rand(k1, t, d)
+    w = rand(k2, e, d, f)
+    dy = rand(k4, t, f)
+    sizes32 = sizes.astype(jnp.int32)
+    gx, gw = jax.grad(lambda a, b: jnp.sum(kernels.gmm(a, b, sizes32) * dy), (0, 1))(x, w)
+    rx, rw = jax.grad(lambda a, b: jnp.sum(ref.gmm(a, b, sizes) * dy), (0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_gmm_empty_group():
+    # an expert with zero rows must contribute nothing and get zero dw
+    x = jnp.ones((4, 4))
+    w = jnp.ones((3, 4, 4))
+    sizes = jnp.array([4, 0, 0], dtype=jnp.int32)
+    out = kernels.gmm(x, w, sizes)
+    np.testing.assert_allclose(out, jnp.full((4, 4), 4.0), rtol=1e-6)

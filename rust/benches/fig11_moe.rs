@@ -1,0 +1,58 @@
+//! Bench: Fig. 11 — DeepSeek-R1-MoE-671B RL training on 384 NPUs
+//! (simulated) plus a real MoE reward-curve proxy on the moe_tiny PJRT
+//! model (the paper's reward curve shape at laptop scale).
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::sim::fig11_series;
+use mindspeed_rl::trainers::{run_grpo, GrpoConfig};
+use mindspeed_rl::util::bench::Table;
+
+fn main() {
+    // simulated throughput series
+    let series = fig11_series(100, 0);
+    let mut t = Table::new(
+        "Fig. 11 — DeepSeek-R1-671B @384 NPUs (MSRL, simulated)",
+        &["iteration", "TPS"],
+    );
+    for (i, tps) in series.iter().step_by(10) {
+        t.row(vec![i.to_string(), format!("{tps:.0}")]);
+    }
+    t.print();
+    let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
+    let min = series.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
+    let max = series.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
+    println!("TPS: min={min:.0} max={max:.0} mean={mean:.0}  (paper: fluctuates 200–250)");
+
+    // real MoE training proxy: reward must rise on moe_tiny
+    let engine = match Engine::load(artifact_dir("moe_tiny")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping real MoE proxy (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let report = run_grpo(
+        &engine,
+        &GrpoConfig {
+            iterations: 8,
+            prompts_per_iter: 8,
+            group_size: 4,
+            max_new_tokens: 4,
+            log_every: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut t = Table::new(
+        "real MoE proxy (moe_tiny, top-2 of 4 experts, GMM kernel path)",
+        &["iteration", "reward", "loss"],
+    );
+    for m in &report.iterations {
+        t.row(vec![
+            m.iter.to_string(),
+            format!("{:.3}", m.reward_mean),
+            format!("{:+.4}", m.loss),
+        ]);
+    }
+    t.print();
+}

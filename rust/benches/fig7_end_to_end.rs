@@ -1,0 +1,69 @@
+//! Bench: Fig. 7 — end-to-end throughput of OpenRLHF / VeRL / MSRLP /
+//! MSRL on the paper's three models at 16 NPUs, plus a *real* (not
+//! simulated) A/B of the dock vs replay buffer on the tiny PJRT model.
+
+use std::sync::Arc;
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::sim::fig7_rows;
+use mindspeed_rl::trainers::{run_grpo_on_flow, GrpoConfig};
+use mindspeed_rl::transfer_dock::{DockTopology, ReplayBuffer, SampleFlow, TransferDock};
+use mindspeed_rl::util::bench::Table;
+
+fn main() {
+    // simulated cluster (the paper's configuration)
+    let mut t = Table::new(
+        "Fig. 7 — end-to-end TPS, 16 NPUs (G=256 N=16 PL=2K SL=8K)",
+        &["model", "system", "TPS", "vs OpenRLHF"],
+    );
+    for r in fig7_rows() {
+        t.row(vec![
+            r.model.name().into(),
+            r.system.name().into(),
+            format!("{:.0}", r.tps),
+            format!("{:.2}x", r.speedup_vs_openrlhf),
+        ]);
+    }
+    t.print();
+
+    // real PJRT run, dock vs replay buffer, identical math (same seed)
+    let engine = match Engine::load(artifact_dir("tiny")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping real-engine A/B (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let cfg = GrpoConfig {
+        iterations: 3,
+        prompts_per_iter: 8,
+        group_size: 4,
+        max_new_tokens: 4,
+        log_every: 0,
+        nodes: 8,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "real PJRT A/B (tiny model, 3 iterations)",
+        &["dataflow", "wall/iter", "implied dispatch", "reward"],
+    );
+    for (name, flow) in [
+        (
+            "transfer_dock",
+            Arc::new(TransferDock::new(DockTopology::spread(8))) as Arc<dyn SampleFlow>,
+        ),
+        ("replay_buffer", Arc::new(ReplayBuffer::new(0)) as Arc<dyn SampleFlow>),
+    ] {
+        let t0 = std::time::Instant::now();
+        let report = run_grpo_on_flow(&engine, &cfg, flow.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64() / cfg.iterations as f64;
+        let net = mindspeed_rl::transfer_dock::NetworkModel::paper();
+        t.row(vec![
+            name.into(),
+            mindspeed_rl::util::fmt_secs(wall),
+            mindspeed_rl::util::fmt_secs(flow.dispatch_secs(&net)),
+            format!("{:.3}", report.iterations.last().unwrap().reward_mean),
+        ]);
+    }
+    t.print();
+}

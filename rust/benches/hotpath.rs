@@ -1,0 +1,69 @@
+//! Bench: L3 hot-path micro-benchmarks (the §Perf working set).
+//!
+//! Times the coordinator-side operations that sit on the per-iteration
+//! critical path, independent of XLA compute: transfer-dock round trips,
+//! tensor↔literal conversion, batch assembly, sampling, advantage math.
+
+use mindspeed_rl::rewards::group_advantages;
+use mindspeed_rl::runtime::Tensor;
+use mindspeed_rl::transfer_dock::{
+    DockTopology, FieldKind, Sample, SampleFlow, Stage, TransferDock,
+};
+use mindspeed_rl::util::bench::{bench, header};
+use mindspeed_rl::util::rng::Rng;
+
+fn main() {
+    println!("{}", header());
+
+    // tensor → literal → tensor round trip (the PJRT boundary cost)
+    for n in [1usize << 10, 1 << 16, 1 << 20] {
+        let t = Tensor::f32(&[n], vec![1.0; n]).unwrap();
+        let r = bench(&format!("tensor<->literal {n} f32"), 3, 30, || {
+            let lit = t.to_literal().unwrap();
+            let back = Tensor::from_literal(&lit).unwrap();
+            std::hint::black_box(back);
+        });
+        println!("{}", r.line());
+    }
+
+    // transfer dock full round trip per sample
+    let r = bench("dock round-trip 256 samples (1KiB payloads)", 2, 20, || {
+        let dock = TransferDock::new(DockTopology::spread(8));
+        let samples: Vec<Sample> = (0..256)
+            .map(|i| Sample::new_prompt(u64::MAX, i / 8, format!("{i}+1="), 1))
+            .collect();
+        let idx = dock.put_samples(samples).unwrap();
+        let metas = dock.request_ready(Stage::Generation, 256).unwrap();
+        let _ = dock.fetch(0, &metas).unwrap();
+        for &i in &idx {
+            dock.store_generation(
+                0,
+                i,
+                vec![(FieldKind::Tokens, Tensor::i32(&[256], vec![1; 256]).unwrap())],
+                "1".into(),
+                1,
+            )
+            .unwrap();
+            dock.retire(i);
+        }
+    });
+    println!("{}", r.line());
+
+    // sampling from logits (per decode step, per slot)
+    let mut rng = Rng::new(0);
+    let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+    let params = mindspeed_rl::generation::SamplingParams::default();
+    let r = bench("sample 64-logit row x1000", 3, 30, || {
+        for _ in 0..1000 {
+            std::hint::black_box(params.sample(&logits, &mut rng));
+        }
+    });
+    println!("{}", r.line());
+
+    // group advantage math at update-batch scale
+    let rewards: Vec<f32> = (0..4096).map(|i| (i % 3) as f32 * 0.5).collect();
+    let r = bench("group_advantages 4096 rewards (groups of 16)", 3, 50, || {
+        std::hint::black_box(group_advantages(&rewards, 16));
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,112 @@
+//! Bench: Table 1 — sample-flow communication volume and dispatch time.
+//!
+//! Two parts:
+//!  1. the analytic rows exactly as the paper prints them (Eq. 2 at
+//!     100 MB/s and 1 GB/s), checked against the published values;
+//!  2. a *measured* dispatch micro-benchmark: drive the real transfer
+//!     dock and the real replay buffer with the Table-1 shapes (scaled
+//!     payloads) and time request→fetch→store round trips.
+
+use mindspeed_rl::runtime::Tensor;
+use mindspeed_rl::sim::table1_rows_out;
+use mindspeed_rl::transfer_dock::{
+    DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage, TransferDock,
+};
+use mindspeed_rl::util::bench::{bench, header, Table};
+
+fn drive_flow(flow: &dyn SampleFlow, n_samples: usize, payload_elems: usize) {
+    let samples: Vec<Sample> = (0..n_samples)
+        .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 8, format!("{i}+1="), i as i64 + 1))
+        .collect();
+    let idx = flow.put_samples(samples).unwrap();
+    let metas = flow.request_ready(Stage::Generation, n_samples).unwrap();
+    let _ = flow.fetch(1, &metas).unwrap();
+    for &i in &idx {
+        flow.store_generation(
+            1,
+            i,
+            vec![(
+                FieldKind::Tokens,
+                Tensor::i32(&[payload_elems], vec![1; payload_elems]).unwrap(),
+            )],
+            "42".into(),
+            3,
+        )
+        .unwrap();
+    }
+    let metas = flow.request_ready(Stage::OldLogprob, n_samples).unwrap();
+    let _ = flow.fetch(2, &metas).unwrap();
+    for &i in &idx {
+        flow.store_fields(2, i, vec![(FieldKind::OldLp, Tensor::zeros(&[payload_elems]))])
+            .unwrap();
+        flow.retire(i);
+    }
+}
+
+fn main() {
+    // Part 1: the paper's table
+    let paper: [(f64, f64, f64); 6] = [
+        (0.96, 9.92, 0.97),
+        (3.81, 39.0, 3.81),
+        (15.2, 156.1, 15.2),
+        (97.0, 993.3, 97.0),
+        (388.0, 3900.0, 388.0),
+        (3100.0, 31000.0, 3100.0),
+    ];
+    let mut t = Table::new(
+        "Table 1 (reproduced): TCV & dispatch vs paper",
+        &["G", "N", "SL", "TCV ours", "TCV paper", "T100 ours", "T100 paper", "T1K ours", "T1K paper"],
+    );
+    for (r, p) in table1_rows_out().iter().zip(&paper) {
+        t.row(vec![
+            r.params.g.to_string(),
+            r.params.n_resp.to_string(),
+            r.params.sl.to_string(),
+            format!("{:.2}", r.tcv_gb),
+            format!("{}", p.0),
+            format!("{:.1}", r.t100_s),
+            format!("{}", p.1),
+            format!("{:.2}", r.t1k_s),
+            format!("{}", p.2),
+        ]);
+    }
+    t.print();
+
+    // Part 2: measured round-trip micro-bench (payloads scaled down so
+    // the bench finishes; the ledger bytes scale exactly)
+    println!("\n{}", header());
+    for (n_samples, elems) in [(64usize, 512usize), (256, 1024), (1024, 2048)] {
+        let r = bench(
+            &format!("transfer_dock  n={n_samples} elems={elems}"),
+            1,
+            10,
+            || {
+                let dock = TransferDock::new(DockTopology::spread(8));
+                drive_flow(&dock, n_samples, elems);
+            },
+        );
+        println!("{}", r.line());
+        let r = bench(
+            &format!("replay_buffer  n={n_samples} elems={elems}"),
+            1,
+            10,
+            || {
+                let rb = ReplayBuffer::new(0);
+                drive_flow(&rb, n_samples, elems);
+            },
+        );
+        println!("{}", r.line());
+    }
+
+    // simulated dispatch seconds implied by each flow's ledger
+    let dock = TransferDock::new(DockTopology::spread(8));
+    drive_flow(&dock, 1024, 2048);
+    let rb = ReplayBuffer::new(0);
+    drive_flow(&rb, 1024, 2048);
+    let net = mindspeed_rl::transfer_dock::NetworkModel::paper();
+    println!(
+        "\nimplied dispatch @paper bandwidths (1024 samples): dock={} replay_buffer={}",
+        mindspeed_rl::util::fmt_secs(dock.dispatch_secs(&net)),
+        mindspeed_rl::util::fmt_secs(rb.dispatch_secs(&net)),
+    );
+}

@@ -1,0 +1,160 @@
+//! Config system: JSON experiment/training configs with CLI overrides.
+//!
+//! (TOML was planned but the offline environment has no toml crate; the
+//! in-crate JSON parser serves the same role. See DESIGN.md substitutions.)
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::trainers::GrpoConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Top-level runtime configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// artifact preset to load (tiny | small | moe_tiny | e2e ...)
+    pub preset: String,
+    pub grpo: GrpoConfig,
+    /// where to write result CSVs
+    pub results_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            preset: "small".into(),
+            grpo: GrpoConfig::default(),
+            results_dir: "results".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; missing keys fall back to defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let j = Json::parse(&text).context("parsing config JSON")?;
+        let mut cfg = Config::default();
+        if let Some(v) = j.opt("preset") {
+            cfg.preset = v.str()?.to_string();
+        }
+        if let Some(v) = j.opt("results_dir") {
+            cfg.results_dir = v.str()?.to_string();
+        }
+        if let Some(g) = j.opt("grpo") {
+            let d = &mut cfg.grpo;
+            if let Some(v) = g.opt("iterations") {
+                d.iterations = v.usize()?;
+            }
+            if let Some(v) = g.opt("prompts_per_iter") {
+                d.prompts_per_iter = v.usize()?;
+            }
+            if let Some(v) = g.opt("group_size") {
+                d.group_size = v.usize()?;
+            }
+            if let Some(v) = g.opt("lr") {
+                d.lr = v.num()? as f32;
+            }
+            if let Some(v) = g.opt("max_new_tokens") {
+                d.max_new_tokens = v.usize()?;
+            }
+            if let Some(v) = g.opt("temperature") {
+                d.temperature = v.num()? as f32;
+            }
+            if let Some(v) = g.opt("seed") {
+                d.seed = v.u64()?;
+            }
+            if let Some(v) = g.opt("nodes") {
+                d.nodes = v.usize()?;
+            }
+            if let Some(v) = g.opt("use_replay_buffer") {
+                d.use_replay_buffer = v.bool()?;
+            }
+            if let Some(v) = g.opt("eval_every") {
+                d.eval_every = v.usize()?;
+            }
+            if let Some(v) = g.opt("eval_size") {
+                d.eval_size = v.usize()?;
+            }
+            if let Some(v) = g.opt("log_every") {
+                d.log_every = v.usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI flag overrides on top (flags win over file).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(p) = args.get("preset") {
+            self.preset = p.to_string();
+        }
+        if let Some(r) = args.get("results-dir") {
+            self.results_dir = r.to_string();
+        }
+        let g = &mut self.grpo;
+        g.iterations = args.usize_or("iterations", g.iterations)?;
+        g.prompts_per_iter = args.usize_or("prompts-per-iter", g.prompts_per_iter)?;
+        g.group_size = args.usize_or("group-size", g.group_size)?;
+        g.lr = args.f32_or("lr", g.lr)?;
+        g.max_new_tokens = args.usize_or("max-new-tokens", g.max_new_tokens)?;
+        g.temperature = args.f32_or("temperature", g.temperature)?;
+        g.seed = args.u64_or("seed", g.seed)?;
+        g.nodes = args.usize_or("nodes", g.nodes)?;
+        if args.has("replay-buffer") {
+            g.use_replay_buffer = true;
+        }
+        g.eval_every = args.usize_or("eval-every", g.eval_every)?;
+        g.eval_size = args.usize_or("eval-size", g.eval_size)?;
+        g.log_every = args.usize_or("log-every", g.log_every)?;
+        Ok(())
+    }
+
+    /// Load optional `--config file.json` then apply flag overrides.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = match args.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::default(),
+        };
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_then_flags() {
+        let dir = std::env::temp_dir().join("msrl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"preset": "tiny", "grpo": {"iterations": 7, "lr": 0.01}}"#,
+        )
+        .unwrap();
+        let mut cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.preset, "tiny");
+        assert_eq!(cfg.grpo.iterations, 7);
+        assert_eq!(cfg.grpo.lr, 0.01);
+
+        let args = Args::parse(
+            ["--iterations", "9", "--preset", "small"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.grpo.iterations, 9);
+        assert_eq!(cfg.preset, "small");
+        assert_eq!(cfg.grpo.lr, 0.01, "file value survives when not overridden");
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let args = Args::parse(std::iter::empty()).unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.preset, "small");
+    }
+}

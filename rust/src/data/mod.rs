@@ -1,0 +1,13 @@
+//! Prompt dataset substrate.
+//!
+//! The paper trains on DeepScaleR (verifiable math problems with a rule
+//! reward). That dataset and its 7B-scale models are unavailable here, so
+//! this module generates the closest synthetic equivalent: arithmetic
+//! tasks with exactly-checkable integer answers, in three difficulty
+//! tiers that stand in for the paper's MATH500 / AIME24 / GPQA evaluation
+//! splits (DESIGN.md substitution table). Train and eval splits are
+//! disjoint by construction (seed namespaces).
+
+pub mod tasks;
+
+pub use tasks::{Task, TaskGenerator, Tier};

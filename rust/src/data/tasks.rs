@@ -1,0 +1,203 @@
+//! Synthetic verifiable arithmetic tasks (DeepScaleR substitute).
+
+use crate::util::rng::Rng;
+
+/// Difficulty tiers, standing in for the paper's eval suites:
+/// `Easy` ↔ MATH500-like, `Medium` ↔ GPQA-like, `Hard` ↔ AIME24-like.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Easy,
+    Medium,
+    Hard,
+}
+
+impl Tier {
+    pub fn all() -> [Tier; 3] {
+        [Tier::Easy, Tier::Medium, Tier::Hard]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Easy => "easy",
+            Tier::Medium => "medium",
+            Tier::Hard => "hard",
+        }
+    }
+}
+
+/// One verifiable task: prompt text ends with '=', the model must emit the
+/// integer answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub prompt: String,
+    pub answer: i64,
+    pub tier: Tier,
+}
+
+/// Deterministic task generator. Train and eval draws come from disjoint
+/// seed namespaces so eval tasks can never leak into training.
+#[derive(Debug, Clone)]
+pub struct TaskGenerator {
+    rng: Rng,
+}
+
+const EVAL_NAMESPACE: u64 = 0xE7A1_5EED_0000_0001;
+
+impl TaskGenerator {
+    pub fn train(seed: u64) -> Self {
+        Self { rng: Rng::new(seed.wrapping_mul(2).wrapping_add(1)) }
+    }
+
+    pub fn eval(seed: u64) -> Self {
+        Self { rng: Rng::new(seed.wrapping_mul(2) ^ EVAL_NAMESPACE) }
+    }
+
+    pub fn next(&mut self, tier: Tier) -> Task {
+        let r = &mut self.rng;
+        let (prompt, answer) = match tier {
+            Tier::Easy => {
+                // single-digit-ish addition: learnable by a char model fast
+                let a = r.range(0, 10);
+                let b = r.range(0, 10);
+                (format!("{a}+{b}="), a + b)
+            }
+            Tier::Medium => match r.below(2) {
+                0 => {
+                    let a = r.range(0, 100);
+                    let b = r.range(0, 100);
+                    (format!("{a}+{b}="), a + b)
+                }
+                _ => {
+                    let a = r.range(0, 100);
+                    let b = r.range(0, a + 1);
+                    (format!("{a}-{b}="), a - b)
+                }
+            },
+            Tier::Hard => match r.below(3) {
+                0 => {
+                    let a = r.range(2, 13);
+                    let b = r.range(2, 13);
+                    (format!("{a}*{b}="), a * b)
+                }
+                1 => {
+                    let a = r.range(2, 10);
+                    let b = r.range(2, 10);
+                    let c = r.range(0, 50);
+                    (format!("{a}*{b}+{c}="), a * b + c)
+                }
+                _ => {
+                    let a = r.range(0, 50);
+                    let b = r.range(0, 50);
+                    let c = r.range(0, 50);
+                    (format!("{a}+{b}-{c}="), a + b - c)
+                }
+            },
+        };
+        Task { prompt, answer, tier }
+    }
+
+    /// A mixed-tier batch (the training distribution).
+    pub fn batch(&mut self, n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|_| {
+                let tier = match self.rng.below(4) {
+                    0 | 1 => Tier::Easy,
+                    2 => Tier::Medium,
+                    _ => Tier::Hard,
+                };
+                self.next(tier)
+            })
+            .collect()
+    }
+
+    /// Fixed-size eval set for one tier (paper's Table 3 substitute).
+    pub fn eval_set(seed: u64, tier: Tier, n: usize) -> Vec<Task> {
+        let mut g = Self::eval(seed);
+        (0..n).map(|_| g.next(tier)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = TaskGenerator::train(5);
+        let mut b = TaskGenerator::train(5);
+        for _ in 0..20 {
+            assert_eq!(a.next(Tier::Hard), b.next(Tier::Hard));
+        }
+    }
+
+    #[test]
+    fn answers_are_correct() {
+        let mut g = TaskGenerator::train(1);
+        for _ in 0..200 {
+            for tier in Tier::all() {
+                let t = g.next(tier);
+                let expr = t.prompt.trim_end_matches('=');
+                assert_eq!(eval_expr(expr), t.answer, "{}", t.prompt);
+            }
+        }
+    }
+
+    #[test]
+    fn train_and_eval_disjoint_streams() {
+        let mut tr = TaskGenerator::train(7);
+        let mut ev = TaskGenerator::eval(7);
+        let a: Vec<Task> = (0..10).map(|_| tr.next(Tier::Easy)).collect();
+        let b: Vec<Task> = (0..10).map(|_| ev.next(Tier::Easy)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prompts_fit_vocab() {
+        let mut g = TaskGenerator::train(3);
+        let allowed = "0123456789+-*/=()., ?";
+        for _ in 0..300 {
+            let t = g.next(Tier::Hard);
+            assert!(t.prompt.chars().all(|c| allowed.contains(c)), "{}", t.prompt);
+        }
+    }
+
+    /// Tiny evaluator for the generated grammar: `*` binds tighter than
+    /// `+`/`-` (no parens in the current tiers).
+    fn eval_expr(s: &str) -> i64 {
+        // tokenize
+        let mut nums: Vec<i64> = Vec::new();
+        let mut ops: Vec<char> = Vec::new();
+        let mut cur = String::new();
+        for c in s.chars() {
+            if c.is_ascii_digit() {
+                cur.push(c);
+            } else {
+                nums.push(cur.parse().unwrap());
+                cur.clear();
+                ops.push(c);
+            }
+        }
+        nums.push(cur.parse().unwrap());
+        // fold '*'
+        let mut terms = vec![nums[0]];
+        let mut signs = vec![1i64];
+        for (op, &n) in ops.iter().zip(&nums[1..]) {
+            match op {
+                '*' => {
+                    let last = terms.last_mut().unwrap();
+                    *last *= n;
+                }
+                '+' => {
+                    terms.push(n);
+                    signs.push(1);
+                }
+                '-' => {
+                    terms.push(n);
+                    signs.push(-1);
+                }
+                _ => panic!("unexpected op {op}"),
+            }
+        }
+        terms.iter().zip(&signs).map(|(t, s)| t * s).sum()
+    }
+}

@@ -1,0 +1,259 @@
+//! Continuous batcher over the incremental decode artifact.
+
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::sampler::SamplingParams;
+use crate::runtime::{Engine, Policy, Tensor};
+use crate::util::rng::Rng;
+
+/// One generation request (a prompt to complete).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished completion.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    /// generated tokens (response only), including the EOS if emitted
+    pub response_ids: Vec<i32>,
+    pub finished_by_eos: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenStats {
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    pub wall_secs: f64,
+    /// slot-steps that carried a live sequence / total slot-steps
+    pub occupancy: f64,
+}
+
+/// State of one batch slot.
+enum Slot {
+    Idle,
+    Busy {
+        req: GenRequest,
+        /// tokens fed so far (prompt progress), then generated tokens
+        fed: usize,
+        pos: i32,
+        response: Vec<i32>,
+    },
+}
+
+/// Continuous batcher: keeps the decode artifact's batch slots full.
+pub struct GenEngine {
+    pub batch: usize,
+    pub max_seq: usize,
+    pub eos_id: i32,
+    pub pad_id: i32,
+    pub params: SamplingParams,
+}
+
+impl GenEngine {
+    pub fn from_manifest(engine: &Engine, params: SamplingParams) -> Result<Self> {
+        let a = engine.manifest.artifact("decode_step")?;
+        Ok(Self {
+            batch: a.batch,
+            max_seq: engine.manifest.model.max_seq,
+            eos_id: engine.manifest.eos_id as i32,
+            pad_id: engine.manifest.pad_id as i32,
+            params,
+        })
+    }
+
+    /// Run all requests to completion with continuous slot refill.
+    /// Returns results in completion order plus batch statistics.
+    pub fn generate(
+        &self,
+        engine: &Engine,
+        policy: &Policy,
+        requests: Vec<GenRequest>,
+        rng: &mut Rng,
+    ) -> Result<(Vec<GenResult>, GenStats)> {
+        let t0 = Instant::now();
+        let mut queue: VecDeque<GenRequest> = requests.into();
+        let n_total = queue.len();
+        let mut slots: Vec<Slot> = (0..self.batch).map(|_| Slot::Idle).collect();
+        let mut results = Vec::with_capacity(n_total);
+        let mut stats = GenStats::default();
+
+        let mut kv = policy.init_kv(engine)?;
+        let mut pos_v = vec![0i32; self.batch];
+        let mut tok_v = vec![self.pad_id; self.batch];
+
+        // admit initial requests
+        for slot in slots.iter_mut() {
+            if let Some(req) = queue.pop_front() {
+                stats.prompt_tokens += req.prompt_ids.len() as u64;
+                *slot = Slot::Busy { req, fed: 0, pos: 0, response: Vec::new() };
+            }
+        }
+
+        let mut busy_slot_steps = 0u64;
+        let mut total_slot_steps = 0u64;
+
+        loop {
+            // prepare this step's inputs: each busy slot feeds its next
+            // prompt token (prefill) or its last sampled token (decode)
+            let mut any_busy = false;
+            for (i, slot) in slots.iter_mut().enumerate() {
+                total_slot_steps += 1;
+                match slot {
+                    Slot::Idle => {
+                        tok_v[i] = self.pad_id;
+                        // pos stays wherever it was; idle slots are ignored
+                    }
+                    Slot::Busy { req, fed, pos, response } => {
+                        any_busy = true;
+                        busy_slot_steps += 1;
+                        let next = if *fed < req.prompt_ids.len() {
+                            req.prompt_ids[*fed]
+                        } else {
+                            *response.last().expect("decode phase has a last token")
+                        };
+                        tok_v[i] = next;
+                        pos_v[i] = *pos;
+                    }
+                }
+            }
+            if !any_busy {
+                break;
+            }
+
+            let pos_t = Tensor::i32(&[self.batch], pos_v.clone())?;
+            let tok_t = Tensor::i32(&[self.batch], tok_v.clone())?;
+            let (logits, new_kv) = policy.decode_step(engine, &kv, &pos_t, &tok_t)?;
+            kv = new_kv;
+            stats.decode_steps += 1;
+            let v = engine.manifest.model.vocab_size;
+            let lraw = logits.as_f32()?;
+
+            // advance each busy slot
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let mut finished: Option<GenResult> = None;
+                if let Slot::Busy { req, fed, pos, response } = slot {
+                    *pos += 1;
+                    if *fed < req.prompt_ids.len() {
+                        *fed += 1;
+                        // still prefilling: sample only once the full
+                        // prompt is in
+                        if *fed < req.prompt_ids.len() {
+                            continue;
+                        }
+                    }
+                    // sample the next token from this slot's logits row
+                    let row = &lraw[i * v..(i + 1) * v];
+                    let tok = self.params.sample(row, rng) as i32;
+                    response.push(tok);
+                    stats.tokens_generated += 1;
+                    let hit_eos = tok == self.eos_id;
+                    let hit_len = response.len() >= req.max_new_tokens
+                        || (*pos as usize) + 1 >= self.max_seq;
+                    if hit_eos || hit_len {
+                        finished = Some(GenResult {
+                            id: req.id,
+                            response_ids: std::mem::take(response),
+                            finished_by_eos: hit_eos,
+                        });
+                    }
+                }
+                if let Some(r) = finished {
+                    results.push(r);
+                    // continuous batching: swap the next request in now
+                    *slot = match queue.pop_front() {
+                        Some(req) => {
+                            stats.prompt_tokens += req.prompt_ids.len() as u64;
+                            pos_v[i] = 0;
+                            Slot::Busy { req, fed: 0, pos: 0, response: Vec::new() }
+                        }
+                        None => Slot::Idle,
+                    };
+                }
+            }
+        }
+
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        stats.occupancy = if total_slot_steps == 0 {
+            0.0
+        } else {
+            busy_slot_steps as f64 / total_slot_steps as f64
+        };
+        debug_assert_eq!(results.len(), n_total);
+        Ok((results, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact_dir;
+
+    fn setup() -> (Engine, Policy) {
+        let engine = Engine::load(artifact_dir("tiny")).expect("make artifacts first");
+        let policy = Policy::load_initial(&engine, 1e-3).unwrap();
+        (engine, policy)
+    }
+
+    #[test]
+    fn generates_all_requests_even_beyond_batch() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let n = ge.batch * 2 + 3; // forces continuous refill
+        let reqs: Vec<GenRequest> = (0..n)
+            .map(|i| GenRequest {
+                id: i as u64,
+                prompt_ids: vec![1, 5, 6, 7],
+                max_new_tokens: 5,
+            })
+            .collect();
+        let mut rng = Rng::new(0);
+        let (results, stats) = ge.generate(&engine, &policy, reqs, &mut rng).unwrap();
+        assert_eq!(results.len(), n);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        for r in &results {
+            assert!(!r.response_ids.is_empty() && r.response_ids.len() <= 5);
+        }
+        assert!(stats.occupancy > 0.5, "refill should keep slots busy: {}", stats.occupancy);
+        assert!(stats.tokens_generated >= n as u64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let mk = || {
+            (0..4)
+                .map(|i| GenRequest {
+                    id: i as u64,
+                    prompt_ids: vec![1, 3, 4],
+                    max_new_tokens: 4,
+                })
+                .collect::<Vec<_>>()
+        };
+        let (a, _) = ge.generate(&engine, &policy, mk(), &mut Rng::new(7)).unwrap();
+        let (b, _) = ge.generate(&engine, &policy, mk(), &mut Rng::new(7)).unwrap();
+        let ta: Vec<_> = a.iter().map(|r| r.response_ids.clone()).collect();
+        let tb: Vec<_> = b.iter().map(|r| r.response_ids.clone()).collect();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn respects_max_seq() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let long = engine.manifest.model.max_seq + 10;
+        let reqs = vec![GenRequest { id: 0, prompt_ids: vec![1, 3], max_new_tokens: long }];
+        let mut rng = Rng::new(1);
+        let (results, _) = ge.generate(&engine, &policy, reqs, &mut rng).unwrap();
+        assert!(results[0].response_ids.len() + 2 <= engine.manifest.model.max_seq);
+    }
+}

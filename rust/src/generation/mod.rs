@@ -1,0 +1,15 @@
+//! Generation engine: the actor worker's generation state.
+//!
+//! A vLLM-style continuous batcher over the AOT `decode_step` artifact:
+//! the artifact's batch dimension is a set of *slots*, each holding an
+//! independent sequence at its own position (the decode program masks
+//! attention per-slot). When a slot finishes (EOS / length cap) the next
+//! waiting request is swapped in immediately — no draining barrier — which
+//! is what keeps the batch full under the long-tail response lengths the
+//! paper's generation stage faces.
+
+mod batcher;
+mod sampler;
+
+pub use batcher::{GenEngine, GenRequest, GenResult, GenStats};
+pub use sampler::SamplingParams;

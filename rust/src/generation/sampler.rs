@@ -1,0 +1,71 @@
+//! Token sampling from decode logits.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// consider only the top-k logits (0 = all)
+    pub top_k: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_k: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self { temperature: 0.0, top_k: 0 }
+    }
+
+    /// Sample a token id from one slot's logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        if self.top_k == 0 || self.top_k >= logits.len() {
+            return rng.sample_logits(logits, self.temperature);
+        }
+        // top-k: mask everything below the k-th largest logit
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let keep = &idx[..self.top_k];
+        let mut masked = vec![f32::NEG_INFINITY; logits.len()];
+        for &i in keep {
+            masked[i] = logits[i];
+        }
+        rng.sample_logits(&masked, self.temperature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let p = SamplingParams::greedy();
+        assert_eq!(p.sample(&[0.1, 0.9, 0.5], &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(1);
+        let p = SamplingParams { temperature: 1.0, top_k: 2 };
+        let logits = [5.0, 4.9, -10.0, -10.0];
+        for _ in 0..100 {
+            let t = p.sample(&logits, &mut rng);
+            assert!(t < 2, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_mass() {
+        let mut rng = Rng::new(2);
+        let hot = SamplingParams { temperature: 5.0, top_k: 0 };
+        let logits = [2.0, 0.0];
+        let picks: usize =
+            (0..2000).map(|_| hot.sample(&logits, &mut rng)).filter(|&t| t == 1).count();
+        assert!(picks > 300, "high temperature must visit the low-logit arm ({picks})");
+    }
+}

@@ -1,0 +1,34 @@
+//! # MindSpeed RL — reproduction library
+//!
+//! Reproduction of *MindSpeed RL: Distributed Dataflow for Scalable and
+//! Efficient RL Training on Ascend NPU Cluster* (Feng et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the
+//! coordinator. It owns the event loop, the worker topology, and the two
+//! dataflow mechanisms the paper contributes:
+//!
+//! * [`transfer_dock`] — the distributed transfer-dock sample flow
+//!   (per-worker-state controllers + per-node warehouses), plus the
+//!   centralized replay-buffer baseline it replaces.
+//! * [`resharding`] — the allgather–swap resharding flow (and the naive
+//!   baseline), over a simulated multi-device memory substrate.
+//!
+//! Compute (model forward/backward, GRPO loss, Adam) lives in AOT-compiled
+//! HLO artifacts produced by `python/compile` and executed through
+//! [`runtime`] on the PJRT CPU client. Python is never on the request path.
+
+// Modules are added as they are built; see DESIGN.md system inventory.
+pub mod config;
+pub mod data;
+pub mod generation;
+pub mod metrics;
+pub mod trainers;
+pub mod workers;
+pub mod memory;
+pub mod parallel;
+pub mod resharding;
+pub mod rewards;
+pub mod runtime;
+pub mod sim;
+pub mod tokenizer;
+pub mod transfer_dock;
+pub mod util;

@@ -1,0 +1,129 @@
+//! MindSpeed RL leader entrypoint (CLI).
+//!
+//! ```text
+//! mindspeed-rl smoke    [--preset tiny]           load + run every artifact
+//! mindspeed-rl train    [--preset small] [--config cfg.json] [--iterations N]
+//!                       [--replay-buffer] [--eval-every K] ...
+//! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11  paper figures
+//! ```
+
+use anyhow::Result;
+
+use mindspeed_rl::config::Config;
+use mindspeed_rl::runtime::{artifact_dir, Engine, Policy, Tensor, TrainBatch};
+use mindspeed_rl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "smoke" => smoke(&args.str_or("preset", "tiny")),
+        "train" => train(&args),
+        "eval" => eval(&args),
+        "simulate" => {
+            mindspeed_rl::sim::run_named_experiment(&args.str_or("experiment", "fig9"))
+        }
+        _ => {
+            eprintln!(
+                "usage: mindspeed-rl <smoke|train|eval|simulate> [flags]\n\
+                 see rust/src/main.rs header for flag reference"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let engine = Engine::load(artifact_dir(&cfg.preset))?;
+    let report = mindspeed_rl::trainers::run_grpo(&engine, &cfg.grpo)?;
+    println!("{}", report.summary());
+    for (iter, evals) in &report.evals {
+        for e in evals {
+            println!(
+                "  eval@{iter} {}: pass@1={:.3} avg@{}={:.3} (n={})",
+                e.tier.name(),
+                e.pass_at_1,
+                e.k,
+                e.avg_at_k,
+                e.n_tasks
+            );
+        }
+    }
+    // dump the reward curve for plotting
+    let mut csv = mindspeed_rl::metrics::CsvWriter::new(&[
+        "iter", "reward", "exact", "loss", "kl", "tps", "dispatch_secs",
+    ]);
+    for m in &report.iterations {
+        csv.row_f64(&[
+            m.iter as f64,
+            m.reward_mean as f64,
+            m.exact_frac as f64,
+            m.loss as f64,
+            m.kl as f64,
+            m.tps,
+            m.dispatch_secs,
+        ]);
+    }
+    let path = format!("{}/train_{}.csv", cfg.results_dir, cfg.preset);
+    csv.write(&path)?;
+    println!("curve written to {path}");
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let engine = Engine::load(artifact_dir(&cfg.preset))?;
+    let policy = Policy::load_initial(&engine, 0.0)?;
+    let k = args.usize_or("k", 1)?;
+    let n = args.usize_or("n", 64)?;
+    for e in mindspeed_rl::trainers::evaluate(&engine, &policy, n, cfg.grpo.seed, k)? {
+        println!(
+            "{}: pass@1={:.3} avg@{}={:.3} (n={})",
+            e.tier.name(),
+            e.pass_at_1,
+            e.k,
+            e.avg_at_k,
+            e.n_tasks
+        );
+    }
+    Ok(())
+}
+
+fn smoke(preset: &str) -> Result<()> {
+    let engine = Engine::load(artifact_dir(preset))?;
+    let m = &engine.manifest;
+    println!("preset={} params={}", m.preset, m.model.param_count);
+    let mut policy = Policy::load_initial(&engine, 1e-3)?;
+    let a = m.artifact("logprobs")?.clone();
+    let (b, s) = (a.batch, a.seq);
+
+    let tokens = Tensor::i32(&[b, s], vec![1; b * s])?;
+    let t0 = std::time::Instant::now();
+    let lp = policy.logprobs(&engine, &tokens)?;
+    println!("logprobs {:?} in {:.3}s", lp.shape(), t0.elapsed().as_secs_f64());
+
+    let kv = policy.init_kv(&engine)?;
+    let pos = Tensor::i32(&[b], vec![0; b])?;
+    let tok = Tensor::i32(&[b], vec![1; b])?;
+    let t0 = std::time::Instant::now();
+    let (logits, _) = policy.decode_step(&engine, &kv, &pos, &tok)?;
+    println!("decode_step {:?} in {:.3}s", logits.shape(), t0.elapsed().as_secs_f64());
+
+    let batch = TrainBatch {
+        tokens: Tensor::i32(&[b, s], vec![1; b * s])?,
+        resp_mask: Tensor::f32(&[b, s - 1], vec![1.0; b * (s - 1)])?,
+        old_lp: lp.clone(),
+        ref_lp: lp,
+        adv: Tensor::f32(&[b], vec![0.5; b])?,
+    };
+    let t0 = std::time::Instant::now();
+    let stats = policy.train_step(&engine, &batch)?;
+    println!(
+        "train_step loss={:.4} kl={:.6} ratio={:.4} in {:.3}s",
+        stats.loss, stats.kl, stats.ratio, t0.elapsed().as_secs_f64()
+    );
+    println!("smoke OK");
+    Ok(())
+}

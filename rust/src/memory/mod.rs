@@ -1,0 +1,186 @@
+//! Device/host memory substrate: allocation-tracked buffer pools.
+//!
+//! The paper's allgather–swap claim (Fig. 5 / Fig. 10) is about *which
+//! buffers exist on the device when*. This module provides the accounting
+//! ground truth: every buffer in the resharding flow is allocated from a
+//! per-device [`MemoryPool`] with capacity, live/peak tracking and a
+//! timeline of (label, live-bytes) events — Fig. 10 is replayed directly
+//! from that timeline.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Identifies a tracked buffer within a pool.
+pub type BufferId = u64;
+
+/// One memory event for profiling timelines (Fig. 10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemEvent {
+    pub label: String,
+    pub live_bytes: u64,
+}
+
+/// An allocation-tracked memory pool (one per simulated device, plus one
+/// per host).
+#[derive(Debug)]
+pub struct MemoryPool {
+    pub name: String,
+    pub capacity: u64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    next_id: BufferId,
+    buffers: BTreeMap<BufferId, (String, u64)>,
+    live: u64,
+    peak: u64,
+    timeline: Vec<MemEvent>,
+}
+
+impl MemoryPool {
+    pub fn new(name: impl Into<String>, capacity: u64) -> Self {
+        Self { name: name.into(), capacity, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Allocate a named buffer; fails if capacity would be exceeded (the
+    /// OOM the paper's naive resharding flow risks).
+    pub fn alloc(&self, label: impl Into<String>, bytes: u64) -> Result<BufferId> {
+        let label = label.into();
+        let mut g = self.inner.lock().unwrap();
+        if g.live + bytes > self.capacity {
+            bail!(
+                "pool {}: OOM allocating {} for {label:?} (live {}, capacity {})",
+                self.name,
+                crate::util::fmt_bytes(bytes),
+                crate::util::fmt_bytes(g.live),
+                crate::util::fmt_bytes(self.capacity)
+            );
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.live += bytes;
+        g.peak = g.peak.max(g.live);
+        g.buffers.insert(id, (label.clone(), bytes));
+        let ev = MemEvent { label: format!("+{label}"), live_bytes: g.live };
+        g.timeline.push(ev);
+        Ok(id)
+    }
+
+    /// Free the first live buffer whose label matches exactly (used where
+    /// callers track labels rather than ids, e.g. host swap space).
+    pub fn free_by_label(&self, label: &str) -> Result<()> {
+        let id = {
+            let g = self.inner.lock().unwrap();
+            g.buffers
+                .iter()
+                .find(|(_, (l, _))| l == label)
+                .map(|(&id, _)| id)
+        };
+        match id {
+            Some(id) => self.free(id),
+            None => bail!("pool {}: no live buffer labeled {label:?}", self.name),
+        }
+    }
+
+    pub fn free(&self, id: BufferId) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let (label, bytes) = match g.buffers.remove(&id) {
+            Some(x) => x,
+            None => bail!("pool {}: double free of buffer {id}", self.name),
+        };
+        g.live -= bytes;
+        let ev = MemEvent { label: format!("-{label}"), live_bytes: g.live };
+        g.timeline.push(ev);
+        Ok(())
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().live
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.live_bytes()
+    }
+
+    pub fn buffer_count(&self) -> usize {
+        self.inner.lock().unwrap().buffers.len()
+    }
+
+    /// Bytes held by buffers whose label matches a predicate.
+    pub fn live_bytes_matching(&self, pred: impl Fn(&str) -> bool) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.buffers.values().filter(|(l, _)| pred(l)).map(|(_, b)| *b).sum()
+    }
+
+    pub fn timeline(&self) -> Vec<MemEvent> {
+        self.inner.lock().unwrap().timeline.clone()
+    }
+
+    /// Reset peak/timeline (between experiment phases), keeping live
+    /// buffers.
+    pub fn reset_stats(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.peak = g.live;
+        g.timeline.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_peak() {
+        let p = MemoryPool::new("dev0", 1000);
+        let a = p.alloc("weights", 600).unwrap();
+        let b = p.alloc("kv", 300).unwrap();
+        assert_eq!(p.live_bytes(), 900);
+        assert_eq!(p.peak_bytes(), 900);
+        p.free(a).unwrap();
+        assert_eq!(p.live_bytes(), 300);
+        assert_eq!(p.peak_bytes(), 900, "peak persists");
+        p.free(b).unwrap();
+        assert_eq!(p.buffer_count(), 0);
+    }
+
+    #[test]
+    fn oom_when_over_capacity() {
+        let p = MemoryPool::new("dev0", 100);
+        p.alloc("a", 80).unwrap();
+        assert!(p.alloc("b", 30).is_err());
+        assert_eq!(p.live_bytes(), 80, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let p = MemoryPool::new("dev0", 100);
+        let a = p.alloc("a", 10).unwrap();
+        p.free(a).unwrap();
+        assert!(p.free(a).is_err());
+    }
+
+    #[test]
+    fn timeline_records_transitions() {
+        let p = MemoryPool::new("dev0", 100);
+        let a = p.alloc("w", 40).unwrap();
+        p.free(a).unwrap();
+        let t = p.timeline();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0], MemEvent { label: "+w".into(), live_bytes: 40 });
+        assert_eq!(t[1], MemEvent { label: "-w".into(), live_bytes: 0 });
+    }
+
+    #[test]
+    fn label_filtering() {
+        let p = MemoryPool::new("dev0", 100);
+        p.alloc("update.w1", 10).unwrap();
+        p.alloc("gen.w1", 20).unwrap();
+        assert_eq!(p.live_bytes_matching(|l| l.starts_with("update.")), 10);
+    }
+}

@@ -1,0 +1,129 @@
+//! Metrics: the paper's throughput definition (Eq. 5), stage timers, and
+//! CSV/markdown emitters used by EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Eq. (5): `T = G × N × (PL + SL) / ND / ETE` (tokens/sec/device).
+pub fn throughput_tps(
+    g: u64,
+    n_resp: u64,
+    pl: u64,
+    sl: u64,
+    n_devices: u64,
+    ete_secs: f64,
+) -> f64 {
+    (g * n_resp * (pl + sl)) as f64 / n_devices as f64 / ete_secs.max(1e-12)
+}
+
+/// Named stage timers (generation / inference / update / dispatch...).
+#[derive(Debug, Default)]
+pub struct StageTimers {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl StageTimers {
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        *self.totals.entry(stage.to_string()).or_default() += secs;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, stage: &str) -> f64 {
+        self.totals.get(stage).copied().unwrap_or(0.0)
+    }
+
+    pub fn summary(&self) -> String {
+        self.totals
+            .iter()
+            .map(|(k, v)| format!("{k}={}", crate::util::fmt_secs(*v)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn entries(&self) -> Vec<(String, f64, u64)> {
+        self.totals
+            .iter()
+            .map(|(k, &v)| (k.clone(), v, self.counts[k]))
+            .collect()
+    }
+}
+
+/// Minimal CSV writer for experiment curves.
+pub struct CsvWriter {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_matches_paper_units() {
+        // 256 prompts × 16 responses × (2K+8K) tokens over 16 devices in
+        // 1000s → 2621.44 TPS
+        let t = throughput_tps(256, 16, 2048, 8192, 16, 1000.0);
+        assert!((t - 2621.44).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = StageTimers::default();
+        t.add("gen", 1.0);
+        t.add("gen", 0.5);
+        t.add("update", 2.0);
+        assert_eq!(t.total("gen"), 1.5);
+        assert!(t.summary().contains("gen"));
+        assert_eq!(t.entries().len(), 2);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut w = CsvWriter::new(&["iter", "reward"]);
+        w.row_f64(&[1.0, 0.25]);
+        let s = w.to_string();
+        assert!(s.starts_with("iter,reward\n"));
+        assert!(s.contains("1,0.25"));
+    }
+}

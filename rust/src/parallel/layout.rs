@@ -1,0 +1,140 @@
+//! Rank grids for TP/PP/DP/EP/CP layouts.
+
+use anyhow::{bail, Result};
+
+/// A parallelization strategy, e.g. the paper's `TP4PP6EP16DP2` update
+/// layout for DeepSeek-671B. World size is `tp * pp * dp * cp`; EP
+/// partitions the expert dimension *within* the data-parallel replicas
+/// (ep must divide dp * tp in this grid — experts are spread over the
+/// non-pipeline ranks of each replica group, matching Megatron-style
+/// expert parallelism).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelLayout {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub ep: usize,
+    pub cp: usize,
+}
+
+impl ParallelLayout {
+    pub fn new(tp: usize, pp: usize, dp: usize, ep: usize) -> Self {
+        Self { tp, pp, dp, ep, cp: 1 }
+    }
+
+    pub fn dense(tp: usize, pp: usize, dp: usize) -> Self {
+        Self { tp, pp, dp, ep: 1, cp: 1 }
+    }
+
+    pub fn world(&self) -> usize {
+        self.tp * self.pp * self.dp * self.cp
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.tp == 0 || self.pp == 0 || self.dp == 0 || self.ep == 0 || self.cp == 0 {
+            bail!("all parallel degrees must be >= 1");
+        }
+        let non_pp = self.tp * self.dp * self.cp;
+        if self.ep > 1 && non_pp % self.ep != 0 {
+            bail!(
+                "ep={} must divide tp*dp*cp={} (expert ranks are drawn from the non-pipeline grid)",
+                self.ep,
+                non_pp
+            );
+        }
+        Ok(())
+    }
+
+    /// Decompose a flat device id into grid coordinates. Rank order (fast
+    /// → slow): tp, cp, dp, pp — TP groups are innermost so they sit on
+    /// the same node's high-bandwidth links, the standard placement.
+    pub fn assignment(&self, device: usize) -> Result<DeviceAssignment> {
+        self.validate()?;
+        if device >= self.world() {
+            bail!("device {device} out of range for world {}", self.world());
+        }
+        let tp_rank = device % self.tp;
+        let rest = device / self.tp;
+        let cp_rank = rest % self.cp;
+        let rest = rest / self.cp;
+        let dp_rank = rest % self.dp;
+        let pp_stage = rest / self.dp;
+        // expert rank: position within the replica's non-pipeline grid,
+        // folded onto the ep groups
+        let non_pp_index = device % (self.tp * self.cp * self.dp);
+        let ep_rank = if self.ep > 1 { non_pp_index % self.ep } else { 0 };
+        Ok(DeviceAssignment { device, tp_rank, pp_stage, dp_rank, ep_rank, cp_rank })
+    }
+
+    pub fn describe(&self) -> String {
+        let mut s = format!("TP{}PP{}", self.tp, self.pp);
+        if self.ep > 1 {
+            s.push_str(&format!("EP{}", self.ep));
+        }
+        s.push_str(&format!("DP{}", self.dp));
+        if self.cp > 1 {
+            s.push_str(&format!("CP{}", self.cp));
+        }
+        s
+    }
+}
+
+/// Where one device sits in the rank grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceAssignment {
+    pub device: usize,
+    pub tp_rank: usize,
+    pub pp_stage: usize,
+    pub dp_rank: usize,
+    pub ep_rank: usize,
+    pub cp_rank: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_size() {
+        assert_eq!(ParallelLayout::new(2, 1, 2, 2).world(), 4);
+        // the paper's DeepSeek update layout: TP4 PP6 EP16 DP2 → 48 ranks/stage ... 4*6*2 = 48
+        assert_eq!(ParallelLayout::new(4, 6, 2, 16).world(), 48);
+    }
+
+    #[test]
+    fn paper_layouts_validate() {
+        // update TP4PP6EP16DP2 (ep 16 divides tp*dp*cp = 8? No — see below)
+        // The paper's EP16 spans tp*dp = 8 ranks only if cp used; in our
+        // grid EP must divide tp*dp*cp, so this checks the rule fires.
+        assert!(ParallelLayout::new(4, 6, 2, 16).validate().is_err());
+        // generation TP2PP1EP64DP6: non-pp grid = 12, 64 does not divide
+        assert!(ParallelLayout::new(2, 1, 6, 64).validate().is_err());
+        // adapted equivalents used in the repro (same world sizes, valid
+        // ep): see DESIGN.md §Hardware-Adaptation
+        assert!(ParallelLayout::new(4, 6, 2, 8).validate().is_ok());
+        assert!(ParallelLayout::new(2, 1, 6, 12).validate().is_ok());
+    }
+
+    #[test]
+    fn assignment_round_trip_unique() {
+        let l = ParallelLayout::new(2, 2, 2, 2);
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..l.world() {
+            let a = l.assignment(d).unwrap();
+            assert!(seen.insert((a.tp_rank, a.cp_rank, a.dp_rank, a.pp_stage)));
+            assert!(a.tp_rank < 2 && a.pp_stage < 2 && a.dp_rank < 2);
+            assert!(a.ep_rank < 2);
+        }
+    }
+
+    #[test]
+    fn out_of_range_device() {
+        assert!(ParallelLayout::dense(2, 1, 1).assignment(2).is_err());
+    }
+
+    #[test]
+    fn describe_matches_paper_notation() {
+        assert_eq!(ParallelLayout::new(2, 1, 4, 4).describe(), "TP2PP1EP4DP4");
+        assert_eq!(ParallelLayout::dense(8, 1, 2).describe(), "TP8PP1DP2");
+    }
+}

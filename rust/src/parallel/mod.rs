@@ -1,0 +1,13 @@
+//! Parallelization layouts (TP/PP/DP/EP/CP) and weight shard placement.
+//!
+//! The resharding flow (paper Fig. 3/5) moves actor weights between an
+//! *update* layout and a *generation* layout over the same device pool.
+//! This module defines the layouts, the rank grid, and which slice of
+//! which weight lives on which device — the substrate both the naive and
+//! allgather–swap resharding implementations operate on.
+
+mod layout;
+mod weights;
+
+pub use layout::{DeviceAssignment, ParallelLayout};
+pub use weights::{shard_range, ModelWeights, WeightKind, WeightSpec};

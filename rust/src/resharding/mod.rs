@@ -1,0 +1,23 @@
+//! Resharding flow: moving actor weights from the update-stage layout to
+//! the generation-stage layout (paper Figs. 3 & 5).
+//!
+//! Two implementations over the same device-memory substrate:
+//!
+//! * [`naive`]: allgather TP weights into a fresh buffer while the
+//!   original (common + TP-shard) buffer stays live, and keep unused
+//!   experts resident — the redundant memory of Eq. (3).
+//! * [`allgather_swap`]: the paper's technique — allgather into a
+//!   *temporary* buffer, select/copy the generation slices, swap the
+//!   update-layout weights D2H (fully releasing their device buffers),
+//!   free the temp, and H2D them back (overlappable) before the next
+//!   update.
+//!
+//! Payload movement is real (`Vec<f32>` slices are actually gathered,
+//! sliced and verified bit-exact against direct sharding); *time* comes
+//! from the bandwidth model; *memory* from the tracked pools (Fig. 10).
+
+mod engine;
+mod planner;
+
+pub use engine::{Resharder, ShardLocation};
+pub use planner::{eq3_redundant_bytes, plan_summary, ReshardPlan, ReshardReport};

@@ -1,0 +1,167 @@
+//! Resharding plans + the paper's Eq. (3) closed form.
+
+use anyhow::Result;
+
+use crate::parallel::{ModelWeights, ParallelLayout};
+
+/// Eq. (3): redundant memory (bytes) of the naive resharding flow.
+/// `R = GDP × (TW/UTP + EW/GEP)`.
+pub fn eq3_redundant_bytes(
+    weights: &ModelWeights,
+    update: &ParallelLayout,
+    gen: &ParallelLayout,
+) -> u64 {
+    let tw = weights.tp_bytes() as f64;
+    let ew = weights.expert_bytes() as f64;
+    let r = gen.dp as f64 * (tw / update.tp as f64 + ew / gen.ep as f64);
+    r as u64
+}
+
+/// What a reshard between two layouts will move and hold.
+#[derive(Debug, Clone)]
+pub struct ReshardPlan {
+    pub update: ParallelLayout,
+    pub gen: ParallelLayout,
+    /// per-device bytes resident under the update layout
+    pub update_bytes_per_dev: Vec<u64>,
+    /// per-device bytes resident under the generation layout
+    pub gen_bytes_per_dev: Vec<u64>,
+    /// per-device temp (allgather) buffer bytes
+    pub temp_bytes_per_dev: Vec<u64>,
+}
+
+impl ReshardPlan {
+    pub fn build(
+        weights: &ModelWeights,
+        update: ParallelLayout,
+        gen: ParallelLayout,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            update.world() == gen.world(),
+            "reshard layouts must cover the same devices ({} vs {})",
+            update.world(),
+            gen.world()
+        );
+        let world = update.world();
+        let mut update_bytes = Vec::with_capacity(world);
+        let mut gen_bytes = Vec::with_capacity(world);
+        let mut temp_bytes = Vec::with_capacity(world);
+        for dev in 0..world {
+            update_bytes.push(weights.device_bytes(&update, dev)?);
+            gen_bytes.push(weights.device_bytes(&gen, dev)?);
+            // temp: the allgather buffer holds one tensor at a time, so
+            // the requirement is the largest weight this device gathers
+            let mut t = 0u64;
+            for w in &weights.weights {
+                if weights.placement(w, &gen, dev)?.is_some() {
+                    t = t.max(w.bytes());
+                }
+            }
+            temp_bytes.push(t);
+        }
+        Ok(Self {
+            update,
+            gen,
+            update_bytes_per_dev: update_bytes,
+            gen_bytes_per_dev: gen_bytes,
+            temp_bytes_per_dev: temp_bytes,
+        })
+    }
+}
+
+/// Outcome of a reshard run: memory + timing accounting.
+#[derive(Debug, Clone, Default)]
+pub struct ReshardReport {
+    /// technique name ("naive" | "allgather_swap")
+    pub technique: String,
+    /// bytes still resident on devices that generation does not need
+    pub redundant_bytes: u64,
+    /// device bytes freed for the KV cache relative to naive
+    pub released_bytes: u64,
+    /// peak device bytes during the reshard (any single device)
+    pub peak_device_bytes: u64,
+    /// device bytes live after the reshard (max over devices)
+    pub post_device_bytes: u64,
+    /// host bytes parked by the swap
+    pub host_bytes: u64,
+    /// timing breakdown (seconds, from the bandwidth model)
+    pub t_allgather: f64,
+    pub t_select: f64,
+    pub t_d2h: f64,
+    pub t_h2d: f64,
+    pub t_total: f64,
+}
+
+impl ReshardReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: redundant={} released={} peak={} post={} host={} t_ag={} t_d2h={} t_h2d={} total={}",
+            self.technique,
+            crate::util::fmt_bytes(self.redundant_bytes),
+            crate::util::fmt_bytes(self.released_bytes),
+            crate::util::fmt_bytes(self.peak_device_bytes),
+            crate::util::fmt_bytes(self.post_device_bytes),
+            crate::util::fmt_bytes(self.host_bytes),
+            crate::util::fmt_secs(self.t_allgather),
+            crate::util::fmt_secs(self.t_d2h),
+            crate::util::fmt_secs(self.t_h2d),
+            crate::util::fmt_secs(self.t_total),
+        )
+    }
+}
+
+/// Human-readable plan line for DESIGN/EXPERIMENTS tables.
+pub fn plan_summary(plan: &ReshardPlan) -> String {
+    format!(
+        "{} -> {}: update≤{}/dev gen≤{}/dev temp≤{}/dev",
+        plan.update.describe(),
+        plan.gen.describe(),
+        crate::util::fmt_bytes(*plan.update_bytes_per_dev.iter().max().unwrap_or(&0)),
+        crate::util::fmt_bytes(*plan.gen_bytes_per_dev.iter().max().unwrap_or(&0)),
+        crate::util::fmt_bytes(*plan.temp_bytes_per_dev.iter().max().unwrap_or(&0)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_fig3_case() {
+        // Fig. 3: TP2EP2DP2 → TP1EP4DP4 over 4 devices
+        let m = ModelWeights::moe_like(2, 32, 64, 4);
+        let update = ParallelLayout::new(2, 1, 2, 2);
+        let gen = ParallelLayout::new(1, 1, 4, 4);
+        let r = eq3_redundant_bytes(&m, &update, &gen);
+        let expect = 4 * (m.tp_bytes() / 2 + m.expert_bytes() / 4);
+        assert_eq!(r, expect);
+    }
+
+    #[test]
+    fn plan_requires_same_world() {
+        let m = ModelWeights::dense_like(2, 32, 64);
+        assert!(ReshardPlan::build(
+            &m,
+            ParallelLayout::dense(2, 1, 1),
+            ParallelLayout::dense(1, 1, 4)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn plan_byte_conservation() {
+        let m = ModelWeights::dense_like(4, 64, 128);
+        let update = ParallelLayout::dense(4, 1, 1);
+        let gen = ParallelLayout::dense(2, 1, 2);
+        let plan = ReshardPlan::build(&m, update, gen).unwrap();
+        // one dp replica of the gen layout holds one full copy of the TP
+        // weights plus gtp replicas of the common weights
+        let per_replica: u64 = plan.gen_bytes_per_dev[..2].iter().sum();
+        assert_eq!(per_replica, m.tp_bytes() + 2 * m.common_bytes());
+        // update layout (dp=1) spreads one copy over all 4
+        assert_eq!(
+            plan.update_bytes_per_dev.iter().sum::<u64>(),
+            m.common_bytes() * 4 + m.tp_bytes()
+        );
+    }
+}

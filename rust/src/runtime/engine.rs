@@ -1,0 +1,157 @@
+//! PJRT execution engine: loads `artifacts/<preset>/*.hlo.txt`, compiles
+//! them once on the CPU PJRT client, and executes them from the L3 hot
+//! path. Adapted from /opt/xla-example/load_hlo.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// A compiled artifact plus its manifest signature.
+pub struct CompiledArtifact {
+    pub kind: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+/// The engine owns the PJRT client and every compiled executable for one
+/// preset. Compilation happens once at startup; `execute` is the hot path.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, CompiledArtifact>,
+    /// cumulative execute statistics, keyed by artifact kind
+    pub exec_stats: std::sync::Mutex<HashMap<String, ExecStats>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir` (e.g. `artifacts/small`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut artifacts = HashMap::new();
+        for a in &manifest.artifacts {
+            let path = manifest.artifact_path(a);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", a.kind))?;
+            tracing_info(&format!(
+                "compiled {} ({} inputs, {} outputs) in {:.2}s",
+                a.kind,
+                a.inputs.len(),
+                a.outputs.len(),
+                t0.elapsed().as_secs_f64()
+            ));
+            artifacts.insert(
+                a.kind.clone(),
+                CompiledArtifact {
+                    kind: a.kind.clone(),
+                    exe,
+                    n_inputs: a.inputs.len(),
+                    n_outputs: a.outputs.len(),
+                },
+            );
+        }
+        Ok(Self { manifest, client, artifacts, exec_stats: Default::default() })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn has_artifact(&self, kind: &str) -> bool {
+        self.artifacts.contains_key(kind)
+    }
+
+    /// Execute an artifact with host literals, returning the decomposed
+    /// output tuple as literals.
+    pub fn execute_literals(&self, kind: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("unknown artifact kind {kind:?}"))?;
+        anyhow::ensure!(
+            inputs.len() == art.n_inputs,
+            "artifact {} expects {} inputs, got {}",
+            kind,
+            art.n_inputs,
+            inputs.len()
+        );
+        let t0 = Instant::now();
+        let result = art.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == art.n_outputs,
+            "artifact {} returned {} outputs, expected {}",
+            kind,
+            outs.len(),
+            art.n_outputs
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.exec_stats.lock().unwrap();
+        let e = stats.entry(kind.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outs)
+    }
+
+    /// Execute with borrowed literals (callers that cache conversions).
+    pub fn execute_borrowed(&self, kind: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("unknown artifact kind {kind:?}"))?;
+        anyhow::ensure!(
+            inputs.len() == art.n_inputs,
+            "artifact {} expects {} inputs, got {}",
+            kind,
+            art.n_inputs,
+            inputs.len()
+        );
+        let t0 = Instant::now();
+        let result = art.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.exec_stats.lock().unwrap();
+        let e = stats.entry(kind.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outs)
+    }
+
+    /// Execute with host tensors (converted to literals at the boundary).
+    pub fn execute(&self, kind: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outs = self.execute_literals(kind, &lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn stats_snapshot(&self) -> HashMap<String, ExecStats> {
+        self.exec_stats.lock().unwrap().clone()
+    }
+}
+
+fn tracing_info(msg: &str) {
+    if std::env::var_os("MSRL_QUIET").is_none() {
+        eprintln!("[engine] {msg}");
+    }
+}

@@ -1,0 +1,275 @@
+//! The artifact manifest — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Parsed from `artifacts/<preset>/manifest.json`
+//! with the in-crate JSON parser (util::json).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelInfo,
+    pub vocab: Vec<String>,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub hyper: Hyper,
+    pub n_params: usize,
+    pub params: Vec<ParamInfo>,
+    pub params_file: String,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub seed: u64,
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab_size: usize,
+    pub head_dim: usize,
+    pub rope_base: f64,
+    pub norm_eps: f64,
+    pub param_count: u64,
+    pub moe: Option<MoeInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeInfo {
+    pub num_experts: usize,
+    pub top_k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub clip_eps: f64,
+    pub kl_coef: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub adam_eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub offset: u64,
+    pub numel: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub kind: String,
+    pub file: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub use_kernels: bool,
+}
+
+fn sig(j: &Json) -> Result<TensorSig> {
+    Ok(TensorSig {
+        name: j.get("name")?.str()?.to_string(),
+        shape: j.get("shape")?.usize_vec()?,
+        dtype: j.get("dtype")?.str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory (e.g.
+    /// `artifacts/small`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing manifest {path:?}"))?;
+
+        let mj = j.get("model")?;
+        let model = ModelInfo {
+            name: mj.get("name")?.str()?.to_string(),
+            d_model: mj.get("d_model")?.usize()?,
+            n_layers: mj.get("n_layers")?.usize()?,
+            n_heads: mj.get("n_heads")?.usize()?,
+            d_ff: mj.get("d_ff")?.usize()?,
+            max_seq: mj.get("max_seq")?.usize()?,
+            vocab_size: mj.get("vocab_size")?.usize()?,
+            head_dim: mj.get("head_dim")?.usize()?,
+            rope_base: mj.get("rope_base")?.num()?,
+            norm_eps: mj.get("norm_eps")?.num()?,
+            param_count: mj.get("param_count")?.u64()?,
+            moe: match mj.opt("moe") {
+                Some(moe) => Some(MoeInfo {
+                    num_experts: moe.get("num_experts")?.usize()?,
+                    top_k: moe.get("top_k")?.usize()?,
+                }),
+                None => None,
+            },
+        };
+
+        let hj = j.get("hyper")?;
+        let hyper = Hyper {
+            clip_eps: hj.get("clip_eps")?.num()?,
+            kl_coef: hj.get("kl_coef")?.num()?,
+            beta1: hj.get("beta1")?.num()?,
+            beta2: hj.get("beta2")?.num()?,
+            adam_eps: hj.get("adam_eps")?.num()?,
+        };
+
+        let params = j
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    dtype: p.get("dtype")?.str()?.to_string(),
+                    offset: p.get("offset")?.u64()?,
+                    numel: p.get("numel")?.u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .get("artifacts")?
+            .arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactInfo {
+                    kind: a.get("kind")?.str()?.to_string(),
+                    file: a.get("file")?.str()?.to_string(),
+                    batch: a.get("batch")?.usize()?,
+                    seq: a.get("seq")?.usize()?,
+                    inputs: a.get("inputs")?.arr()?.iter().map(sig).collect::<Result<_>>()?,
+                    outputs: a.get("outputs")?.arr()?.iter().map(sig).collect::<Result<_>>()?,
+                    use_kernels: a.get("use_kernels")?.bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            preset: j.get("preset")?.str()?.to_string(),
+            model,
+            vocab: j.get("vocab")?.str_vec()?,
+            pad_id: j.get("pad_id")?.u64()? as u32,
+            bos_id: j.get("bos_id")?.u64()? as u32,
+            eos_id: j.get("eos_id")?.u64()? as u32,
+            hyper,
+            n_params: j.get("n_params")?.usize()?,
+            params,
+            params_file: j.get("params_file")?.str()?.to_string(),
+            artifacts,
+            seed: j.get("seed")?.u64()?,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn artifact(&self, kind: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind)
+            .with_context(|| format!("manifest has no artifact of kind {kind:?}"))
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join(&self.params_file)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.params.len() != self.n_params {
+            bail!(
+                "manifest inconsistency: n_params={} but {} param entries",
+                self.n_params,
+                self.params.len()
+            );
+        }
+        let mut expected_offset = 0u64;
+        for p in &self.params {
+            if p.offset != expected_offset {
+                bail!("param {} offset {} != expected {}", p.name, p.offset, expected_offset);
+            }
+            let numel: u64 = p.shape.iter().map(|&d| d as u64).product::<u64>().max(1);
+            if numel != p.numel {
+                bail!("param {} numel mismatch", p.name);
+            }
+            expected_offset += p.numel * 4;
+        }
+        for a in &self.artifacts {
+            // every artifact's leading inputs must be the params in order
+            if a.inputs.len() < self.n_params {
+                bail!("artifact {} has fewer inputs than params", a.kind);
+            }
+            for (sig, p) in a.inputs.iter().zip(&self.params) {
+                if sig.name != p.name || sig.shape != p.shape {
+                    bail!(
+                        "artifact {} input {:?} does not match param {:?}",
+                        a.kind,
+                        sig.name,
+                        p.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    #[test]
+    fn load_tiny_manifest() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.params.len(), m.n_params);
+        assert!(m.artifact("train_step").is_ok());
+        assert!(m.artifact("logprobs").is_ok());
+        assert!(m.artifact("decode_step").is_ok());
+        assert!(m.artifact("nonexistent").is_err());
+        assert!(m.model.moe.is_none());
+    }
+
+    #[test]
+    fn load_moe_manifest() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/moe_tiny");
+        let m = Manifest::load(dir).unwrap();
+        let moe = m.model.moe.expect("moe preset must carry moe info");
+        assert_eq!(moe.num_experts, 4);
+        assert_eq!(moe.top_k, 2);
+    }
+
+    #[test]
+    fn param_count_matches_binary_size() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let total: u64 = m.params.iter().map(|p| p.numel * 4).sum();
+        let size = std::fs::metadata(m.params_path()).unwrap().len();
+        assert_eq!(total, size);
+    }
+}

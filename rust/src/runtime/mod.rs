@@ -1,0 +1,27 @@
+//! Runtime layer: PJRT client wrapper executing the AOT artifacts.
+//!
+//! `Engine` compiles `artifacts/<preset>/*.hlo.txt` once (HLO text → proto
+//! → XlaComputation → PJRT executable); `Policy` threads parameters and
+//! optimizer state through the train/inference/decode programs. Python is
+//! never involved at runtime.
+
+mod engine;
+mod manifest;
+mod policy;
+mod tensor;
+
+pub use engine::{Engine, ExecStats};
+pub use manifest::{ArtifactInfo, Hyper, Manifest, ModelInfo, MoeInfo, ParamInfo, TensorSig};
+pub use policy::{Policy, TrainBatch, TrainStats};
+pub use tensor::Tensor;
+
+use std::path::PathBuf;
+
+/// Resolve the artifact directory for a preset, honouring `MSRL_ARTIFACTS`
+/// and falling back to `<crate root>/artifacts/<preset>`.
+pub fn artifact_dir(preset: &str) -> PathBuf {
+    let base = std::env::var_os("MSRL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    base.join(preset)
+}

@@ -1,0 +1,175 @@
+//! The policy: model parameters + optimizer state threaded through the
+//! AOT train-step artifact, plus logprob inference and incremental decode.
+//!
+//! This is the actor worker's compute substrate: `train_step` is the update
+//! state, `logprobs` the inference state, and `decode_step` the generation
+//! state (driven by `generation::Engine`).
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+
+use super::engine::Engine;
+use super::tensor::Tensor;
+
+/// Model parameters + Adam state, kept as host tensors in manifest order.
+///
+/// §Perf: inference paths (`logprobs`, `decode_step`) are called many
+/// times per iteration with unchanged parameters, so the param→Literal
+/// conversion is cached and invalidated only when `train_step` replaces
+/// the weights (≈19% end-to-end win on the tiny preset, EXPERIMENTS.md
+/// §Perf L3-1).
+pub struct Policy {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: u64,
+    pub lr: f32,
+    param_literals: RefCell<Option<Vec<xla::Literal>>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub kl: f32,
+    pub ratio: f32,
+    pub step: u64,
+}
+
+/// One GRPO update batch, shaped for the train_step artifact.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub tokens: Tensor,    // [B, S] i32
+    pub resp_mask: Tensor, // [B, S-1] f32
+    pub old_lp: Tensor,    // [B, S-1] f32
+    pub ref_lp: Tensor,    // [B, S-1] f32
+    pub adv: Tensor,       // [B] f32
+}
+
+impl Policy {
+    /// Load the initial parameters from `params_init.bin` and zero-init
+    /// the Adam moments.
+    pub fn load_initial(engine: &Engine, lr: f32) -> Result<Self> {
+        let manifest = &engine.manifest;
+        let bytes = std::fs::read(manifest.params_path())
+            .with_context(|| format!("reading {:?}", manifest.params_path()))?;
+        let mut params = Vec::with_capacity(manifest.n_params);
+        let mut m = Vec::with_capacity(manifest.n_params);
+        let mut v = Vec::with_capacity(manifest.n_params);
+        for p in &manifest.params {
+            let start = p.offset as usize;
+            let end = start + (p.numel as usize) * 4;
+            if end > bytes.len() {
+                bail!("params_init.bin too short for {}", p.name);
+            }
+            let data: Vec<f32> = bytes[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(Tensor::f32(&p.shape, data)?);
+            m.push(Tensor::zeros(&p.shape));
+            v.push(Tensor::zeros(&p.shape));
+        }
+        Ok(Self { params, m, v, step: 0, lr, param_literals: RefCell::new(None) })
+    }
+
+    /// Cached literal views of the parameters (rebuilt after updates).
+    fn cached_param_literals(&self) -> Result<std::cell::Ref<'_, Option<Vec<xla::Literal>>>> {
+        {
+            let mut guard = self.param_literals.borrow_mut();
+            if guard.is_none() {
+                let lits: Vec<xla::Literal> =
+                    self.params.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+                *guard = Some(lits);
+            }
+        }
+        Ok(self.param_literals.borrow())
+    }
+
+    /// Total parameter bytes (one copy of the weights).
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Run one GRPO update through the train_step artifact, replacing the
+    /// parameters and optimizer state in place.
+    pub fn train_step(&mut self, engine: &Engine, batch: &TrainBatch) -> Result<TrainStats> {
+        let n = self.params.len();
+        self.step += 1;
+        let step_t = Tensor::scalar_f32(self.step as f32);
+        let lr_t = Tensor::scalar_f32(self.lr);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * n + 7);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.push(&batch.tokens);
+        inputs.push(&batch.resp_mask);
+        inputs.push(&batch.old_lp);
+        inputs.push(&batch.ref_lp);
+        inputs.push(&batch.adv);
+
+        let mut outs = engine.execute("train_step", &inputs)?;
+        anyhow::ensure!(outs.len() == 3 * n + 3, "train_step output arity");
+        // weights change: drop the cached inference literals
+        *self.param_literals.borrow_mut() = None;
+        let ratio = outs.pop().unwrap().scalar()?;
+        let kl = outs.pop().unwrap().scalar()?;
+        let loss = outs.pop().unwrap().scalar()?;
+        let new_v: Vec<Tensor> = outs.split_off(2 * n);
+        let new_m: Vec<Tensor> = outs.split_off(n);
+        self.params = outs;
+        self.m = new_m;
+        self.v = new_v;
+        Ok(TrainStats { loss, kl, ratio, step: self.step })
+    }
+
+    /// Per-token log-probs of the realized tokens: input [B, S] i32 →
+    /// output [B, S-1] f32 (row-major).
+    pub fn logprobs(&self, engine: &Engine, tokens: &Tensor) -> Result<Tensor> {
+        let guard = self.cached_param_literals()?;
+        let params = guard.as_ref().unwrap();
+        let mut lits: Vec<&xla::Literal> = params.iter().collect();
+        let tok_lit = tokens.to_literal()?;
+        lits.push(&tok_lit);
+        let mut outs = engine.execute_borrowed("logprobs", &lits)?;
+        anyhow::ensure!(outs.len() == 1, "logprobs output arity");
+        Tensor::from_literal(&outs.pop().unwrap())
+    }
+
+    /// One incremental decode step: (kv, pos[B], token[B]) → (logits [B,V],
+    /// new kv).
+    pub fn decode_step(
+        &self,
+        engine: &Engine,
+        kv: &Tensor,
+        pos: &Tensor,
+        token: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        let guard = self.cached_param_literals()?;
+        let params = guard.as_ref().unwrap();
+        let mut lits: Vec<&xla::Literal> = params.iter().collect();
+        let kv_lit = kv.to_literal()?;
+        let pos_lit = pos.to_literal()?;
+        let tok_lit = token.to_literal()?;
+        lits.push(&kv_lit);
+        lits.push(&pos_lit);
+        lits.push(&tok_lit);
+        let mut outs = engine.execute_borrowed("decode_step", &lits)?;
+        anyhow::ensure!(outs.len() == 2, "decode_step output arity");
+        let new_kv = Tensor::from_literal(&outs.pop().unwrap())?;
+        let logits = Tensor::from_literal(&outs.pop().unwrap())?;
+        Ok((logits, new_kv))
+    }
+
+    /// Fresh zeroed KV cache shaped for the decode artifact.
+    pub fn init_kv(&self, engine: &Engine) -> Result<Tensor> {
+        let a = engine.manifest.artifact("decode_step")?;
+        let kv_sig = a
+            .inputs
+            .iter()
+            .find(|s| s.name == "kv")
+            .context("decode_step artifact missing kv input")?;
+        Ok(Tensor::zeros(&kv_sig.shape))
+    }
+}

@@ -1,0 +1,160 @@
+//! Host tensors: the coordinator-side representation of model data.
+//!
+//! Thin, owned buffers (f32 / i32) with shape, convertible to and from
+//! `xla::Literal` at the PJRT boundary. All sample-flow payloads
+//! (transfer-dock warehouses), weight shards (resharding flow), and batch
+//! tensors are `Tensor`s; Literals exist only at the execute call site.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product::<usize>().max(1)
+    }
+
+    /// Size in bytes of the payload (both dtypes are 4-byte).
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar tensor, shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            Tensor::F32 { shape, data } => {
+                let bytes: &[u8] = bytemuck_cast_f32(data);
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+                    .context("creating f32 literal")
+            }
+            Tensor::I32 { shape, data } => {
+                let bytes: &[u8] = bytemuck_cast_i32(data);
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+                    .context("creating i32 literal")
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+// Safe because f32/i32 have no padding and we only reinterpret to bytes.
+fn bytemuck_cast_f32(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn bytemuck_cast_i32(data: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let t = Tensor::i32(&[3], vec![7, -1, 42]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let t = Tensor::scalar_f32(3.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit).unwrap().scalar().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn size_bytes() {
+        assert_eq!(Tensor::zeros(&[8, 4]).size_bytes(), 128);
+    }
+}

@@ -1,0 +1,267 @@
+//! Roofline cost model: stage times from FLOPs/bytes of real model
+//! configs under real parallel layouts.
+
+use crate::parallel::ParallelLayout;
+
+/// The models of the paper's evaluation, with their public configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperModel {
+    Qwen25Dense7B,
+    Qwen25Dense32B,
+    Qwen3Moe30B,
+    DeepSeekR1Moe671B,
+}
+
+impl PaperModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PaperModel::Qwen25Dense7B => "Qwen2.5-Dense-7B",
+            PaperModel::Qwen25Dense32B => "Qwen2.5-Dense-32B",
+            PaperModel::Qwen3Moe30B => "Qwen3-MoE-30B",
+            PaperModel::DeepSeekR1Moe671B => "DeepSeek-R1-MoE-671B",
+        }
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> f64 {
+        match self {
+            PaperModel::Qwen25Dense7B => 7.6e9,
+            PaperModel::Qwen25Dense32B => 32.8e9,
+            PaperModel::Qwen3Moe30B => 30.5e9,
+            PaperModel::DeepSeekR1Moe671B => 671e9,
+        }
+    }
+
+    /// Activated parameters per token (== total for dense).
+    pub fn active_params(&self) -> f64 {
+        match self {
+            PaperModel::Qwen25Dense7B => 7.6e9,
+            PaperModel::Qwen25Dense32B => 32.8e9,
+            PaperModel::Qwen3Moe30B => 3.3e9,
+            PaperModel::DeepSeekR1Moe671B => 37e9,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        match self {
+            PaperModel::Qwen25Dense7B => 28,
+            PaperModel::Qwen25Dense32B => 64,
+            PaperModel::Qwen3Moe30B => 48,
+            PaperModel::DeepSeekR1Moe671B => 61,
+        }
+    }
+
+    /// KV-cache bytes per token (bf16, GQA/MLA head counts from the
+    /// public configs).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        match self {
+            // 28 layers × 4 kv heads × 128 dim × 2 (k,v) × 2 bytes
+            PaperModel::Qwen25Dense7B => 28.0 * 4.0 * 128.0 * 2.0 * 2.0,
+            PaperModel::Qwen25Dense32B => 64.0 * 8.0 * 128.0 * 2.0 * 2.0,
+            PaperModel::Qwen3Moe30B => 48.0 * 4.0 * 128.0 * 2.0 * 2.0,
+            // MLA compressed cache: 61 layers × (512+64) dim × 2 bytes
+            PaperModel::DeepSeekR1Moe671B => 61.0 * 576.0 * 2.0,
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        matches!(self, PaperModel::Qwen3Moe30B | PaperModel::DeepSeekR1Moe671B)
+    }
+
+    /// Weight bytes (bf16).
+    pub fn weight_bytes(&self) -> f64 {
+        self.params() * 2.0
+    }
+}
+
+/// One accelerator (paper: Ascend 910-class, 128 GB).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    /// peak dense bf16 FLOP/s
+    pub peak_flops: f64,
+    /// HBM bandwidth bytes/s
+    pub hbm_bps: f64,
+    /// device memory bytes
+    pub mem_bytes: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's NPU (Ascend 910B-class public figures).
+    pub fn ascend_128gb() -> Self {
+        Self { peak_flops: 376e12, hbm_bps: 1.6e12, mem_bytes: 128e9 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub devices_per_node: usize,
+    pub device: DeviceSpec,
+    /// inter-node bytes/s (paper: 300 MB/s)
+    pub inter_node_bps: f64,
+    /// host↔device bytes/s (paper: 50 GB/s)
+    pub host_device_bps: f64,
+}
+
+impl ClusterSpec {
+    pub fn paper(nodes: usize) -> Self {
+        Self {
+            nodes,
+            devices_per_node: 8,
+            device: DeviceSpec::ascend_128gb(),
+            inter_node_bps: 300e6,
+            host_device_bps: 50e9,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.devices_per_node
+    }
+}
+
+/// RL workload hyperparameters (Eq. 5 inputs).
+#[derive(Debug, Clone, Copy)]
+pub struct RlWorkload {
+    pub g: u64,
+    pub n_resp: u64,
+    pub pl: u64,
+    pub sl: u64,
+}
+
+impl RlWorkload {
+    pub fn tokens_per_iter(&self) -> f64 {
+        (self.g * self.n_resp) as f64 * (self.pl + self.sl) as f64
+    }
+
+    pub fn sequences(&self) -> u64 {
+        self.g * self.n_resp
+    }
+}
+
+/// Per-stage seconds for one iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub generation: f64,
+    pub inference: f64,
+    pub update: f64,
+    pub dispatch: f64,
+    pub reshard: f64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.generation + self.inference + self.update + self.dispatch + self.reshard
+    }
+}
+
+/// Compute-stage roofline times. `mfu` / `gen_eff` are the calibrated
+/// per-system efficiency constants (DESIGN.md §Calibration).
+pub struct Roofline<'a> {
+    pub model: PaperModel,
+    pub cluster: &'a ClusterSpec,
+    pub work: RlWorkload,
+    pub gen_layout: ParallelLayout,
+}
+
+impl<'a> Roofline<'a> {
+    /// Generation time: SL batched decode steps per replica, each step
+    /// max(compute, weight-streaming) bound; `max_batch` is the KV-budget
+    /// cap on concurrent sequences per replica. `hbm_eff` is the decode
+    /// kernel's achieved fraction of HBM bandwidth (paged-KV quality).
+    pub fn generation_secs(&self, gen_eff: f64, hbm_eff: f64, kv_free_bytes_per_dev: f64) -> f64 {
+        let replicas = self.gen_layout.dp.max(1) as f64;
+        let devs_per_replica = (self.cluster.world() as f64 / replicas).max(1.0);
+        let seqs_per_replica = self.work.sequences() as f64 / replicas;
+        // KV budget caps concurrency
+        let kv_per_seq =
+            self.model.kv_bytes_per_token() * (self.work.pl + self.work.sl) as f64;
+        let kv_budget = kv_free_bytes_per_dev * devs_per_replica;
+        let max_batch = (kv_budget / kv_per_seq).max(1.0);
+        // wave-balanced batch: given the cap, run the fewest waves and
+        // split sequences evenly across them
+        let waves = (seqs_per_replica / max_batch.min(seqs_per_replica)).ceil();
+        let batch = seqs_per_replica / waves;
+
+        // one decode step for `batch` sequences on one replica
+        let flops = 2.0 * self.model.active_params() * batch;
+        let t_compute =
+            flops / (devs_per_replica * self.cluster.device.peak_flops * gen_eff);
+        // memory traffic per step: weights streamed once (amortized over
+        // the batch — the reason KV headroom and therefore batch size
+        // matters) plus each sequence's KV history read once
+        let avg_ctx = (self.work.pl as f64) + (self.work.sl as f64) / 2.0;
+        let kv_read = batch * self.model.kv_bytes_per_token() * avg_ctx;
+        let t_memory = (self.model.weight_bytes() + kv_read)
+            / (devs_per_replica * self.cluster.device.hbm_bps * hbm_eff);
+        // MoE all-to-all per layer adds latency on the scale-out path
+        let moe_factor = if self.model.is_moe() { 1.35 } else { 1.0 };
+        let t_step = t_compute.max(t_memory) * moe_factor;
+        // prefill: one forward over PL tokens per sequence (compute-bound)
+        let prefill_flops =
+            2.0 * self.model.active_params() * self.work.pl as f64 * seqs_per_replica;
+        let t_prefill =
+            prefill_flops / (devs_per_replica * self.cluster.device.peak_flops * gen_eff);
+        waves * self.work.sl as f64 * t_step + t_prefill
+    }
+
+    /// Inference stage (reference + old-logprob forward passes).
+    pub fn inference_secs(&self, mfu: f64, n_passes: f64) -> f64 {
+        let flops = n_passes * 2.0 * self.model.active_params() * self.work.tokens_per_iter();
+        flops / (self.cluster.world() as f64 * self.cluster.device.peak_flops * mfu)
+    }
+
+    /// Update stage (fwd+bwd ≈ 3× forward; response tokens only carry
+    /// gradient but the full sequence is processed).
+    pub fn update_secs(&self, mfu: f64) -> f64 {
+        let flops = 6.0 * self.model.active_params() * self.work.tokens_per_iter();
+        flops / (self.cluster.world() as f64 * self.cluster.device.peak_flops * mfu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_model_configs_sane() {
+        assert!(PaperModel::DeepSeekR1Moe671B.params() > 600e9);
+        assert!(PaperModel::Qwen3Moe30B.active_params() < PaperModel::Qwen3Moe30B.params());
+        assert!(!PaperModel::Qwen25Dense7B.is_moe());
+        // MLA cache is far smaller per token than GQA at this scale
+        assert!(
+            PaperModel::DeepSeekR1Moe671B.kv_bytes_per_token()
+                < PaperModel::Qwen25Dense32B.kv_bytes_per_token()
+        );
+    }
+
+    #[test]
+    fn update_dominates_inference_per_pass() {
+        let cluster = ClusterSpec::paper(2);
+        let work = RlWorkload { g: 256, n_resp: 16, pl: 2048, sl: 8192 };
+        let r = Roofline {
+            model: PaperModel::Qwen25Dense7B,
+            cluster: &cluster,
+            work,
+            gen_layout: ParallelLayout::dense(2, 1, 8),
+        };
+        assert!(r.update_secs(0.35) > r.inference_secs(0.35, 1.0));
+        // 3× forward cost ratio
+        let ratio = r.update_secs(0.35) / r.inference_secs(0.35, 1.0);
+        assert!((ratio - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_cap_slows_generation() {
+        let cluster = ClusterSpec::paper(2);
+        let work = RlWorkload { g: 256, n_resp: 16, pl: 2048, sl: 8192 };
+        let r = Roofline {
+            model: PaperModel::Qwen25Dense7B,
+            cluster: &cluster,
+            work,
+            gen_layout: ParallelLayout::dense(2, 1, 8),
+        };
+        let plenty = r.generation_secs(0.5, 0.8, 64e9);
+        let tight = r.generation_secs(0.5, 0.8, 4e9);
+        assert!(tight > plenty, "less KV headroom must mean slower generation");
+    }
+}

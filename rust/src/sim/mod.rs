@@ -1,0 +1,28 @@
+//! Cluster-scale simulation: regenerates the paper's evaluation figures
+//! on hardware we don't have (384 Ascend NPUs).
+//!
+//! The simulator is NOT a curve fit: stage times come from a roofline
+//! cost model (FLOPs / bytes of the actual model configs under the actual
+//! parallel layouts), the sample-flow dispatch times come from the same
+//! Eq. (2)/(4) volume code the real transfer dock accounts with, and the
+//! resharding memory effects come from the same planner the real
+//! allgather–swap engine uses (redundant bytes shrink the KV budget and
+//! therefore the generation batch). Device-efficiency constants are
+//! calibrated once against the real PJRT run (DESIGN.md §Calibration).
+//!
+//! Regenerated experiments:
+//! * Table 1 — dispatch volumes/times vs config
+//! * Fig. 7 — end-to-end TPS: OpenRLHF / VeRL / MSRLP / MSRL, 3 models
+//! * Fig. 9 — weak-scaling linearity: VeRL / MSRLB / MSRL
+//! * Fig. 11 — DeepSeek-671B at 384 NPUs
+
+mod costmodel;
+mod experiments;
+mod systems;
+
+pub use costmodel::{ClusterSpec, DeviceSpec, PaperModel, RlWorkload, StageTimes};
+pub use experiments::{
+    fig11_series, fig7_rows, fig9_rows, run_named_experiment, table1_rows_out, Fig7Row,
+    Fig9Row, Table1Row,
+};
+pub use systems::{SystemKind, SystemModel};

@@ -1,0 +1,113 @@
+//! Char-level tokenizer, constructed from the artifact manifest's vocab so
+//! the Rust side can never drift from the Python side that trained/exported
+//! the model.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    lookup: HashMap<char, i32>,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+}
+
+impl Tokenizer {
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        Self::new(m.vocab.clone(), m.pad_id as i32, m.bos_id as i32, m.eos_id as i32)
+    }
+
+    pub fn new(vocab: Vec<String>, pad_id: i32, bos_id: i32, eos_id: i32) -> Self {
+        let mut lookup = HashMap::new();
+        for (i, tok) in vocab.iter().enumerate() {
+            let mut chars = tok.chars();
+            if let (Some(c), None) = (chars.next(), chars.next()) {
+                lookup.insert(c, i as i32);
+            }
+        }
+        Self { vocab, lookup, pad_id, bos_id, eos_id }
+    }
+
+    pub fn vocab_len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode a prompt: BOS + chars. Unknown chars are an error (the task
+    /// generator only emits vocab chars).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        ids.push(self.bos_id);
+        for c in text.chars() {
+            match self.lookup.get(&c) {
+                Some(&id) => ids.push(id),
+                None => bail!("character {c:?} not in vocab"),
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Decode ids to text, stopping at EOS and skipping specials.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == self.eos_id {
+                break;
+            }
+            if id == self.pad_id || id == self.bos_id {
+                continue;
+            }
+            if let Some(tok) = self.vocab.get(id as usize) {
+                if tok.chars().count() == 1 {
+                    out.push_str(tok);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let mut vocab: Vec<String> =
+            ["<pad>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+        for c in "0123456789+-*/=()., ?".chars() {
+            vocab.push(c.to_string());
+        }
+        Tokenizer::new(vocab, 0, 1, 2)
+    }
+
+    #[test]
+    fn round_trip() {
+        let t = toy();
+        let ids = t.encode("12+34=").unwrap();
+        assert_eq!(ids[0], t.bos_id);
+        assert_eq!(t.decode(&ids), "12+34=");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = toy();
+        let mut ids = t.encode("7").unwrap();
+        ids.push(t.eos_id);
+        ids.extend(t.encode("9").unwrap());
+        assert_eq!(t.decode(&ids), "7");
+    }
+
+    #[test]
+    fn unknown_char_errors() {
+        let t = toy();
+        assert!(t.encode("abc").is_err() || t.encode("Z").is_err());
+    }
+
+    #[test]
+    fn pad_skipped() {
+        let t = toy();
+        let ids = vec![0, 0, 1, 3, 4, 0];
+        assert_eq!(t.decode(&ids), "01");
+    }
+}

@@ -1,0 +1,79 @@
+//! Benchmark evaluation harness (Table 3 substitute): pass@1 / avg@k on
+//! held-out synthetic tiers.
+
+use anyhow::Result;
+
+use crate::data::{TaskGenerator, Tier};
+use crate::generation::{GenEngine, GenRequest, SamplingParams};
+use crate::rewards;
+use crate::runtime::{Engine, Policy};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub tier: Tier,
+    pub n_tasks: usize,
+    pub k: usize,
+    /// fraction of tasks whose greedy (or first) completion is exact
+    pub pass_at_1: f64,
+    /// mean exact rate over k samples per task (paper's Avg@k)
+    pub avg_at_k: f64,
+}
+
+/// Evaluate the current policy on all three tiers.
+pub fn evaluate(
+    engine: &Engine,
+    policy: &Policy,
+    n_per_tier: usize,
+    seed: u64,
+    k: usize,
+) -> Result<Vec<EvalResult>> {
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let mut results = Vec::new();
+    for tier in Tier::all() {
+        let tasks = TaskGenerator::eval_set(seed, tier, n_per_tier);
+        let params = if k <= 1 {
+            SamplingParams::greedy()
+        } else {
+            SamplingParams { temperature: 0.7, top_k: 0 }
+        };
+        let ge = GenEngine::from_manifest(engine, params)?;
+        let mut rng = Rng::new(seed ^ EVAL_RNG_SALT);
+        let mut requests = Vec::new();
+        for (ti, t) in tasks.iter().enumerate() {
+            for ki in 0..k.max(1) {
+                requests.push(GenRequest {
+                    id: (ti * k.max(1) + ki) as u64,
+                    prompt_ids: tokenizer.encode(&t.prompt)?,
+                    max_new_tokens: 8,
+                });
+            }
+        }
+        let (gen_results, _) = ge.generate(engine, policy, requests, &mut rng)?;
+        let mut exact_first = 0usize;
+        let mut exact_total = 0usize;
+        for r in &gen_results {
+            let ti = (r.id as usize) / k.max(1);
+            let ki = (r.id as usize) % k.max(1);
+            let text = tokenizer.decode(&r.response_ids);
+            let score = rewards::score(&tasks[ti], &text);
+            if score.exact {
+                exact_total += 1;
+                if ki == 0 {
+                    exact_first += 1;
+                }
+            }
+        }
+        results.push(EvalResult {
+            tier,
+            n_tasks: tasks.len(),
+            k: k.max(1),
+            pass_at_1: exact_first as f64 / tasks.len().max(1) as f64,
+            avg_at_k: exact_total as f64 / gen_results.len().max(1) as f64,
+        });
+    }
+    Ok(results)
+}
+
+const EVAL_RNG_SALT: u64 = 0x5EED_E7A1;

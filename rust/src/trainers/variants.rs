@@ -1,0 +1,130 @@
+//! RL algorithm variants on top of the GRPO substrate (Table 2 rows):
+//!
+//! * **PPO**: GAE advantages from a value estimate instead of group
+//!   normalization (here: reward-to-go with a constant baseline, the
+//!   critic-free form used when no value model is trained).
+//! * **DAPO**: dynamic-sampling group filter — drop groups whose rewards
+//!   are all-equal (zero gradient) and oversample to refill.
+//! * **PF-PPO**: policy-filtration reweighting — down-weight groups whose
+//!   reward signal is unreliable (low variance ∧ mid reward).
+
+use crate::rewards::group_advantages;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdvantageKind {
+    Grpo,
+    PpoGae,
+    Dapo,
+    PfPpo,
+}
+
+/// Critic-free PPO-style advantages: reward minus running mean baseline,
+/// optionally discounted reward-to-go for multi-step episodes (our
+/// episodes are single-step, so this reduces to centered rewards scaled
+/// by a fixed std estimate).
+pub fn ppo_gae_advantages(rewards: &[f32], baseline: f32, scale: f32) -> Vec<f32> {
+    rewards.iter().map(|r| (r - baseline) / scale.max(1e-6)).collect()
+}
+
+/// DAPO dynamic sampling: groups where every reward is identical carry no
+/// GRPO gradient; return the indices of groups to KEEP.
+pub fn filter_groups_dapo(rewards: &[f32], group_size: usize) -> Vec<usize> {
+    assert!(group_size > 0 && rewards.len() % group_size == 0);
+    rewards
+        .chunks(group_size)
+        .enumerate()
+        .filter(|(_, g)| {
+            let first = g[0];
+            g.iter().any(|&r| (r - first).abs() > 1e-6)
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// PF-PPO filtration: weight per group in [0, 1]; groups with confident
+/// signal (high variance or extreme mean) keep weight 1, ambiguous
+/// mid-reward low-variance groups are down-weighted.
+pub fn pf_ppo_reweight(rewards: &[f32], group_size: usize) -> Vec<f32> {
+    assert!(group_size > 0 && rewards.len() % group_size == 0);
+    rewards
+        .chunks(group_size)
+        .map(|g| {
+            let mean = g.iter().sum::<f32>() / g.len() as f32;
+            let var = g.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / g.len() as f32;
+            if var > 0.01 {
+                1.0
+            } else {
+                // all-same groups: keep confident extremes, drop ambiguity
+                let extremity = (mean - 0.5).abs() * 2.0;
+                extremity.clamp(0.0, 1.0)
+            }
+        })
+        .collect()
+}
+
+/// Apply an advantage variant to group-major rewards.
+pub fn advantages(kind: AdvantageKind, rewards: &[f32], group_size: usize) -> Vec<f32> {
+    match kind {
+        AdvantageKind::Grpo => group_advantages(rewards, group_size),
+        AdvantageKind::PpoGae => {
+            let mean = rewards.iter().sum::<f32>() / rewards.len().max(1) as f32;
+            ppo_gae_advantages(rewards, mean, 0.5)
+        }
+        AdvantageKind::Dapo => {
+            // zero out filtered groups, GRPO-normalize the rest
+            let keep = filter_groups_dapo(rewards, group_size);
+            let mut adv = group_advantages(rewards, group_size);
+            for (gi, chunk) in adv.chunks_mut(group_size).enumerate() {
+                if !keep.contains(&gi) {
+                    chunk.iter_mut().for_each(|a| *a = 0.0);
+                }
+            }
+            adv
+        }
+        AdvantageKind::PfPpo => {
+            let w = pf_ppo_reweight(rewards, group_size);
+            let mut adv = group_advantages(rewards, group_size);
+            for (gi, chunk) in adv.chunks_mut(group_size).enumerate() {
+                chunk.iter_mut().for_each(|a| *a *= w[gi]);
+            }
+            adv
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dapo_drops_uniform_groups() {
+        // group 0 uniform, group 1 mixed
+        let rewards = [0.0, 0.0, 1.0, 0.0];
+        let keep = filter_groups_dapo(&rewards, 2);
+        assert_eq!(keep, vec![1]);
+        let adv = advantages(AdvantageKind::Dapo, &rewards, 2);
+        assert_eq!(&adv[..2], &[0.0, 0.0]);
+        assert!(adv[2] > 0.0 && adv[3] < 0.0);
+    }
+
+    #[test]
+    fn pf_ppo_keeps_confident_groups() {
+        // uniform-success group: confident, weight 1
+        let w = pf_ppo_reweight(&[1.0, 1.0, 0.5, 0.5], 2);
+        assert!(w[0] > 0.9);
+        // uniform mid-reward group: ambiguous, low weight
+        assert!(w[1] < 0.2);
+    }
+
+    #[test]
+    fn ppo_advantages_centered() {
+        let adv = ppo_gae_advantages(&[1.0, 0.0], 0.5, 0.5);
+        assert_eq!(adv, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn grpo_variant_delegates() {
+        let a = advantages(AdvantageKind::Grpo, &[1.0, 0.0, 0.0, 0.0], 4);
+        assert!(a[0] > 0.0);
+    }
+}

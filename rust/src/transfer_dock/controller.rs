@@ -1,0 +1,195 @@
+//! TD controller: per-worker-state metadata tracker.
+//!
+//! Controllers hold no payloads — only `SampleMeta` records (sample index,
+//! warehouse id, presence bitmask). A worker asks *its own* controller for
+//! ready samples (a node-local request when the controller is co-located
+//! with the worker, which is the paper's point: it removes the cross-node
+//! request storm of a central buffer).
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::Mutex;
+
+use super::sample::{FieldKind, Stage};
+
+/// Metadata about one sample, as replicated to every controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampleMeta {
+    pub index: u64,
+    pub group: u64,
+    pub warehouse: usize,
+    pub present: u8,
+    pub prompt_len: u32,
+    pub resp_len: u32,
+}
+
+impl SampleMeta {
+    /// Nominal wire size of a metadata record: 6 scalars × 4 bytes
+    /// (matches the paper's M∈[3,5] per-sample scalar count plus routing).
+    pub const WIRE_BYTES: u64 = 24;
+
+    fn has(&self, f: FieldKind) -> bool {
+        self.present & f.bit() != 0
+    }
+
+    /// Is this sample ready to be processed by `stage`?
+    pub fn ready_for(&self, stage: Stage) -> bool {
+        match stage {
+            Stage::Generation => !self.has(FieldKind::Tokens),
+            Stage::OldLogprob => self.has(FieldKind::Tokens) && !self.has(FieldKind::OldLp),
+            Stage::RefLogprob => self.has(FieldKind::Tokens) && !self.has(FieldKind::RefLp),
+            Stage::Reward => self.has(FieldKind::Tokens) && !self.has(FieldKind::Reward),
+            Stage::Update => {
+                self.has(FieldKind::Tokens)
+                    && self.has(FieldKind::OldLp)
+                    && self.has(FieldKind::RefLp)
+                    && self.has(FieldKind::Reward)
+            }
+        }
+    }
+}
+
+/// One controller: the metadata view for a single worker state.
+#[derive(Debug)]
+pub struct Controller {
+    pub stage: Stage,
+    /// node the controller lives on (co-located with its worker)
+    pub node: usize,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    metas: BTreeMap<u64, SampleMeta>,
+    /// samples handed out for this stage and not yet re-broadcast
+    in_flight: HashSet<u64>,
+    /// metadata traffic received (bytes), for Eq. (4) accounting
+    meta_bytes: u64,
+}
+
+impl Controller {
+    pub fn new(stage: Stage, node: usize) -> Self {
+        Self { stage, node, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Receive a metadata broadcast from a warehouse.
+    pub fn on_broadcast(&self, meta: SampleMeta) {
+        let mut g = self.inner.lock().unwrap();
+        g.meta_bytes += SampleMeta::WIRE_BYTES;
+        // a fresh broadcast clears the in-flight latch for that sample
+        g.in_flight.remove(&meta.index);
+        if meta.ready_for(self.stage) {
+            g.metas.insert(meta.index, meta);
+        } else {
+            g.metas.remove(&meta.index);
+        }
+    }
+
+    /// Remove a sample entirely (consumed by Update).
+    pub fn on_retire(&self, index: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.meta_bytes += SampleMeta::WIRE_BYTES;
+        g.metas.remove(&index);
+        g.in_flight.remove(&index);
+    }
+
+    /// Hand out up to `max_n` ready samples (marks them in-flight so the
+    /// same work is not dispatched twice).
+    pub fn request(&self, max_n: usize) -> Vec<SampleMeta> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (&idx, meta) in g.metas.iter() {
+            if out.len() >= max_n {
+                break;
+            }
+            if !g.in_flight.contains(&idx) {
+                out.push(*meta);
+            }
+        }
+        for m in &out {
+            g.in_flight.insert(m.index);
+        }
+        out
+    }
+
+    /// Put samples back without processing (e.g. partial batch returned).
+    pub fn release(&self, indices: &[u64]) {
+        let mut g = self.inner.lock().unwrap();
+        for i in indices {
+            g.in_flight.remove(i);
+        }
+    }
+
+    pub fn ready_count(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.metas.len() - g.in_flight.len()
+    }
+
+    pub fn meta_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().meta_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(index: u64, present: u8) -> SampleMeta {
+        SampleMeta { index, group: 0, warehouse: 0, present, prompt_len: 5, resp_len: 0 }
+    }
+
+    #[test]
+    fn readiness_per_stage() {
+        let fresh = meta(0, 0);
+        assert!(fresh.ready_for(Stage::Generation));
+        assert!(!fresh.ready_for(Stage::OldLogprob));
+        assert!(!fresh.ready_for(Stage::Update));
+
+        let gen_done = meta(0, FieldKind::Tokens.bit() | FieldKind::RespMask.bit());
+        assert!(!gen_done.ready_for(Stage::Generation));
+        assert!(gen_done.ready_for(Stage::OldLogprob));
+        assert!(gen_done.ready_for(Stage::RefLogprob));
+        assert!(gen_done.ready_for(Stage::Reward));
+        assert!(!gen_done.ready_for(Stage::Update));
+
+        let all = meta(
+            0,
+            FieldKind::Tokens.bit()
+                | FieldKind::RespMask.bit()
+                | FieldKind::OldLp.bit()
+                | FieldKind::RefLp.bit()
+                | FieldKind::Reward.bit(),
+        );
+        assert!(all.ready_for(Stage::Update));
+    }
+
+    #[test]
+    fn request_marks_in_flight() {
+        let c = Controller::new(Stage::Generation, 0);
+        c.on_broadcast(meta(1, 0));
+        c.on_broadcast(meta(2, 0));
+        let first = c.request(10);
+        assert_eq!(first.len(), 2);
+        assert!(c.request(10).is_empty(), "in-flight must not be re-issued");
+        c.release(&[1]);
+        assert_eq!(c.request(10).len(), 1);
+    }
+
+    #[test]
+    fn broadcast_updates_readiness() {
+        let c = Controller::new(Stage::OldLogprob, 0);
+        c.on_broadcast(meta(1, 0)); // not ready: no tokens yet
+        assert_eq!(c.ready_count(), 0);
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit()));
+        assert_eq!(c.ready_count(), 1);
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit() | FieldKind::OldLp.bit()));
+        assert_eq!(c.ready_count(), 0, "done samples leave the queue");
+    }
+
+    #[test]
+    fn meta_traffic_counted() {
+        let c = Controller::new(Stage::Reward, 0);
+        c.on_broadcast(meta(1, 0));
+        c.on_retire(1);
+        assert_eq!(c.meta_bytes(), 2 * SampleMeta::WIRE_BYTES);
+    }
+}

@@ -1,0 +1,357 @@
+//! The distributed transfer dock proper: S warehouses + C controllers.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::controller::{Controller, SampleMeta};
+use super::network::{CommLedger, LinkClass, SharedLedger};
+use super::sample::{FieldKind, Sample, Stage};
+use super::warehouse::Warehouse;
+use super::SampleFlow;
+use crate::runtime::Tensor;
+
+/// Placement of the dock across the cluster: which node hosts each
+/// warehouse and each worker-state controller.
+#[derive(Debug, Clone)]
+pub struct DockTopology {
+    /// node id per warehouse (paper: one warehouse per node, S = nodes)
+    pub warehouse_nodes: Vec<usize>,
+    /// node id per worker state's controller (co-located with its worker)
+    pub controller_nodes: BTreeMap<Stage, usize>,
+}
+
+impl DockTopology {
+    /// One warehouse per node; controllers co-located with their workers,
+    /// spread round-robin over nodes.
+    pub fn spread(n_nodes: usize) -> Self {
+        let warehouse_nodes = (0..n_nodes).collect();
+        let controller_nodes = Stage::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, i % n_nodes))
+            .collect();
+        Self { warehouse_nodes, controller_nodes }
+    }
+}
+
+/// The distributed transfer dock (paper Fig. 4).
+pub struct TransferDock {
+    warehouses: Vec<Arc<Warehouse>>,
+    controllers: BTreeMap<Stage, Controller>,
+    ledger: SharedLedger,
+    next_index: AtomicU64,
+}
+
+impl TransferDock {
+    pub fn new(topology: DockTopology) -> Self {
+        let warehouses = topology
+            .warehouse_nodes
+            .iter()
+            .enumerate()
+            .map(|(id, &node)| Arc::new(Warehouse::new(id, node)))
+            .collect();
+        let controllers = topology
+            .controller_nodes
+            .iter()
+            .map(|(&stage, &node)| (stage, Controller::new(stage, node)))
+            .collect();
+        Self {
+            warehouses,
+            controllers,
+            ledger: SharedLedger::default(),
+            next_index: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_warehouses(&self) -> usize {
+        self.warehouses.len()
+    }
+
+    pub fn n_controllers(&self) -> usize {
+        self.controllers.len()
+    }
+
+    fn warehouse_for(&self, index: u64) -> &Arc<Warehouse> {
+        &self.warehouses[(index % self.warehouses.len() as u64) as usize]
+    }
+
+    fn link(&self, a: usize, b: usize) -> LinkClass {
+        if a == b {
+            LinkClass::Local
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    /// Broadcast a metadata record from a warehouse to every controller
+    /// (Eq. 4's `(C+1)·M` metadata cost: C controller copies + the
+    /// warehouse's own bookkeeping write).
+    fn broadcast(&self, from_node: usize, meta: SampleMeta) {
+        self.ledger.record(LinkClass::Local, SampleMeta::WIRE_BYTES); // warehouse bookkeeping
+        for c in self.controllers.values() {
+            self.ledger.record(self.link(from_node, c.node), SampleMeta::WIRE_BYTES);
+            c.on_broadcast(meta);
+        }
+    }
+
+    fn meta_of(&self, s: &Sample, warehouse: usize) -> SampleMeta {
+        SampleMeta {
+            index: s.index,
+            group: s.group,
+            warehouse,
+            present: s.present_mask(),
+            prompt_len: s.prompt_len as u32,
+            resp_len: s.resp_len as u32,
+        }
+    }
+
+    /// Consume a finished sample after the update stage: remove the
+    /// payload from its warehouse and retire the metadata everywhere.
+    fn retire_inner(&self, index: u64) -> Option<Sample> {
+        let w = self.warehouse_for(index).clone();
+        let s = w.remove(index)?;
+        for c in self.controllers.values() {
+            self.ledger.record(self.link(w.node, c.node), SampleMeta::WIRE_BYTES);
+            c.on_retire(index);
+        }
+        Some(s)
+    }
+
+    /// Total payload bytes resident across warehouses, and the max single
+    /// warehouse (balance check).
+    pub fn residency(&self) -> (u64, u64) {
+        let per: Vec<u64> = self.warehouses.iter().map(|w| w.resident_bytes()).collect();
+        (per.iter().sum(), per.iter().copied().max().unwrap_or(0))
+    }
+
+    pub fn controller(&self, stage: Stage) -> Option<&Controller> {
+        self.controllers.get(&stage)
+    }
+}
+
+impl SampleFlow for TransferDock {
+    fn put_samples(&self, samples: Vec<Sample>) -> Result<Vec<u64>> {
+        let mut indices = Vec::with_capacity(samples.len());
+        for mut s in samples {
+            let index = self.next_index.fetch_add(1, Ordering::Relaxed);
+            s.index = index;
+            let w = self.warehouse_for(index).clone();
+            // admission: payload moves from the ingest node (node of
+            // warehouse 0, where the data loader runs) to the shard
+            let ingest_node = self.warehouses[0].node;
+            self.ledger
+                .record(self.link(ingest_node, w.node), s.payload_bytes() as u64);
+            let meta = self.meta_of(&s, w.id);
+            self.ledger.note_requests_on(self.link(ingest_node, w.node), 1);
+            w.put(s)?;
+            self.ledger.note_store_bytes(w.traffic_bytes());
+            self.broadcast(w.node, meta);
+            indices.push(index);
+        }
+        Ok(indices)
+    }
+
+    fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+        let c = self
+            .controllers
+            .get(&stage)
+            .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
+        let metas = c.request(max_n);
+        // the request itself is worker→controller, node-local by
+        // construction (controller co-located), metadata-sized
+        self.ledger
+            .record(LinkClass::Local, (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
+        self.ledger.note_requests_on(LinkClass::Local, 1);
+        Ok(metas)
+    }
+
+    fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
+        let mut out = Vec::with_capacity(metas.len());
+        // one RPC per distinct warehouse touched (batched fetch)
+        let mut warehouses: Vec<usize> = metas.iter().map(|m| m.warehouse).collect();
+        warehouses.sort_unstable();
+        warehouses.dedup();
+        for &wid in &warehouses {
+            let wnode = self.warehouses[wid].node;
+            self.ledger.note_requests_on(self.link(wnode, requester_node), 1);
+        }
+        for m in metas {
+            let w = &self.warehouses[m.warehouse];
+            let s = w.fetch(m.index)?;
+            self.ledger
+                .record(self.link(w.node, requester_node), s.payload_bytes() as u64);
+            self.ledger.note_store_bytes(w.traffic_bytes());
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    fn store_fields(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+    ) -> Result<()> {
+        let w = self.warehouse_for(index).clone();
+        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        self.ledger.record(self.link(requester_node, w.node), bytes);
+        self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
+        w.store_fields(index, fields, None)?;
+        self.ledger.note_store_bytes(w.traffic_bytes());
+        let s = w.fetch_meta_snapshot(index)?;
+        self.broadcast(w.node, s);
+        Ok(())
+    }
+
+    fn store_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+    ) -> Result<()> {
+        self.store_generation_inner(requester_node, index, fields, completion, resp_len)
+    }
+
+    fn retire(&self, index: u64) -> Option<Sample> {
+        self.retire_inner(index)
+    }
+
+    fn ledger(&self) -> CommLedger {
+        self.ledger.snapshot()
+    }
+
+    fn shards(&self) -> usize {
+        self.warehouses.len()
+    }
+
+    fn len(&self) -> usize {
+        self.warehouses.iter().map(|w| w.len()).sum()
+    }
+}
+
+impl TransferDock {
+    /// Store fields along with the generated completion text (generation
+    /// stage writes both the tensors and the decoded string).
+    fn store_generation_inner(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+    ) -> Result<()> {
+        let w = self.warehouse_for(index).clone();
+        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        self.ledger
+            .record(self.link(requester_node, w.node), bytes + completion.len() as u64);
+        self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
+        w.store_fields(index, fields, Some((completion, resp_len)))?;
+        self.ledger.note_store_bytes(w.traffic_bytes());
+        let meta = w.fetch_meta_snapshot(index)?;
+        self.broadcast(w.node, meta);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dock(nodes: usize) -> TransferDock {
+        TransferDock::new(DockTopology::spread(nodes))
+    }
+
+    fn prompts(n: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 4, format!("{i}+1="), i as i64 + 1))
+            .collect()
+    }
+
+    #[test]
+    fn samples_spread_across_warehouses() {
+        let d = dock(4);
+        d.put_samples(prompts(16)).unwrap();
+        for w in &d.warehouses {
+            assert_eq!(w.len(), 4, "round-robin must balance shards");
+        }
+        let (_total, max) = d.residency();
+        assert!(max > 0);
+    }
+
+    #[test]
+    fn generation_flow_round_trip() {
+        let d = dock(2);
+        let idx = d.put_samples(prompts(2)).unwrap();
+        let metas = d.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(metas.len(), 2);
+        // generation completes for sample 0
+        d.store_generation(
+            0,
+            idx[0],
+            vec![(FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap())],
+            "42".into(),
+            3,
+        )
+        .unwrap();
+        // now inference stages see exactly one ready sample
+        let ready = d.request_ready(Stage::OldLogprob, 10).unwrap();
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].index, idx[0]);
+        assert_eq!(ready[0].resp_len, 3);
+        let fetched = d.fetch(1, &ready).unwrap();
+        assert_eq!(fetched[0].completion_text, "42");
+    }
+
+    #[test]
+    fn update_requires_all_fields() {
+        let d = dock(1);
+        let idx = d.put_samples(prompts(1)).unwrap()[0];
+        d.store_generation(
+            0,
+            idx,
+            vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+            "2".into(),
+            1,
+        )
+        .unwrap();
+        assert!(d.request_ready(Stage::Update, 1).unwrap().is_empty());
+        d.store_fields(0, idx, vec![(FieldKind::OldLp, Tensor::zeros(&[3]))]).unwrap();
+        d.store_fields(0, idx, vec![(FieldKind::RefLp, Tensor::zeros(&[3]))]).unwrap();
+        d.store_fields(0, idx, vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))])
+            .unwrap();
+        let ready = d.request_ready(Stage::Update, 1).unwrap();
+        assert_eq!(ready.len(), 1);
+        let s = d.retire(idx).unwrap();
+        assert!(s.ready_for_update());
+        assert_eq!(d.len(), 0);
+    }
+
+    #[test]
+    fn ledger_records_cross_node_payloads() {
+        let d = dock(4);
+        let idx = d.put_samples(prompts(4)).unwrap();
+        let metas = d.request_ready(Stage::Generation, 10).unwrap();
+        d.fetch(0, &metas).unwrap();
+        let led = d.ledger();
+        assert!(led.inter_node_bytes > 0, "shards on other nodes must cost inter-node bytes");
+        assert!(led.local_bytes > 0);
+        assert!(led.requests > 0);
+        drop(idx);
+    }
+
+    #[test]
+    fn double_dispatch_prevented() {
+        let d = dock(2);
+        d.put_samples(prompts(4)).unwrap();
+        let a = d.request_ready(Stage::Generation, 2).unwrap();
+        let b = d.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        let ai: Vec<u64> = a.iter().map(|m| m.index).collect();
+        assert!(b.iter().all(|m| !ai.contains(&m.index)));
+    }
+}

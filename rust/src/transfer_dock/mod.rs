@@ -1,0 +1,83 @@
+//! Sample-flow dataflow: the paper's **distributed transfer dock** (TD)
+//! and the centralized replay-buffer baseline it replaces.
+//!
+//! The TD splits the conventional replay buffer two ways (paper Fig. 4):
+//!
+//! * **warehouses** — the sample payload store is sharded along the global
+//!   batch dimension across `S` nodes, so payload dispatch bandwidth is
+//!   spread over `S` servers instead of one (Eq. 4's `/S`).
+//! * **controllers** — one *per worker state* (actor generation, actor
+//!   inference, reference inference, reward, actor update), holding only
+//!   metadata (sample index, warehouse id, readiness). Workers ask their
+//!   own controller what to fetch, then fetch payloads directly from
+//!   warehouses; warehouses broadcast metadata deltas to all `C`
+//!   controllers (Eq. 4's `8(C+1)M` term).
+//!
+//! Every byte moved is recorded in a [`CommLedger`] with the link class it
+//! crossed (local / inter-node / host-device), which is how Table 1 and
+//! Fig. 9 are regenerated without 384 real NPUs: the payload movement is
+//! real (`Tensor` clones between stores), the *time* is derived from the
+//! paper's measured bandwidths.
+
+mod controller;
+mod dock;
+mod network;
+mod replay_buffer;
+mod sample;
+pub mod volume;
+mod warehouse;
+
+pub use controller::{Controller, SampleMeta};
+pub use dock::{DockTopology, TransferDock};
+pub use network::{CommLedger, LinkClass, NetworkModel};
+pub use replay_buffer::ReplayBuffer;
+pub use sample::{FieldKind, Sample, Stage, FIELD_ORDER};
+pub use volume::{td_tcv_gb, tcv_gb, cv_update_gb, VolumeParams};
+pub use warehouse::Warehouse;
+
+use anyhow::Result;
+
+/// Common interface over the transfer dock and the replay-buffer baseline,
+/// so trainers and the simulator can run either dataflow (Fig. 7/9's
+/// MSRL-vs-MSRLB ablation).
+pub trait SampleFlow: Send + Sync {
+    /// Admit new prompt samples; returns their global indices.
+    fn put_samples(&self, samples: Vec<Sample>) -> Result<Vec<u64>>;
+    /// Ask the dataflow for up to `max_n` samples ready for `stage`.
+    fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>>;
+    /// Fetch full payloads for the given metadata (records comm bytes).
+    fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
+    /// Write fields back for a sample after a stage completes.
+    fn store_fields(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, crate::runtime::Tensor)>,
+    ) -> Result<()>;
+    /// Generation writeback: fields plus the decoded completion text.
+    fn store_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, crate::runtime::Tensor)>,
+        completion: String,
+        resp_len: usize,
+    ) -> Result<()>;
+    /// Consume a finished sample after the update stage.
+    fn retire(&self, index: u64) -> Option<Sample>;
+    /// Snapshot of accumulated communication accounting.
+    fn ledger(&self) -> CommLedger;
+    /// Number of parallel payload stores (warehouses). Dispatch time
+    /// divides by this: warehouses serve concurrently (Eq. 4's /S).
+    fn shards(&self) -> usize;
+    /// Dispatch seconds implied by the accumulated ledger under `net`,
+    /// honouring store parallelism.
+    fn dispatch_secs(&self, net: &NetworkModel) -> f64 {
+        self.ledger().dispatch_secs_sharded(net, self.shards())
+    }
+    /// Number of samples currently resident.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,217 @@
+//! Communication accounting: link classes, bandwidth model, byte ledger.
+//!
+//! The paper's measured testbed numbers (Experiment Setup): inter-server
+//! bandwidth 300 MB/s, host↔device 50 GB/s. Every payload/metadata
+//! movement in the sample flow and resharding flow records (bytes, link
+//! class) here; dispatch *time* is then `bytes / bandwidth(link)` — this
+//! is the calibration-free part of the cost model since it uses the
+//! paper's own constants.
+
+use std::sync::Mutex;
+
+/// Which physical link a transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// same node, device-to-device or in-memory (effectively free at the
+    /// sample-flow scale; modeled at memory bandwidth)
+    Local,
+    /// server-to-server network (the paper's 300 MB/s)
+    InterNode,
+    /// host ↔ device swap path (the paper's 50 GB/s)
+    HostDevice,
+}
+
+/// Bandwidths in bytes/second.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    pub local_bps: f64,
+    pub inter_node_bps: f64,
+    pub host_device_bps: f64,
+    /// per-request latency for a cross-node RPC (serialization +
+    /// scheduler overhead the paper attributes to Ray dispatch), seconds
+    pub request_latency_s: f64,
+    /// per-request latency for a node-local call (co-located controller /
+    /// warehouse — the transfer dock's case), seconds
+    pub local_request_latency_s: f64,
+}
+
+impl NetworkModel {
+    /// The paper's measured testbed.
+    pub fn paper() -> Self {
+        Self {
+            local_bps: 200e9,
+            inter_node_bps: 300e6,
+            host_device_bps: 50e9,
+            request_latency_s: 300e-6,
+            local_request_latency_s: 15e-6,
+        }
+    }
+
+    /// Table 1's two connection columns (100 MB/s and 1 GB/s).
+    pub fn with_inter_node(inter_node_bps: f64) -> Self {
+        Self { inter_node_bps, ..Self::paper() }
+    }
+
+    pub fn bandwidth(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::Local => self.local_bps,
+            LinkClass::InterNode => self.inter_node_bps,
+            LinkClass::HostDevice => self.host_device_bps,
+        }
+    }
+
+    pub fn transfer_secs(&self, link: LinkClass, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth(link)
+    }
+}
+
+/// Accumulated transfer statistics. Cheap to clone (snapshotting).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommLedger {
+    pub local_bytes: u64,
+    pub inter_node_bytes: u64,
+    pub host_device_bytes: u64,
+    /// cross-node RPC round-trips
+    pub requests: u64,
+    /// node-local round-trips (co-located controller/warehouse)
+    pub local_requests: u64,
+    /// peak bytes moved through any single store (the congestion point a
+    /// centralized buffer creates; warehouses spread this)
+    pub max_store_bytes: u64,
+}
+
+impl CommLedger {
+    /// Record moved bytes. Does NOT count an RPC: metadata broadcasts are
+    /// piggybacked/async; count round-trips explicitly via
+    /// [`Self::note_requests`].
+    pub fn record(&mut self, link: LinkClass, bytes: u64) {
+        match link {
+            LinkClass::Local => self.local_bytes += bytes,
+            LinkClass::InterNode => self.inter_node_bytes += bytes,
+            LinkClass::HostDevice => self.host_device_bytes += bytes,
+        }
+    }
+
+    /// Count synchronous request round-trips (each pays
+    /// `request_latency_s`, the paper's Ray dispatch overhead).
+    pub fn note_requests(&mut self, n: u64) {
+        self.requests += n;
+    }
+
+    /// Count round-trips classified by the link they cross: node-local
+    /// calls pay `local_request_latency_s` instead.
+    pub fn note_requests_on(&mut self, link: LinkClass, n: u64) {
+        if matches!(link, LinkClass::Local) {
+            self.local_requests += n;
+        } else {
+            self.requests += n;
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.local_bytes + self.inter_node_bytes + self.host_device_bytes
+    }
+
+    /// Serial dispatch time under a network model: all transfers paid at
+    /// their link bandwidth plus per-request latency.
+    pub fn dispatch_secs(&self, net: &NetworkModel) -> f64 {
+        net.transfer_secs(LinkClass::Local, self.local_bytes)
+            + net.transfer_secs(LinkClass::InterNode, self.inter_node_bytes)
+            + net.transfer_secs(LinkClass::HostDevice, self.host_device_bytes)
+            + self.requests as f64 * net.request_latency_s
+            + self.local_requests as f64 * net.local_request_latency_s
+    }
+
+    /// Dispatch time when the store side is sharded over `s` equal servers
+    /// (warehouse parallelism): payload cost divides, latency stays.
+    pub fn dispatch_secs_sharded(&self, net: &NetworkModel, s: usize) -> f64 {
+        let s = s.max(1) as f64;
+        net.transfer_secs(LinkClass::Local, self.local_bytes) / s
+            + net.transfer_secs(LinkClass::InterNode, self.inter_node_bytes) / s
+            + net.transfer_secs(LinkClass::HostDevice, self.host_device_bytes)
+            + self.requests as f64 * net.request_latency_s / s
+            + self.local_requests as f64 * net.local_request_latency_s
+    }
+
+    pub fn merge(&mut self, other: &CommLedger) {
+        self.local_bytes += other.local_bytes;
+        self.inter_node_bytes += other.inter_node_bytes;
+        self.host_device_bytes += other.host_device_bytes;
+        self.requests += other.requests;
+        self.local_requests += other.local_requests;
+        self.max_store_bytes = self.max_store_bytes.max(other.max_store_bytes);
+    }
+}
+
+/// Shared, thread-safe ledger.
+#[derive(Debug, Default)]
+pub struct SharedLedger(Mutex<CommLedger>);
+
+impl SharedLedger {
+    pub fn record(&self, link: LinkClass, bytes: u64) {
+        self.0.lock().unwrap().record(link, bytes);
+    }
+
+    pub fn note_requests(&self, n: u64) {
+        self.0.lock().unwrap().note_requests(n);
+    }
+
+    pub fn note_requests_on(&self, link: LinkClass, n: u64) {
+        self.0.lock().unwrap().note_requests_on(link, n);
+    }
+
+    pub fn note_store_bytes(&self, bytes: u64) {
+        let mut l = self.0.lock().unwrap();
+        l.max_store_bytes = l.max_store_bytes.max(bytes);
+    }
+
+    pub fn snapshot(&self) -> CommLedger {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bandwidths() {
+        let n = NetworkModel::paper();
+        assert_eq!(n.bandwidth(LinkClass::InterNode), 300e6);
+        assert_eq!(n.bandwidth(LinkClass::HostDevice), 50e9);
+    }
+
+    #[test]
+    fn transfer_time_scales() {
+        let n = NetworkModel::with_inter_node(100e6);
+        let t = n.transfer_secs(LinkClass::InterNode, 1_000_000_000);
+        assert!((t - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = CommLedger::default();
+        a.record(LinkClass::InterNode, 100);
+        a.note_requests(2);
+        a.record(LinkClass::Local, 50);
+        let mut b = CommLedger::default();
+        b.record(LinkClass::InterNode, 200);
+        b.note_requests(1);
+        a.merge(&b);
+        assert_eq!(a.inter_node_bytes, 300);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.total_bytes(), 350);
+    }
+
+    #[test]
+    fn sharded_dispatch_divides_payload_not_latency() {
+        let mut l = CommLedger::default();
+        l.record(LinkClass::InterNode, 300_000_000); // 1s at paper bandwidth
+        l.note_requests(1);
+        let net = NetworkModel::paper();
+        let t1 = l.dispatch_secs(&net);
+        let t4 = l.dispatch_secs_sharded(&net, 4);
+        assert!(t4 < t1);
+        assert!(t4 >= 0.25 * (t1 - net.request_latency_s));
+    }
+}

@@ -1,0 +1,263 @@
+//! Centralized replay buffer — the baseline the transfer dock replaces
+//! (paper Fig. 2, and the MSRLB configuration of Fig. 9).
+//!
+//! One store on one node; every worker on every other node pays an
+//! inter-node payload transfer for every request, and readiness tracking
+//! is a scan of the central map (the congestion the paper's Eq. 2
+//! quantifies).
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::controller::SampleMeta;
+use super::network::{CommLedger, LinkClass, SharedLedger};
+use super::sample::{FieldKind, Sample, Stage};
+use super::SampleFlow;
+use crate::runtime::Tensor;
+
+pub struct ReplayBuffer {
+    /// node hosting the buffer (all traffic converges here)
+    pub node: usize,
+    inner: Mutex<Inner>,
+    ledger: SharedLedger,
+    next_index: AtomicU64,
+}
+
+#[derive(Default)]
+struct Inner {
+    samples: BTreeMap<u64, Sample>,
+    in_flight: std::collections::HashSet<(Stage, u64)>,
+    traffic_bytes: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(node: usize) -> Self {
+        Self {
+            node,
+            inner: Mutex::new(Inner::default()),
+            ledger: SharedLedger::default(),
+            next_index: AtomicU64::new(0),
+        }
+    }
+
+    fn link(&self, other: usize) -> LinkClass {
+        if other == self.node {
+            LinkClass::Local
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    fn meta_of(s: &Sample) -> SampleMeta {
+        SampleMeta {
+            index: s.index,
+            group: s.group,
+            warehouse: 0,
+            present: s.present_mask(),
+            prompt_len: s.prompt_len as u32,
+            resp_len: s.resp_len as u32,
+        }
+    }
+
+    /// Consume a finished sample (post-update).
+    fn retire_inner(&self, index: u64) -> Option<Sample> {
+        let mut g = self.inner.lock().unwrap();
+        g.samples.remove(&index)
+    }
+}
+
+impl SampleFlow for ReplayBuffer {
+    fn put_samples(&self, samples: Vec<Sample>) -> Result<Vec<u64>> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(samples.len());
+        for mut s in samples {
+            let index = self.next_index.fetch_add(1, Ordering::Relaxed);
+            s.index = index;
+            // ingest from node 0's data loader to the buffer node
+            self.ledger.record(self.link(0), s.payload_bytes() as u64);
+            self.ledger.note_requests_on(self.link(0), 1);
+            g.traffic_bytes += s.payload_bytes() as u64;
+            g.samples.insert(index, s);
+            out.push(index);
+        }
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        Ok(out)
+    }
+
+    fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+        let mut g = self.inner.lock().unwrap();
+        // a centralized buffer must answer readiness queries itself: the
+        // requester pays a metadata round-trip per *candidate scanned*,
+        // not per ready sample — this is the dispatch-overhead term
+        let mut out = Vec::new();
+        let mut scanned = 0u64;
+        let mut picked = Vec::new();
+        for (&idx, s) in g.samples.iter() {
+            scanned += 1;
+            if out.len() >= max_n {
+                break;
+            }
+            let meta = Self::meta_of(s);
+            if meta.ready_for(stage) && !g.in_flight.contains(&(stage, idx)) {
+                out.push(meta);
+                picked.push(idx);
+            }
+        }
+        for idx in picked {
+            g.in_flight.insert((stage, idx));
+        }
+        self.ledger
+            .record(LinkClass::InterNode, (scanned + 1) * SampleMeta::WIRE_BYTES);
+        // readiness queries come from workers anywhere in the cluster
+        self.ledger.note_requests_on(LinkClass::InterNode, 1);
+        Ok(out)
+    }
+
+    fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
+        self.ledger.note_requests_on(self.link(requester_node), 1);
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(metas.len());
+        for m in metas {
+            let s = g
+                .samples
+                .get(&m.index)
+                .ok_or_else(|| anyhow!("replay buffer: no sample {}", m.index))?
+                .clone();
+            self.ledger.record(self.link(requester_node), s.payload_bytes() as u64);
+            g.traffic_bytes += s.payload_bytes() as u64;
+            out.push(s);
+        }
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        Ok(out)
+    }
+
+    fn store_fields(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+    ) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        self.ledger.record(self.link(requester_node), bytes);
+        self.ledger.note_requests_on(self.link(requester_node), 1);
+        g.traffic_bytes += bytes;
+        let s = g
+            .samples
+            .get_mut(&index)
+            .ok_or_else(|| anyhow!("replay buffer: no sample {index}"))?;
+        for (k, t) in fields {
+            s.put(k, t);
+        }
+        // clear in-flight latches for stages this write completes
+        let stages: Vec<Stage> = Stage::ALL.to_vec();
+        for st in stages {
+            g.in_flight.remove(&(st, index));
+        }
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        Ok(())
+    }
+
+    fn store_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+    ) -> Result<()> {
+        self.store_generation_inner(requester_node, index, fields, completion, resp_len)
+    }
+
+    fn retire(&self, index: u64) -> Option<Sample> {
+        self.retire_inner(index)
+    }
+
+    fn ledger(&self) -> CommLedger {
+        self.ledger.snapshot()
+    }
+
+    fn shards(&self) -> usize {
+        1
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
+    }
+}
+
+impl ReplayBuffer {
+    /// Generation-stage writeback including the completion text.
+    fn store_generation_inner(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+    ) -> Result<()> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let s = g
+                .samples
+                .get_mut(&index)
+                .ok_or_else(|| anyhow!("replay buffer: no sample {index}"))?;
+            s.completion_text = completion;
+            s.resp_len = resp_len;
+        }
+        self.store_fields(requester_node, index, fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompts(n: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| Sample::new_prompt(u64::MAX, 0, format!("{i}+1="), i as i64 + 1))
+            .collect()
+    }
+
+    #[test]
+    fn same_lifecycle_as_dock() {
+        let rb = ReplayBuffer::new(0);
+        let idx = rb.put_samples(prompts(2)).unwrap();
+        let metas = rb.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(metas.len(), 2);
+        rb.store_generation(
+            1,
+            idx[0],
+            vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+            "2".into(),
+            1,
+        )
+        .unwrap();
+        let ready = rb.request_ready(Stage::RefLogprob, 10).unwrap();
+        assert_eq!(ready.len(), 1);
+    }
+
+    #[test]
+    fn all_traffic_hits_one_store() {
+        let rb = ReplayBuffer::new(0);
+        rb.put_samples(prompts(8)).unwrap();
+        let metas = rb.request_ready(Stage::Generation, 8).unwrap();
+        rb.fetch(3, &metas).unwrap(); // remote worker
+        let led = rb.ledger();
+        assert!(led.inter_node_bytes > 0);
+        assert!(led.max_store_bytes >= led.inter_node_bytes / 2);
+    }
+
+    #[test]
+    fn readiness_scan_costs_metadata_bytes() {
+        let rb = ReplayBuffer::new(0);
+        rb.put_samples(prompts(100)).unwrap();
+        let before = rb.ledger().inter_node_bytes;
+        rb.request_ready(Stage::Update, 4).unwrap();
+        let after = rb.ledger().inter_node_bytes;
+        // scanning 100 unready samples costs ~100 metadata records
+        assert!(after - before >= 100 * SampleMeta::WIRE_BYTES);
+    }
+}

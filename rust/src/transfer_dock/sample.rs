@@ -1,0 +1,218 @@
+//! The TensorDict-like sample record that flows through the system.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Tensor;
+
+/// Worker states, each of which owns a TD controller (paper Fig. 4: the
+/// number of controllers C is set by the RL algorithm; GRPO has 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// actor generation: prompt → response tokens
+    Generation,
+    /// actor inference: old-policy log-probs of the response
+    OldLogprob,
+    /// reference inference: reference log-probs
+    RefLogprob,
+    /// rule reward scoring
+    Reward,
+    /// actor update: consume the finished sample
+    Update,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [
+        Stage::Generation,
+        Stage::OldLogprob,
+        Stage::RefLogprob,
+        Stage::Reward,
+        Stage::Update,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Generation => "generation",
+            Stage::OldLogprob => "old_logprob",
+            Stage::RefLogprob => "ref_logprob",
+            Stage::Reward => "reward",
+            Stage::Update => "update",
+        }
+    }
+}
+
+/// Tensor fields a sample accumulates as it flows through stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FieldKind {
+    /// prompt+response token ids `[S] i32` (padded)
+    Tokens,
+    /// response mask `[S-1] f32`
+    RespMask,
+    /// old-policy per-token log-probs `[S-1] f32`
+    OldLp,
+    /// reference per-token log-probs `[S-1] f32`
+    RefLp,
+    /// scalar rule reward
+    Reward,
+    /// scalar group-normalized advantage
+    Advantage,
+}
+
+/// Field production order used for readiness bitmasks.
+pub const FIELD_ORDER: [FieldKind; 6] = [
+    FieldKind::Tokens,
+    FieldKind::RespMask,
+    FieldKind::OldLp,
+    FieldKind::RefLp,
+    FieldKind::Reward,
+    FieldKind::Advantage,
+];
+
+impl FieldKind {
+    pub fn bit(&self) -> u8 {
+        1 << FIELD_ORDER.iter().position(|f| f == self).unwrap()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FieldKind::Tokens => "tokens",
+            FieldKind::RespMask => "resp_mask",
+            FieldKind::OldLp => "old_lp",
+            FieldKind::RefLp => "ref_lp",
+            FieldKind::Reward => "reward",
+            FieldKind::Advantage => "advantage",
+        }
+    }
+}
+
+/// One RL sample (a prompt with one generated response and its transient
+/// data). The paper implements this as a Ray TensorDict; here it is a
+/// plain map of named host tensors plus scalar metadata.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub index: u64,
+    /// group id: samples of the same prompt share it (GRPO group)
+    pub group: u64,
+    pub prompt_len: usize,
+    pub resp_len: usize,
+    pub prompt_text: String,
+    pub answer: i64,
+    pub completion_text: String,
+    pub fields: BTreeMap<FieldKind, Tensor>,
+}
+
+impl Sample {
+    pub fn new_prompt(index: u64, group: u64, prompt_text: String, answer: i64) -> Self {
+        Self {
+            index,
+            group,
+            prompt_len: prompt_text.len() + 1, // + BOS
+            resp_len: 0,
+            prompt_text,
+            answer,
+            completion_text: String::new(),
+            fields: BTreeMap::new(),
+        }
+    }
+
+    pub fn put(&mut self, kind: FieldKind, t: Tensor) {
+        self.fields.insert(kind, t);
+    }
+
+    pub fn get(&self, kind: FieldKind) -> Option<&Tensor> {
+        self.fields.get(&kind)
+    }
+
+    pub fn has(&self, kind: FieldKind) -> bool {
+        self.fields.contains_key(&kind)
+    }
+
+    /// Bitmask of present fields (mirrors controller metadata).
+    pub fn present_mask(&self) -> u8 {
+        self.fields.keys().fold(0u8, |m, k| m | k.bit())
+    }
+
+    /// Payload bytes (the `CV` term of Eq. 1: tokens + n·SL items + scalars).
+    pub fn payload_bytes(&self) -> usize {
+        let tensor_bytes: usize = self.fields.values().map(|t| t.size_bytes()).sum();
+        tensor_bytes + self.scalar_bytes()
+    }
+
+    /// Scalar metadata bytes (the `M` term of Eq. 1): index, group,
+    /// prompt_len, resp_len, answer — 5 scalars × 4 bytes nominal.
+    pub fn scalar_bytes(&self) -> usize {
+        5 * 4
+    }
+
+    /// Which stages still need to produce data for this sample.
+    pub fn next_stages(&self) -> Vec<Stage> {
+        let mut out = Vec::new();
+        if !self.has(FieldKind::Tokens) {
+            out.push(Stage::Generation);
+            return out; // nothing else can run before generation
+        }
+        if !self.has(FieldKind::OldLp) {
+            out.push(Stage::OldLogprob);
+        }
+        if !self.has(FieldKind::RefLp) {
+            out.push(Stage::RefLogprob);
+        }
+        if !self.has(FieldKind::Reward) {
+            out.push(Stage::Reward);
+        }
+        if out.is_empty() {
+            out.push(Stage::Update);
+        }
+        out
+    }
+
+    pub fn ready_for_update(&self) -> bool {
+        self.has(FieldKind::Tokens)
+            && self.has(FieldKind::OldLp)
+            && self.has(FieldKind::RefLp)
+            && self.has(FieldKind::Reward)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Sample {
+        Sample::new_prompt(3, 1, "1+2=".into(), 3)
+    }
+
+    #[test]
+    fn lifecycle_stages() {
+        let mut s = sample();
+        assert_eq!(s.next_stages(), vec![Stage::Generation]);
+        s.put(FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap());
+        let next = s.next_stages();
+        assert!(next.contains(&Stage::OldLogprob));
+        assert!(next.contains(&Stage::RefLogprob));
+        assert!(next.contains(&Stage::Reward));
+        s.put(FieldKind::OldLp, Tensor::zeros(&[7]));
+        s.put(FieldKind::RefLp, Tensor::zeros(&[7]));
+        s.put(FieldKind::Reward, Tensor::scalar_f32(1.0));
+        assert!(s.ready_for_update());
+        assert_eq!(s.next_stages(), vec![Stage::Update]);
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let mut s = sample();
+        assert_eq!(s.payload_bytes(), s.scalar_bytes());
+        s.put(FieldKind::Tokens, Tensor::i32(&[16], vec![0; 16]).unwrap());
+        assert_eq!(s.payload_bytes(), 16 * 4 + s.scalar_bytes());
+    }
+
+    #[test]
+    fn bitmask_round_trip() {
+        let mut s = sample();
+        s.put(FieldKind::Tokens, Tensor::zeros(&[1]));
+        s.put(FieldKind::Reward, Tensor::scalar_f32(0.0));
+        let m = s.present_mask();
+        assert_ne!(m & FieldKind::Tokens.bit(), 0);
+        assert_ne!(m & FieldKind::Reward.bit(), 0);
+        assert_eq!(m & FieldKind::OldLp.bit(), 0);
+    }
+}

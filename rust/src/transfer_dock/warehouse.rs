@@ -1,0 +1,165 @@
+//! TD warehouse: one shard of the sample payload store, living on a node.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::sample::{FieldKind, Sample};
+use crate::runtime::Tensor;
+
+/// A payload shard. Thread-safe; workers on any node may fetch from it,
+/// and the dock records the link class of each access based on node ids.
+#[derive(Debug)]
+pub struct Warehouse {
+    pub id: usize,
+    /// node this warehouse lives on (usually id == node, one per node)
+    pub node: usize,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    samples: HashMap<u64, Sample>,
+    /// cumulative bytes served + stored (congestion measure)
+    traffic_bytes: u64,
+}
+
+impl Warehouse {
+    pub fn new(id: usize, node: usize) -> Self {
+        Self { id, node, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn put(&self, sample: Sample) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.traffic_bytes += sample.payload_bytes() as u64;
+        g.samples.insert(sample.index, sample);
+        Ok(())
+    }
+
+    /// Clone out a sample's payload (a fetch serves a copy; the warehouse
+    /// keeps the original — consumption is an explicit `remove`).
+    pub fn fetch(&self, index: u64) -> Result<Sample> {
+        let mut g = self.inner.lock().unwrap();
+        let s = g
+            .samples
+            .get(&index)
+            .ok_or_else(|| anyhow!("warehouse {}: no sample {index}", self.id))?
+            .clone();
+        g.traffic_bytes += s.payload_bytes() as u64;
+        Ok(s)
+    }
+
+    /// Merge produced fields into a stored sample; returns the new
+    /// presence bitmask and updated text metadata if provided.
+    pub fn store_fields(
+        &self,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: Option<(String, usize)>,
+    ) -> Result<u8> {
+        let mut g = self.inner.lock().unwrap();
+        let added: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        let s = g
+            .samples
+            .get_mut(&index)
+            .ok_or_else(|| anyhow!("warehouse {}: no sample {index}", self.id))?;
+        for (k, t) in fields {
+            s.put(k, t);
+        }
+        if let Some((text, resp_len)) = completion {
+            s.completion_text = text;
+            s.resp_len = resp_len;
+        }
+        let mask = s.present_mask();
+        g.traffic_bytes += added;
+        Ok(mask)
+    }
+
+    /// Metadata snapshot without cloning the payload (what a warehouse
+    /// broadcasts after an update).
+    pub fn fetch_meta_snapshot(&self, index: u64) -> Result<super::controller::SampleMeta> {
+        let g = self.inner.lock().unwrap();
+        let s = g
+            .samples
+            .get(&index)
+            .ok_or_else(|| anyhow!("warehouse {}: no sample {index}", self.id))?;
+        Ok(super::controller::SampleMeta {
+            index: s.index,
+            group: s.group,
+            warehouse: self.id,
+            present: s.present_mask(),
+            prompt_len: s.prompt_len as u32,
+            resp_len: s.resp_len as u32,
+        })
+    }
+
+    pub fn remove(&self, index: u64) -> Option<Sample> {
+        self.inner.lock().unwrap().samples.remove(&index)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn traffic_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().traffic_bytes
+    }
+
+    /// Bytes currently resident (memory pressure of the shard).
+    pub fn resident_bytes(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.samples.values().map(|s| s.payload_bytes() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(idx: u64) -> Sample {
+        Sample::new_prompt(idx, 0, "1+1=".into(), 2)
+    }
+
+    #[test]
+    fn put_fetch_remove() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(1)).unwrap();
+        assert_eq!(w.len(), 1);
+        let s = w.fetch(1).unwrap();
+        assert_eq!(s.index, 1);
+        assert_eq!(w.len(), 1, "fetch must not consume");
+        assert!(w.remove(1).is_some());
+        assert!(w.is_empty());
+        assert!(w.fetch(1).is_err());
+    }
+
+    #[test]
+    fn store_fields_updates_mask() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(2)).unwrap();
+        let mask = w
+            .store_fields(
+                2,
+                vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1, 2, 3, 4]).unwrap())],
+                Some(("2".into(), 2)),
+            )
+            .unwrap();
+        assert_ne!(mask & FieldKind::Tokens.bit(), 0);
+        let s = w.fetch(2).unwrap();
+        assert_eq!(s.completion_text, "2");
+        assert_eq!(s.resp_len, 2);
+    }
+
+    #[test]
+    fn traffic_accumulates() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(1)).unwrap();
+        let t0 = w.traffic_bytes();
+        w.fetch(1).unwrap();
+        assert!(w.traffic_bytes() > t0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / stddev reporting, and
+//! a table printer used by the paper-reproduction benches to emit the same
+//! rows/series the paper reports. Results can also be dumped as JSON into
+//! `results/` for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} ±{:>9} ({} iters)",
+            self.name,
+            crate::util::fmt_secs(self.mean_s),
+            crate::util::fmt_secs(self.p50_s),
+            crate::util::fmt_secs(self.p95_s),
+            crate::util::fmt_secs(self.std_s),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "std"
+    )
+}
+
+/// Run `f` with warmup, then time `iters` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Time a batch-style closure that reports how many inner ops it ran;
+/// returns per-op stats.
+pub fn bench_throughput<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> (BenchResult, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut total_ops = 0usize;
+    let mut total_time = 0f64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let ops = f();
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        total_ops += ops;
+        total_time += dt;
+    }
+    let r = summarize(name, &mut samples);
+    let ops_per_sec = total_ops as f64 / total_time.max(1e-12);
+    (r, ops_per_sec)
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: samples[(n - 1) / 2],
+        p95_s: samples[((n - 1) as f64 * 0.95) as usize],
+        std_s: var.sqrt(),
+    }
+}
+
+/// Fixed-width table printer for paper-shaped output.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_s >= 0.0 && r.p50_s <= r.p95_s);
+    }
+
+    #[test]
+    fn throughput_counts_ops() {
+        let (_, ops) = bench_throughput("batch", 0, 5, || 100);
+        assert!(ops > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("bb"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

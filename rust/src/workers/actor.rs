@@ -1,0 +1,204 @@
+//! The actor worker: generation and old-logprob inference states.
+//! (The update state lives in `trainers::grpo`, which owns the policy's
+//! optimizer loop.)
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::generation::{GenEngine, GenRequest};
+use crate::runtime::{Engine, Policy, Tensor};
+use crate::tokenizer::Tokenizer;
+use crate::transfer_dock::{FieldKind, SampleFlow, SampleMeta, Stage};
+use crate::util::rng::Rng;
+
+/// Outcome statistics for one generation pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenerationOutcome {
+    pub sequences: usize,
+    pub tokens: u64,
+    pub occupancy: f64,
+    pub wall_secs: f64,
+}
+
+/// The actor worker, bound to a node of the (simulated) cluster.
+pub struct ActorWorker {
+    pub node: usize,
+    pub tokenizer: Tokenizer,
+    pub gen_engine: GenEngine,
+    pub max_new_tokens: usize,
+}
+
+impl ActorWorker {
+    pub fn new(
+        engine: &Engine,
+        node: usize,
+        gen_engine: GenEngine,
+        max_new_tokens: usize,
+    ) -> Self {
+        Self { node, tokenizer: Tokenizer::from_manifest(&engine.manifest), gen_engine, max_new_tokens }
+    }
+
+    /// Generation state: pull prompt-ready samples, batch-generate, write
+    /// tokens + response masks + completion text back. Works over any
+    /// [`SampleFlow`] (transfer dock or replay-buffer baseline).
+    pub fn run_generation(
+        &self,
+        engine: &Engine,
+        policy: &Policy,
+        dock: &dyn SampleFlow,
+        rng: &mut Rng,
+        max_batch: usize,
+    ) -> Result<GenerationOutcome> {
+        let metas = dock.request_ready(Stage::Generation, max_batch)?;
+        if metas.is_empty() {
+            return Ok(GenerationOutcome::default());
+        }
+        let samples = dock.fetch(self.node, &metas)?;
+        let mut requests = Vec::with_capacity(samples.len());
+        for s in &samples {
+            let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
+            requests.push(GenRequest {
+                id: s.index,
+                prompt_ids,
+                max_new_tokens: self.max_new_tokens,
+            });
+        }
+        let (results, stats) = self.gen_engine.generate(engine, policy, requests, rng)?;
+
+        let seq = engine.manifest.artifact("logprobs")?.seq;
+        for r in &results {
+            let s = samples.iter().find(|s| s.index == r.id).unwrap();
+            let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
+            let (tokens, mask, resp_len) =
+                pack_sequence(&prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
+            let completion = self.tokenizer.decode(&r.response_ids);
+            dock.store_generation(
+                self.node,
+                r.id,
+                vec![
+                    (FieldKind::Tokens, tokens),
+                    (FieldKind::RespMask, mask),
+                ],
+                completion,
+                resp_len,
+            )?;
+        }
+        Ok(GenerationOutcome {
+            sequences: results.len(),
+            tokens: stats.tokens_generated,
+            occupancy: stats.occupancy,
+            wall_secs: stats.wall_secs,
+        })
+    }
+
+    /// Old-logprob inference state: score response tokens under the
+    /// *current* policy before the update changes it.
+    pub fn run_old_logprobs(
+        &self,
+        engine: &Engine,
+        policy: &Policy,
+        flow: &dyn SampleFlow,
+        max_batch: usize,
+    ) -> Result<usize> {
+        run_logprob_stage(
+            engine,
+            policy,
+            flow,
+            &self.tokenizer,
+            self.node,
+            Stage::OldLogprob,
+            FieldKind::OldLp,
+            max_batch,
+        )
+    }
+}
+
+/// Shared implementation for the two logprob-producing stages.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_logprob_stage(
+    engine: &Engine,
+    policy: &Policy,
+    flow: &dyn SampleFlow,
+    tokenizer: &Tokenizer,
+    node: usize,
+    stage: Stage,
+    field: FieldKind,
+    max_batch: usize,
+) -> Result<usize> {
+    let a = engine.manifest.artifact("logprobs")?.clone();
+    let (b, s) = (a.batch, a.seq);
+    let mut done = 0usize;
+    loop {
+        let metas: Vec<SampleMeta> = flow.request_ready(stage, b.min(max_batch))?;
+        if metas.is_empty() {
+            break;
+        }
+        let samples = flow.fetch(node, &metas)?;
+        let refs: Vec<&_> = samples.iter().collect();
+        let tokens = super::stack_tokens(tokenizer, &refs, b, s)?;
+        let lp = policy.logprobs(engine, &tokens)?;
+        let lpv = lp.as_f32()?;
+        for (i, sample) in samples.iter().enumerate() {
+            let row = lpv[i * (s - 1)..(i + 1) * (s - 1)].to_vec();
+            flow.store_fields(
+                node,
+                sample.index,
+                vec![(field, Tensor::f32(&[s - 1], row)?)],
+            )?;
+            done += 1;
+        }
+    }
+    Ok(done)
+}
+
+/// Lay out BOS+prompt+response into the artifact's fixed `[S]` shape and
+/// build the response mask `[S-1]` (mask index t scores token t+1).
+pub(crate) fn pack_sequence(
+    prompt_ids: &[i32],
+    response_ids: &[i32],
+    seq: usize,
+    pad_id: i32,
+) -> Result<(Tensor, Tensor, usize)> {
+    let mut tokens = prompt_ids.to_vec();
+    tokens.extend_from_slice(response_ids);
+    anyhow::ensure!(tokens.len() <= seq, "sequence {} exceeds artifact seq {seq}", tokens.len());
+    let resp_start = prompt_ids.len();
+    let resp_len = response_ids.len();
+    tokens.resize(seq, pad_id);
+    let mut mask = vec![0f32; seq - 1];
+    for t in resp_start - 1..resp_start - 1 + resp_len {
+        mask[t] = 1.0;
+    }
+    Ok((
+        Tensor::i32(&[seq], tokens)?,
+        Tensor::f32(&[seq - 1], mask)?,
+        resp_len,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_sequence_mask_alignment() {
+        // prompt [1, 10, 11], response [20, 2]: token positions 3, 4 are
+        // response; mask indices 2 and 3 (predicting tokens 3 and 4) set
+        let (tokens, mask, resp_len) = pack_sequence(&[1, 10, 11], &[20, 2], 8, 0).unwrap();
+        assert_eq!(tokens.as_i32().unwrap(), &[1, 10, 11, 20, 2, 0, 0, 0]);
+        assert_eq!(mask.as_f32().unwrap(), &[0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(resp_len, 2);
+    }
+
+    #[test]
+    fn pack_sequence_overflow_rejected() {
+        assert!(pack_sequence(&[1; 6], &[2; 6], 8, 0).is_err());
+    }
+
+    #[test]
+    fn mask_sums_to_resp_len() {
+        let (_, mask, resp_len) = pack_sequence(&[1, 3], &[4, 5, 6], 16, 0).unwrap();
+        let sum: f32 = mask.as_f32().unwrap().iter().sum();
+        assert_eq!(sum as usize, resp_len);
+    }
+}

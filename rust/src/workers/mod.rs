@@ -1,0 +1,57 @@
+//! RL workers: the stages of Fig. 1 wired to a [`SampleFlow`].
+//!
+//! Each worker pulls ready samples from its own TD controller (or from the
+//! centralized replay buffer when running the baseline), computes, and
+//! writes fields back — the dataflow bytes this generates are the paper's
+//! sample flow. The actor has three states (generation / inference /
+//! update); reference and reward are separate workers.
+
+mod actor;
+mod reference;
+mod reward;
+
+pub use actor::{ActorWorker, GenerationOutcome};
+pub use reference::ReferenceWorker;
+pub use reward::RewardWorker;
+
+use anyhow::Result;
+
+use crate::runtime::Tensor;
+use crate::tokenizer::Tokenizer;
+use crate::transfer_dock::Sample;
+
+/// Shared shaping helpers for inference batches.
+pub(crate) fn tokens_row(
+    tok: &Tokenizer,
+    sample: &Sample,
+    seq: usize,
+) -> Result<Vec<i32>> {
+    let t = sample
+        .get(crate::transfer_dock::FieldKind::Tokens)
+        .ok_or_else(|| anyhow::anyhow!("sample {} has no tokens", sample.index))?;
+    let mut row = t.as_i32()?.to_vec();
+    anyhow::ensure!(row.len() <= seq, "sample longer than artifact seq");
+    row.resize(seq, tok.pad_id);
+    Ok(row)
+}
+
+/// Stack sample token rows into a `[B, S]` i32 tensor, padding the last
+/// batch with repeats of the final row (extra rows are discarded by the
+/// caller).
+pub(crate) fn stack_tokens(
+    tok: &Tokenizer,
+    samples: &[&Sample],
+    batch: usize,
+    seq: usize,
+) -> Result<Tensor> {
+    anyhow::ensure!(!samples.is_empty() && samples.len() <= batch);
+    let mut data = Vec::with_capacity(batch * seq);
+    for s in samples {
+        data.extend(tokens_row(tok, s, seq)?);
+    }
+    let last: Vec<i32> = data[data.len() - seq..].to_vec();
+    for _ in samples.len()..batch {
+        data.extend(&last);
+    }
+    Tensor::i32(&[batch, seq], data)
+}

@@ -1,0 +1,39 @@
+//! Reference worker: frozen-policy log-probs for the KL penalty.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Policy};
+use crate::tokenizer::Tokenizer;
+use crate::transfer_dock::{FieldKind, SampleFlow, Stage};
+
+/// Holds the frozen reference policy (the pre-RL checkpoint; in this
+/// reproduction, the AOT initial parameters).
+pub struct ReferenceWorker {
+    pub node: usize,
+    pub policy: Policy,
+    tokenizer: Tokenizer,
+}
+
+impl ReferenceWorker {
+    pub fn new(engine: &Engine, node: usize) -> Result<Self> {
+        Ok(Self {
+            node,
+            policy: Policy::load_initial(engine, 0.0)?,
+            tokenizer: Tokenizer::from_manifest(&engine.manifest),
+        })
+    }
+
+    /// Inference state: fill `ref_lp` for every ready sample.
+    pub fn run(&self, engine: &Engine, flow: &dyn SampleFlow, max_batch: usize) -> Result<usize> {
+        super::actor::run_logprob_stage(
+            engine,
+            &self.policy,
+            flow,
+            &self.tokenizer,
+            self.node,
+            Stage::RefLogprob,
+            FieldKind::RefLp,
+            max_batch,
+        )
+    }
+}

@@ -1,0 +1,56 @@
+//! Reward worker: rule reward over generated completions.
+
+use anyhow::Result;
+
+use crate::data::{Task, Tier};
+use crate::rewards;
+use crate::runtime::Tensor;
+use crate::transfer_dock::{FieldKind, SampleFlow, Stage};
+
+/// Stateless rule-reward worker (no model inference).
+pub struct RewardWorker {
+    pub node: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RewardOutcome {
+    pub scored: usize,
+    pub exact: usize,
+    pub well_formed: usize,
+    pub reward_sum: f32,
+}
+
+impl RewardWorker {
+    pub fn new(node: usize) -> Self {
+        Self { node }
+    }
+
+    pub fn run(&self, flow: &dyn SampleFlow, max_batch: usize) -> Result<RewardOutcome> {
+        let mut out = RewardOutcome::default();
+        loop {
+            let metas = flow.request_ready(Stage::Reward, max_batch)?;
+            if metas.is_empty() {
+                break;
+            }
+            let samples = flow.fetch(self.node, &metas)?;
+            for s in samples {
+                let task = Task {
+                    prompt: s.prompt_text.clone(),
+                    answer: s.answer,
+                    tier: Tier::Easy, // tier is irrelevant for scoring
+                };
+                let score = rewards::score(&task, &s.completion_text);
+                out.scored += 1;
+                out.exact += score.exact as usize;
+                out.well_formed += score.well_formed as usize;
+                out.reward_sum += score.reward;
+                flow.store_fields(
+                    self.node,
+                    s.index,
+                    vec![(FieldKind::Reward, Tensor::scalar_f32(score.reward))],
+                )?;
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,104 @@
+//! Scale-regime integration test: the transfer dock must beat the
+//! centralized replay buffer on implied dispatch time once workers are
+//! spread across many nodes and the offered load is realistic — the
+//! paper's core claim, exercised on the REAL data structures.
+
+use mindspeed_rl::runtime::Tensor;
+use mindspeed_rl::transfer_dock::{
+    DockTopology, FieldKind, NetworkModel, ReplayBuffer, Sample, SampleFlow, Stage,
+    TransferDock,
+};
+
+fn drive(flow: &dyn SampleFlow, nodes: usize, n: usize, elems: usize) -> f64 {
+    let samples: Vec<Sample> = (0..n)
+        .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 16, format!("{i}+1="), 1))
+        .collect();
+    let idx = flow.put_samples(samples).unwrap();
+    let metas = flow.request_ready(Stage::Generation, n).unwrap();
+    for (i, m) in metas.iter().enumerate() {
+        let _ = flow.fetch(i % nodes, &[*m]).unwrap();
+    }
+    for (i, &ix) in idx.iter().enumerate() {
+        flow.store_generation(
+            i % nodes,
+            ix,
+            vec![(FieldKind::Tokens, Tensor::i32(&[elems], vec![1; elems]).unwrap())],
+            "1".into(),
+            2,
+        )
+        .unwrap();
+    }
+    // inference stages fetch from spread workers and write back
+    for stage in [Stage::OldLogprob, Stage::RefLogprob] {
+        let metas = flow.request_ready(stage, n).unwrap();
+        for (i, m) in metas.iter().enumerate() {
+            let _ = flow.fetch(i % nodes, &[*m]).unwrap();
+        }
+        let field = if stage == Stage::OldLogprob { FieldKind::OldLp } else { FieldKind::RefLp };
+        for (i, &ix) in idx.iter().enumerate() {
+            flow.store_fields(i % nodes, ix, vec![(field, Tensor::zeros(&[elems - 1]))])
+                .unwrap();
+        }
+    }
+    for &ix in &idx {
+        flow.retire(ix);
+    }
+    flow.dispatch_secs(&NetworkModel::paper())
+}
+
+#[test]
+fn dock_beats_replay_buffer_at_scale() {
+    let nodes = 16;
+    let n = 64 * nodes; // the paper's Fig. 9 offered load
+    let elems = 2048;
+    let dock = TransferDock::new(DockTopology::spread(nodes));
+    let d = drive(&dock, nodes, n, elems);
+    let rb = ReplayBuffer::new(0);
+    let r = drive(&rb, nodes, n, elems);
+    assert!(
+        d < r / 2.0,
+        "at {nodes} nodes / {n} samples the dock must dispatch >2x faster: dock={d:.3}s rb={r:.3}s"
+    );
+}
+
+#[test]
+fn dock_dispatch_flat_under_weak_scaling() {
+    // per-sample dispatch cost must stay ~constant as nodes and load grow
+    let mut per_sample = Vec::new();
+    for nodes in [4usize, 16] {
+        let n = 64 * nodes;
+        let dock = TransferDock::new(DockTopology::spread(nodes));
+        let d = drive(&dock, nodes, n, 1024);
+        per_sample.push(d / n as f64);
+    }
+    let growth = per_sample[1] / per_sample[0];
+    assert!(growth < 1.6, "dock per-sample dispatch grew {growth:.2}x under weak scaling");
+}
+
+#[test]
+fn replay_buffer_congests_superlinearly() {
+    let mut per_sample = Vec::new();
+    for nodes in [4usize, 16] {
+        let n = 64 * nodes;
+        let rb = ReplayBuffer::new(0);
+        let d = drive(&rb, nodes, n, 1024);
+        per_sample.push(d / n as f64);
+    }
+    assert!(
+        per_sample[1] > per_sample[0],
+        "central store per-sample dispatch must grow with cluster size"
+    );
+}
+
+#[test]
+fn warehouses_stay_balanced() {
+    let nodes = 8;
+    let dock = TransferDock::new(DockTopology::spread(nodes));
+    let samples: Vec<Sample> = (0..640)
+        .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 8, format!("{i}+2="), 2))
+        .collect();
+    dock.put_samples(samples).unwrap();
+    let (total, max_one) = dock.residency();
+    // perfect round-robin: no warehouse holds more than 1/nodes + epsilon
+    assert!(max_one as f64 <= total as f64 / nodes as f64 * 1.05);
+}

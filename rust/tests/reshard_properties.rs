@@ -1,0 +1,108 @@
+//! Property tests (seeded-random, proptest-style) on the resharding flow:
+//! for arbitrary valid layout pairs, allgather-swap must produce gen
+//! shards bit-identical to direct sharding, release everything the naive
+//! flow leaves behind, and restore the update state exactly.
+
+use mindspeed_rl::parallel::{ModelWeights, ParallelLayout};
+use mindspeed_rl::resharding::Resharder;
+use mindspeed_rl::transfer_dock::NetworkModel;
+use mindspeed_rl::util::rng::Rng;
+
+const GIB: u64 = 1 << 30;
+
+fn random_layout_pair(rng: &mut Rng, world: usize, moe: bool) -> Option<(ParallelLayout, ParallelLayout)> {
+    let divisors: Vec<usize> = (1..=world).filter(|d| world % d == 0).collect();
+    let mut pick = |rng: &mut Rng| divisors[rng.below(divisors.len())];
+    for _ in 0..50 {
+        let (utp, gtp) = (pick(rng), pick(rng));
+        let (udp, gdp) = (world / utp, world / gtp);
+        let uep = if moe { [1, 2, 4][rng.below(3)] } else { 1 };
+        let gep = if moe { [1, 2, 4][rng.below(3)] } else { 1 };
+        let u = ParallelLayout { tp: utp, pp: 1, dp: udp, ep: uep, cp: 1 };
+        let g = ParallelLayout { tp: gtp, pp: 1, dp: gdp, ep: gep, cp: 1 };
+        if u.validate().is_ok() && g.validate().is_ok() {
+            return Some((u, g));
+        }
+    }
+    None
+}
+
+#[test]
+fn allgather_swap_bit_exact_for_random_layouts() {
+    let mut rng = Rng::new(42);
+    let mut tested = 0;
+    for case in 0..25 {
+        let world = [2usize, 4, 8][rng.below(3)];
+        let moe = rng.below(2) == 1;
+        let weights = if moe {
+            ModelWeights::moe_like(2, 32, 64, 4).with_test_data(case)
+        } else {
+            ModelWeights::dense_like(3, 64, 128).with_test_data(case)
+        };
+        let Some((u, g)) = random_layout_pair(&mut rng, world, moe) else { continue };
+        let mut rs = Resharder::new(weights, u, g, GIB, 64 * GIB, 8, NetworkModel::paper())
+            .unwrap_or_else(|e| panic!("case {case} {u:?}->{g:?}: {e}"));
+        rs.reshard_allgather_swap().unwrap();
+        let n = rs.verify_gen_shards().unwrap();
+        assert!(n > 0, "case {case} verified nothing");
+        // every device's update block must be on the host now
+        for d in 0..world {
+            assert_eq!(
+                rs.where_is_update_block(d),
+                mindspeed_rl::resharding::ShardLocation::Host
+            );
+        }
+        // swap back restores device residency and frees all host bytes
+        rs.swap_back_h2d().unwrap();
+        assert_eq!(rs.host_pools.iter().map(|p| p.live_bytes()).sum::<u64>(), 0);
+        tested += 1;
+    }
+    assert!(tested >= 15, "too few valid random cases ({tested})");
+}
+
+#[test]
+fn naive_bit_exact_and_never_less_redundant_than_swap() {
+    let mut rng = Rng::new(7);
+    for case in 0..15 {
+        let world = [2usize, 4][rng.below(2)];
+        let weights = ModelWeights::dense_like(2, 32, 64).with_test_data(100 + case);
+        let Some((u, g)) = random_layout_pair(&mut rng, world, false) else { continue };
+        let mut naive =
+            Resharder::new(weights.clone(), u, g, GIB, 64 * GIB, 8, NetworkModel::paper())
+                .unwrap();
+        let rep_n = naive.reshard_naive().unwrap();
+        naive.verify_gen_shards().unwrap();
+        let mut swap =
+            Resharder::new(weights, u, g, GIB, 64 * GIB, 8, NetworkModel::paper()).unwrap();
+        let rep_s = swap.reshard_allgather_swap().unwrap();
+        swap.verify_gen_shards().unwrap();
+        assert_eq!(rep_s.redundant_bytes, 0);
+        // swap never leaves less KV headroom than naive
+        for (a, b) in swap.kv_headroom().iter().zip(naive.kv_headroom()) {
+            assert!(*a >= b, "case {case}: swap headroom {a} < naive {b}");
+        }
+        let _ = rep_n;
+    }
+}
+
+#[test]
+fn group_advantage_properties() {
+    // mean-zero per group, sign matches centered reward, for random inputs
+    let mut rng = Rng::new(11);
+    for _ in 0..50 {
+        let gs = 2 + rng.below(7);
+        let groups = 1 + rng.below(8);
+        let rewards: Vec<f32> = (0..gs * groups).map(|_| rng.f32()).collect();
+        let adv = mindspeed_rl::rewards::group_advantages(&rewards, gs);
+        for (g, chunk) in adv.chunks(gs).enumerate() {
+            let sum: f32 = chunk.iter().sum();
+            assert!(sum.abs() < 1e-3, "group {g} advantage sum {sum}");
+            let rmean: f32 = rewards[g * gs..(g + 1) * gs].iter().sum::<f32>() / gs as f32;
+            for (a, r) in chunk.iter().zip(&rewards[g * gs..]) {
+                if (r - rmean).abs() > 1e-4 {
+                    assert_eq!(a.signum(), (r - rmean).signum());
+                }
+            }
+        }
+    }
+}

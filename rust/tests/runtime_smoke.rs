@@ -1,0 +1,36 @@
+//! Integration test: load the tiny preset artifacts, execute each program.
+use mindspeed_rl::runtime::{artifact_dir, Engine, Policy, TrainBatch, Tensor};
+
+#[test]
+fn tiny_preset_round_trip() {
+    let engine = Engine::load(artifact_dir("tiny")).expect("run `make artifacts` first");
+    let mut policy = Policy::load_initial(&engine, 1e-3).unwrap();
+    let a = engine.manifest.artifact("logprobs").unwrap().clone();
+    let (b, s) = (a.batch, a.seq);
+
+    let tokens = Tensor::i32(&[b, s], vec![1; b * s]).unwrap();
+    let lp = policy.logprobs(&engine, &tokens).unwrap();
+    assert_eq!(lp.shape(), &[b, s - 1]);
+    let lpv = lp.as_f32().unwrap();
+    assert!(lpv.iter().all(|x| x.is_finite() && *x <= 0.0));
+
+    let kv = policy.init_kv(&engine).unwrap();
+    let pos = Tensor::i32(&[b], vec![0; b]).unwrap();
+    let tok = Tensor::i32(&[b], vec![1; b]).unwrap();
+    let (logits, kv2) = policy.decode_step(&engine, &kv, &pos, &tok).unwrap();
+    assert_eq!(logits.shape(), &[b, engine.manifest.model.vocab_size]);
+    assert_ne!(kv.as_f32().unwrap(), kv2.as_f32().unwrap());
+
+    let batch = TrainBatch {
+        tokens: Tensor::i32(&[b, s], vec![1; b * s]).unwrap(),
+        resp_mask: Tensor::f32(&[b, s - 1], vec![1.0; b * (s - 1)]).unwrap(),
+        old_lp: lp.clone(),
+        ref_lp: lp.clone(),
+        adv: Tensor::f32(&[b], vec![0.5; b]).unwrap(),
+    };
+    let before = policy.params[1].as_f32().unwrap().to_vec();
+    let stats = policy.train_step(&engine, &batch).unwrap();
+    assert!(stats.loss.is_finite());
+    let after = policy.params[1].as_f32().unwrap();
+    assert_ne!(before, after, "train_step must update weights");
+}

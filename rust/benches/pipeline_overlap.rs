@@ -1,0 +1,67 @@
+//! Bench: sync vs pipelined executor wall-clock on the tiny preset.
+//!
+//! A/Bs the two execution models of `trainers::executor` with everything
+//! else fixed (same dock topology, same workload). The pipelined mode's
+//! win comes from overlap: generation of iteration k+1 proceeds while
+//! iteration k's old-logprob / reference / reward / update stages drain,
+//! bounded by the `--max-inflight` staleness window. The per-stage busy
+//! breakdown shows the overlap directly: busy seconds sum to more than
+//! the wall clock.
+
+use std::sync::Arc;
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::trainers::{run_grpo_on_flow, GrpoConfig, PipelineMode};
+use mindspeed_rl::transfer_dock::{DockTopology, SampleFlow, TransferDock};
+use mindspeed_rl::util::fmt_secs;
+
+fn main() {
+    let engine = match Engine::load(artifact_dir("tiny")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping pipeline A/B (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let base = GrpoConfig {
+        iterations: 6,
+        prompts_per_iter: 8,
+        group_size: 4,
+        max_new_tokens: 6,
+        nodes: 4,
+        max_inflight_iters: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    println!("pipeline A/B (tiny preset, {} iters, G={} N={}):\n", base.iterations, base.prompts_per_iter, base.group_size);
+    let mut walls = Vec::new();
+    for mode in [PipelineMode::Sync, PipelineMode::Pipelined] {
+        let cfg = GrpoConfig { pipeline: mode, ..base.clone() };
+        let flow: Arc<dyn SampleFlow> =
+            Arc::new(TransferDock::new(DockTopology::spread(cfg.nodes)));
+        let t0 = std::time::Instant::now();
+        let report = run_grpo_on_flow(&engine, &cfg, flow).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        walls.push(wall);
+        println!(
+            "{:<10} wall={}  reward {:.3} → {:.3}",
+            mode.name(),
+            fmt_secs(wall),
+            report.iterations.first().map(|m| m.reward_mean).unwrap_or(0.0),
+            report.iterations.last().map(|m| m.reward_mean).unwrap_or(0.0),
+        );
+        println!("           {}", report.pipeline.summary());
+        println!(
+            "           busy total={} ({:.2}x the wall clock)\n",
+            fmt_secs(report.pipeline.busy_total()),
+            report.pipeline.overlap_ratio(),
+        );
+    }
+    let (sync_wall, pipe_wall) = (walls[0], walls[1]);
+    println!(
+        "pipelined / sync wall-clock = {:.2} ({})",
+        pipe_wall / sync_wall,
+        if pipe_wall < sync_wall { "pipelined wins" } else { "sync wins" }
+    );
+}

@@ -6,7 +6,7 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
-use crate::trainers::GrpoConfig;
+use crate::trainers::{GrpoConfig, PipelineMode};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -72,6 +72,12 @@ impl Config {
             if let Some(v) = g.opt("use_replay_buffer") {
                 d.use_replay_buffer = v.bool()?;
             }
+            if let Some(v) = g.opt("pipeline") {
+                d.pipeline = PipelineMode::parse(v.str()?)?;
+            }
+            if let Some(v) = g.opt("max_inflight_iters") {
+                d.max_inflight_iters = v.usize()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -105,6 +111,10 @@ impl Config {
         if args.has("replay-buffer") {
             g.use_replay_buffer = true;
         }
+        if let Some(p) = args.get("pipeline") {
+            g.pipeline = PipelineMode::parse(p)?;
+        }
+        g.max_inflight_iters = args.usize_or("max-inflight", g.max_inflight_iters)?;
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -156,5 +166,23 @@ mod tests {
         let args = Args::parse(std::iter::empty()).unwrap();
         let cfg = Config::from_args(&args).unwrap();
         assert_eq!(cfg.preset, "small");
+        assert_eq!(cfg.grpo.pipeline, PipelineMode::Sync);
+        assert_eq!(cfg.grpo.max_inflight_iters, 2);
+    }
+
+    #[test]
+    fn pipeline_flags_parse() {
+        let args = Args::parse(
+            ["--pipeline", "pipelined", "--max-inflight", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.grpo.pipeline, PipelineMode::Pipelined);
+        assert_eq!(cfg.grpo.max_inflight_iters, 3);
+
+        let bad = Args::parse(["--pipeline", "warp"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&bad).is_err());
     }
 }

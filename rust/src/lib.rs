@@ -16,7 +16,13 @@
 //! HLO artifacts produced by `python/compile` and executed through
 //! [`runtime`] on the PJRT CPU client. Python is never on the request path.
 
-// Modules are added as they are built; see DESIGN.md system inventory.
+//!
+//! Execution is driven by the [`trainers`] dataflow executor: `sync`
+//! (barrier-per-stage, deterministic) or `pipelined` (one thread per
+//! worker state pulling from the dock). See `rust/DESIGN.md` for the
+//! executor architecture and the sync/pipelined trade-off.
+
+// Modules are added as they are built; see rust/DESIGN.md system inventory.
 pub mod config;
 pub mod data;
 pub mod generation;

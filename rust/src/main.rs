@@ -3,10 +3,18 @@
 //! ```text
 //! mindspeed-rl smoke    [--preset tiny]           load + run every artifact
 //! mindspeed-rl train    [--preset small] [--config cfg.json] [--iterations N]
+//!                       [--pipeline sync|pipelined] [--max-inflight K]
 //!                       [--replay-buffer] [--eval-every K] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11  paper figures
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap
 //! ```
+//!
+//! `--pipeline pipelined` runs every worker state (generation,
+//! old-logprobs, reference, reward, update) as its own thread pulling from
+//! the transfer dock; `--max-inflight` bounds how many iterations may be
+//! admitted ahead of the last completed update (off-policy staleness
+//! window). `--pipeline sync` (default) keeps barrier-per-stage semantics
+//! and is deterministic per seed. See rust/DESIGN.md.
 
 use anyhow::Result;
 

@@ -56,6 +56,57 @@ impl StageTimers {
     }
 }
 
+/// Wall-clock vs per-stage busy time for one trainer run — the overlap
+/// accounting the pipelined executor reports.
+///
+/// In `sync` mode stages run back-to-back, so `busy_total ≈ wall` and the
+/// overlap ratio sits near 1.0. In `pipelined` mode stage threads run
+/// concurrently; the sum of busy seconds exceeds the wall clock and the
+/// ratio tells you how much of the dataflow graph actually overlapped.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    /// executor mode the run used ("sync" | "pipelined")
+    pub mode: String,
+    /// end-to-end wall-clock of the training loop
+    pub wall_secs: f64,
+    /// busy seconds per stage (time inside compute, excluding waits)
+    pub busy: BTreeMap<String, f64>,
+}
+
+impl PipelineReport {
+    pub fn busy_total(&self) -> f64 {
+        self.busy.values().sum()
+    }
+
+    /// Σ busy / wall: 1.0 = fully serial, >1.0 = stages overlapped.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.busy_total() / self.wall_secs.max(1e-12)
+    }
+
+    /// Fraction of the wall clock a single stage was busy.
+    pub fn utilization(&self, stage: &str) -> f64 {
+        self.busy.get(stage).copied().unwrap_or(0.0) / self.wall_secs.max(1e-12)
+    }
+
+    pub fn summary(&self) -> String {
+        let stages = self
+            .busy
+            .iter()
+            .map(|(k, v)| {
+                format!("{k}={} ({:.0}%)", crate::util::fmt_secs(*v), self.utilization(k) * 100.0)
+            })
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "[{}] wall={} overlap={:.2}x {}",
+            self.mode,
+            crate::util::fmt_secs(self.wall_secs),
+            self.overlap_ratio(),
+            stages
+        )
+    }
+}
+
 /// Minimal CSV writer for experiment curves.
 pub struct CsvWriter {
     pub header: Vec<String>,
@@ -76,6 +127,7 @@ impl CsvWriter {
         self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = self.header.join(",");
         s.push('\n');
@@ -116,6 +168,18 @@ mod tests {
         assert_eq!(t.total("gen"), 1.5);
         assert!(t.summary().contains("gen"));
         assert_eq!(t.entries().len(), 2);
+    }
+
+    #[test]
+    fn pipeline_report_overlap() {
+        let mut r = PipelineReport { mode: "pipelined".into(), wall_secs: 2.0, ..Default::default() };
+        r.busy.insert("generation".into(), 1.8);
+        r.busy.insert("update".into(), 1.2);
+        assert!((r.busy_total() - 3.0).abs() < 1e-9);
+        assert!((r.overlap_ratio() - 1.5).abs() < 1e-9);
+        assert!((r.utilization("generation") - 0.9).abs() < 1e-9);
+        assert_eq!(r.utilization("missing"), 0.0);
+        assert!(r.summary().contains("overlap=1.50x"));
     }
 
     #[test]

@@ -72,6 +72,27 @@ impl Policy {
         Ok(Self { params, m, v, step: 0, lr, param_literals: RefCell::new(None) })
     }
 
+    /// Build an inference-only replica around a snapshot of weights.
+    ///
+    /// The pipelined executor gives each inference stage thread (actor
+    /// generation, actor old-logprobs) its own replica, refreshed from the
+    /// update thread's published weights — the testbed analogue of the
+    /// paper's train→infer weight resharding. Replicas serve only
+    /// `logprobs`/`decode_step`; the Adam moments are left empty (a
+    /// replica that reached `train_step` would fail the artifact's input
+    /// arity check), keeping a refresh to one params clone instead of
+    /// three param-sized allocations.
+    pub fn from_params(params: Vec<Tensor>) -> Self {
+        Self {
+            params,
+            m: Vec::new(),
+            v: Vec::new(),
+            step: 0,
+            lr: 0.0,
+            param_literals: RefCell::new(None),
+        }
+    }
+
     /// Cached literal views of the parameters (rebuilt after updates).
     fn cached_param_literals(&self) -> Result<std::cell::Ref<'_, Option<Vec<xla::Literal>>>> {
         {

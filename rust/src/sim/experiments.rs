@@ -134,6 +134,40 @@ pub fn fig11_series(iters: usize, seed: u64) -> Vec<(usize, f64)> {
     out
 }
 
+// ------------------------------------------------------------- overlap
+#[derive(Debug, Clone)]
+pub struct OverlapRow {
+    pub model: PaperModel,
+    pub sync_secs: f64,
+    pub pipelined_secs: f64,
+    pub speedup: f64,
+}
+
+/// Projected effect of the pipelined executor at paper scale (Fig. 7's
+/// 16-NPU configuration, MSRL): with every worker state pulling from the
+/// transfer dock concurrently, the steady-state iteration wall-clock
+/// approaches `max(gen, infer, update) + dispatch + reshard` instead of
+/// the barrier-per-stage sum. The real-engine counterpart is
+/// `benches/pipeline_overlap.rs`.
+pub fn overlap_rows() -> Vec<OverlapRow> {
+    let cluster = ClusterSpec::paper(2);
+    let work = RlWorkload { g: 256, n_resp: 16, pl: 2048, sl: 8192 };
+    [
+        PaperModel::Qwen25Dense7B,
+        PaperModel::Qwen25Dense32B,
+        PaperModel::Qwen3Moe30B,
+    ]
+    .into_iter()
+    .map(|model| {
+        let t = SystemModel::new(SystemKind::Msrl, model, cluster, work).iteration();
+        let sync_secs = t.total();
+        let bound = t.generation.max(t.inference).max(t.update);
+        let pipelined_secs = bound + t.dispatch + t.reshard;
+        OverlapRow { model, sync_secs, pipelined_secs, speedup: sync_secs / pipelined_secs }
+    })
+    .collect()
+}
+
 // ------------------------------------------------------------- runner
 pub fn run_named_experiment(name: &str) -> Result<()> {
     match name {
@@ -201,7 +235,24 @@ pub fn run_named_experiment(name: &str) -> Result<()> {
             let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
             println!("mean TPS = {mean:.0} (paper: fluctuates 200–250)");
         }
-        other => anyhow::bail!("unknown experiment {other:?} (table1|fig7|fig9|fig11)"),
+        "overlap" => {
+            let mut t = Table::new(
+                "Pipelined executor — projected iteration wall-clock (MSRL, 16 NPUs)",
+                &["model", "sync (s)", "pipelined (s)", "speedup"],
+            );
+            for r in overlap_rows() {
+                t.row(vec![
+                    r.model.name().into(),
+                    format!("{:.1}", r.sync_secs),
+                    format!("{:.1}", r.pipelined_secs),
+                    format!("{:.2}x", r.speedup),
+                ]);
+            }
+            t.print();
+        }
+        other => {
+            anyhow::bail!("unknown experiment {other:?} (table1|fig7|fig9|fig11|overlap)")
+        }
     }
     Ok(())
 }
@@ -240,5 +291,19 @@ mod tests {
     #[test]
     fn table1_row_count() {
         assert_eq!(table1_rows_out().len(), 6);
+    }
+
+    #[test]
+    fn overlap_always_wins() {
+        for r in overlap_rows() {
+            assert!(
+                r.pipelined_secs < r.sync_secs,
+                "{:?}: pipelined {} !< sync {}",
+                r.model,
+                r.pipelined_secs,
+                r.sync_secs
+            );
+            assert!(r.speedup > 1.0 && r.speedup < 3.0, "speedup {}", r.speedup);
+        }
     }
 }

@@ -22,7 +22,7 @@ mod systems;
 
 pub use costmodel::{ClusterSpec, DeviceSpec, PaperModel, RlWorkload, StageTimes};
 pub use experiments::{
-    fig11_series, fig7_rows, fig9_rows, run_named_experiment, table1_rows_out, Fig7Row,
-    Fig9Row, Table1Row,
+    fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
+    table1_rows_out, Fig7Row, Fig9Row, OverlapRow, Table1Row,
 };
 pub use systems::{SystemKind, SystemModel};

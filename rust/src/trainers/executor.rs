@@ -1,0 +1,861 @@
+//! Pipelined dataflow executor: runs the GRPO worker states either as the
+//! classic barrier-per-stage loop (`sync`) or as concurrent stage workers
+//! driven by the transfer dock (`pipelined`).
+//!
+//! The paper models RL training as a dataflow graph whose nodes are worker
+//! states (Fig. 1) and gives each state its own TD controller precisely so
+//! stages can pull work independently. `sync` mode keeps the historical
+//! semantics — admit → generate-until-drained → infer → reward → update as
+//! strict sequential barriers, bit-identical to the seed trainer for a
+//! given seed. `pipelined` mode turns each state into a long-lived thread
+//! blocking on [`SampleFlow::wait_ready`]: a sample proceeds to
+//! old-logprobs the moment its generation lands, and generation of
+//! iteration `k+1` overlaps the update of iteration `k` up to a bounded
+//! off-policy staleness window (`max_inflight_iters`).
+//!
+//! Weight flow in pipelined mode mirrors the paper's train→infer
+//! resharding: the update thread owns the authoritative [`Policy`] and
+//! publishes a weight snapshot on a [`WeightBus`] after each round of
+//! updates; the generation and old-logprob threads each hold an inference
+//! replica they refresh from the bus between batches. See DESIGN.md.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::TaskGenerator;
+use crate::generation::{GenEngine, SamplingParams};
+use crate::metrics::{throughput_tps, PipelineReport, StageTimers};
+use crate::rewards::group_advantages;
+use crate::runtime::{Engine, Policy, Tensor, TrainStats};
+use crate::tokenizer::Tokenizer;
+use crate::transfer_dock::{
+    FieldKind, NetworkModel, Sample, SampleFlow, SampleMeta, Stage,
+};
+use crate::util::rng::Rng;
+use crate::workers::{ActorWorker, ReferenceWorker, RewardWorker};
+
+use super::eval::evaluate;
+use super::grpo::{assemble_batch, GrpoConfig, IterationMetrics, TrainReport};
+
+/// Which execution model drives the worker states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// barrier per stage, one thread (the seed trainer's semantics)
+    #[default]
+    Sync,
+    /// one thread per worker state, samples flow stage-to-stage eagerly
+    Pipelined,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sync" => Ok(PipelineMode::Sync),
+            "pipelined" => Ok(PipelineMode::Pipelined),
+            other => Err(anyhow!("unknown pipeline mode {other:?} (sync|pipelined)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Sync => "sync",
+            PipelineMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Node placement of the worker states across the simulated cluster.
+/// The actor (generation + old-logprob compute) is pinned to one node;
+/// reference, reward, and the update state's dock endpoint spread
+/// round-robin so the comm ledger sees honest inter-node traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct StagePlacement {
+    pub actor: usize,
+    pub reference: usize,
+    pub reward: usize,
+    pub update: usize,
+}
+
+impl StagePlacement {
+    pub fn spread(nodes: usize) -> Self {
+        let n = nodes.max(1);
+        Self { actor: 0, reference: 1 % n, reward: 2 % n, update: 3 % n }
+    }
+}
+
+/// how many generation-ready samples one claim may take (sync parity: 64)
+const GEN_MAX_BATCH: usize = 64;
+const REWARD_MAX_BATCH: usize = 64;
+/// stage-worker wait quantum; only bounds shutdown latency (wakeups are
+/// condvar-driven, not polled)
+const STAGE_WAIT: Duration = Duration::from_millis(50);
+const UPDATE_WAIT: Duration = Duration::from_millis(50);
+
+/// Run under the configured mode.
+pub(crate) fn run(
+    engine: &Engine,
+    cfg: &GrpoConfig,
+    flow: Arc<dyn SampleFlow>,
+) -> Result<TrainReport> {
+    match cfg.pipeline {
+        PipelineMode::Sync => run_sync(engine, cfg, flow),
+        PipelineMode::Pipelined => run_pipelined(engine, cfg, flow),
+    }
+}
+
+/// Admit iteration `iter`'s G × N prompt samples into the flow.
+fn admit_iteration(
+    flow: &dyn SampleFlow,
+    task_gen: &mut TaskGenerator,
+    cfg: &GrpoConfig,
+    iter: usize,
+) -> Result<()> {
+    let tasks = task_gen.batch(cfg.prompts_per_iter);
+    let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
+    for (gi, t) in tasks.iter().enumerate() {
+        let group = (iter * cfg.prompts_per_iter + gi) as u64;
+        for _ in 0..cfg.group_size {
+            samples.push(Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer));
+        }
+    }
+    flow.put_samples(samples)?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------- sync
+
+/// The barrier-per-stage loop. This is the seed trainer verbatim modulo
+/// two accounting fixes (update-stage comm attributed to its placed node,
+/// throughput computed from the samples' real prompt lengths), so for a
+/// fixed seed it reproduces the seed's reward/loss numbers exactly.
+fn run_sync(
+    engine: &Engine,
+    cfg: &GrpoConfig,
+    flow: Arc<dyn SampleFlow>,
+) -> Result<TrainReport> {
+    let placement = StagePlacement::spread(cfg.nodes);
+    let mut rng = Rng::new(cfg.seed);
+    let mut task_gen = TaskGenerator::train(cfg.seed);
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let net = NetworkModel::paper();
+
+    let mut policy = Policy::load_initial(engine, cfg.lr)?;
+    let reference = ReferenceWorker::new(engine, placement.reference)?;
+    let gen_engine = GenEngine::from_manifest(
+        engine,
+        SamplingParams { temperature: cfg.temperature, top_k: 0 },
+    )?;
+    let actor = ActorWorker::new(engine, placement.actor, gen_engine, cfg.max_new_tokens);
+    let reward_worker = RewardWorker::new(placement.reward);
+
+    let a = engine.manifest.artifact("train_step")?.clone();
+    let (b, s) = (a.batch, a.seq);
+
+    let mut timers = StageTimers::default();
+    let mut iterations = Vec::with_capacity(cfg.iterations);
+    let mut evals = Vec::new();
+    let mut dispatch_prev = 0.0f64;
+    let t_run = Instant::now();
+
+    for iter in 0..cfg.iterations {
+        let t_iter = Instant::now();
+
+        // 1. admit prompts (G × N samples, grouped)
+        admit_iteration(flow.as_ref(), &mut task_gen, cfg, iter)?;
+
+        // 2. generation until drained
+        let t0 = Instant::now();
+        loop {
+            let out =
+                actor.run_generation(engine, &policy, flow.as_ref(), &mut rng, GEN_MAX_BATCH)?;
+            if out.sequences == 0 {
+                break;
+            }
+        }
+        let gen_secs = t0.elapsed().as_secs_f64();
+        timers.add("generation", gen_secs);
+
+        // 3. inference + reward
+        let t0 = Instant::now();
+        actor.run_old_logprobs(engine, &policy, flow.as_ref(), b)?;
+        reference.run(engine, flow.as_ref(), b)?;
+        let reward_out = reward_worker.run(flow.as_ref(), REWARD_MAX_BATCH)?;
+        let infer_secs = t0.elapsed().as_secs_f64();
+        timers.add("inference", infer_secs);
+
+        // 4. update: collect ready samples, group advantages, train
+        let t0 = Instant::now();
+        let metas = flow.request_ready(Stage::Update, usize::MAX)?;
+        let mut ready = flow.fetch(placement.update, &metas)?;
+        ready.sort_by_key(|smp| (smp.group, smp.index));
+
+        let mut stats_acc: Vec<TrainStats> = Vec::new();
+        // complete groups only (all group members present by construction)
+        let rewards: Vec<f32> = ready
+            .iter()
+            .map(|smp| smp.get(FieldKind::Reward).unwrap().scalar().unwrap_or(0.0))
+            .collect();
+        let advs = group_advantages(&rewards, cfg.group_size);
+
+        for (chunk, adv_chunk) in ready.chunks(b).zip(advs.chunks(b)) {
+            let batch = assemble_batch(chunk, adv_chunk, b, s, &tokenizer)?;
+            let st = policy.train_step(engine, &batch)?;
+            stats_acc.push(st);
+        }
+        for sm in &ready {
+            flow.retire(sm.index);
+        }
+        let update_secs = t0.elapsed().as_secs_f64();
+        timers.add("update", update_secs);
+
+        // 5. metrics
+        let total_secs = t_iter.elapsed().as_secs_f64();
+        let dispatch_total = flow.dispatch_secs(&net);
+        let n = ready.len().max(1);
+        let pl_mean = ready.iter().map(|smp| smp.prompt_len as u64).sum::<u64>() / n as u64;
+        let n_stats = stats_acc.len().max(1) as f32;
+        let m = IterationMetrics {
+            iter,
+            reward_mean: rewards.iter().sum::<f32>() / n as f32,
+            exact_frac: reward_out.exact as f32 / reward_out.scored.max(1) as f32,
+            loss: stats_acc.iter().map(|st| st.loss).sum::<f32>() / n_stats,
+            kl: stats_acc.iter().map(|st| st.kl).sum::<f32>() / n_stats,
+            ratio: stats_acc.iter().map(|st| st.ratio).sum::<f32>() / n_stats,
+            gen_secs,
+            infer_secs,
+            update_secs,
+            total_secs,
+            tps: throughput_tps(
+                cfg.prompts_per_iter as u64,
+                cfg.group_size as u64,
+                pl_mean,
+                cfg.max_new_tokens as u64,
+                1,
+                total_secs,
+            ),
+            dispatch_secs: dispatch_total - dispatch_prev,
+        };
+        dispatch_prev = dispatch_total;
+        if cfg.log_every > 0 && iter % cfg.log_every == 0 {
+            eprintln!(
+                "[grpo] iter {iter:>4} reward={:.3} exact={:.2} loss={:+.4} kl={:.4} gen={} upd={}",
+                m.reward_mean,
+                m.exact_frac,
+                m.loss,
+                m.kl,
+                crate::util::fmt_secs(gen_secs),
+                crate::util::fmt_secs(update_secs)
+            );
+        }
+        iterations.push(m);
+
+        if cfg.eval_every > 0 && (iter + 1) % cfg.eval_every == 0 {
+            let ev = evaluate(engine, &policy, cfg.eval_size, cfg.seed, 1)?;
+            evals.push((iter + 1, ev));
+        }
+    }
+
+    let mut pipeline = PipelineReport {
+        mode: PipelineMode::Sync.name().into(),
+        wall_secs: t_run.elapsed().as_secs_f64(),
+        busy: BTreeMap::new(),
+    };
+    for (stage, secs, _count) in timers.entries() {
+        pipeline.busy.insert(stage, secs);
+    }
+
+    Ok(TrainReport {
+        config: cfg.clone(),
+        iterations,
+        evals,
+        pipeline,
+        final_ledger: flow.ledger(),
+    })
+}
+
+// ------------------------------------------------------------ pipelined
+
+/// Single-producer weight channel: the update thread publishes parameter
+/// snapshots, inference stage threads pick up the newest between batches.
+struct WeightBus {
+    inner: Mutex<(u64, Arc<Vec<Tensor>>)>,
+}
+
+impl WeightBus {
+    fn new(params: Vec<Tensor>) -> Self {
+        Self { inner: Mutex::new((1, Arc::new(params))) }
+    }
+
+    fn publish(&self, params: &[Tensor]) {
+        // copy the weights outside the lock — replica refreshes on the
+        // inference hot path only ever block on a pointer swap
+        let next = Arc::new(params.to_vec());
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 = next;
+    }
+
+    fn newer_than(&self, seen: u64) -> Option<(u64, Arc<Vec<Tensor>>)> {
+        let g = self.inner.lock().unwrap();
+        if g.0 > seen {
+            Some((g.0, g.1.clone()))
+        } else {
+            None
+        }
+    }
+}
+
+/// A stage thread's inference-policy replica, refreshed from the bus.
+struct WeightReplica {
+    version: u64,
+    policy: Policy,
+}
+
+impl WeightReplica {
+    fn new(bus: &WeightBus) -> Self {
+        let (version, params) = bus.newer_than(0).expect("bus seeded with initial weights");
+        Self { version, policy: Policy::from_params((*params).clone()) }
+    }
+
+    fn refresh(&mut self, bus: &WeightBus) {
+        if let Some((version, params)) = bus.newer_than(self.version) {
+            self.version = version;
+            self.policy = Policy::from_params((*params).clone());
+        }
+    }
+}
+
+/// SAFETY: PJRT clients are built for concurrent dispatch — `Execute` is
+/// thread-compatible and the CPU client runs executions on its own thread
+/// pool; `Engine`'s only interior mutability (`exec_stats`) is behind a
+/// `Mutex`. The `xla` binding types simply don't declare `Send`/`Sync`,
+/// so the executor asserts it at this single boundary instead of
+/// scattering `unsafe` through the workers. Defensively, the executor
+/// still keeps each compiled artifact single-flight in steady state: the
+/// two stages that share the `logprobs` executable serialize on
+/// `lp_serial`, generation alone runs `decode_step`, and the update
+/// thread alone runs `train_step` (periodic eval on the update thread is
+/// the one documented exception).
+#[derive(Clone, Copy)]
+struct EngineShare<'a>(&'a Engine);
+unsafe impl Send for EngineShare<'_> {}
+unsafe impl Sync for EngineShare<'_> {}
+
+/// Record the first stage failure and ask every thread to wind down.
+fn stage_failed(
+    fail: &Mutex<Option<String>>,
+    shutdown: &AtomicBool,
+    stage: &str,
+    e: anyhow::Error,
+) {
+    let mut g = fail.lock().unwrap();
+    if g.is_none() {
+        *g = Some(format!("{stage} stage failed: {e:#}"));
+    }
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+/// Long-lived actor generation state: claim → generate → write back.
+fn generation_stage(
+    engine: &Engine,
+    cfg: &GrpoConfig,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    bus: &WeightBus,
+    shutdown: &AtomicBool,
+    busy: &Mutex<StageTimers>,
+) -> Result<()> {
+    let gen_engine = GenEngine::from_manifest(
+        engine,
+        SamplingParams { temperature: cfg.temperature, top_k: 0 },
+    )?;
+    let actor = ActorWorker::new(engine, placement.actor, gen_engine, cfg.max_new_tokens);
+    let mut rng = Rng::new(cfg.seed ^ 0x6765_6e65_7261_7465);
+    let mut replica = WeightReplica::new(bus);
+    loop {
+        let metas = flow.wait_ready(Stage::Generation, GEN_MAX_BATCH, STAGE_WAIT)?;
+        if metas.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            continue;
+        }
+        replica.refresh(bus);
+        let t0 = Instant::now();
+        actor.generate_claimed(engine, &replica.policy, flow, &mut rng, &metas)?;
+        busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Long-lived actor old-logprob inference state. Runs the logprob path
+/// directly (tokenizer + logprobs artifact) — it needs none of the
+/// generation engine the actor's other state carries.
+#[allow(clippy::too_many_arguments)]
+fn old_logprob_stage(
+    engine: &Engine,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    bus: &WeightBus,
+    lp_serial: &Mutex<()>,
+    shutdown: &AtomicBool,
+    busy: &Mutex<StageTimers>,
+) -> Result<()> {
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let a = engine.manifest.artifact("logprobs")?.clone();
+    let mut replica = WeightReplica::new(bus);
+    loop {
+        let metas = flow.wait_ready(Stage::OldLogprob, a.batch, STAGE_WAIT)?;
+        if metas.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            continue;
+        }
+        // note: the replica may be ahead of the weights that *generated*
+        // these samples (bounded by max_inflight_iters) — old_lp is then
+        // a bounded approximation of the behavior-policy logprob; see
+        // DESIGN.md "staleness window"
+        replica.refresh(bus);
+        let _serial = lp_serial.lock().unwrap();
+        // busy starts after the serialization lock: waiting for the
+        // shared executable is not compute, and booking it would fake
+        // overlap in PipelineReport
+        let t0 = Instant::now();
+        crate::workers::logprob_claimed(
+            engine,
+            &replica.policy,
+            flow,
+            &tokenizer,
+            placement.actor,
+            FieldKind::OldLp,
+            &metas,
+            a.batch,
+            a.seq,
+        )?;
+        drop(_serial);
+        busy.lock().unwrap().add("old_logprob", t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Long-lived reference inference state (frozen policy, owns its weights).
+fn ref_logprob_stage(
+    engine: &Engine,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    lp_serial: &Mutex<()>,
+    shutdown: &AtomicBool,
+    busy: &Mutex<StageTimers>,
+) -> Result<()> {
+    let reference = ReferenceWorker::new(engine, placement.reference)?;
+    let lp_batch = engine.manifest.artifact("logprobs")?.batch;
+    loop {
+        let metas = flow.wait_ready(Stage::RefLogprob, lp_batch, STAGE_WAIT)?;
+        if metas.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            continue;
+        }
+        let _serial = lp_serial.lock().unwrap();
+        let t0 = Instant::now();
+        reference.run_claimed(engine, flow, &metas)?;
+        drop(_serial);
+        busy.lock().unwrap().add("ref_logprob", t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Long-lived rule-reward state.
+fn reward_stage(
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    shutdown: &AtomicBool,
+    busy: &Mutex<StageTimers>,
+) -> Result<()> {
+    let reward_worker = RewardWorker::new(placement.reward);
+    loop {
+        let metas = flow.wait_ready(Stage::Reward, REWARD_MAX_BATCH, STAGE_WAIT)?;
+        if metas.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        reward_worker.score_claimed(flow, &metas)?;
+        busy.lock().unwrap().add("reward", t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Per-iteration accounting kept by the update thread.
+struct IterAcc {
+    /// samples admitted but not yet trained + retired
+    remaining: usize,
+    rewards: Vec<f32>,
+    /// exact answers, re-scored from the sample (same rule the reward
+    /// state applies), so exact_frac matches sync mode's Score.exact
+    /// semantics regardless of how reward shaping evolves
+    exact: usize,
+    stats: Vec<TrainStats>,
+    prompt_tokens: u64,
+}
+
+impl IterAcc {
+    fn new(total: usize) -> Self {
+        Self {
+            remaining: total,
+            rewards: Vec::new(),
+            exact: 0,
+            stats: Vec::new(),
+            prompt_tokens: 0,
+        }
+    }
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a.max(1)
+}
+
+/// Smallest take size that is both whole GRPO groups and whole train
+/// batches — training in these quanta avoids zero-mask padding steps.
+fn take_quantum(batch: usize, group_size: usize) -> usize {
+    batch / gcd(batch, group_size) * group_size
+}
+
+/// The concurrent executor: generation / old-logprob / reference / reward
+/// run as stage threads pulling from the flow via `wait_ready`; the update
+/// state runs on this thread, owns the authoritative policy, publishes
+/// weights, and finalizes per-iteration metrics as groups complete.
+fn run_pipelined(
+    engine: &Engine,
+    cfg: &GrpoConfig,
+    flow: Arc<dyn SampleFlow>,
+) -> Result<TrainReport> {
+    let placement = StagePlacement::spread(cfg.nodes);
+    let window = cfg.max_inflight_iters.max(1);
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let net = NetworkModel::paper();
+    let mut task_gen = TaskGenerator::train(cfg.seed);
+
+    let mut policy = Policy::load_initial(engine, cfg.lr)?;
+    let a = engine.manifest.artifact("train_step")?.clone();
+    let (b, s) = (a.batch, a.seq);
+
+    let bus = Arc::new(WeightBus::new(policy.params.clone()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+    let busy: Arc<Mutex<StageTimers>> = Arc::new(Mutex::new(StageTimers::default()));
+    // keeps the shared `logprobs` executable single-flight across the
+    // old-logprob and reference stages (see EngineShare's safety note)
+    let lp_serial: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
+
+    let mut iterations = Vec::with_capacity(cfg.iterations);
+    let mut evals = Vec::new();
+    let t_run = Instant::now();
+
+    let scope_result: Result<()> = std::thread::scope(|scope| {
+        let eng = EngineShare(engine);
+        let cfg_ref: &GrpoConfig = cfg;
+
+        {
+            let (flow, bus, shutdown, fail, busy) = (
+                Arc::clone(&flow),
+                Arc::clone(&bus),
+                Arc::clone(&shutdown),
+                Arc::clone(&fail),
+                Arc::clone(&busy),
+            );
+            scope.spawn(move || {
+                if let Err(e) = generation_stage(
+                    eng.0,
+                    cfg_ref,
+                    placement,
+                    flow.as_ref(),
+                    &bus,
+                    &shutdown,
+                    &busy,
+                ) {
+                    stage_failed(&fail, &shutdown, "generation", e);
+                }
+            });
+        }
+        {
+            let (flow, bus, lp_serial, shutdown, fail, busy) = (
+                Arc::clone(&flow),
+                Arc::clone(&bus),
+                Arc::clone(&lp_serial),
+                Arc::clone(&shutdown),
+                Arc::clone(&fail),
+                Arc::clone(&busy),
+            );
+            scope.spawn(move || {
+                if let Err(e) = old_logprob_stage(
+                    eng.0,
+                    placement,
+                    flow.as_ref(),
+                    &bus,
+                    &lp_serial,
+                    &shutdown,
+                    &busy,
+                ) {
+                    stage_failed(&fail, &shutdown, "old_logprob", e);
+                }
+            });
+        }
+        {
+            let (flow, lp_serial, shutdown, fail, busy) = (
+                Arc::clone(&flow),
+                Arc::clone(&lp_serial),
+                Arc::clone(&shutdown),
+                Arc::clone(&fail),
+                Arc::clone(&busy),
+            );
+            scope.spawn(move || {
+                if let Err(e) = ref_logprob_stage(
+                    eng.0,
+                    placement,
+                    flow.as_ref(),
+                    &lp_serial,
+                    &shutdown,
+                    &busy,
+                ) {
+                    stage_failed(&fail, &shutdown, "ref_logprob", e);
+                }
+            });
+        }
+        {
+            let (flow, shutdown, fail, busy) = (
+                Arc::clone(&flow),
+                Arc::clone(&shutdown),
+                Arc::clone(&fail),
+                Arc::clone(&busy),
+            );
+            scope.spawn(move || {
+                if let Err(e) = reward_stage(placement, flow.as_ref(), &shutdown, &busy) {
+                    stage_failed(&fail, &shutdown, "reward", e);
+                }
+            });
+        }
+
+        // ---- actor update state (this thread): admission window, group
+        //      assembly, train steps, weight publication, metrics
+        let mut update_loop = || -> Result<()> {
+            let per_iter = cfg.prompts_per_iter * cfg.group_size;
+            let mut accs: BTreeMap<usize, IterAcc> = BTreeMap::new();
+            // update-ready claims whose groups are not yet complete
+            let mut held: Vec<SampleMeta> = Vec::new();
+            let mut admitted = 0usize;
+            let mut completed = 0usize;
+            let mut dispatch_prev = 0.0f64;
+            let mut last_finalize = t_run;
+
+            while completed < cfg.iterations {
+                if let Some(msg) = fail.lock().unwrap().clone() {
+                    anyhow::bail!(msg);
+                }
+
+                // admit ahead, bounded by the staleness window
+                while admitted < cfg.iterations && admitted < completed + window {
+                    admit_iteration(flow.as_ref(), &mut task_gen, cfg, admitted)?;
+                    accs.insert(admitted, IterAcc::new(per_iter));
+                    admitted += 1;
+                }
+
+                // claim whatever became update-ready; partial groups stay
+                // *held* (claimed) rather than bounced through release —
+                // the update state is the stage's only consumer, and
+                // re-claiming every few ms would both spin this thread
+                // and pollute the comm ledger with phantom round-trips
+                let fresh = flow.wait_ready(Stage::Update, usize::MAX, UPDATE_WAIT)?;
+                if fresh.is_empty() && held.is_empty() {
+                    continue;
+                }
+                held.extend(fresh);
+
+                // bucket held claims into complete groups per iteration
+                let mut by_group: BTreeMap<u64, Vec<SampleMeta>> = BTreeMap::new();
+                for m in held.drain(..) {
+                    by_group.entry(m.group).or_default().push(m);
+                }
+                let mut by_iter: BTreeMap<usize, Vec<SampleMeta>> = BTreeMap::new();
+                for (g, ms) in by_group {
+                    if ms.len() == cfg.group_size {
+                        by_iter
+                            .entry((g as usize) / cfg.prompts_per_iter)
+                            .or_default()
+                            .extend(ms);
+                    } else {
+                        held.extend(ms);
+                    }
+                }
+                // train whole-group, whole-batch quanta only — a padded
+                // partial batch mid-iteration would burn a full train
+                // step on zero-mask rows that sync mode never pays. The
+                // iteration's tail takes everything (sync pads there too)
+                let quantum = take_quantum(b, cfg.group_size);
+                let mut take: Vec<SampleMeta> = Vec::new();
+                for (it, mut ms) in by_iter {
+                    match accs.get(&it) {
+                        Some(acc) => {
+                            let n_take = if ms.len() == acc.remaining {
+                                ms.len() // tail: drain the iteration
+                            } else {
+                                ms.len() / quantum * quantum
+                            };
+                            let rest = ms.split_off(n_take);
+                            take.extend(ms);
+                            held.extend(rest);
+                        }
+                        None => {
+                            // cannot happen by construction (claims only
+                            // exist for admitted, unfinalized iterations);
+                            // drain defensively rather than abort the run
+                            eprintln!(
+                                "[grpo/pipelined] dropping {} update claims for unknown iteration {it}",
+                                ms.len()
+                            );
+                            for m in &ms {
+                                flow.retire(m.index);
+                            }
+                        }
+                    }
+                }
+                if take.is_empty() {
+                    continue;
+                }
+
+                let t0 = Instant::now();
+                let mut ready = flow.fetch(placement.update, &take)?;
+                ready.sort_by_key(|smp| (smp.group, smp.index));
+
+                // process contiguous per-iteration slices
+                let mut start = 0usize;
+                while start < ready.len() {
+                    let it = (ready[start].group as usize) / cfg.prompts_per_iter;
+                    let end = ready[start..]
+                        .iter()
+                        .position(|smp| (smp.group as usize) / cfg.prompts_per_iter != it)
+                        .map(|p| start + p)
+                        .unwrap_or(ready.len());
+                    let slice = &ready[start..end];
+                    let rewards: Vec<f32> = slice
+                        .iter()
+                        .map(|smp| {
+                            smp.get(FieldKind::Reward).unwrap().scalar().unwrap_or(0.0)
+                        })
+                        .collect();
+                    let advs = group_advantages(&rewards, cfg.group_size);
+                    let acc = accs
+                        .get_mut(&it)
+                        .ok_or_else(|| anyhow!("update for unadmitted iteration {it}"))?;
+                    for (chunk, adv_chunk) in slice.chunks(b).zip(advs.chunks(b)) {
+                        let batch = assemble_batch(chunk, adv_chunk, b, s, &tokenizer)?;
+                        acc.stats.push(policy.train_step(engine, &batch)?);
+                    }
+                    for sm in slice {
+                        flow.retire(sm.index);
+                        acc.prompt_tokens += sm.prompt_len as u64;
+                        // Score.exact by definition: the parsed completion
+                        // equals the task answer (no Task clone, no
+                        // re-run of the shaping arithmetic)
+                        acc.exact += (crate::rewards::parse_answer(&sm.completion_text)
+                            == Some(sm.answer)) as usize;
+                    }
+                    acc.remaining -= slice.len();
+                    acc.rewards.extend(rewards);
+                    start = end;
+                }
+                bus.publish(&policy.params);
+                busy.lock().unwrap().add("update", t0.elapsed().as_secs_f64());
+
+                // finalize fully-updated iterations, in order
+                loop {
+                    match accs.get(&completed) {
+                        Some(acc) if acc.remaining == 0 => {}
+                        _ => break,
+                    }
+                    let acc = accs.remove(&completed).unwrap();
+                    let now = Instant::now();
+                    // marginal wall-clock attributed to this iteration;
+                    // per-stage splits are meaningless under overlap (see
+                    // the run's PipelineReport for the busy breakdown)
+                    let wall = now.duration_since(last_finalize).as_secs_f64().max(1e-3);
+                    last_finalize = now;
+                    let dispatch_total = flow.dispatch_secs(&net);
+                    let n = acc.rewards.len().max(1);
+                    let n_stats = acc.stats.len().max(1) as f32;
+                    let m = IterationMetrics {
+                        iter: completed,
+                        reward_mean: acc.rewards.iter().sum::<f32>() / n as f32,
+                        exact_frac: acc.exact as f32 / n as f32,
+                        loss: acc.stats.iter().map(|st| st.loss).sum::<f32>() / n_stats,
+                        kl: acc.stats.iter().map(|st| st.kl).sum::<f32>() / n_stats,
+                        ratio: acc.stats.iter().map(|st| st.ratio).sum::<f32>() / n_stats,
+                        gen_secs: 0.0,
+                        infer_secs: 0.0,
+                        update_secs: 0.0,
+                        total_secs: wall,
+                        tps: throughput_tps(
+                            cfg.prompts_per_iter as u64,
+                            cfg.group_size as u64,
+                            acc.prompt_tokens / n as u64,
+                            cfg.max_new_tokens as u64,
+                            1,
+                            wall,
+                        ),
+                        dispatch_secs: dispatch_total - dispatch_prev,
+                    };
+                    dispatch_prev = dispatch_total;
+                    if cfg.log_every > 0 && completed % cfg.log_every == 0 {
+                        eprintln!(
+                            "[grpo/pipelined] iter {completed:>4} reward={:.3} exact={:.2} loss={:+.4} wall={}",
+                            m.reward_mean,
+                            m.exact_frac,
+                            m.loss,
+                            crate::util::fmt_secs(wall)
+                        );
+                    }
+                    iterations.push(m);
+                    completed += 1;
+                    if cfg.eval_every > 0 && completed % cfg.eval_every == 0 {
+                        evals.push((
+                            completed,
+                            evaluate(engine, &policy, cfg.eval_size, cfg.seed, 1)?,
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        };
+        let run_out = update_loop();
+        shutdown.store(true, Ordering::Relaxed);
+        run_out
+    });
+    scope_result?;
+
+    let timers = Arc::try_unwrap(busy)
+        .expect("stage threads joined; no other owners")
+        .into_inner()
+        .unwrap();
+    let mut pipeline = PipelineReport {
+        mode: PipelineMode::Pipelined.name().into(),
+        wall_secs: t_run.elapsed().as_secs_f64(),
+        busy: BTreeMap::new(),
+    };
+    for (stage, secs, _count) in timers.entries() {
+        pipeline.busy.insert(stage, secs);
+    }
+
+    Ok(TrainReport {
+        config: cfg.clone(),
+        iterations,
+        evals,
+        pipeline,
+        final_ledger: flow.ledger(),
+    })
+}

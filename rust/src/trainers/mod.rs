@@ -1,13 +1,17 @@
 //! Algorithm trainers (the top layer of the paper's Fig. 6 architecture).
 //!
-//! [`grpo`] is fully wired end-to-end over the PJRT runtime; [`variants`]
-//! implements the PPO / DAPO / PF-PPO advantage-and-filtering variants on
-//! top of the same sample flow (Table 2 feature rows).
+//! [`grpo`] is fully wired end-to-end over the PJRT runtime, driven by the
+//! [`executor`] in either `sync` (barrier-per-stage) or `pipelined`
+//! (concurrent stage workers) mode; [`variants`] implements the PPO /
+//! DAPO / PF-PPO advantage-and-filtering variants on top of the same
+//! sample flow (Table 2 feature rows).
 
 mod eval;
+mod executor;
 mod grpo;
 mod variants;
 
 pub use eval::{evaluate, EvalResult};
+pub use executor::{PipelineMode, StagePlacement};
 pub use grpo::{run_grpo, run_grpo_on_flow, GrpoConfig, IterationMetrics, TrainReport};
 pub use variants::{AdvantageKind, filter_groups_dapo, pf_ppo_reweight, ppo_gae_advantages};

@@ -72,15 +72,20 @@ impl Controller {
     }
 
     /// Receive a metadata broadcast from a warehouse.
+    ///
+    /// The in-flight latch is cleared only when the broadcast shows the
+    /// sample is no longer ready for *this* stage (its work completed).
+    /// A cross-stage writeback — e.g. the reward landing while an
+    /// old-logprob claim is outstanding — leaves the claim latched, so
+    /// concurrent stage workers never dispatch the same work twice.
     pub fn on_broadcast(&self, meta: SampleMeta) {
         let mut g = self.inner.lock().unwrap();
         g.meta_bytes += SampleMeta::WIRE_BYTES;
-        // a fresh broadcast clears the in-flight latch for that sample
-        g.in_flight.remove(&meta.index);
         if meta.ready_for(self.stage) {
             g.metas.insert(meta.index, meta);
         } else {
             g.metas.remove(&meta.index);
+            g.in_flight.remove(&meta.index);
         }
     }
 
@@ -183,6 +188,23 @@ mod tests {
         assert_eq!(c.ready_count(), 1);
         c.on_broadcast(meta(1, FieldKind::Tokens.bit() | FieldKind::OldLp.bit()));
         assert_eq!(c.ready_count(), 0, "done samples leave the queue");
+    }
+
+    #[test]
+    fn cross_stage_broadcast_keeps_claim() {
+        let c = Controller::new(Stage::OldLogprob, 0);
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit()));
+        assert_eq!(c.request(10).len(), 1);
+        // the reward lands while the old-lp claim is outstanding: the
+        // sample is still old-lp-ready, so the claim must hold
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit() | FieldKind::Reward.bit()));
+        assert!(c.request(10).is_empty(), "cross-stage writeback re-dispatched a claim");
+        // the stage's own writeback completes and clears the claim
+        c.on_broadcast(meta(
+            1,
+            FieldKind::Tokens.bit() | FieldKind::Reward.bit() | FieldKind::OldLp.bit(),
+        ));
+        assert_eq!(c.ready_count(), 0);
     }
 
     #[test]

@@ -3,10 +3,11 @@
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::controller::{Controller, SampleMeta};
 use super::network::{CommLedger, LinkClass, SharedLedger};
+use super::notify::{wait_ready_impl, Notifier};
 use super::sample::{FieldKind, Sample, Stage};
 use super::warehouse::Warehouse;
 use super::SampleFlow;
@@ -42,6 +43,18 @@ pub struct TransferDock {
     controllers: BTreeMap<Stage, Controller>,
     ledger: SharedLedger,
     next_index: AtomicU64,
+    /// wakes blocked stage workers on every state change (wait_ready)
+    notify: Notifier,
+    /// serializes the snapshot→broadcast section so controllers always
+    /// observe presence masks in monotone order. Without it, two stage
+    /// threads writing different fields of the same sample could
+    /// broadcast their snapshots out of order, and the older mask would
+    /// un-ready (or re-ready) the sample at a controller forever. A
+    /// snapshot taken under this lock reflects every store that preceded
+    /// any earlier-broadcast snapshot, so payload stores themselves (and
+    /// all fetches / readiness requests) stay outside the lock and run
+    /// concurrently across stage threads.
+    meta_order: Mutex<()>,
 }
 
 impl TransferDock {
@@ -62,6 +75,8 @@ impl TransferDock {
             controllers,
             ledger: SharedLedger::default(),
             next_index: AtomicU64::new(0),
+            notify: Notifier::default(),
+            meta_order: Mutex::new(()),
         }
     }
 
@@ -110,6 +125,7 @@ impl TransferDock {
     /// Consume a finished sample after the update stage: remove the
     /// payload from its warehouse and retire the metadata everywhere.
     fn retire_inner(&self, index: u64) -> Option<Sample> {
+        let _order = self.meta_order.lock().unwrap();
         let w = self.warehouse_for(index).clone();
         let s = w.remove(index)?;
         for c in self.controllers.values() {
@@ -147,10 +163,47 @@ impl SampleFlow for TransferDock {
             self.ledger.note_requests_on(self.link(ingest_node, w.node), 1);
             w.put(s)?;
             self.ledger.note_store_bytes(w.traffic_bytes());
+            let _order = self.meta_order.lock().unwrap();
             self.broadcast(w.node, meta);
             indices.push(index);
         }
+        self.notify.notify();
         Ok(indices)
+    }
+
+    fn wait_ready(
+        &self,
+        stage: Stage,
+        max_n: usize,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<SampleMeta>> {
+        // a blocking worker sits on its co-located controller and is woken
+        // by the (already-accounted) metadata broadcasts — empty re-polls
+        // are free, only a successful handout is charged. Charging every
+        // wakeup would make dispatch accounting scale with wall-clock
+        // time instead of data movement.
+        wait_ready_impl(&self.notify, timeout, || {
+            let c = self
+                .controllers
+                .get(&stage)
+                .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
+            let metas = c.request(max_n);
+            if !metas.is_empty() {
+                self.ledger.record(
+                    LinkClass::Local,
+                    (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES,
+                );
+                self.ledger.note_requests_on(LinkClass::Local, 1);
+            }
+            Ok(metas)
+        })
+    }
+
+    fn release(&self, stage: Stage, indices: &[u64]) {
+        if let Some(c) = self.controllers.get(&stage) {
+            c.release(indices);
+            self.notify.notify();
+        }
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
@@ -194,15 +247,7 @@ impl SampleFlow for TransferDock {
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
     ) -> Result<()> {
-        let w = self.warehouse_for(index).clone();
-        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        self.ledger.record(self.link(requester_node, w.node), bytes);
-        self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
-        w.store_fields(index, fields, None)?;
-        self.ledger.note_store_bytes(w.traffic_bytes());
-        let s = w.fetch_meta_snapshot(index)?;
-        self.broadcast(w.node, s);
-        Ok(())
+        self.writeback(requester_node, index, fields, None)
     }
 
     fn store_generation(
@@ -213,11 +258,13 @@ impl SampleFlow for TransferDock {
         completion: String,
         resp_len: usize,
     ) -> Result<()> {
-        self.store_generation_inner(requester_node, index, fields, completion, resp_len)
+        self.writeback(requester_node, index, fields, Some((completion, resp_len)))
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
-        self.retire_inner(index)
+        let out = self.retire_inner(index);
+        self.notify.notify();
+        out
     }
 
     fn ledger(&self) -> CommLedger {
@@ -234,25 +281,34 @@ impl SampleFlow for TransferDock {
 }
 
 impl TransferDock {
-    /// Store fields along with the generated completion text (generation
-    /// stage writes both the tensors and the decoded string).
-    fn store_generation_inner(
+    /// The single writeback path for every producing stage: record the
+    /// payload movement, merge fields (plus the decoded completion when
+    /// the generation state writes), re-broadcast metadata, wake waiters.
+    fn writeback(
         &self,
         requester_node: usize,
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
-        completion: String,
-        resp_len: usize,
+        completion: Option<(String, usize)>,
     ) -> Result<()> {
         let w = self.warehouse_for(index).clone();
-        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        self.ledger
-            .record(self.link(requester_node, w.node), bytes + completion.len() as u64);
+        let mut bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        if let Some((text, _)) = &completion {
+            bytes += text.len() as u64;
+        }
+        self.ledger.record(self.link(requester_node, w.node), bytes);
         self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
-        w.store_fields(index, fields, Some((completion, resp_len)))?;
+        w.store_fields(index, fields, completion)?;
         self.ledger.note_store_bytes(w.traffic_bytes());
+        // snapshot + broadcast under meta_order: whichever writeback
+        // snapshots later necessarily sees a superset mask, so broadcast
+        // order is monotone per sample while payload stores (above) run
+        // concurrently across stage threads
+        let _order = self.meta_order.lock().unwrap();
         let meta = w.fetch_meta_snapshot(index)?;
         self.broadcast(w.node, meta);
+        drop(_order);
+        self.notify.notify();
         Ok(())
     }
 }

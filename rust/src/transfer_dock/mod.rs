@@ -22,6 +22,7 @@
 mod controller;
 mod dock;
 mod network;
+mod notify;
 mod replay_buffer;
 mod sample;
 pub mod volume;
@@ -45,6 +46,19 @@ pub trait SampleFlow: Send + Sync {
     fn put_samples(&self, samples: Vec<Sample>) -> Result<Vec<u64>>;
     /// Ask the dataflow for up to `max_n` samples ready for `stage`.
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>>;
+    /// Blocking variant of [`Self::request_ready`] for long-lived stage
+    /// workers: returns as soon as work is available, or an empty vec once
+    /// `timeout` expires with nothing ready. Implementations are
+    /// condvar-notified on every state change — no busy-polling.
+    fn wait_ready(
+        &self,
+        stage: Stage,
+        max_n: usize,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<SampleMeta>>;
+    /// Return claimed-but-unprocessed samples to the ready pool (e.g. the
+    /// update state handing back groups that are not yet complete).
+    fn release(&self, stage: Stage, indices: &[u64]);
     /// Fetch full payloads for the given metadata (records comm bytes).
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
     /// Write fields back for a sample after a stage completes.

@@ -7,7 +7,7 @@
 //! is the calibration-free part of the cost model since it uses the
 //! paper's own constants.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Which physical link a transfer crosses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -144,29 +144,57 @@ impl CommLedger {
 }
 
 /// Shared, thread-safe ledger.
+///
+/// Lock-free: every stage thread of the pipelined executor records bytes
+/// on every request/fetch/store, so a single `Mutex<CommLedger>` would be
+/// the hottest lock in the system. Each counter is an independent
+/// `AtomicU64` (relaxed ordering — the ledger is statistics, not a
+/// synchronization point; `snapshot` tolerates being mid-update).
 #[derive(Debug, Default)]
-pub struct SharedLedger(Mutex<CommLedger>);
+pub struct SharedLedger {
+    local_bytes: AtomicU64,
+    inter_node_bytes: AtomicU64,
+    host_device_bytes: AtomicU64,
+    requests: AtomicU64,
+    local_requests: AtomicU64,
+    max_store_bytes: AtomicU64,
+}
 
 impl SharedLedger {
     pub fn record(&self, link: LinkClass, bytes: u64) {
-        self.0.lock().unwrap().record(link, bytes);
+        let counter = match link {
+            LinkClass::Local => &self.local_bytes,
+            LinkClass::InterNode => &self.inter_node_bytes,
+            LinkClass::HostDevice => &self.host_device_bytes,
+        };
+        counter.fetch_add(bytes, Ordering::Relaxed);
     }
 
     pub fn note_requests(&self, n: u64) {
-        self.0.lock().unwrap().note_requests(n);
+        self.requests.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn note_requests_on(&self, link: LinkClass, n: u64) {
-        self.0.lock().unwrap().note_requests_on(link, n);
+        if matches!(link, LinkClass::Local) {
+            self.local_requests.fetch_add(n, Ordering::Relaxed);
+        } else {
+            self.requests.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     pub fn note_store_bytes(&self, bytes: u64) {
-        let mut l = self.0.lock().unwrap();
-        l.max_store_bytes = l.max_store_bytes.max(bytes);
+        self.max_store_bytes.fetch_max(bytes, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> CommLedger {
-        self.0.lock().unwrap().clone()
+        CommLedger {
+            local_bytes: self.local_bytes.load(Ordering::Relaxed),
+            inter_node_bytes: self.inter_node_bytes.load(Ordering::Relaxed),
+            host_device_bytes: self.host_device_bytes.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            local_requests: self.local_requests.load(Ordering::Relaxed),
+            max_store_bytes: self.max_store_bytes.load(Ordering::Relaxed),
+        }
     }
 }
 

@@ -1,0 +1,140 @@
+//! Readiness notification for blocking stage workers.
+//!
+//! The pipelined executor runs one long-lived thread per worker state, each
+//! pulling from the shared [`super::SampleFlow`]. Busy-polling
+//! `request_ready` would burn a core per stage; instead every state change
+//! in a flow (admission, field writeback, retire, release) bumps an epoch
+//! counter and wakes waiters on a `Condvar`. `wait_ready` then re-polls
+//! only when the epoch moved, which makes the wait race-free: an update
+//! that lands between the poll and the wait changes the epoch, so the
+//! waiter re-checks instead of sleeping through the wakeup.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Epoch counter + condvar: the flow-side half of `wait_ready`.
+#[derive(Debug, Default)]
+pub(crate) struct Notifier {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    /// Signal that flow state changed (new sample, field written, retire,
+    /// release). Wakes every blocked stage worker.
+    pub fn notify(&self) {
+        let mut g = self.epoch.lock().unwrap();
+        *g = g.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Current epoch; read *before* polling so a concurrent change between
+    /// poll and wait is never missed.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Block until the epoch differs from `seen` or `deadline` passes.
+    /// Returns the epoch observed on exit (== `seen` means timeout with no
+    /// state change).
+    pub fn wait_past(&self, seen: u64, deadline: Instant) -> u64 {
+        let mut g = self.epoch.lock().unwrap();
+        while *g == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                return *g;
+            }
+            let (g2, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return *g;
+            }
+        }
+        *g
+    }
+}
+
+/// Shared `wait_ready` skeleton for flow implementations: poll, and if
+/// empty, sleep on the notifier until the state epoch moves or the
+/// timeout expires. `poll` is the flow's own `request_ready`.
+pub(crate) fn wait_ready_impl<F>(
+    notifier: &Notifier,
+    timeout: Duration,
+    mut poll: F,
+) -> anyhow::Result<Vec<super::SampleMeta>>
+where
+    F: FnMut() -> anyhow::Result<Vec<super::SampleMeta>>,
+{
+    let deadline = Instant::now() + timeout;
+    loop {
+        let seen = notifier.epoch();
+        let metas = poll()?;
+        if !metas.is_empty() {
+            return Ok(metas);
+        }
+        if notifier.wait_past(seen, deadline) == seen {
+            // deadline passed with no state change since the last poll
+            return Ok(Vec::new());
+        }
+        if Instant::now() >= deadline {
+            // state moved at the deadline edge: one final poll, then out
+            return poll();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn notify_bumps_epoch_and_wakes() {
+        let n = Arc::new(Notifier::default());
+        let seen = n.epoch();
+        let n2 = n.clone();
+        let h = std::thread::spawn(move || {
+            n2.wait_past(seen, Instant::now() + Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        n.notify();
+        assert_ne!(h.join().unwrap(), seen);
+    }
+
+    #[test]
+    fn wait_past_times_out_unchanged() {
+        let n = Notifier::default();
+        let seen = n.epoch();
+        let t0 = Instant::now();
+        let out = n.wait_past(seen, Instant::now() + Duration::from_millis(20));
+        assert_eq!(out, seen);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn wait_ready_sees_concurrent_publish() {
+        use super::super::SampleMeta;
+        let n = Arc::new(Notifier::default());
+        let published = Arc::new(Mutex::new(Vec::<SampleMeta>::new()));
+        let (n2, p2) = (n.clone(), published.clone());
+        let h = std::thread::spawn(move || {
+            wait_ready_impl(&n2, Duration::from_secs(5), || {
+                Ok(p2.lock().unwrap().clone())
+            })
+            .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        published.lock().unwrap().push(SampleMeta {
+            index: 7,
+            group: 0,
+            warehouse: 0,
+            present: 0,
+            prompt_len: 1,
+            resp_len: 0,
+        });
+        n.notify();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].index, 7);
+    }
+}

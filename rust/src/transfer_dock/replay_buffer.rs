@@ -13,6 +13,7 @@ use std::sync::Mutex;
 
 use super::controller::SampleMeta;
 use super::network::{CommLedger, LinkClass, SharedLedger};
+use super::notify::{wait_ready_impl, Notifier};
 use super::sample::{FieldKind, Sample, Stage};
 use super::SampleFlow;
 use crate::runtime::Tensor;
@@ -23,6 +24,8 @@ pub struct ReplayBuffer {
     inner: Mutex<Inner>,
     ledger: SharedLedger,
     next_index: AtomicU64,
+    /// wakes blocked stage workers on every state change (wait_ready)
+    notify: Notifier,
 }
 
 #[derive(Default)]
@@ -39,6 +42,7 @@ impl ReplayBuffer {
             inner: Mutex::new(Inner::default()),
             ledger: SharedLedger::default(),
             next_index: AtomicU64::new(0),
+            notify: Notifier::default(),
         }
     }
 
@@ -61,9 +65,36 @@ impl ReplayBuffer {
         }
     }
 
+    /// Scan for ready samples and latch them in-flight; returns the picks
+    /// plus how many candidates were scanned (the ledger-cost driver).
+    fn scan_ready(&self, stage: Stage, max_n: usize) -> (Vec<SampleMeta>, u64) {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut scanned = 0u64;
+        let mut picked = Vec::new();
+        for (&idx, s) in g.samples.iter() {
+            scanned += 1;
+            if out.len() >= max_n {
+                break;
+            }
+            let meta = Self::meta_of(s);
+            if meta.ready_for(stage) && !g.in_flight.contains(&(stage, idx)) {
+                out.push(meta);
+                picked.push(idx);
+            }
+        }
+        for idx in picked {
+            g.in_flight.insert((stage, idx));
+        }
+        (out, scanned)
+    }
+
     /// Consume a finished sample (post-update).
     fn retire_inner(&self, index: u64) -> Option<Sample> {
         let mut g = self.inner.lock().unwrap();
+        for st in Stage::ALL {
+            g.in_flight.remove(&(st, index));
+        }
         g.samples.remove(&index)
     }
 }
@@ -83,31 +114,46 @@ impl SampleFlow for ReplayBuffer {
             out.push(index);
         }
         self.ledger.note_store_bytes(g.traffic_bytes);
+        drop(g);
+        self.notify.notify();
         Ok(out)
     }
 
-    fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+    fn wait_ready(
+        &self,
+        stage: Stage,
+        max_n: usize,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<SampleMeta>> {
+        // like the dock: only a successful claim pays the metadata
+        // round-trip; empty wakeup re-polls are not wire traffic, so
+        // dispatch accounting stays a function of data movement rather
+        // than of wall-clock time spent blocked
+        wait_ready_impl(&self.notify, timeout, || {
+            let (out, scanned) = self.scan_ready(stage, max_n);
+            if !out.is_empty() {
+                self.ledger
+                    .record(LinkClass::InterNode, (scanned + 1) * SampleMeta::WIRE_BYTES);
+                self.ledger.note_requests_on(LinkClass::InterNode, 1);
+            }
+            Ok(out)
+        })
+    }
+
+    fn release(&self, stage: Stage, indices: &[u64]) {
         let mut g = self.inner.lock().unwrap();
+        for &i in indices {
+            g.in_flight.remove(&(stage, i));
+        }
+        drop(g);
+        self.notify.notify();
+    }
+
+    fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
         // a centralized buffer must answer readiness queries itself: the
         // requester pays a metadata round-trip per *candidate scanned*,
         // not per ready sample — this is the dispatch-overhead term
-        let mut out = Vec::new();
-        let mut scanned = 0u64;
-        let mut picked = Vec::new();
-        for (&idx, s) in g.samples.iter() {
-            scanned += 1;
-            if out.len() >= max_n {
-                break;
-            }
-            let meta = Self::meta_of(s);
-            if meta.ready_for(stage) && !g.in_flight.contains(&(stage, idx)) {
-                out.push(meta);
-                picked.push(idx);
-            }
-        }
-        for idx in picked {
-            g.in_flight.insert((stage, idx));
-        }
+        let (out, scanned) = self.scan_ready(stage, max_n);
         self.ledger
             .record(LinkClass::InterNode, (scanned + 1) * SampleMeta::WIRE_BYTES);
         // readiness queries come from workers anywhere in the cluster
@@ -151,12 +197,17 @@ impl SampleFlow for ReplayBuffer {
         for (k, t) in fields {
             s.put(k, t);
         }
-        // clear in-flight latches for stages this write completes
-        let stages: Vec<Stage> = Stage::ALL.to_vec();
-        for st in stages {
-            g.in_flight.remove(&(st, index));
+        // clear in-flight latches only for stages this write completed —
+        // a cross-stage write must not re-dispatch an outstanding claim
+        let meta = Self::meta_of(s);
+        for st in Stage::ALL {
+            if !meta.ready_for(st) {
+                g.in_flight.remove(&(st, index));
+            }
         }
         self.ledger.note_store_bytes(g.traffic_bytes);
+        drop(g);
+        self.notify.notify();
         Ok(())
     }
 
@@ -172,7 +223,9 @@ impl SampleFlow for ReplayBuffer {
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
-        self.retire_inner(index)
+        let out = self.retire_inner(index);
+        self.notify.notify();
+        out
     }
 
     fn ledger(&self) -> CommLedger {

@@ -50,10 +50,24 @@ impl ActorWorker {
         max_batch: usize,
     ) -> Result<GenerationOutcome> {
         let metas = dock.request_ready(Stage::Generation, max_batch)?;
+        self.generate_claimed(engine, policy, dock, rng, &metas)
+    }
+
+    /// Process an already-claimed batch of generation-ready metas (the
+    /// pipelined executor's stage loop claims via `wait_ready` and hands
+    /// the work here).
+    pub fn generate_claimed(
+        &self,
+        engine: &Engine,
+        policy: &Policy,
+        dock: &dyn SampleFlow,
+        rng: &mut Rng,
+        metas: &[SampleMeta],
+    ) -> Result<GenerationOutcome> {
         if metas.is_empty() {
             return Ok(GenerationOutcome::default());
         }
-        let samples = dock.fetch(self.node, &metas)?;
+        let samples = dock.fetch(self.node, metas)?;
         let mut requests = Vec::with_capacity(samples.len());
         for s in &samples {
             let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
@@ -111,9 +125,33 @@ impl ActorWorker {
             max_batch,
         )
     }
+
+    /// Claimed-batch variant of [`Self::run_old_logprobs`] for the
+    /// pipelined executor's stage loop.
+    pub fn old_logprobs_claimed(
+        &self,
+        engine: &Engine,
+        policy: &Policy,
+        flow: &dyn SampleFlow,
+        metas: &[SampleMeta],
+    ) -> Result<usize> {
+        let a = engine.manifest.artifact("logprobs")?.clone();
+        logprob_claimed(
+            engine,
+            policy,
+            flow,
+            &self.tokenizer,
+            self.node,
+            FieldKind::OldLp,
+            metas,
+            a.batch,
+            a.seq,
+        )
+    }
 }
 
-/// Shared implementation for the two logprob-producing stages.
+/// Shared implementation for the two logprob-producing stages: claim work
+/// in artifact-batch chunks until the stage queue drains.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_logprob_stage(
     engine: &Engine,
@@ -133,7 +171,28 @@ pub(crate) fn run_logprob_stage(
         if metas.is_empty() {
             break;
         }
-        let samples = flow.fetch(node, &metas)?;
+        done += logprob_claimed(engine, policy, flow, tokenizer, node, field, &metas, b, s)?;
+    }
+    Ok(done)
+}
+
+/// Score one already-claimed batch of metas with the logprobs artifact and
+/// write `field` back for each sample. Chunks by the artifact batch size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn logprob_claimed(
+    engine: &Engine,
+    policy: &Policy,
+    flow: &dyn SampleFlow,
+    tokenizer: &Tokenizer,
+    node: usize,
+    field: FieldKind,
+    metas: &[SampleMeta],
+    b: usize,
+    s: usize,
+) -> Result<usize> {
+    let mut done = 0usize;
+    for chunk in metas.chunks(b) {
+        let samples = flow.fetch(node, chunk)?;
         let refs: Vec<&_> = samples.iter().collect();
         let tokens = super::stack_tokens(tokenizer, &refs, b, s)?;
         let lp = policy.logprobs(engine, &tokens)?;

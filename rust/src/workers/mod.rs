@@ -11,8 +11,9 @@ mod reference;
 mod reward;
 
 pub use actor::{ActorWorker, GenerationOutcome};
+pub(crate) use actor::logprob_claimed;
 pub use reference::ReferenceWorker;
-pub use reward::RewardWorker;
+pub use reward::{RewardOutcome, RewardWorker, ScoredSample};
 
 use anyhow::Result;
 

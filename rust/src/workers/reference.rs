@@ -4,7 +4,7 @@ use anyhow::Result;
 
 use crate::runtime::{Engine, Policy};
 use crate::tokenizer::Tokenizer;
-use crate::transfer_dock::{FieldKind, SampleFlow, Stage};
+use crate::transfer_dock::{FieldKind, SampleFlow, SampleMeta, Stage};
 
 /// Holds the frozen reference policy (the pre-RL checkpoint; in this
 /// reproduction, the AOT initial parameters).
@@ -34,6 +34,28 @@ impl ReferenceWorker {
             Stage::RefLogprob,
             FieldKind::RefLp,
             max_batch,
+        )
+    }
+
+    /// Claimed-batch variant of [`Self::run`] for the pipelined executor's
+    /// stage loop.
+    pub fn run_claimed(
+        &self,
+        engine: &Engine,
+        flow: &dyn SampleFlow,
+        metas: &[SampleMeta],
+    ) -> Result<usize> {
+        let a = engine.manifest.artifact("logprobs")?.clone();
+        super::actor::logprob_claimed(
+            engine,
+            &self.policy,
+            flow,
+            &self.tokenizer,
+            self.node,
+            FieldKind::RefLp,
+            metas,
+            a.batch,
+            a.seq,
         )
     }
 }

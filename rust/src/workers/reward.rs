@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::data::{Task, Tier};
 use crate::rewards;
 use crate::runtime::Tensor;
-use crate::transfer_dock::{FieldKind, SampleFlow, Stage};
+use crate::transfer_dock::{FieldKind, SampleFlow, SampleMeta, Stage};
 
 /// Stateless rule-reward worker (no model inference).
 pub struct RewardWorker {
@@ -20,11 +20,32 @@ pub struct RewardOutcome {
     pub reward_sum: f32,
 }
 
+impl RewardOutcome {
+    pub fn absorb(&mut self, s: &ScoredSample) {
+        self.scored += 1;
+        self.exact += s.exact as usize;
+        self.well_formed += s.well_formed as usize;
+        self.reward_sum += s.reward;
+    }
+}
+
+/// One scored sample, with the group id for callers that attribute
+/// rewards back to their admission batch.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoredSample {
+    pub index: u64,
+    pub group: u64,
+    pub reward: f32,
+    pub exact: bool,
+    pub well_formed: bool,
+}
+
 impl RewardWorker {
     pub fn new(node: usize) -> Self {
         Self { node }
     }
 
+    /// Drain every reward-ready sample (sync-mode barrier semantics).
     pub fn run(&self, flow: &dyn SampleFlow, max_batch: usize) -> Result<RewardOutcome> {
         let mut out = RewardOutcome::default();
         loop {
@@ -32,24 +53,41 @@ impl RewardWorker {
             if metas.is_empty() {
                 break;
             }
-            let samples = flow.fetch(self.node, &metas)?;
-            for s in samples {
-                let task = Task {
-                    prompt: s.prompt_text.clone(),
-                    answer: s.answer,
-                    tier: Tier::Easy, // tier is irrelevant for scoring
-                };
-                let score = rewards::score(&task, &s.completion_text);
-                out.scored += 1;
-                out.exact += score.exact as usize;
-                out.well_formed += score.well_formed as usize;
-                out.reward_sum += score.reward;
-                flow.store_fields(
-                    self.node,
-                    s.index,
-                    vec![(FieldKind::Reward, Tensor::scalar_f32(score.reward))],
-                )?;
+            for s in self.score_claimed(flow, &metas)? {
+                out.absorb(&s);
             }
+        }
+        Ok(out)
+    }
+
+    /// Score one already-claimed batch of metas and write the reward field
+    /// back for each sample.
+    pub fn score_claimed(
+        &self,
+        flow: &dyn SampleFlow,
+        metas: &[SampleMeta],
+    ) -> Result<Vec<ScoredSample>> {
+        let samples = flow.fetch(self.node, metas)?;
+        let mut out = Vec::with_capacity(samples.len());
+        for s in samples {
+            let task = Task {
+                prompt: s.prompt_text.clone(),
+                answer: s.answer,
+                tier: Tier::Easy, // tier is irrelevant for scoring
+            };
+            let score = rewards::score(&task, &s.completion_text);
+            flow.store_fields(
+                self.node,
+                s.index,
+                vec![(FieldKind::Reward, Tensor::scalar_f32(score.reward))],
+            )?;
+            out.push(ScoredSample {
+                index: s.index,
+                group: s.group,
+                reward: score.reward,
+                exact: score.exact,
+                well_formed: score.well_formed,
+            });
         }
         Ok(out)
     }

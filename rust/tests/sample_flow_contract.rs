@@ -1,0 +1,269 @@
+//! SampleFlow contract tests, run against BOTH implementations — the
+//! distributed transfer dock and the centralized replay-buffer baseline.
+//! The pipelined executor treats the two interchangeably, so the
+//! put / request / fetch / store / retire / release / wait_ready
+//! invariants must hold identically for both, including under
+//! multi-threaded producers and consumers.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mindspeed_rl::runtime::Tensor;
+use mindspeed_rl::transfer_dock::{
+    DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage, TransferDock,
+};
+
+fn flows() -> Vec<(&'static str, Arc<dyn SampleFlow>)> {
+    vec![
+        ("transfer_dock", Arc::new(TransferDock::new(DockTopology::spread(4)))),
+        ("replay_buffer", Arc::new(ReplayBuffer::new(0))),
+    ]
+}
+
+fn prompts(n: usize) -> Vec<Sample> {
+    (0..n)
+        .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 2, format!("{i}+1="), i as i64 + 1))
+        .collect()
+}
+
+fn finish_generation(flow: &dyn SampleFlow, index: u64) {
+    flow.store_generation(
+        0,
+        index,
+        vec![
+            (FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap()),
+            (FieldKind::RespMask, Tensor::zeros(&[7])),
+        ],
+        "42".into(),
+        2,
+    )
+    .unwrap();
+}
+
+#[test]
+fn lifecycle_and_readiness() {
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(2)).unwrap();
+        // fresh prompts: only generation is ready
+        assert!(flow.request_ready(Stage::OldLogprob, 10).unwrap().is_empty(), "{name}");
+        assert!(flow.request_ready(Stage::Update, 10).unwrap().is_empty(), "{name}");
+        let gen = flow.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(gen.len(), 2, "{name}");
+
+        finish_generation(flow.as_ref(), idx[0]);
+        // generation writeback unlocks the three downstream-of-gen stages
+        for stage in [Stage::OldLogprob, Stage::RefLogprob, Stage::Reward] {
+            let ready = flow.request_ready(stage, 10).unwrap();
+            assert_eq!(ready.len(), 1, "{name} {stage:?}");
+            assert_eq!(ready[0].index, idx[0], "{name}");
+            flow.release(stage, &[idx[0]]);
+        }
+        // update still gated on the remaining fields
+        assert!(flow.request_ready(Stage::Update, 10).unwrap().is_empty(), "{name}");
+        flow.store_fields(1, idx[0], vec![(FieldKind::OldLp, Tensor::zeros(&[7]))]).unwrap();
+        flow.store_fields(2, idx[0], vec![(FieldKind::RefLp, Tensor::zeros(&[7]))]).unwrap();
+        flow.store_fields(3, idx[0], vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))])
+            .unwrap();
+        let upd = flow.request_ready(Stage::Update, 10).unwrap();
+        assert_eq!(upd.len(), 1, "{name}");
+
+        // fetch serves a copy with everything the update state needs
+        let fetched = flow.fetch(3, &upd).unwrap();
+        assert_eq!(fetched[0].completion_text, "42", "{name}");
+        assert!(fetched[0].ready_for_update(), "{name}");
+
+        // retire consumes; nothing is ready anywhere afterwards
+        assert!(flow.retire(idx[0]).is_some(), "{name}");
+        assert!(flow.retire(idx[0]).is_none(), "{name} double retire");
+        for stage in Stage::ALL {
+            assert!(
+                flow.request_ready(stage, 10).unwrap().iter().all(|m| m.index != idx[0]),
+                "{name} {stage:?} still sees retired sample"
+            );
+        }
+        assert_eq!(flow.len(), 1, "{name} one unfinished sample remains");
+    }
+}
+
+#[test]
+fn no_double_dispatch_and_release() {
+    for (name, flow) in flows() {
+        flow.put_samples(prompts(4)).unwrap();
+        let a = flow.request_ready(Stage::Generation, 2).unwrap();
+        let b = flow.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(a.len(), 2, "{name}");
+        assert_eq!(b.len(), 2, "{name}");
+        let ai: Vec<u64> = a.iter().map(|m| m.index).collect();
+        assert!(b.iter().all(|m| !ai.contains(&m.index)), "{name} double dispatch");
+        // everything claimed: the pool is empty
+        assert!(flow.request_ready(Stage::Generation, 10).unwrap().is_empty(), "{name}");
+        // releasing puts the claimed work back, exactly once
+        flow.release(Stage::Generation, &ai);
+        let again = flow.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(again.len(), 2, "{name} release must restore claims");
+        assert!(again.iter().all(|m| ai.contains(&m.index)), "{name}");
+    }
+}
+
+#[test]
+fn wait_ready_returns_immediately_when_ready() {
+    for (name, flow) in flows() {
+        flow.put_samples(prompts(3)).unwrap();
+        let t0 = Instant::now();
+        let metas = flow
+            .wait_ready(Stage::Generation, 2, Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(metas.len(), 2, "{name} honors max_n");
+        assert!(t0.elapsed() < Duration::from_secs(1), "{name} must not block");
+    }
+}
+
+#[test]
+fn wait_ready_times_out_empty() {
+    for (name, flow) in flows() {
+        flow.put_samples(prompts(1)).unwrap();
+        // nothing is update-ready; the wait must expire empty, promptly
+        let t0 = Instant::now();
+        let metas = flow
+            .wait_ready(Stage::Update, 10, Duration::from_millis(30))
+            .unwrap();
+        assert!(metas.is_empty(), "{name}");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "{name} returned too early");
+        assert!(waited < Duration::from_secs(2), "{name} overslept");
+    }
+}
+
+#[test]
+fn wait_ready_wakes_on_concurrent_store() {
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(1)).unwrap();
+        // claim generation so the only path to OldLogprob readiness is the
+        // store_generation below
+        let gen = flow.request_ready(Stage::Generation, 1).unwrap();
+        assert_eq!(gen.len(), 1, "{name}");
+
+        let waiter = Arc::clone(&flow);
+        let h = std::thread::spawn(move || {
+            waiter.wait_ready(Stage::OldLogprob, 4, Duration::from_secs(10)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        finish_generation(flow.as_ref(), idx[0]);
+        let metas = h.join().unwrap();
+        assert_eq!(metas.len(), 1, "{name} waiter must observe the writeback");
+        assert_eq!(metas[0].index, idx[0], "{name}");
+    }
+}
+
+/// Three stage threads race writebacks of *different fields to the same
+/// samples* — the interleaving that once let an out-of-order metadata
+/// broadcast un-ready a completed sample forever. Every sample must end
+/// up update-ready exactly once.
+#[test]
+fn concurrent_multi_field_writebacks_reach_update() {
+    const N: usize = 32;
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(N)).unwrap();
+        for &i in &idx {
+            finish_generation(flow.as_ref(), i);
+        }
+        std::thread::scope(|scope| {
+            for field in [FieldKind::OldLp, FieldKind::RefLp, FieldKind::Reward] {
+                let flow = Arc::clone(&flow);
+                let idx = idx.clone();
+                scope.spawn(move || {
+                    for &i in &idx {
+                        let t = if field == FieldKind::Reward {
+                            Tensor::scalar_f32(1.0)
+                        } else {
+                            Tensor::zeros(&[7])
+                        };
+                        flow.store_fields(1, i, vec![(field, t)]).unwrap();
+                    }
+                });
+            }
+        });
+        let ready = flow.request_ready(Stage::Update, usize::MAX).unwrap();
+        assert_eq!(ready.len(), N, "{name}: every sample must reach the update state");
+        let again = flow.request_ready(Stage::Update, usize::MAX).unwrap();
+        assert!(again.is_empty(), "{name}: update work dispatched twice");
+    }
+}
+
+/// N producer threads admit + finish generation; M consumer threads pull
+/// OldLogprob work through `wait_ready` and write the field back. Every
+/// sample must be consumed exactly once — the in-flight latch must hold
+/// under contention, and no sample may be lost.
+#[test]
+fn multithreaded_producers_consumers() {
+    const PRODUCERS: usize = 3;
+    const PER_PRODUCER: usize = 20;
+    const CONSUMERS: usize = 4;
+    const TOTAL: usize = PRODUCERS * PER_PRODUCER;
+
+    for (name, flow) in flows() {
+        let processed = Arc::new(AtomicUsize::new(0));
+        let seen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+
+        std::thread::scope(|scope| {
+            for _ in 0..PRODUCERS {
+                let flow = Arc::clone(&flow);
+                scope.spawn(move || {
+                    for chunk in 0..PER_PRODUCER / 4 {
+                        let idx = flow.put_samples(prompts(4)).unwrap();
+                        for &i in &idx {
+                            finish_generation(flow.as_ref(), i);
+                        }
+                        // stagger admissions a little
+                        if chunk % 2 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            for _ in 0..CONSUMERS {
+                let flow = Arc::clone(&flow);
+                let processed = Arc::clone(&processed);
+                let seen = Arc::clone(&seen);
+                scope.spawn(move || {
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    while processed.load(Ordering::Relaxed) < TOTAL {
+                        assert!(Instant::now() < deadline, "stress test wedged");
+                        let metas = flow
+                            .wait_ready(Stage::OldLogprob, 8, Duration::from_millis(20))
+                            .unwrap();
+                        if metas.is_empty() {
+                            continue;
+                        }
+                        let samples = flow.fetch(1, &metas).unwrap();
+                        for s in &samples {
+                            flow.store_fields(
+                                1,
+                                s.index,
+                                vec![(FieldKind::OldLp, Tensor::zeros(&[7]))],
+                            )
+                            .unwrap();
+                            let fresh = seen.lock().unwrap().insert(s.index);
+                            assert!(fresh, "sample {} dispatched twice", s.index);
+                            processed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+
+        assert_eq!(
+            processed.load(Ordering::Relaxed),
+            TOTAL,
+            "{name}: every sample consumed exactly once"
+        );
+        assert_eq!(seen.lock().unwrap().len(), TOTAL, "{name}");
+        // all samples now carry OldLp; none is OldLogprob-ready anymore
+        assert!(
+            flow.request_ready(Stage::OldLogprob, TOTAL).unwrap().is_empty(),
+            "{name}"
+        );
+    }
+}

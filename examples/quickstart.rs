@@ -35,7 +35,9 @@ fn main() -> Result<()> {
     let mut tasks = TaskGenerator::train(0);
     let policy = Policy::load_initial(&engine, 1e-3)?;
     let gen = GenEngine::from_manifest(&engine, SamplingParams::default())?;
-    let actor = ActorWorker::new(&engine, 0, gen, 6);
+    // emit behavior logprobs straight from the sampler (old_lp rides the
+    // generation writeback, so the old-logprob state has nothing to fill)
+    let actor = ActorWorker::new(&engine, 0, gen, 6, true);
     let batch = tasks.batch(4);
     println!("prompts: {:?}", batch.iter().map(|t| t.prompt.as_str()).collect::<Vec<_>>());
     let samples: Vec<Sample> = batch
@@ -45,7 +47,9 @@ fn main() -> Result<()> {
         .collect();
     dock.put_samples(samples)?;
     let mut rng = Rng::new(0);
-    let out = actor.run_generation(&engine, &policy, &dock, &mut rng, 8)?;
+    // the initial parameters are weight version 1 — samples are stamped
+    // with the version that generated them (their behavior policy)
+    let out = actor.run_generation(&engine, &policy, &dock, &mut rng, 8, 1)?;
     println!(
         "generated {} sequences, {} tokens, batcher occupancy {:.0}%",
         out.sequences,

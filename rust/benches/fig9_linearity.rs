@@ -31,6 +31,7 @@ fn implied_dispatch(flow: &dyn SampleFlow, nodes: usize) -> f64 {
             vec![(FieldKind::Tokens, Tensor::i32(&[1024], vec![1; 1024]).unwrap())],
             "1".into(),
             2,
+            1,
         )
         .unwrap();
     }

@@ -42,6 +42,7 @@ fn main() {
                 vec![(FieldKind::Tokens, Tensor::i32(&[256], vec![1; 256]).unwrap())],
                 "1".into(),
                 1,
+                1,
             )
             .unwrap();
             dock.retire(i);

@@ -52,11 +52,15 @@ fn main() {
             report.iterations.last().map(|m| m.reward_mean).unwrap_or(0.0),
         );
         println!("           {}", report.pipeline.summary());
+        let lag = report.pipeline.lag_total();
         println!(
-            "           busy total={} ({:.2}x the wall clock)\n",
+            "           busy total={} ({:.2}x the wall clock), behavior-policy lag mean={:.2} max={} publishes",
             fmt_secs(report.pipeline.busy_total()),
             report.pipeline.overlap_ratio(),
+            lag.mean(),
+            lag.max,
         );
+        println!();
     }
     let (sync_wall, pipe_wall) = (walls[0], walls[1]);
     println!(

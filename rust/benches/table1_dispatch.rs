@@ -31,6 +31,7 @@ fn drive_flow(flow: &dyn SampleFlow, n_samples: usize, payload_elems: usize) {
             )],
             "42".into(),
             3,
+            1,
         )
         .unwrap();
     }

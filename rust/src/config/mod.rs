@@ -78,6 +78,9 @@ impl Config {
             if let Some(v) = g.opt("max_inflight_iters") {
                 d.max_inflight_iters = v.usize()?;
             }
+            if let Some(v) = g.opt("gen_logprobs") {
+                d.gen_logprobs = v.bool()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -115,6 +118,9 @@ impl Config {
             g.pipeline = PipelineMode::parse(p)?;
         }
         g.max_inflight_iters = args.usize_or("max-inflight", g.max_inflight_iters)?;
+        if args.has("gen-logprobs") {
+            g.gen_logprobs = true;
+        }
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -173,7 +179,7 @@ mod tests {
     #[test]
     fn pipeline_flags_parse() {
         let args = Args::parse(
-            ["--pipeline", "pipelined", "--max-inflight", "3"]
+            ["--pipeline", "pipelined", "--max-inflight", "3", "--gen-logprobs"]
                 .iter()
                 .map(|s| s.to_string()),
         )
@@ -181,6 +187,11 @@ mod tests {
         let cfg = Config::from_args(&args).unwrap();
         assert_eq!(cfg.grpo.pipeline, PipelineMode::Pipelined);
         assert_eq!(cfg.grpo.max_inflight_iters, 3);
+        assert!(cfg.grpo.gen_logprobs);
+
+        let json = Args::parse(std::iter::empty()).unwrap();
+        let dflt = Config::from_args(&json).unwrap();
+        assert!(!dflt.grpo.gen_logprobs, "fast path must stay opt-in for seed parity");
 
         let bad = Args::parse(["--pipeline", "warp"].iter().map(|s| s.to_string())).unwrap();
         assert!(Config::from_args(&bad).is_err());

@@ -4,7 +4,7 @@ use anyhow::Result;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::sampler::SamplingParams;
+use super::sampler::{token_logprob, SamplingParams};
 use crate::runtime::{Engine, Policy, Tensor};
 use crate::util::rng::Rng;
 
@@ -22,6 +22,11 @@ pub struct GenResult {
     pub id: u64,
     /// generated tokens (response only), including the EOS if emitted
     pub response_ids: Vec<i32>,
+    /// behavior log-prob of each response token under softmax of the raw
+    /// decode logits (temperature 1, full support — the `logprobs`
+    /// artifact's definition), captured at sampling time; one entry per
+    /// `response_ids` entry
+    pub response_logprobs: Vec<f32>,
     pub finished_by_eos: bool,
 }
 
@@ -44,6 +49,8 @@ enum Slot {
         fed: usize,
         pos: i32,
         response: Vec<i32>,
+        /// behavior log-prob of each sampled response token
+        logprobs: Vec<f32>,
     },
 }
 
@@ -92,7 +99,13 @@ impl GenEngine {
         for slot in slots.iter_mut() {
             if let Some(req) = queue.pop_front() {
                 stats.prompt_tokens += req.prompt_ids.len() as u64;
-                *slot = Slot::Busy { req, fed: 0, pos: 0, response: Vec::new() };
+                *slot = Slot::Busy {
+                    req,
+                    fed: 0,
+                    pos: 0,
+                    response: Vec::new(),
+                    logprobs: Vec::new(),
+                };
             }
         }
 
@@ -110,7 +123,7 @@ impl GenEngine {
                         tok_v[i] = self.pad_id;
                         // pos stays wherever it was; idle slots are ignored
                     }
-                    Slot::Busy { req, fed, pos, response } => {
+                    Slot::Busy { req, fed, pos, response, .. } => {
                         any_busy = true;
                         busy_slot_steps += 1;
                         let next = if *fed < req.prompt_ids.len() {
@@ -138,7 +151,7 @@ impl GenEngine {
             // advance each busy slot
             for (i, slot) in slots.iter_mut().enumerate() {
                 let mut finished: Option<GenResult> = None;
-                if let Slot::Busy { req, fed, pos, response } = slot {
+                if let Slot::Busy { req, fed, pos, response, logprobs } = slot {
                     *pos += 1;
                     if *fed < req.prompt_ids.len() {
                         *fed += 1;
@@ -152,6 +165,7 @@ impl GenEngine {
                     let row = &lraw[i * v..(i + 1) * v];
                     let tok = self.params.sample(row, rng) as i32;
                     response.push(tok);
+                    logprobs.push(token_logprob(row, tok as usize));
                     stats.tokens_generated += 1;
                     let hit_eos = tok == self.eos_id;
                     let hit_len = response.len() >= req.max_new_tokens
@@ -160,6 +174,7 @@ impl GenEngine {
                         finished = Some(GenResult {
                             id: req.id,
                             response_ids: std::mem::take(response),
+                            response_logprobs: std::mem::take(logprobs),
                             finished_by_eos: hit_eos,
                         });
                     }
@@ -171,7 +186,13 @@ impl GenEngine {
                         Some(req) => {
                             stats.prompt_tokens += req.prompt_ids.len() as u64;
                             pos_v[i] = 0;
-                            Slot::Busy { req, fed: 0, pos: 0, response: Vec::new() }
+                            Slot::Busy {
+                                req,
+                                fed: 0,
+                                pos: 0,
+                                response: Vec::new(),
+                                logprobs: Vec::new(),
+                            }
                         }
                         None => Slot::Idle,
                     };
@@ -221,6 +242,12 @@ mod tests {
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
         for r in &results {
             assert!(!r.response_ids.is_empty() && r.response_ids.len() <= 5);
+            assert_eq!(
+                r.response_logprobs.len(),
+                r.response_ids.len(),
+                "one behavior logprob per sampled token"
+            );
+            assert!(r.response_logprobs.iter().all(|lp| lp.is_finite() && *lp <= 0.0));
         }
         assert!(stats.occupancy > 0.5, "refill should keep slots busy: {}", stats.occupancy);
         assert!(stats.tokens_generated >= n as u64);

@@ -12,4 +12,4 @@ mod batcher;
 mod sampler;
 
 pub use batcher::{GenEngine, GenRequest, GenResult, GenStats};
-pub use sampler::SamplingParams;
+pub use sampler::{token_logprob, SamplingParams};

@@ -1,6 +1,20 @@
-//! Token sampling from decode logits.
+//! Token sampling from decode logits, plus the behavior-logprob helper
+//! the generation stage uses to emit `old_lp` directly (the logits are
+//! already in hand when sampling, so the old-logprob recompute becomes a
+//! verify-or-fill state instead of a mandatory second forward pass).
 
 use crate::util::rng::Rng;
+
+/// Log-probability of `token` under `softmax(logits)` — temperature 1 and
+/// full support regardless of the sampling parameters, matching the
+/// `logprobs` artifact's definition (log-softmax of the raw logits), so a
+/// generation-emitted behavior logprob is directly comparable to a
+/// recompute through the inference path under the same weights.
+pub fn token_logprob(logits: &[f32], token: usize) -> f32 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = logits.iter().map(|&l| (l as f64 - max).exp()).sum();
+    (logits[token] as f64 - max - sum.ln()) as f32
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct SamplingParams {
@@ -57,6 +71,27 @@ mod tests {
             let t = p.sample(&logits, &mut rng);
             assert!(t < 2, "sampled outside top-k: {t}");
         }
+    }
+
+    #[test]
+    fn token_logprob_is_log_softmax() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        for (t, &l) in logits.iter().enumerate() {
+            let want = (l as f64 - z.ln()) as f32;
+            assert!((token_logprob(&logits, t) - want).abs() < 1e-6);
+        }
+        // a proper distribution: probs sum to 1
+        let total: f64 = (0..3).map(|t| (token_logprob(&logits, t) as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "{total}");
+    }
+
+    #[test]
+    fn token_logprob_stable_for_large_logits() {
+        let logits = [1000.0f32, 999.0];
+        let lp = token_logprob(&logits, 0);
+        assert!(lp.is_finite() && lp < 0.0);
+        assert!((lp - (-(1.0 + (-1.0f64).exp()).ln()) as f32).abs() < 1e-5);
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   centralized replay-buffer baseline it replaces.
 //! * [`resharding`] — the allgather–swap resharding flow (and the naive
 //!   baseline), over a simulated multi-device memory substrate.
+//! * [`weights`] — the versioned train→infer weight channel
+//!   (`WeightBus` snapshot ring): behavior-policy identity as a
+//!   first-class concept, so the pipelined executor scores old-logprobs
+//!   under each sample's stamped generation-time weights.
 //!
 //! Compute (model forward/backward, GRPO loss, Adam) lives in AOT-compiled
 //! HLO artifacts produced by `python/compile` and executed through
@@ -38,3 +42,4 @@ pub mod sim;
 pub mod tokenizer;
 pub mod transfer_dock;
 pub mod util;
+pub mod weights;

@@ -4,7 +4,7 @@
 //! mindspeed-rl smoke    [--preset tiny]           load + run every artifact
 //! mindspeed-rl train    [--preset small] [--config cfg.json] [--iterations N]
 //!                       [--pipeline sync|pipelined] [--max-inflight K]
-//!                       [--replay-buffer] [--eval-every K] ...
+//!                       [--replay-buffer] [--gen-logprobs] [--eval-every K] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
 //! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap
 //! ```
@@ -13,8 +13,12 @@
 //! old-logprobs, reference, reward, update) as its own thread pulling from
 //! the transfer dock; `--max-inflight` bounds how many iterations may be
 //! admitted ahead of the last completed update (off-policy staleness
-//! window). `--pipeline sync` (default) keeps barrier-per-stage semantics
-//! and is deterministic per seed. See rust/DESIGN.md.
+//! window). Weights flow over a versioned bus: every sample is stamped
+//! with the weight version that generated it and its old-logprob is
+//! scored under that exact version. `--gen-logprobs` emits the behavior
+//! logprobs straight from the sampler (old-logprob becomes
+//! verify-or-fill). `--pipeline sync` (default) keeps barrier-per-stage
+//! semantics and is deterministic per seed. See rust/DESIGN.md.
 
 use anyhow::Result;
 

@@ -56,6 +56,44 @@ impl StageTimers {
     }
 }
 
+/// Behavior-policy staleness accounting for version-stamped samples: how
+/// many weight publishes behind the consuming update each sample's
+/// generation-time weights were. In `sync` mode the lag is 0 by
+/// construction; in `pipelined` mode it reports how stale generation
+/// actually ran inside the `max_inflight_iters` window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VersionLag {
+    /// samples measured
+    pub samples: u64,
+    /// Σ (update-time head version − stamped behavior version)
+    pub sum: u64,
+    /// worst single-sample lag
+    pub max: u64,
+}
+
+impl VersionLag {
+    pub fn record(&mut self, lag: u64) {
+        self.samples += 1;
+        self.sum += lag;
+        self.max = self.max.max(lag);
+    }
+
+    pub fn merge(&mut self, other: &VersionLag) {
+        self.samples += other.samples;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Mean publishes-behind across measured samples.
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.samples as f64
+        }
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -71,6 +109,8 @@ pub struct PipelineReport {
     pub wall_secs: f64,
     /// busy seconds per stage (time inside compute, excluding waits)
     pub busy: BTreeMap<String, f64>,
+    /// per-iteration behavior-policy staleness, in finalize order
+    pub version_lag: Vec<(usize, VersionLag)>,
 }
 
 impl PipelineReport {
@@ -88,6 +128,15 @@ impl PipelineReport {
         self.busy.get(stage).copied().unwrap_or(0.0) / self.wall_secs.max(1e-12)
     }
 
+    /// Run-level behavior-policy staleness (all iterations merged).
+    pub fn lag_total(&self) -> VersionLag {
+        let mut total = VersionLag::default();
+        for (_, lag) in &self.version_lag {
+            total.merge(lag);
+        }
+        total
+    }
+
     pub fn summary(&self) -> String {
         let stages = self
             .busy
@@ -97,11 +146,18 @@ impl PipelineReport {
             })
             .collect::<Vec<_>>()
             .join(" ");
+        let lag = self.lag_total();
+        let lag = if lag.samples == 0 {
+            String::new()
+        } else {
+            format!(" lag(mean={:.2},max={})", lag.mean(), lag.max)
+        };
         format!(
-            "[{}] wall={} overlap={:.2}x {}",
+            "[{}] wall={} overlap={:.2}x{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             self.overlap_ratio(),
+            lag,
             stages
         )
     }
@@ -180,6 +236,31 @@ mod tests {
         assert!((r.utilization("generation") - 0.9).abs() < 1e-9);
         assert_eq!(r.utilization("missing"), 0.0);
         assert!(r.summary().contains("overlap=1.50x"));
+    }
+
+    #[test]
+    fn version_lag_statistics() {
+        let mut a = VersionLag::default();
+        a.record(0);
+        a.record(2);
+        a.record(1);
+        assert_eq!(a.samples, 3);
+        assert_eq!(a.max, 2);
+        assert!((a.mean() - 1.0).abs() < 1e-12);
+        let mut b = VersionLag::default();
+        b.record(5);
+        a.merge(&b);
+        assert_eq!(a.samples, 4);
+        assert_eq!(a.max, 5);
+        assert_eq!(VersionLag::default().mean(), 0.0);
+
+        let mut r = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        r.version_lag.push((0, a));
+        r.version_lag.push((1, b));
+        let total = r.lag_total();
+        assert_eq!(total.samples, 5);
+        assert_eq!(total.max, 5);
+        assert!(r.summary().contains("lag(mean="));
     }
 
     #[test]

@@ -15,9 +15,15 @@
 //!
 //! Weight flow in pipelined mode mirrors the paper's train→infer
 //! resharding: the update thread owns the authoritative [`Policy`] and
-//! publishes a weight snapshot on a [`WeightBus`] after each round of
-//! updates; the generation and old-logprob threads each hold an inference
-//! replica they refresh from the bus between batches. See DESIGN.md.
+//! publishes each post-update snapshot on the versioned
+//! [`WeightBus`](crate::weights::WeightBus); publication returns a
+//! monotonically increasing [`WeightVersion`](crate::weights::WeightVersion).
+//! The generation thread refreshes a head-tracking replica between
+//! batches and stamps every sample it writes back with the version it
+//! generated under; the old-logprob thread then scores each claimed
+//! batch under the sample's *recorded* version (a ring `get`, not the
+//! bus head), so the GRPO ratio's denominator is the true behavior
+//! policy even while generation runs ahead of the update. See DESIGN.md.
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -27,14 +33,15 @@ use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
 use crate::generation::{GenEngine, SamplingParams};
-use crate::metrics::{throughput_tps, PipelineReport, StageTimers};
+use crate::metrics::{throughput_tps, PipelineReport, StageTimers, VersionLag};
 use crate::rewards::group_advantages;
-use crate::runtime::{Engine, Policy, Tensor, TrainStats};
+use crate::runtime::{Engine, Policy, TrainStats};
 use crate::tokenizer::Tokenizer;
 use crate::transfer_dock::{
     FieldKind, NetworkModel, Sample, SampleFlow, SampleMeta, Stage,
 };
 use crate::util::rng::Rng;
+use crate::weights::{ReplicaCache, WeightBus, WeightReplica, WeightVersion};
 use crate::workers::{ActorWorker, ReferenceWorker, RewardWorker};
 
 use super::eval::evaluate;
@@ -148,14 +155,32 @@ fn run_sync(
         engine,
         SamplingParams { temperature: cfg.temperature, top_k: 0 },
     )?;
-    let actor = ActorWorker::new(engine, placement.actor, gen_engine, cfg.max_new_tokens);
+    let actor = ActorWorker::new(
+        engine,
+        placement.actor,
+        gen_engine,
+        cfg.max_new_tokens,
+        cfg.gen_logprobs,
+    );
     let reward_worker = RewardWorker::new(placement.reward);
 
     let a = engine.manifest.artifact("train_step")?.clone();
     let (b, s) = (a.batch, a.seq);
 
+    // sync mode's weight flow is trivially versioned: the whole iteration
+    // runs under one version (initial params = v1), which advances by
+    // exactly one per iteration's update barrier — so every sample of an
+    // iteration carries the same stamp and old-logprobs are scored under
+    // it with zero lag. The optional history bus retains the snapshots
+    // for the behavior-policy property suite.
+    let mut weight_version: u64 = 1;
+    let history = cfg
+        .keep_weight_history
+        .then(|| Arc::new(WeightBus::new(policy.params.clone(), HISTORY_CAPACITY)));
+
     let mut timers = StageTimers::default();
     let mut iterations = Vec::with_capacity(cfg.iterations);
+    let mut version_lags = Vec::with_capacity(cfg.iterations);
     let mut evals = Vec::new();
     let mut dispatch_prev = 0.0f64;
     let t_run = Instant::now();
@@ -169,8 +194,14 @@ fn run_sync(
         // 2. generation until drained
         let t0 = Instant::now();
         loop {
-            let out =
-                actor.run_generation(engine, &policy, flow.as_ref(), &mut rng, GEN_MAX_BATCH)?;
+            let out = actor.run_generation(
+                engine,
+                &policy,
+                flow.as_ref(),
+                &mut rng,
+                GEN_MAX_BATCH,
+                weight_version,
+            )?;
             if out.sequences == 0 {
                 break;
             }
@@ -207,6 +238,15 @@ fn run_sync(
         }
         for sm in &ready {
             flow.retire(sm.index);
+        }
+        // the iteration ran entirely under one version: zero lag, by
+        // construction — recorded so sync and pipelined reports stay
+        // shape-compatible for the overlap bench
+        version_lags.push((iter, VersionLag { samples: ready.len() as u64, sum: 0, max: 0 }));
+        weight_version += 1;
+        if let Some(h) = &history {
+            let v = h.publish(&policy.params);
+            debug_assert_eq!(v, WeightVersion(weight_version));
         }
         let update_secs = t0.elapsed().as_secs_f64();
         timers.add("update", update_secs);
@@ -262,6 +302,7 @@ fn run_sync(
         mode: PipelineMode::Sync.name().into(),
         wall_secs: t_run.elapsed().as_secs_f64(),
         busy: BTreeMap::new(),
+        version_lag: version_lags,
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -273,60 +314,37 @@ fn run_sync(
         evals,
         pipeline,
         final_ledger: flow.ledger(),
+        weight_history: history,
     })
 }
 
 // ------------------------------------------------------------ pipelined
 
-/// Single-producer weight channel: the update thread publishes parameter
-/// snapshots, inference stage threads pick up the newest between batches.
-struct WeightBus {
-    inner: Mutex<(u64, Arc<Vec<Tensor>>)>,
-}
-
-impl WeightBus {
-    fn new(params: Vec<Tensor>) -> Self {
-        Self { inner: Mutex::new((1, Arc::new(params))) }
-    }
-
-    fn publish(&self, params: &[Tensor]) {
-        // copy the weights outside the lock — replica refreshes on the
-        // inference hot path only ever block on a pointer swap
-        let next = Arc::new(params.to_vec());
-        let mut g = self.inner.lock().unwrap();
-        g.0 += 1;
-        g.1 = next;
-    }
-
-    fn newer_than(&self, seen: u64) -> Option<(u64, Arc<Vec<Tensor>>)> {
-        let g = self.inner.lock().unwrap();
-        if g.0 > seen {
-            Some((g.0, g.1.clone()))
-        } else {
-            None
-        }
+/// How many snapshots the versioned bus must retain so that no in-flight
+/// sample's stamped version is ever evicted. While a sample S of
+/// iteration `k` awaits its old-logprob, `k` cannot complete, but
+/// *earlier* iterations can — `completed` advances up to `k` and
+/// admission (gated at `completed + window`) reaches iteration
+/// `k + window - 1`. With S admitted at the window's far edge
+/// (`k = completed_at_admission + window - 1`), the iterations retirable
+/// during S's flight span `2·window − 1` of them; every publish follows
+/// a train round that retires at least one whole GRPO group and S's own
+/// group never retires, so at most
+/// `(2·window − 1) × prompts_per_iter − 1` publishes can land between
+/// S's stamp and its scoring. Retaining that many versions plus the
+/// stamp itself (+2 slop) makes eviction impossible regardless of claim
+/// ordering.
+fn bus_capacity(cfg: &GrpoConfig, window: usize) -> usize {
+    if cfg.keep_weight_history {
+        HISTORY_CAPACITY
+    } else {
+        (2 * window - 1) * cfg.prompts_per_iter + 2
     }
 }
 
-/// A stage thread's inference-policy replica, refreshed from the bus.
-struct WeightReplica {
-    version: u64,
-    policy: Policy,
-}
-
-impl WeightReplica {
-    fn new(bus: &WeightBus) -> Self {
-        let (version, params) = bus.newer_than(0).expect("bus seeded with initial weights");
-        Self { version, policy: Policy::from_params((*params).clone()) }
-    }
-
-    fn refresh(&mut self, bus: &WeightBus) {
-        if let Some((version, params)) = bus.newer_than(self.version) {
-            self.version = version;
-            self.policy = Policy::from_params((*params).clone());
-        }
-    }
-}
+/// Effectively-unbounded ring size for `keep_weight_history` runs
+/// (debug/test instrumentation: retain every published snapshot).
+const HISTORY_CAPACITY: usize = usize::MAX / 2;
 
 /// SAFETY: PJRT clients are built for concurrent dispatch — `Execute` is
 /// thread-compatible and the CPU client runs executions on its own thread
@@ -372,7 +390,13 @@ fn generation_stage(
         engine,
         SamplingParams { temperature: cfg.temperature, top_k: 0 },
     )?;
-    let actor = ActorWorker::new(engine, placement.actor, gen_engine, cfg.max_new_tokens);
+    let actor = ActorWorker::new(
+        engine,
+        placement.actor,
+        gen_engine,
+        cfg.max_new_tokens,
+        cfg.gen_logprobs,
+    );
     let mut rng = Rng::new(cfg.seed ^ 0x6765_6e65_7261_7465);
     let mut replica = WeightReplica::new(bus);
     loop {
@@ -385,7 +409,17 @@ fn generation_stage(
         }
         replica.refresh(bus);
         let t0 = Instant::now();
-        actor.generate_claimed(engine, &replica.policy, flow, &mut rng, &metas)?;
+        // the whole claimed batch generates under one snapshot; its
+        // version is stamped onto every writeback — the sample's
+        // behavior-policy identity from here on
+        actor.generate_claimed(
+            engine,
+            &replica.policy,
+            flow,
+            &mut rng,
+            &metas,
+            replica.version.as_u64(),
+        )?;
         busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
     }
 }
@@ -393,6 +427,14 @@ fn generation_stage(
 /// Long-lived actor old-logprob inference state. Runs the logprob path
 /// directly (tokenizer + logprobs artifact) — it needs none of the
 /// generation engine the actor's other state carries.
+///
+/// Each claimed batch is scored under the *stamped* behavior version of
+/// its samples (a versioned ring `get`, never the bus head): the claim is
+/// grouped by version and every group runs against a version-pinned
+/// replica, so `old_lp` is the exact behavior-policy logprob no matter
+/// how far the update thread has run ahead. An evicted stamp is a hard
+/// error — the bus is sized so it cannot happen while the staleness
+/// window holds (see `bus_capacity`).
 #[allow(clippy::too_many_arguments)]
 fn old_logprob_stage(
     engine: &Engine,
@@ -405,7 +447,7 @@ fn old_logprob_stage(
 ) -> Result<()> {
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     let a = engine.manifest.artifact("logprobs")?.clone();
-    let mut replica = WeightReplica::new(bus);
+    let mut replicas = ReplicaCache::new(4);
     loop {
         let metas = flow.wait_ready(Stage::OldLogprob, a.batch, STAGE_WAIT)?;
         if metas.is_empty() {
@@ -414,27 +456,33 @@ fn old_logprob_stage(
             }
             continue;
         }
-        // note: the replica may be ahead of the weights that *generated*
-        // these samples (bounded by max_inflight_iters) — old_lp is then
-        // a bounded approximation of the behavior-policy logprob; see
-        // DESIGN.md "staleness window"
-        replica.refresh(bus);
+        let mut by_version: BTreeMap<u64, Vec<SampleMeta>> = BTreeMap::new();
+        for m in &metas {
+            by_version.entry(m.behavior_version).or_default().push(*m);
+        }
         let _serial = lp_serial.lock().unwrap();
         // busy starts after the serialization lock: waiting for the
         // shared executable is not compute, and booking it would fake
         // overlap in PipelineReport
         let t0 = Instant::now();
-        crate::workers::logprob_claimed(
-            engine,
-            &replica.policy,
-            flow,
-            &tokenizer,
-            placement.actor,
-            FieldKind::OldLp,
-            &metas,
-            a.batch,
-            a.seq,
-        )?;
+        for (version, group) in by_version {
+            anyhow::ensure!(
+                version != 0,
+                "old-logprob claim for unstamped sample (generation must stamp)"
+            );
+            let policy = replicas.get_or_build(bus, WeightVersion(version))?;
+            crate::workers::logprob_claimed(
+                engine,
+                policy,
+                flow,
+                &tokenizer,
+                placement.actor,
+                FieldKind::OldLp,
+                &group,
+                a.batch,
+                a.seq,
+            )?;
+        }
         drop(_serial);
         busy.lock().unwrap().add("old_logprob", t0.elapsed().as_secs_f64());
     }
@@ -500,6 +548,9 @@ struct IterAcc {
     exact: usize,
     stats: Vec<TrainStats>,
     prompt_tokens: u64,
+    /// publishes-behind of each consumed sample's behavior policy
+    /// relative to the head the update trained from
+    lag: VersionLag,
 }
 
 impl IterAcc {
@@ -510,6 +561,7 @@ impl IterAcc {
             exact: 0,
             stats: Vec::new(),
             prompt_tokens: 0,
+            lag: VersionLag::default(),
         }
     }
 }
@@ -546,7 +598,7 @@ fn run_pipelined(
     let a = engine.manifest.artifact("train_step")?.clone();
     let (b, s) = (a.batch, a.seq);
 
-    let bus = Arc::new(WeightBus::new(policy.params.clone()));
+    let bus = Arc::new(WeightBus::new(policy.params.clone(), bus_capacity(cfg, window)));
     let shutdown = Arc::new(AtomicBool::new(false));
     let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
     let busy: Arc<Mutex<StageTimers>> = Arc::new(Mutex::new(StageTimers::default()));
@@ -555,6 +607,7 @@ fn run_pipelined(
     let lp_serial: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
 
     let mut iterations = Vec::with_capacity(cfg.iterations);
+    let mut version_lags = Vec::with_capacity(cfg.iterations);
     let mut evals = Vec::new();
     let t_run = Instant::now();
 
@@ -653,6 +706,9 @@ fn run_pipelined(
             let mut completed = 0usize;
             let mut dispatch_prev = 0.0f64;
             let mut last_finalize = t_run;
+            // newest published version (this thread is the only
+            // publisher, so its view of the head is exact)
+            let mut head_version: u64 = bus.head_version().as_u64();
 
             while completed < cfg.iterations {
                 if let Some(msg) = fail.lock().unwrap().clone() {
@@ -760,6 +816,10 @@ fn run_pipelined(
                     for sm in slice {
                         flow.retire(sm.index);
                         acc.prompt_tokens += sm.prompt_len as u64;
+                        // behavior-policy staleness of this sample at the
+                        // moment the update consumed it: publishes between
+                        // its generation stamp and the current head
+                        acc.lag.record(head_version.saturating_sub(sm.behavior_version));
                         // Score.exact by definition: the parsed completion
                         // equals the task answer (no Task clone, no
                         // re-run of the shaping arithmetic)
@@ -770,7 +830,7 @@ fn run_pipelined(
                     acc.rewards.extend(rewards);
                     start = end;
                 }
-                bus.publish(&policy.params);
+                head_version = bus.publish(&policy.params).as_u64();
                 busy.lock().unwrap().add("update", t0.elapsed().as_secs_f64());
 
                 // finalize fully-updated iterations, in order
@@ -813,14 +873,17 @@ fn run_pipelined(
                     dispatch_prev = dispatch_total;
                     if cfg.log_every > 0 && completed % cfg.log_every == 0 {
                         eprintln!(
-                            "[grpo/pipelined] iter {completed:>4} reward={:.3} exact={:.2} loss={:+.4} wall={}",
+                            "[grpo/pipelined] iter {completed:>4} reward={:.3} exact={:.2} loss={:+.4} lag(mean={:.2},max={}) wall={}",
                             m.reward_mean,
                             m.exact_frac,
                             m.loss,
+                            acc.lag.mean(),
+                            acc.lag.max,
                             crate::util::fmt_secs(wall)
                         );
                     }
                     iterations.push(m);
+                    version_lags.push((completed, acc.lag));
                     completed += 1;
                     if cfg.eval_every > 0 && completed % cfg.eval_every == 0 {
                         evals.push((
@@ -846,6 +909,7 @@ fn run_pipelined(
         mode: PipelineMode::Pipelined.name().into(),
         wall_secs: t_run.elapsed().as_secs_f64(),
         busy: BTreeMap::new(),
+        version_lag: version_lags,
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -857,5 +921,6 @@ fn run_pipelined(
         evals,
         pipeline,
         final_ledger: flow.ledger(),
+        weight_history: cfg.keep_weight_history.then(|| Arc::clone(&bus)),
     })
 }

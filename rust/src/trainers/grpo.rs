@@ -45,6 +45,19 @@ pub struct GrpoConfig {
     /// the last completed update (bounded off-policy staleness window);
     /// 1 = lockstep admission, 2+ lets generation overlap the update
     pub max_inflight_iters: usize,
+    /// emit behavior logprobs (`old_lp`) directly from the generation
+    /// stage's sampler instead of recomputing them through the logprobs
+    /// artifact — the old-logprob state becomes verify-or-fill. Off by
+    /// default: the emitted values come through the incremental decode
+    /// path, so they match the recompute only to float tolerance and
+    /// would break sync mode's bitwise seed-reproducibility.
+    pub gen_logprobs: bool,
+    /// retain every published weight snapshot and attach the bus to the
+    /// [`TrainReport`] — test/debug instrumentation (memory grows with
+    /// iterations; not exposed on the CLI). Used by the behavior-policy
+    /// property suite to recompute each sample's old-logprob from scratch
+    /// under its stamped version.
+    pub keep_weight_history: bool,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -65,6 +78,8 @@ impl Default for GrpoConfig {
             use_replay_buffer: false,
             pipeline: PipelineMode::Sync,
             max_inflight_iters: 2,
+            gen_logprobs: false,
+            keep_weight_history: false,
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -99,9 +114,13 @@ pub struct TrainReport {
     pub evals: Vec<(usize, Vec<EvalResult>)>,
     /// wall-clock vs per-stage busy time (overlap accounting); also the
     /// single home of per-stage totals — sync mode reports stage times
-    /// here, pipelined mode reports thread busy time
+    /// here, pipelined mode reports thread busy time — and the
+    /// per-iteration behavior-policy version-lag stats
     pub pipeline: PipelineReport,
     pub final_ledger: crate::transfer_dock::CommLedger,
+    /// every published weight snapshot, when
+    /// [`GrpoConfig::keep_weight_history`] was set (None otherwise)
+    pub weight_history: Option<Arc<crate::weights::WeightBus>>,
 }
 
 impl TrainReport {

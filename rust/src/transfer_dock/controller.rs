@@ -20,12 +20,17 @@ pub struct SampleMeta {
     pub present: u8,
     pub prompt_len: u32,
     pub resp_len: u32,
+    /// weight version that generated this sample (0 = not yet stamped);
+    /// replicated on every broadcast so stage workers can pin the
+    /// behavior policy without fetching the payload
+    pub behavior_version: u64,
 }
 
 impl SampleMeta {
-    /// Nominal wire size of a metadata record: 6 scalars × 4 bytes
-    /// (matches the paper's M∈[3,5] per-sample scalar count plus routing).
-    pub const WIRE_BYTES: u64 = 24;
+    /// Nominal wire size of a metadata record: 7 scalars × 4 bytes
+    /// (the paper's M∈[3,5] per-sample scalar count plus routing and the
+    /// behavior-policy version stamp).
+    pub const WIRE_BYTES: u64 = 28;
 
     fn has(&self, f: FieldKind) -> bool {
         self.present & f.bit() != 0
@@ -139,7 +144,15 @@ mod tests {
     use super::*;
 
     fn meta(index: u64, present: u8) -> SampleMeta {
-        SampleMeta { index, group: 0, warehouse: 0, present, prompt_len: 5, resp_len: 0 }
+        SampleMeta {
+            index,
+            group: 0,
+            warehouse: 0,
+            present,
+            prompt_len: 5,
+            resp_len: 0,
+            behavior_version: 0,
+        }
     }
 
     #[test]

@@ -119,6 +119,7 @@ impl TransferDock {
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,
             resp_len: s.resp_len as u32,
+            behavior_version: s.behavior_version,
         }
     }
 
@@ -257,8 +258,10 @@ impl SampleFlow for TransferDock {
         fields: Vec<(FieldKind, Tensor)>,
         completion: String,
         resp_len: usize,
+        behavior_version: u64,
     ) -> Result<()> {
-        self.writeback(requester_node, index, fields, Some((completion, resp_len)))
+        let gen = Some((completion, resp_len, behavior_version));
+        self.writeback(requester_node, index, fields, gen)
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
@@ -289,11 +292,11 @@ impl TransferDock {
         requester_node: usize,
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
-        completion: Option<(String, usize)>,
+        completion: Option<(String, usize, u64)>,
     ) -> Result<()> {
         let w = self.warehouse_for(index).clone();
         let mut bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        if let Some((text, _)) = &completion {
+        if let Some((text, ..)) = &completion {
             bytes += text.len() as u64;
         }
         self.ledger.record(self.link(requester_node, w.node), bytes);
@@ -351,6 +354,7 @@ mod tests {
             vec![(FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap())],
             "42".into(),
             3,
+            4,
         )
         .unwrap();
         // now inference stages see exactly one ready sample
@@ -358,8 +362,10 @@ mod tests {
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].index, idx[0]);
         assert_eq!(ready[0].resp_len, 3);
+        assert_eq!(ready[0].behavior_version, 4, "metadata must carry the version stamp");
         let fetched = d.fetch(1, &ready).unwrap();
         assert_eq!(fetched[0].completion_text, "42");
+        assert_eq!(fetched[0].behavior_version, 4);
     }
 
     #[test]
@@ -371,6 +377,7 @@ mod tests {
             idx,
             vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
             "2".into(),
+            1,
             1,
         )
         .unwrap();

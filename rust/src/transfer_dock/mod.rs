@@ -68,7 +68,10 @@ pub trait SampleFlow: Send + Sync {
         index: u64,
         fields: Vec<(FieldKind, crate::runtime::Tensor)>,
     ) -> Result<()>;
-    /// Generation writeback: fields plus the decoded completion text.
+    /// Generation writeback: fields plus the decoded completion text and
+    /// the behavior-policy weight version the response was sampled under
+    /// (stamped onto the sample and every subsequent metadata broadcast;
+    /// pass `1` for flows without a versioned weight channel).
     fn store_generation(
         &self,
         requester_node: usize,
@@ -76,6 +79,7 @@ pub trait SampleFlow: Send + Sync {
         fields: Vec<(FieldKind, crate::runtime::Tensor)>,
         completion: String,
         resp_len: usize,
+        behavior_version: u64,
     ) -> Result<()>;
     /// Consume a finished sample after the update stage.
     fn retire(&self, index: u64) -> Option<Sample>;

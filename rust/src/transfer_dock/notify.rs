@@ -131,6 +131,7 @@ mod tests {
             present: 0,
             prompt_len: 1,
             resp_len: 0,
+            behavior_version: 0,
         });
         n.notify();
         let got = h.join().unwrap();

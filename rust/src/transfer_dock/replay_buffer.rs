@@ -62,6 +62,7 @@ impl ReplayBuffer {
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,
             resp_len: s.resp_len as u32,
+            behavior_version: s.behavior_version,
         }
     }
 
@@ -218,8 +219,16 @@ impl SampleFlow for ReplayBuffer {
         fields: Vec<(FieldKind, Tensor)>,
         completion: String,
         resp_len: usize,
+        behavior_version: u64,
     ) -> Result<()> {
-        self.store_generation_inner(requester_node, index, fields, completion, resp_len)
+        self.store_generation_inner(
+            requester_node,
+            index,
+            fields,
+            completion,
+            resp_len,
+            behavior_version,
+        )
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
@@ -242,7 +251,8 @@ impl SampleFlow for ReplayBuffer {
 }
 
 impl ReplayBuffer {
-    /// Generation-stage writeback including the completion text.
+    /// Generation-stage writeback including the completion text and the
+    /// behavior-policy version stamp.
     fn store_generation_inner(
         &self,
         requester_node: usize,
@@ -250,6 +260,7 @@ impl ReplayBuffer {
         fields: Vec<(FieldKind, Tensor)>,
         completion: String,
         resp_len: usize,
+        behavior_version: u64,
     ) -> Result<()> {
         {
             let mut g = self.inner.lock().unwrap();
@@ -259,6 +270,7 @@ impl ReplayBuffer {
                 .ok_or_else(|| anyhow!("replay buffer: no sample {index}"))?;
             s.completion_text = completion;
             s.resp_len = resp_len;
+            s.behavior_version = behavior_version;
         }
         self.store_fields(requester_node, index, fields)
     }
@@ -286,10 +298,12 @@ mod tests {
             vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
             "2".into(),
             1,
+            3,
         )
         .unwrap();
         let ready = rb.request_ready(Stage::RefLogprob, 10).unwrap();
         assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].behavior_version, 3, "stamp must round-trip the central store");
     }
 
     #[test]

@@ -94,6 +94,12 @@ pub struct Sample {
     pub group: u64,
     pub prompt_len: usize,
     pub resp_len: usize,
+    /// weight version active when this sample's response was generated
+    /// (the behavior policy's identity; 0 = not yet generated/stamped).
+    /// Stamped by the generation writeback and carried on every metadata
+    /// broadcast so the old-logprob stage can score under the true
+    /// behavior policy instead of the weight-bus head.
+    pub behavior_version: u64,
     pub prompt_text: String,
     pub answer: i64,
     pub completion_text: String,
@@ -107,6 +113,7 @@ impl Sample {
             group,
             prompt_len: prompt_text.len() + 1, // + BOS
             resp_len: 0,
+            behavior_version: 0,
             prompt_text,
             answer,
             completion_text: String::new(),
@@ -138,9 +145,10 @@ impl Sample {
     }
 
     /// Scalar metadata bytes (the `M` term of Eq. 1): index, group,
-    /// prompt_len, resp_len, answer — 5 scalars × 4 bytes nominal.
+    /// prompt_len, resp_len, answer, behavior_version — 6 scalars ×
+    /// 4 bytes nominal.
     pub fn scalar_bytes(&self) -> usize {
-        5 * 4
+        6 * 4
     }
 
     /// Which stages still need to produce data for this sample.

@@ -50,12 +50,14 @@ impl Warehouse {
     }
 
     /// Merge produced fields into a stored sample; returns the new
-    /// presence bitmask and updated text metadata if provided.
+    /// presence bitmask. A generation writeback additionally carries the
+    /// completion text, response length, and the behavior-policy weight
+    /// version that produced the response.
     pub fn store_fields(
         &self,
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
-        completion: Option<(String, usize)>,
+        completion: Option<(String, usize, u64)>,
     ) -> Result<u8> {
         let mut g = self.inner.lock().unwrap();
         let added: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
@@ -66,9 +68,10 @@ impl Warehouse {
         for (k, t) in fields {
             s.put(k, t);
         }
-        if let Some((text, resp_len)) = completion {
+        if let Some((text, resp_len, behavior_version)) = completion {
             s.completion_text = text;
             s.resp_len = resp_len;
+            s.behavior_version = behavior_version;
         }
         let mask = s.present_mask();
         g.traffic_bytes += added;
@@ -90,6 +93,7 @@ impl Warehouse {
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,
             resp_len: s.resp_len as u32,
+            behavior_version: s.behavior_version,
         })
     }
 
@@ -145,13 +149,16 @@ mod tests {
             .store_fields(
                 2,
                 vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1, 2, 3, 4]).unwrap())],
-                Some(("2".into(), 2)),
+                Some(("2".into(), 2, 5)),
             )
             .unwrap();
         assert_ne!(mask & FieldKind::Tokens.bit(), 0);
         let s = w.fetch(2).unwrap();
         assert_eq!(s.completion_text, "2");
         assert_eq!(s.resp_len, 2);
+        assert_eq!(s.behavior_version, 5);
+        let meta = w.fetch_meta_snapshot(2).unwrap();
+        assert_eq!(meta.behavior_version, 5, "broadcast snapshot must carry the stamp");
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Versioned weight flow: the train→infer weight channel of the pipelined
+//! executor, with behavior-policy identity as a first-class concept.
+//!
+//! The paper's resharding flow exists to keep the inference engine's
+//! weights coherent with training while generation and update overlap.
+//! PR 1 approximated it with a single-head bus, which meant the
+//! old-logprob stage could only ever score against the *newest* weights —
+//! a silent off-policy bias once `--max-inflight > 1`. This module makes
+//! the weight channel versioned instead:
+//!
+//! * [`WeightBus::publish`] returns a monotonically increasing
+//!   [`WeightVersion`]; the bus retains a bounded ring of snapshots.
+//! * Every sample is stamped with the version active when it was
+//!   generated (`Sample::behavior_version`, threaded through the
+//!   transfer dock), and the old-logprob stage scores each claimed batch
+//!   under its *recorded* version via [`WeightBus::get`] — the importance
+//!   ratio's denominator is the true behavior policy, exactly as
+//!   HybridFlow/DistFlow tag rollout batches with the producing policy
+//!   version to keep ratios well-defined under asynchrony.
+//! * Eviction is tied to the executor's staleness window: while a sample
+//!   is in flight its iteration cannot complete (though earlier ones can,
+//!   admitting successors), admission is gated at
+//!   `completed + max_inflight_iters`, and every publish retires at least
+//!   one whole GRPO group — so at most
+//!   `(2 × max_inflight_iters − 1) × G` publishes can land between a
+//!   sample's generation and its scoring (see the executor's
+//!   `bus_capacity` for the full derivation). A ring sized to that bound
+//!   never evicts a version still referenced by an in-flight sample; a
+//!   reader that nevertheless asks for an evicted (or not-yet-published)
+//!   version gets a typed [`WeightBusError`], never a panic.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::{Policy, Tensor};
+
+/// Identity of one published weight snapshot. Version 1 is the initial
+/// (pre-RL) parameters; every [`WeightBus::publish`] increments it.
+/// `0` never names a snapshot — sample stamps use it for "unstamped".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct WeightVersion(pub u64);
+
+impl WeightVersion {
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+impl fmt::Display for WeightVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+/// Typed failure of a versioned read — the regression the stress suite
+/// pins is that an evicted version is an *error value*, not a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightBusError {
+    /// The version fell out of the retention ring. Under the executor's
+    /// sizing invariant this indicates a staleness-window bug upstream.
+    Evicted { requested: u64, oldest: u64, newest: u64 },
+    /// The version has not been published yet.
+    NotYetPublished { requested: u64, newest: u64 },
+}
+
+impl fmt::Display for WeightBusError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WeightBusError::Evicted { requested, oldest, newest } => write!(
+                f,
+                "weight version v{requested} evicted from the bus (ring holds v{oldest}..=v{newest})"
+            ),
+            WeightBusError::NotYetPublished { requested, newest } => {
+                write!(f, "weight version v{requested} not yet published (newest is v{newest})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WeightBusError {}
+
+/// Single-producer, multi-reader ring of versioned weight snapshots.
+///
+/// `publish` copies the weights outside the lock, so replica refreshes on
+/// the inference hot path only ever block on a pointer swap. Snapshots
+/// are `Arc`ed: eviction drops the ring's reference, but a reader already
+/// holding the snapshot keeps it alive.
+pub struct WeightBus {
+    capacity: usize,
+    /// dense ascending (version, snapshot) pairs; never empty
+    inner: Mutex<VecDeque<(u64, Arc<Vec<Tensor>>)>>,
+}
+
+impl WeightBus {
+    /// Seed the bus with the initial parameters as version 1, retaining
+    /// up to `capacity` snapshots (clamped to at least 1).
+    pub fn new(initial: Vec<Tensor>, capacity: usize) -> Self {
+        let mut ring = VecDeque::new();
+        ring.push_back((1u64, Arc::new(initial)));
+        Self { capacity: capacity.max(1), inner: Mutex::new(ring) }
+    }
+
+    /// Publish a new snapshot; returns its version. Evicts the oldest
+    /// snapshots beyond `capacity`.
+    pub fn publish(&self, params: &[Tensor]) -> WeightVersion {
+        let next = Arc::new(params.to_vec());
+        let mut g = self.inner.lock().unwrap();
+        let v = g.back().map(|(v, _)| v + 1).expect("bus ring is never empty");
+        g.push_back((v, next));
+        while g.len() > self.capacity {
+            g.pop_front();
+        }
+        WeightVersion(v)
+    }
+
+    /// Newest snapshot and its version.
+    pub fn head(&self) -> (WeightVersion, Arc<Vec<Tensor>>) {
+        let g = self.inner.lock().unwrap();
+        let (v, p) = g.back().expect("bus ring is never empty");
+        (WeightVersion(*v), p.clone())
+    }
+
+    /// Newest version number without cloning the snapshot.
+    pub fn head_version(&self) -> WeightVersion {
+        WeightVersion(self.inner.lock().unwrap().back().unwrap().0)
+    }
+
+    /// Oldest version still retained.
+    pub fn oldest(&self) -> WeightVersion {
+        WeightVersion(self.inner.lock().unwrap().front().unwrap().0)
+    }
+
+    /// Fetch a specific snapshot still inside the retention ring.
+    pub fn get(&self, version: WeightVersion) -> Result<Arc<Vec<Tensor>>, WeightBusError> {
+        let g = self.inner.lock().unwrap();
+        let oldest = g.front().unwrap().0;
+        let newest = g.back().unwrap().0;
+        if version.0 > newest {
+            return Err(WeightBusError::NotYetPublished { requested: version.0, newest });
+        }
+        if version.0 < oldest {
+            return Err(WeightBusError::Evicted { requested: version.0, oldest, newest });
+        }
+        // versions are dense and ascending, so the ring indexes directly
+        Ok(g[(version.0 - oldest) as usize].1.clone())
+    }
+
+    /// Newest snapshot strictly newer than `seen`, if any (the replica
+    /// refresh primitive).
+    pub fn newer_than(&self, seen: WeightVersion) -> Option<(WeightVersion, Arc<Vec<Tensor>>)> {
+        let g = self.inner.lock().unwrap();
+        let (v, p) = g.back().expect("bus ring is never empty");
+        if *v > seen.0 {
+            Some((WeightVersion(*v), p.clone()))
+        } else {
+            None
+        }
+    }
+
+    /// Snapshots currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the ring always holds at least the newest snapshot
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+impl fmt::Debug for WeightBus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let g = self.inner.lock().unwrap();
+        f.debug_struct("WeightBus")
+            .field("capacity", &self.capacity)
+            .field("oldest", &g.front().unwrap().0)
+            .field("newest", &g.back().unwrap().0)
+            .finish()
+    }
+}
+
+/// A stage thread's head-tracking inference replica (used by generation,
+/// which always wants the freshest weights and stamps what it got).
+pub struct WeightReplica {
+    pub version: WeightVersion,
+    pub policy: Policy,
+}
+
+impl WeightReplica {
+    pub fn new(bus: &WeightBus) -> Self {
+        let (version, params) = bus.head();
+        Self { version, policy: Policy::from_params((*params).clone()) }
+    }
+
+    /// Pick up the newest snapshot if the bus moved; returns whether the
+    /// replica changed.
+    pub fn refresh(&mut self, bus: &WeightBus) -> bool {
+        match bus.newer_than(self.version) {
+            Some((version, params)) => {
+                self.version = version;
+                self.policy = Policy::from_params((*params).clone());
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Small MRU cache of *version-pinned* replicas for the old-logprob
+/// stage: claimed batches arrive grouped by stamped version, and
+/// adjacent batches usually share a version, so a handful of entries
+/// avoids rebuilding a `Policy` (one params clone) per batch.
+pub struct ReplicaCache {
+    cap: usize,
+    /// most-recently-used last
+    entries: Vec<(u64, Policy)>,
+}
+
+impl ReplicaCache {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    /// Replica for `version`, built from the bus on a miss. Propagates
+    /// the bus's typed error if the version is outside the ring.
+    pub fn get_or_build(
+        &mut self,
+        bus: &WeightBus,
+        version: WeightVersion,
+    ) -> Result<&Policy, WeightBusError> {
+        if let Some(i) = self.entries.iter().position(|(v, _)| *v == version.0) {
+            let hit = self.entries.remove(i);
+            self.entries.push(hit);
+        } else {
+            let params = bus.get(version)?;
+            if self.entries.len() >= self.cap {
+                self.entries.remove(0);
+            }
+            self.entries.push((version.0, Policy::from_params((*params).clone())));
+        }
+        Ok(&self.entries.last().unwrap().1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(tag: f32) -> Vec<Tensor> {
+        vec![Tensor::f32(&[2], vec![tag, tag + 0.5]).unwrap()]
+    }
+
+    fn tag_of(p: &[Tensor]) -> f32 {
+        p[0].as_f32().unwrap()[0]
+    }
+
+    #[test]
+    fn publish_is_monotone_from_one() {
+        let bus = WeightBus::new(params(0.0), 4);
+        assert_eq!(bus.head_version(), WeightVersion(1));
+        for i in 1..=5u64 {
+            let v = bus.publish(&params(i as f32));
+            assert_eq!(v, WeightVersion(i + 1));
+        }
+        assert_eq!(bus.head_version(), WeightVersion(6));
+    }
+
+    #[test]
+    fn get_returns_the_exact_snapshot() {
+        let bus = WeightBus::new(params(1.0), 8);
+        bus.publish(&params(2.0));
+        bus.publish(&params(3.0));
+        for v in 1..=3u64 {
+            let snap = bus.get(WeightVersion(v)).unwrap();
+            assert_eq!(tag_of(&snap), v as f32);
+        }
+    }
+
+    #[test]
+    fn eviction_honours_capacity_and_is_typed() {
+        let bus = WeightBus::new(params(1.0), 2);
+        bus.publish(&params(2.0));
+        bus.publish(&params(3.0)); // evicts v1
+        assert_eq!(bus.len(), 2);
+        assert_eq!(bus.oldest(), WeightVersion(2));
+        match bus.get(WeightVersion(1)) {
+            Err(WeightBusError::Evicted { requested: 1, oldest: 2, newest: 3 }) => {}
+            other => panic!("expected typed eviction error, got {other:?}"),
+        }
+        match bus.get(WeightVersion(9)) {
+            Err(WeightBusError::NotYetPublished { requested: 9, newest: 3 }) => {}
+            other => panic!("expected not-yet-published error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn evicted_snapshot_survives_through_existing_arcs() {
+        let bus = WeightBus::new(params(1.0), 1);
+        let held = bus.get(WeightVersion(1)).unwrap();
+        bus.publish(&params(2.0)); // v1 leaves the ring
+        assert!(matches!(bus.get(WeightVersion(1)), Err(WeightBusError::Evicted { .. })));
+        assert_eq!(tag_of(&held), 1.0, "reader-held Arc must stay valid");
+    }
+
+    #[test]
+    fn newer_than_only_reports_progress() {
+        let bus = WeightBus::new(params(1.0), 4);
+        assert!(bus.newer_than(WeightVersion(1)).is_none());
+        bus.publish(&params(2.0));
+        let (v, p) = bus.newer_than(WeightVersion(1)).unwrap();
+        assert_eq!(v, WeightVersion(2));
+        assert_eq!(tag_of(&p), 2.0);
+        assert!(bus.newer_than(WeightVersion(2)).is_none());
+    }
+
+    #[test]
+    fn replica_cache_pins_versions_and_evicts_lru() {
+        let bus = WeightBus::new(params(1.0), 8);
+        bus.publish(&params(2.0));
+        bus.publish(&params(3.0));
+        let mut cache = ReplicaCache::new(2);
+        let p1 = cache.get_or_build(&bus, WeightVersion(1)).unwrap();
+        assert_eq!(tag_of(&p1.params), 1.0);
+        cache.get_or_build(&bus, WeightVersion(2)).unwrap();
+        assert_eq!(cache.len(), 2);
+        // touch v1 so v2 is the LRU, then bring in v3
+        cache.get_or_build(&bus, WeightVersion(1)).unwrap();
+        cache.get_or_build(&bus, WeightVersion(3)).unwrap();
+        assert_eq!(cache.len(), 2);
+        // v1 and v3 remain; all resolvable without error
+        assert_eq!(tag_of(&cache.get_or_build(&bus, WeightVersion(1)).unwrap().params), 1.0);
+        assert_eq!(tag_of(&cache.get_or_build(&bus, WeightVersion(3)).unwrap().params), 3.0);
+        // an evicted bus version surfaces the typed error through the cache
+        let tight = WeightBus::new(params(1.0), 1);
+        tight.publish(&params(2.0));
+        let mut c2 = ReplicaCache::new(2);
+        assert!(matches!(
+            c2.get_or_build(&tight, WeightVersion(1)),
+            Err(WeightBusError::Evicted { .. })
+        ));
+    }
+}

@@ -3,7 +3,7 @@
 //! optimizer loop.)
 
 use anyhow::Result;
-use std::sync::Arc;
+use std::collections::HashMap;
 
 use crate::generation::{GenEngine, GenRequest};
 use crate::runtime::{Engine, Policy, Tensor};
@@ -26,6 +26,11 @@ pub struct ActorWorker {
     pub tokenizer: Tokenizer,
     pub gen_engine: GenEngine,
     pub max_new_tokens: usize,
+    /// emit per-sample behavior logprobs (`old_lp`) directly from the
+    /// generation writeback — the logits are already in hand when
+    /// sampling, which turns the old-logprob state into a verify-or-fill
+    /// pass instead of a mandatory recompute
+    pub emit_logprobs: bool,
 }
 
 impl ActorWorker {
@@ -34,13 +39,21 @@ impl ActorWorker {
         node: usize,
         gen_engine: GenEngine,
         max_new_tokens: usize,
+        emit_logprobs: bool,
     ) -> Self {
-        Self { node, tokenizer: Tokenizer::from_manifest(&engine.manifest), gen_engine, max_new_tokens }
+        Self {
+            node,
+            tokenizer: Tokenizer::from_manifest(&engine.manifest),
+            gen_engine,
+            max_new_tokens,
+            emit_logprobs,
+        }
     }
 
     /// Generation state: pull prompt-ready samples, batch-generate, write
-    /// tokens + response masks + completion text back. Works over any
-    /// [`SampleFlow`] (transfer dock or replay-buffer baseline).
+    /// tokens + response masks + completion text back, stamped with the
+    /// behavior-policy weight version the caller generated under. Works
+    /// over any [`SampleFlow`] (transfer dock or replay-buffer baseline).
     pub fn run_generation(
         &self,
         engine: &Engine,
@@ -48,14 +61,16 @@ impl ActorWorker {
         dock: &dyn SampleFlow,
         rng: &mut Rng,
         max_batch: usize,
+        behavior_version: u64,
     ) -> Result<GenerationOutcome> {
         let metas = dock.request_ready(Stage::Generation, max_batch)?;
-        self.generate_claimed(engine, policy, dock, rng, &metas)
+        self.generate_claimed(engine, policy, dock, rng, &metas, behavior_version)
     }
 
     /// Process an already-claimed batch of generation-ready metas (the
     /// pipelined executor's stage loop claims via `wait_ready` and hands
-    /// the work here).
+    /// the work here). `behavior_version` must name the weight snapshot
+    /// `policy` was built from — it is stamped onto every writeback.
     pub fn generate_claimed(
         &self,
         engine: &Engine,
@@ -63,38 +78,50 @@ impl ActorWorker {
         dock: &dyn SampleFlow,
         rng: &mut Rng,
         metas: &[SampleMeta],
+        behavior_version: u64,
     ) -> Result<GenerationOutcome> {
         if metas.is_empty() {
             return Ok(GenerationOutcome::default());
         }
         let samples = dock.fetch(self.node, metas)?;
         let mut requests = Vec::with_capacity(samples.len());
+        // encode once; the writeback loop reuses the ids by request id
+        // instead of re-tokenizing and linearly re-finding each sample
+        let mut prompt_ids_by_id: HashMap<u64, Vec<i32>> =
+            HashMap::with_capacity(samples.len());
         for s in &samples {
             let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
             requests.push(GenRequest {
                 id: s.index,
-                prompt_ids,
+                prompt_ids: prompt_ids.clone(),
                 max_new_tokens: self.max_new_tokens,
             });
+            prompt_ids_by_id.insert(s.index, prompt_ids);
         }
         let (results, stats) = self.gen_engine.generate(engine, policy, requests, rng)?;
 
         let seq = engine.manifest.artifact("logprobs")?.seq;
         for r in &results {
-            let s = samples.iter().find(|s| s.index == r.id).unwrap();
-            let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
+            let prompt_ids = prompt_ids_by_id
+                .get(&r.id)
+                .ok_or_else(|| anyhow::anyhow!("generation result for unknown request {}", r.id))?;
             let (tokens, mask, resp_len) =
-                pack_sequence(&prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
+                pack_sequence(prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
             let completion = self.tokenizer.decode(&r.response_ids);
+            let mut fields = vec![(FieldKind::Tokens, tokens), (FieldKind::RespMask, mask)];
+            if self.emit_logprobs {
+                fields.push((
+                    FieldKind::OldLp,
+                    behavior_logprob_row(&r.response_logprobs, prompt_ids.len(), seq)?,
+                ));
+            }
             dock.store_generation(
                 self.node,
                 r.id,
-                vec![
-                    (FieldKind::Tokens, tokens),
-                    (FieldKind::RespMask, mask),
-                ],
+                fields,
                 completion,
                 resp_len,
+                behavior_version,
             )?;
         }
         Ok(GenerationOutcome {
@@ -105,8 +132,9 @@ impl ActorWorker {
         })
     }
 
-    /// Old-logprob inference state: score response tokens under the
-    /// *current* policy before the update changes it.
+    /// Old-logprob inference state: fill `old_lp` for every sample still
+    /// missing it (with generation-emitted logprobs this finds nothing —
+    /// the state degenerates to verify-or-fill).
     pub fn run_old_logprobs(
         &self,
         engine: &Engine,
@@ -210,6 +238,27 @@ pub(crate) fn logprob_claimed(
     Ok(done)
 }
 
+/// Lay the generation-time behavior logprobs into the `[S-1]` layout the
+/// `logprobs` artifact produces: response token j (sequence position
+/// `resp_start + j`) is scored at row index `resp_start - 1 + j`; every
+/// non-response position is 0 and masked out of the loss by `resp_mask`.
+fn behavior_logprob_row(
+    response_logprobs: &[f32],
+    resp_start: usize,
+    seq: usize,
+) -> Result<Tensor> {
+    anyhow::ensure!(resp_start >= 1, "response cannot start before position 1 (BOS)");
+    anyhow::ensure!(
+        resp_start + response_logprobs.len() <= seq,
+        "response overruns artifact seq"
+    );
+    let mut row = vec![0f32; seq - 1];
+    for (j, &lp) in response_logprobs.iter().enumerate() {
+        row[resp_start - 1 + j] = lp;
+    }
+    Tensor::f32(&[seq - 1], row)
+}
+
 /// Lay out BOS+prompt+response into the artifact's fixed `[S]` shape and
 /// build the response mask `[S-1]` (mask index t scores token t+1).
 pub(crate) fn pack_sequence(
@@ -259,5 +308,24 @@ mod tests {
         let (_, mask, resp_len) = pack_sequence(&[1, 3], &[4, 5, 6], 16, 0).unwrap();
         let sum: f32 = mask.as_f32().unwrap().iter().sum();
         assert_eq!(sum as usize, resp_len);
+    }
+
+    #[test]
+    fn behavior_logprobs_land_on_mask_positions() {
+        // same layout as pack_sequence_mask_alignment: prompt len 3,
+        // response len 2 → mask indices 2 and 3 carry the logprobs
+        let (_, mask, _) = pack_sequence(&[1, 10, 11], &[20, 2], 8, 0).unwrap();
+        let row = behavior_logprob_row(&[-0.5, -1.25], 3, 8).unwrap();
+        let (row, mask) = (row.as_f32().unwrap(), mask.as_f32().unwrap());
+        assert_eq!(row, &[0.0, 0.0, -0.5, -1.25, 0.0, 0.0, 0.0]);
+        for (t, &m) in mask.iter().enumerate() {
+            assert_eq!(m == 1.0, row[t] != 0.0, "mask/logprob disagree at {t}");
+        }
+    }
+
+    #[test]
+    fn behavior_logprob_row_rejects_overrun() {
+        assert!(behavior_logprob_row(&[-0.1; 6], 3, 8).is_err());
+        assert!(behavior_logprob_row(&[-0.1; 2], 0, 8).is_err());
     }
 }

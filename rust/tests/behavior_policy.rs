@@ -1,0 +1,336 @@
+//! Behavior-policy correctness properties for the versioned weight flow
+//! (needs HLO artifacts: `make artifacts`).
+//!
+//! The pipelined executor stamps every sample with the weight version
+//! that generated it and scores old-logprobs under that *recorded*
+//! version. This suite pins the three properties the issue demands:
+//!
+//! (a) every sample's scored `old_lp` matches a from-scratch recompute
+//!     under its stamped version — for both the inference-path recompute
+//!     and the generation-emitted (`gen_logprobs`) fast path;
+//! (b) version lag never exceeds the `max_inflight_iters` staleness
+//!     window (and the ring never evicts a live stamp — the run would
+//!     fail with a typed error if it did);
+//! (c) `sync` mode with stamping is bitwise deterministic per seed, all
+//!     stamps within an iteration are equal, and the history/stamping
+//!     instrumentation does not perturb training metrics.
+
+use std::sync::{Arc, Mutex};
+
+use mindspeed_rl::runtime::{artifact_dir, Engine, Policy, Tensor};
+use mindspeed_rl::tokenizer::Tokenizer;
+use mindspeed_rl::trainers::{run_grpo_on_flow, GrpoConfig, PipelineMode};
+use mindspeed_rl::transfer_dock::{
+    CommLedger, DockTopology, FieldKind, Sample, SampleFlow, SampleMeta, Stage, TransferDock,
+};
+use mindspeed_rl::weights::WeightVersion;
+
+// ------------------------------------------------- recording flow shim
+
+/// A `SampleFlow` wrapper that captures every retired sample (the full
+/// payload, including the stamped version and the scored `old_lp`) so
+/// tests can audit what the executor actually trained on.
+struct RecordingFlow {
+    inner: TransferDock,
+    retired: Mutex<Vec<Sample>>,
+}
+
+impl RecordingFlow {
+    fn new(nodes: usize) -> Self {
+        Self {
+            inner: TransferDock::new(DockTopology::spread(nodes)),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn retired(&self) -> Vec<Sample> {
+        self.retired.lock().unwrap().clone()
+    }
+}
+
+impl SampleFlow for RecordingFlow {
+    fn put_samples(&self, samples: Vec<Sample>) -> anyhow::Result<Vec<u64>> {
+        self.inner.put_samples(samples)
+    }
+
+    fn request_ready(&self, stage: Stage, max_n: usize) -> anyhow::Result<Vec<SampleMeta>> {
+        self.inner.request_ready(stage, max_n)
+    }
+
+    fn wait_ready(
+        &self,
+        stage: Stage,
+        max_n: usize,
+        timeout: std::time::Duration,
+    ) -> anyhow::Result<Vec<SampleMeta>> {
+        self.inner.wait_ready(stage, max_n, timeout)
+    }
+
+    fn release(&self, stage: Stage, indices: &[u64]) {
+        self.inner.release(stage, indices)
+    }
+
+    fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> anyhow::Result<Vec<Sample>> {
+        self.inner.fetch(requester_node, metas)
+    }
+
+    fn store_fields(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+    ) -> anyhow::Result<()> {
+        self.inner.store_fields(requester_node, index, fields)
+    }
+
+    fn store_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+        behavior_version: u64,
+    ) -> anyhow::Result<()> {
+        self.inner
+            .store_generation(requester_node, index, fields, completion, resp_len, behavior_version)
+    }
+
+    fn retire(&self, index: u64) -> Option<Sample> {
+        let out = self.inner.retire(index);
+        if let Some(s) = &out {
+            self.retired.lock().unwrap().push(s.clone());
+        }
+        out
+    }
+
+    fn ledger(&self) -> CommLedger {
+        self.inner.ledger()
+    }
+
+    fn shards(&self) -> usize {
+        self.inner.shards()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+// --------------------------------------------------------- test helpers
+
+fn base_cfg() -> GrpoConfig {
+    GrpoConfig {
+        iterations: 3,
+        prompts_per_iter: 4,
+        group_size: 2,
+        max_new_tokens: 4,
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+fn per_run_samples(cfg: &GrpoConfig) -> usize {
+    cfg.iterations * cfg.prompts_per_iter * cfg.group_size
+}
+
+/// From-scratch `[S-1]` logprob row for one sample under `policy`,
+/// through the same `logprobs` artifact the inference stage uses (the
+/// sample's token row replicated across the artifact batch — rows are
+/// causally independent, so replication does not change row 0).
+fn recompute_row(engine: &Engine, policy: &Policy, sample: &Sample) -> Vec<f32> {
+    let a = engine.manifest.artifact("logprobs").unwrap();
+    let (b, s) = (a.batch, a.seq);
+    let tok = Tokenizer::from_manifest(&engine.manifest);
+    let mut row = sample.get(FieldKind::Tokens).unwrap().as_i32().unwrap().to_vec();
+    assert!(row.len() <= s, "sample row longer than artifact seq");
+    row.resize(s, tok.pad_id);
+    let mut data = Vec::with_capacity(b * s);
+    for _ in 0..b {
+        data.extend_from_slice(&row);
+    }
+    let tokens = Tensor::i32(&[b, s], data).unwrap();
+    let lp = policy.logprobs(engine, &tokens).unwrap();
+    lp.as_f32().unwrap()[..s - 1].to_vec()
+}
+
+// ----------------------------------------------------------- properties
+
+/// (a) With `--pipeline pipelined --max-inflight 2`, every sample's
+/// scored old-logprob equals a from-scratch recompute under the weight
+/// snapshot its stamp names. The inference-path variant must agree to
+/// float-noise tolerance (same artifact, same weights; only the batch
+/// composition differs); the generation-emitted variant goes through the
+/// incremental decode path, so it gets a looser — but still tight —
+/// tolerance.
+#[test]
+fn old_logprob_matches_recompute_under_stamped_version() {
+    let engine = Engine::load(artifact_dir("tiny")).expect("make artifacts first");
+    for (label, gen_logprobs, tol) in
+        [("recompute-path", false, 1e-4f32), ("gen-emitted", true, 2e-2f32)]
+    {
+        let cfg = GrpoConfig {
+            pipeline: PipelineMode::Pipelined,
+            max_inflight_iters: 2,
+            gen_logprobs,
+            keep_weight_history: true,
+            ..base_cfg()
+        };
+        let flow = Arc::new(RecordingFlow::new(cfg.nodes));
+        let report = run_grpo_on_flow(&engine, &cfg, flow.clone()).unwrap();
+        let bus = report.weight_history.as_ref().expect("history was requested");
+        let retired = flow.retired();
+        assert_eq!(retired.len(), per_run_samples(&cfg), "{label}: every sample retires");
+
+        let mut checked_positions = 0usize;
+        for smp in &retired {
+            assert!(smp.behavior_version >= 1, "{label}: sample {} unstamped", smp.index);
+            let params = bus
+                .get(WeightVersion(smp.behavior_version))
+                .unwrap_or_else(|e| panic!("{label}: stamped snapshot unavailable: {e}"));
+            let behavior_policy = Policy::from_params((*params).clone());
+            let want = recompute_row(&engine, &behavior_policy, smp);
+            let got = smp.get(FieldKind::OldLp).unwrap().as_f32().unwrap();
+            let mask = smp.get(FieldKind::RespMask).unwrap().as_f32().unwrap();
+            assert_eq!(got.len(), want.len(), "{label}");
+            for (t, &m) in mask.iter().enumerate() {
+                if m != 1.0 {
+                    continue;
+                }
+                assert!(
+                    (got[t] - want[t]).abs() < tol,
+                    "{label}: sample {} pos {t}: scored {} vs recompute {} under v{}",
+                    smp.index,
+                    got[t],
+                    want[t],
+                    smp.behavior_version
+                );
+                checked_positions += 1;
+            }
+        }
+        assert!(checked_positions > 0, "{label}: property checked nothing");
+    }
+}
+
+/// (b) Version lag stays inside the staleness window: with window W and
+/// G prompts per iteration, at most (2W−1)×G−1 publishes can land while
+/// a sample is in flight (earlier iterations may complete and admit
+/// successors up to `k + W − 1`, every publish retires at least one
+/// whole group, and the sample's own iteration cannot complete under
+/// it). The run itself is the eviction check — a violated window would
+/// surface as a typed WeightBusError and fail the executor.
+#[test]
+fn version_lag_bounded_by_staleness_window() {
+    let engine = Engine::load(artifact_dir("tiny")).expect("make artifacts first");
+    let cfg = GrpoConfig {
+        iterations: 4,
+        pipeline: PipelineMode::Pipelined,
+        max_inflight_iters: 2,
+        ..base_cfg()
+    };
+    let flow = Arc::new(RecordingFlow::new(cfg.nodes));
+    let report = run_grpo_on_flow(&engine, &cfg, flow).unwrap();
+
+    assert_eq!(report.pipeline.version_lag.len(), cfg.iterations);
+    for (i, (iter, _)) in report.pipeline.version_lag.iter().enumerate() {
+        assert_eq!(*iter, i, "lag entries must finalize in iteration order");
+    }
+    let total = report.pipeline.lag_total();
+    assert_eq!(total.samples as usize, per_run_samples(&cfg), "every sample measured");
+    let bound = ((2 * cfg.max_inflight_iters - 1) * cfg.prompts_per_iter + 2) as u64;
+    assert!(
+        total.max <= bound,
+        "worst lag {} publishes exceeds the (2W-1)×G window bound {}",
+        total.max,
+        bound
+    );
+}
+
+/// (c) `sync` mode stays the deterministic reference loop: bitwise
+/// identical metrics run-to-run for a fixed seed, trivially all-equal
+/// stamps (iteration k generates under version k+1), zero recorded lag,
+/// and — the pre-change-parity proxy — the stamping/history
+/// instrumentation itself does not move a single metric bit.
+#[test]
+fn sync_mode_bitwise_deterministic_and_trivially_stamped() {
+    let engine = Engine::load(artifact_dir("tiny")).expect("make artifacts first");
+    let run = |keep_history: bool| {
+        let cfg = GrpoConfig { keep_weight_history: keep_history, ..base_cfg() };
+        let flow = Arc::new(RecordingFlow::new(cfg.nodes));
+        let report = run_grpo_on_flow(&engine, &cfg, flow.clone()).unwrap();
+        (report, flow.retired())
+    };
+
+    let (a, retired_a) = run(true);
+    let (b, _) = run(true);
+    let (c, _) = run(false);
+
+    assert_eq!(a.pipeline.mode, "sync");
+    for (ma, mb) in a.iterations.iter().zip(&b.iterations) {
+        assert_eq!(ma.reward_mean, mb.reward_mean, "reward not bitwise stable");
+        assert_eq!(ma.exact_frac, mb.exact_frac);
+        assert_eq!(ma.loss, mb.loss, "loss not bitwise stable");
+        assert_eq!(ma.kl, mb.kl);
+        assert_eq!(ma.ratio, mb.ratio);
+    }
+    // instrumentation must not perturb training
+    for (ma, mc) in a.iterations.iter().zip(&c.iterations) {
+        assert_eq!(ma.reward_mean, mc.reward_mean, "history knob changed training");
+        assert_eq!(ma.loss, mc.loss);
+        assert_eq!(ma.kl, mc.kl);
+    }
+    assert!(c.weight_history.is_none());
+
+    // trivially-equal stamps: iteration k ran entirely under version k+1
+    let cfg = base_cfg();
+    assert_eq!(retired_a.len(), per_run_samples(&cfg));
+    for smp in &retired_a {
+        let iter = smp.group as usize / cfg.prompts_per_iter;
+        assert_eq!(
+            smp.behavior_version,
+            iter as u64 + 1,
+            "sync sample {} of iteration {iter} mis-stamped",
+            smp.index
+        );
+    }
+    // zero lag, one entry per iteration
+    assert_eq!(a.pipeline.version_lag.len(), cfg.iterations);
+    let lag = a.pipeline.lag_total();
+    assert_eq!((lag.sum, lag.max), (0, 0), "sync lag must be zero by construction");
+    assert_eq!(lag.samples as usize, per_run_samples(&cfg));
+
+    // and the history bus holds exactly initial + one publish per iteration
+    let bus = a.weight_history.as_ref().unwrap();
+    assert_eq!(bus.head_version(), WeightVersion(cfg.iterations as u64 + 1));
+}
+
+/// The gen-logprobs fast path folds OldLogprob into Generation: samples
+/// arrive with `old_lp` already present, so the old-logprob stage never
+/// sees ready work (verify-or-fill with nothing to fill) while training
+/// still completes every iteration.
+#[test]
+fn gen_logprobs_folds_old_logprob_into_generation() {
+    let engine = Engine::load(artifact_dir("tiny")).expect("make artifacts first");
+    let cfg = GrpoConfig {
+        pipeline: PipelineMode::Pipelined,
+        max_inflight_iters: 2,
+        gen_logprobs: true,
+        ..base_cfg()
+    };
+    let flow = Arc::new(RecordingFlow::new(cfg.nodes));
+    let report = run_grpo_on_flow(&engine, &cfg, flow.clone()).unwrap();
+    assert_eq!(report.iterations.len(), cfg.iterations);
+    for m in &report.iterations {
+        assert!(m.loss.is_finite());
+    }
+    assert_eq!(flow.retired().len(), per_run_samples(&cfg));
+    assert!(
+        !report.pipeline.busy.contains_key("old_logprob"),
+        "old-logprob stage should have had nothing to fill, but booked busy time"
+    );
+    // the stamped behavior logprobs actually flowed into training
+    for smp in flow.retired() {
+        assert!(smp.has(FieldKind::OldLp), "sample {} missing gen-emitted old_lp", smp.index);
+        assert!(smp.behavior_version >= 1);
+    }
+}

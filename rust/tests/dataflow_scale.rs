@@ -25,6 +25,7 @@ fn drive(flow: &dyn SampleFlow, nodes: usize, n: usize, elems: usize) -> f64 {
             vec![(FieldKind::Tokens, Tensor::i32(&[elems], vec![1; elems]).unwrap())],
             "1".into(),
             2,
+            1,
         )
         .unwrap();
     }

@@ -29,6 +29,10 @@ fn prompts(n: usize) -> Vec<Sample> {
 }
 
 fn finish_generation(flow: &dyn SampleFlow, index: u64) {
+    finish_generation_at(flow, index, 1);
+}
+
+fn finish_generation_at(flow: &dyn SampleFlow, index: u64, behavior_version: u64) {
     flow.store_generation(
         0,
         index,
@@ -38,6 +42,7 @@ fn finish_generation(flow: &dyn SampleFlow, index: u64) {
         ],
         "42".into(),
         2,
+        behavior_version,
     )
     .unwrap();
 }
@@ -189,6 +194,72 @@ fn concurrent_multi_field_writebacks_reach_update() {
         assert_eq!(ready.len(), N, "{name}: every sample must reach the update state");
         let again = flow.request_ready(Stage::Update, usize::MAX).unwrap();
         assert!(again.is_empty(), "{name}: update work dispatched twice");
+    }
+}
+
+/// The behavior-policy version stamped by the generation writeback must
+/// survive every later mutation of the sample's metadata: controller
+/// claim latches, cross-stage writebacks (and the dock's metadata
+/// re-broadcasts they trigger), fetches, and the final retire.
+#[test]
+fn version_stamp_survives_cross_stage_writebacks() {
+    const STAMP: u64 = 7;
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(1)).unwrap()[0];
+        // fresh prompts are unstamped
+        let gen = flow.request_ready(Stage::Generation, 1).unwrap();
+        assert_eq!(gen[0].behavior_version, 0, "{name} prompt must be unstamped");
+        finish_generation_at(flow.as_ref(), idx, STAMP);
+
+        // the generation broadcast delivers the stamp to every stage
+        let old = flow.request_ready(Stage::OldLogprob, 1).unwrap();
+        assert_eq!(old[0].behavior_version, STAMP, "{name} old-lp meta lost the stamp");
+        // claim is latched; now land a *cross-stage* writeback (reward)
+        // while the old-lp claim is outstanding — the re-broadcast must
+        // neither re-dispatch the claim nor alter the stamp
+        flow.store_fields(2, idx, vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))])
+            .unwrap();
+        assert!(
+            flow.request_ready(Stage::OldLogprob, 1).unwrap().is_empty(),
+            "{name} cross-stage writeback re-dispatched a latched claim"
+        );
+        let refl = flow.request_ready(Stage::RefLogprob, 1).unwrap();
+        assert_eq!(
+            refl[0].behavior_version, STAMP,
+            "{name} re-broadcast after the reward writeback lost the stamp"
+        );
+
+        // payload fetches carry it too
+        let fetched = flow.fetch(3, &refl).unwrap();
+        assert_eq!(fetched[0].behavior_version, STAMP, "{name} fetched payload lost the stamp");
+
+        // complete the remaining fields through the *other* stages; the
+        // update-ready meta and the retired sample still carry the stamp
+        flow.store_fields(1, idx, vec![(FieldKind::OldLp, Tensor::zeros(&[7]))]).unwrap();
+        flow.store_fields(2, idx, vec![(FieldKind::RefLp, Tensor::zeros(&[7]))]).unwrap();
+        let upd = flow.request_ready(Stage::Update, 1).unwrap();
+        assert_eq!(upd.len(), 1, "{name}");
+        assert_eq!(upd[0].behavior_version, STAMP, "{name} update meta lost the stamp");
+        let retired = flow.retire(idx).unwrap();
+        assert_eq!(retired.behavior_version, STAMP, "{name} retired sample lost the stamp");
+    }
+}
+
+/// Stamps are per-sample, not global: samples generated under different
+/// weight versions coexist in the flow and each claim reports its own.
+#[test]
+fn distinct_stamps_coexist_per_sample() {
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(4)).unwrap();
+        for (k, &i) in idx.iter().enumerate() {
+            finish_generation_at(flow.as_ref(), i, 10 + k as u64);
+        }
+        let metas = flow.request_ready(Stage::Reward, 10).unwrap();
+        assert_eq!(metas.len(), 4, "{name}");
+        for m in &metas {
+            let pos = idx.iter().position(|&i| i == m.index).unwrap();
+            assert_eq!(m.behavior_version, 10 + pos as u64, "{name} sample {}", m.index);
+        }
     }
 }
 

@@ -60,6 +60,18 @@ fn main() {
             lag.mean(),
             lag.max,
         );
+        let bus = &report.pipeline.bus;
+        if bus.versions > 0 {
+            println!(
+                "           weight bus: {} versions over {} unique shards — retained {} (peak {}), full-copy ring would hold {} ({:.2}x dedup)",
+                bus.versions,
+                bus.unique_shards,
+                mindspeed_rl::util::fmt_bytes(bus.retained_bytes),
+                mindspeed_rl::util::fmt_bytes(bus.peak_retained_bytes),
+                mindspeed_rl::util::fmt_bytes(bus.naive_equivalent_bytes),
+                bus.dedup_ratio(),
+            );
+        }
         println!();
     }
     let (sync_wall, pipe_wall) = (walls[0], walls[1]);

@@ -128,12 +128,15 @@ impl Config {
     }
 
     /// Load optional `--config file.json` then apply flag overrides.
+    /// Validates the merged result so degenerate values (e.g.
+    /// `--max-inflight 0`) fail here, not mid-run.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut cfg = match args.get("config") {
             Some(path) => Config::from_file(path)?,
             None => Config::default(),
         };
         cfg.apply_args(args)?;
+        cfg.grpo.validate()?;
         Ok(cfg)
     }
 }
@@ -195,5 +198,21 @@ mod tests {
 
         let bad = Args::parse(["--pipeline", "warp"].iter().map(|s| s.to_string())).unwrap();
         assert!(Config::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn degenerate_values_rejected_at_load_time() {
+        // --max-inflight 0 used to build a bus that failed mid-run; now
+        // the merged config fails validation up front
+        for flags in [
+            ["--max-inflight", "0"],
+            ["--prompts-per-iter", "0"],
+            ["--group-size", "0"],
+        ] {
+            let args = Args::parse(flags.iter().map(|s| s.to_string())).unwrap();
+            assert!(Config::from_args(&args).is_err(), "{flags:?} must be rejected");
+        }
+        let ok = Args::parse(["--max-inflight", "1"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&ok).is_ok());
     }
 }

@@ -12,9 +12,11 @@
 //! * [`resharding`] — the allgather–swap resharding flow (and the naive
 //!   baseline), over a simulated multi-device memory substrate.
 //! * [`weights`] — the versioned train→infer weight channel
-//!   (`WeightBus` snapshot ring): behavior-policy identity as a
-//!   first-class concept, so the pipelined executor scores old-logprobs
-//!   under each sample's stamped generation-time weights.
+//!   (`WeightBus` ring with shard-level, content-deduplicated
+//!   retention): behavior-policy identity as a first-class concept, so
+//!   the pipelined executor scores old-logprobs under each sample's
+//!   stamped generation-time weights; the resharding flow publishes its
+//!   generation-layout slices directly into the bus.
 //!
 //! Compute (model forward/backward, GRPO loss, Adam) lives in AOT-compiled
 //! HLO artifacts produced by `python/compile` and executed through

@@ -27,6 +27,10 @@ pub struct MemEvent {
 pub struct MemoryPool {
     pub name: String,
     pub capacity: u64,
+    /// record per-event timelines (Fig. 10 replay). Off for pure
+    /// accounting pools (`unbounded`), whose alloc/free churn over a
+    /// whole training run would grow an unread event log without bound.
+    record_timeline: bool,
     inner: Mutex<Inner>,
 }
 
@@ -41,7 +45,25 @@ struct Inner {
 
 impl MemoryPool {
     pub fn new(name: impl Into<String>, capacity: u64) -> Self {
-        Self { name: name.into(), capacity, inner: Mutex::new(Inner::default()) }
+        Self {
+            name: name.into(),
+            capacity,
+            record_timeline: true,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// A pool used purely for accounting (no OOM enforcement, no event
+    /// timeline) — e.g. the weight bus's retention pool, where the
+    /// interesting output is the live/peak watermark, not an allocation
+    /// failure or a replayable event log.
+    pub fn unbounded(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            capacity: u64::MAX,
+            record_timeline: false,
+            inner: Mutex::new(Inner::default()),
+        }
     }
 
     /// Allocate a named buffer; fails if capacity would be exceeded (the
@@ -63,8 +85,10 @@ impl MemoryPool {
         g.live += bytes;
         g.peak = g.peak.max(g.live);
         g.buffers.insert(id, (label.clone(), bytes));
-        let ev = MemEvent { label: format!("+{label}"), live_bytes: g.live };
-        g.timeline.push(ev);
+        if self.record_timeline {
+            let ev = MemEvent { label: format!("+{label}"), live_bytes: g.live };
+            g.timeline.push(ev);
+        }
         Ok(id)
     }
 
@@ -91,8 +115,10 @@ impl MemoryPool {
             None => bail!("pool {}: double free of buffer {id}", self.name),
         };
         g.live -= bytes;
-        let ev = MemEvent { label: format!("-{label}"), live_bytes: g.live };
-        g.timeline.push(ev);
+        if self.record_timeline {
+            let ev = MemEvent { label: format!("-{label}"), live_bytes: g.live };
+            g.timeline.push(ev);
+        }
         Ok(())
     }
 
@@ -128,6 +154,15 @@ impl MemoryPool {
         let mut g = self.inner.lock().unwrap();
         g.peak = g.live;
         g.timeline.clear();
+    }
+
+    /// Reset only the peak watermark to the current live bytes (start of
+    /// a new measurement phase), keeping the timeline — used by the
+    /// resharder so each reshard's reported peak covers that reshard,
+    /// not every run since the pool was created.
+    pub fn reset_peak(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.peak = g.live;
     }
 }
 
@@ -174,6 +209,28 @@ mod tests {
         assert_eq!(t.len(), 2);
         assert_eq!(t[0], MemEvent { label: "+w".into(), live_bytes: 40 });
         assert_eq!(t[1], MemEvent { label: "-w".into(), live_bytes: 0 });
+    }
+
+    #[test]
+    fn unbounded_pool_tracks_watermarks_without_timeline() {
+        let p = MemoryPool::unbounded("acct");
+        let a = p.alloc("w", 40).unwrap();
+        assert_eq!(p.live_bytes(), 40);
+        assert_eq!(p.peak_bytes(), 40);
+        p.free(a).unwrap();
+        assert_eq!(p.live_bytes(), 0);
+        assert!(p.timeline().is_empty(), "accounting pools record no events");
+    }
+
+    #[test]
+    fn reset_peak_keeps_timeline() {
+        let p = MemoryPool::new("dev0", 100);
+        let a = p.alloc("w", 40).unwrap();
+        p.free(a).unwrap();
+        assert_eq!(p.peak_bytes(), 40);
+        p.reset_peak();
+        assert_eq!(p.peak_bytes(), 0, "peak rebased to live");
+        assert_eq!(p.timeline().len(), 2, "timeline preserved");
     }
 
     #[test]

@@ -4,7 +4,16 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Wall-clock readings below this are degenerate (a zero-duration run):
+/// ratios computed against them would report absurd values (the old
+/// `max(1e-12)` guard turned a zero wall into a `1e12×` overlap), so
+/// every rate in this module reports 0 instead — and summaries print
+/// `n/a`.
+pub const MIN_WALL_SECS: f64 = 1e-9;
+
 /// Eq. (5): `T = G × N × (PL + SL) / ND / ETE` (tokens/sec/device).
+/// Degenerate `ete_secs` (below [`MIN_WALL_SECS`]) reports 0, not a
+/// fantastical throughput.
 pub fn throughput_tps(
     g: u64,
     n_resp: u64,
@@ -13,7 +22,10 @@ pub fn throughput_tps(
     n_devices: u64,
     ete_secs: f64,
 ) -> f64 {
-    (g * n_resp * (pl + sl)) as f64 / n_devices as f64 / ete_secs.max(1e-12)
+    if ete_secs < MIN_WALL_SECS {
+        return 0.0;
+    }
+    (g * n_resp * (pl + sl)) as f64 / n_devices as f64 / ete_secs
 }
 
 /// Named stage timers (generation / inference / update / dispatch...).
@@ -94,6 +106,40 @@ impl VersionLag {
     }
 }
 
+/// Weight-bus retention accounting: what the shard-level deduplicated
+/// ring actually holds vs what a full-copy ring of the same versions
+/// would hold (the Fig-10-style number for the sample-flow weight
+/// channel). Produced by `weights::WeightBus::retention_stats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BusRetention {
+    /// versions currently retained in the ring
+    pub versions: usize,
+    /// unique (tensor, content-epoch) shards backing those versions
+    pub unique_shards: usize,
+    /// Σ bytes of unique retained shards (== the bus pool's live bytes)
+    pub retained_bytes: u64,
+    /// high-water mark of `retained_bytes`
+    pub peak_retained_bytes: u64,
+    /// what full-copy retention of the same versions would hold
+    pub naive_equivalent_bytes: u64,
+}
+
+impl BusRetention {
+    /// Bytes the shard-level retention saves over full copies.
+    pub fn savings_bytes(&self) -> u64 {
+        self.naive_equivalent_bytes.saturating_sub(self.retained_bytes)
+    }
+
+    /// naive / retained: 1.0 = no sharing, `versions`× = perfect dedup.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.retained_bytes == 0 {
+            1.0
+        } else {
+            self.naive_equivalent_bytes as f64 / self.retained_bytes as f64
+        }
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -111,6 +157,9 @@ pub struct PipelineReport {
     pub busy: BTreeMap<String, f64>,
     /// per-iteration behavior-policy staleness, in finalize order
     pub version_lag: Vec<(usize, VersionLag)>,
+    /// weight-bus retention at the end of the run (all-zero when the run
+    /// had no bus: sync mode without `keep_weight_history`)
+    pub bus: BusRetention,
 }
 
 impl PipelineReport {
@@ -119,13 +168,23 @@ impl PipelineReport {
     }
 
     /// Σ busy / wall: 1.0 = fully serial, >1.0 = stages overlapped.
+    /// A degenerate wall clock (below [`MIN_WALL_SECS`]) reports 0.
     pub fn overlap_ratio(&self) -> f64 {
-        self.busy_total() / self.wall_secs.max(1e-12)
+        if self.wall_secs < MIN_WALL_SECS {
+            0.0
+        } else {
+            self.busy_total() / self.wall_secs
+        }
     }
 
-    /// Fraction of the wall clock a single stage was busy.
+    /// Fraction of the wall clock a single stage was busy (0 for a
+    /// degenerate wall clock).
     pub fn utilization(&self, stage: &str) -> f64 {
-        self.busy.get(stage).copied().unwrap_or(0.0) / self.wall_secs.max(1e-12)
+        if self.wall_secs < MIN_WALL_SECS {
+            0.0
+        } else {
+            self.busy.get(stage).copied().unwrap_or(0.0) / self.wall_secs
+        }
     }
 
     /// Run-level behavior-policy staleness (all iterations merged).
@@ -146,18 +205,35 @@ impl PipelineReport {
             })
             .collect::<Vec<_>>()
             .join(" ");
+        let overlap = if self.wall_secs < MIN_WALL_SECS {
+            "n/a".to_string()
+        } else {
+            format!("{:.2}x", self.overlap_ratio())
+        };
         let lag = self.lag_total();
         let lag = if lag.samples == 0 {
             String::new()
         } else {
             format!(" lag(mean={:.2},max={})", lag.mean(), lag.max)
         };
+        let bus = if self.bus.versions == 0 {
+            String::new()
+        } else {
+            format!(
+                " bus[{}v/{}sh {} vs {} full-copy]",
+                self.bus.versions,
+                self.bus.unique_shards,
+                crate::util::fmt_bytes(self.bus.retained_bytes),
+                crate::util::fmt_bytes(self.bus.naive_equivalent_bytes)
+            )
+        };
         format!(
-            "[{}] wall={} overlap={:.2}x{} {}",
+            "[{}] wall={} overlap={}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
-            self.overlap_ratio(),
+            overlap,
             lag,
+            bus,
             stages
         )
     }
@@ -261,6 +337,46 @@ mod tests {
         assert_eq!(total.samples, 5);
         assert_eq!(total.max, 5);
         assert!(r.summary().contains("lag(mean="));
+    }
+
+    #[test]
+    fn degenerate_wall_clock_reports_zero_not_1e12() {
+        // the regression: busy / wall.max(1e-12) on a zero-wall run
+        // reported an absurd ~1e12x overlap in summaries
+        let mut r = PipelineReport { mode: "pipelined".into(), wall_secs: 0.0, ..Default::default() };
+        r.busy.insert("generation".into(), 1.0);
+        assert_eq!(r.overlap_ratio(), 0.0);
+        assert_eq!(r.utilization("generation"), 0.0);
+        assert!(r.summary().contains("overlap=n/a"), "{}", r.summary());
+        // just under the epsilon behaves the same
+        r.wall_secs = MIN_WALL_SECS / 2.0;
+        assert_eq!(r.overlap_ratio(), 0.0);
+        // a sane wall clock is unaffected
+        r.wall_secs = 2.0;
+        assert!((r.overlap_ratio() - 0.5).abs() < 1e-12);
+        assert!(r.summary().contains("overlap=0.50x"));
+        // same guard on Eq. (5)
+        assert_eq!(throughput_tps(256, 16, 2048, 8192, 16, 0.0), 0.0);
+        assert!(throughput_tps(256, 16, 2048, 8192, 16, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn bus_retention_arithmetic_and_summary() {
+        let b = BusRetention {
+            versions: 3,
+            unique_shards: 5,
+            retained_bytes: 400,
+            peak_retained_bytes: 500,
+            naive_equivalent_bytes: 1200,
+        };
+        assert_eq!(b.savings_bytes(), 800);
+        assert!((b.dedup_ratio() - 3.0).abs() < 1e-12);
+        assert_eq!(BusRetention::default().dedup_ratio(), 1.0);
+        let r = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, bus: b, ..Default::default() };
+        assert!(r.summary().contains("bus[3v/5sh"), "{}", r.summary());
+        // no bus in the run → no bus clause in the summary
+        let r0 = PipelineReport { mode: "sync".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!r0.summary().contains("bus["));
     }
 
     #[test]

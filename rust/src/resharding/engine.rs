@@ -15,7 +15,9 @@ use std::sync::Arc;
 use super::planner::{eq3_redundant_bytes, ReshardPlan, ReshardReport};
 use crate::memory::{BufferId, MemoryPool};
 use crate::parallel::{ModelWeights, ParallelLayout, WeightKind};
+use crate::runtime::Tensor;
 use crate::transfer_dock::{LinkClass, NetworkModel};
+use crate::weights::{WeightBus, WeightVersion};
 
 /// Where a device's update-layout weight block currently resides.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,8 +47,6 @@ pub struct Resharder {
     /// generation-layout shards: (device, weight) → data
     gen_buffers: HashMap<usize, Vec<BufferId>>,
     gen_data: HashMap<(usize, String), Vec<f32>>,
-    /// lingering naive-mode gathered buffers (for cleanup between runs)
-    naive_extra: HashMap<usize, Vec<BufferId>>,
 }
 
 impl Resharder {
@@ -104,12 +104,54 @@ impl Resharder {
             update_blocks,
             gen_buffers: HashMap::new(),
             gen_data: HashMap::new(),
-            naive_extra: HashMap::new(),
         })
     }
 
     fn node_of(&self, dev: usize) -> usize {
         dev / self.devices_per_node
+    }
+
+    /// Every reshard starts from update-resident blocks; a parked block
+    /// means the caller skipped `swap_back_h2d` — resharding on top of it
+    /// would free a stale buffer and double-park host swap space.
+    fn ensure_update_resident(&self) -> Result<()> {
+        for (d, blk) in self.update_blocks.iter().enumerate() {
+            anyhow::ensure!(
+                blk.location == ShardLocation::Device,
+                "device {d}: update block is parked on host — call swap_back_h2d() before \
+                 resharding again"
+            );
+        }
+        Ok(())
+    }
+
+    /// Free every generation-layout buffer left over from a previous
+    /// reshard and drop the shard payloads. Both reshard flows call this
+    /// eagerly on entry: the naive flow's gathered buffers used to linger
+    /// indefinitely ("for cleanup between runs" that never came), so
+    /// alternating naive / allgather–swap experiments in one process
+    /// leaked device pool bytes and corrupted peak/timeline accounting.
+    pub fn release_generation_buffers(&mut self) -> Result<()> {
+        for (dev, bufs) in std::mem::take(&mut self.gen_buffers) {
+            for b in bufs {
+                self.device_pools[dev].free(b)?;
+            }
+        }
+        self.gen_data.clear();
+        Ok(())
+    }
+
+    /// Entry protocol shared by both reshard flows: blocks must be
+    /// device-resident, stale generation buffers are freed eagerly, and
+    /// peak watermarks rebase so each report's peak covers *this*
+    /// reshard (timelines are kept — they are the Fig. 10 replay).
+    fn begin_reshard(&mut self) -> Result<()> {
+        self.ensure_update_resident()?;
+        self.release_generation_buffers()?;
+        for p in self.device_pools.iter().chain(self.host_pools.iter()) {
+            p.reset_peak();
+        }
+        Ok(())
     }
 
     /// Gather the full payload of weight `w` from update-layout shards,
@@ -196,6 +238,7 @@ impl Resharder {
     /// The paper's allgather–swap reshard (Fig. 5). Returns the report;
     /// generation shards become available via [`Self::gen_shard`].
     pub fn reshard_allgather_swap(&mut self) -> Result<ReshardReport> {
+        self.begin_reshard()?;
         let world = self.update.world();
         let mut t_ag_max = 0f64;
         let mut t_sel_max = 0f64;
@@ -258,12 +301,14 @@ impl Resharder {
             t_d2h: t_d2h_max,
             t_h2d: 0.0,
             t_total: t_ag_max + t_sel_max + t_d2h_max,
+            bus_published_bytes: 0,
         })
     }
 
     /// The naive reshard (Fig. 3): gather into fresh buffers, keep the
     /// update block resident, reuse resident experts in place.
     pub fn reshard_naive(&mut self) -> Result<ReshardReport> {
+        self.begin_reshard()?;
         let world = self.update.world();
         let mut t_ag_max = 0f64;
 
@@ -297,7 +342,6 @@ impl Resharder {
                     self.gen_data.insert((dev, name.clone()), full[*s..*e].to_vec());
                 }
             }
-            self.naive_extra.entry(dev).or_default().extend(bufs.iter().copied());
             self.gen_buffers.insert(dev, bufs);
             t_ag_max = t_ag_max.max(
                 self.net.transfer_secs(LinkClass::InterNode, remote)
@@ -326,6 +370,7 @@ impl Resharder {
             t_d2h: 0.0,
             t_h2d: 0.0,
             t_total: t_ag_max,
+            bus_published_bytes: 0,
         })
     }
 
@@ -357,6 +402,139 @@ impl Resharder {
             t_max = t_max.max(self.net.transfer_secs(LinkClass::HostDevice, blk.bytes));
         }
         Ok(t_max)
+    }
+
+    // ------------------------------------------------- weight-bus publish
+    //
+    // The resharding flow publishes straight into the versioned
+    // `WeightBus`: one bus version = the full generation-layout sharding
+    // of the model, one tensor per (device, weight) slice in a stable
+    // order. No full-model copy is ever materialized — the slices the
+    // gather loop already produced are handed over as-is, and the bus's
+    // shard-level dedup keeps only the slices whose content changed since
+    // the previous reshard (after a train step that touched a subset of
+    // weights, retention grows by exactly those weights' slices).
+
+    /// Stable (device, weight) enumeration of the generation layout's
+    /// slices — the bus tensor universe for reshard-published versions.
+    pub fn gen_slice_names(&self) -> Result<Vec<(usize, String)>> {
+        let mut out = Vec::new();
+        for dev in 0..self.gen.world() {
+            for (name, _, _) in self.gen_needs(dev)? {
+                out.push((dev, name));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Current generation-layout slices as tensors, in
+    /// [`Self::gen_slice_names`] order. Requires a completed reshard with
+    /// real payloads (`with_test_data`); accounting-only runs have no
+    /// payload to publish.
+    fn gen_slice_tensors(&self) -> Result<Vec<Tensor>> {
+        let names = self.gen_slice_names()?;
+        let mut out = Vec::with_capacity(names.len());
+        for (dev, name) in names {
+            let data = self.gen_data.get(&(dev, name.clone())).ok_or_else(|| {
+                anyhow!(
+                    "no generation shard payload for ({dev}, {name}) — publish requires a \
+                     completed reshard over weights with real data (with_test_data)"
+                )
+            })?;
+            out.push(Tensor::f32(&[data.len()], data.clone())?);
+        }
+        Ok(out)
+    }
+
+    /// Build a weight bus whose version 1 is the *current* generation
+    /// layout (call after the first reshard), charging retention to
+    /// `pool` when given. Later reshards publish into it via
+    /// [`Self::publish_gen_layout`] / [`Self::reshard_allgather_swap_into`].
+    pub fn seed_weight_bus(
+        &self,
+        capacity: usize,
+        pool: Option<Arc<MemoryPool>>,
+    ) -> Result<WeightBus> {
+        let slices = self.gen_slice_tensors()?;
+        Ok(match pool {
+            Some(p) => WeightBus::new_with_pool(slices, capacity, p)?,
+            None => WeightBus::new(slices, capacity),
+        })
+    }
+
+    /// Publish the current generation-layout slices as one bus version
+    /// via [`WeightBus::publish_delta`]: slices are compared against the
+    /// bus head *in place* (a `&[f32]` compare, no allocation) and only
+    /// the changed ones are materialized as tensors — so a reshard after
+    /// a train step that touched a subset of weights hands over exactly
+    /// those weights' slices. Single-publisher per bus: the head read
+    /// and the delta publish are not atomic across concurrent callers.
+    pub fn publish_gen_layout(&self, bus: &WeightBus) -> Result<WeightVersion> {
+        let names = self.gen_slice_names()?;
+        let (_, head) = bus.head();
+        anyhow::ensure!(
+            head.len() == names.len(),
+            "bus universe ({} tensors) does not match this resharder's generation layout ({})",
+            head.len(),
+            names.len()
+        );
+        let mut changed = Vec::new();
+        for (i, (dev, name)) in names.iter().enumerate() {
+            let data = self.gen_data.get(&(*dev, name.clone())).ok_or_else(|| {
+                anyhow!(
+                    "no generation shard payload for ({dev}, {name}) — publish requires a \
+                     completed reshard over weights with real data (with_test_data)"
+                )
+            })?;
+            if head.tensor(i).as_f32()? != data.as_slice() {
+                changed.push((i, Tensor::f32(&[data.len()], data.clone())?));
+            }
+        }
+        Ok(bus.publish_delta(&changed)?)
+    }
+
+    /// The allgather–swap reshard, publishing its generation layout
+    /// directly into `bus` as one version — the paper's resharding flow
+    /// feeding the sample flow's weight channel without an intermediate
+    /// full-model snapshot. Returns the reshard report (with
+    /// `bus_published_bytes` filled) and the minted version.
+    pub fn reshard_allgather_swap_into(
+        &mut self,
+        bus: &WeightBus,
+    ) -> Result<(ReshardReport, WeightVersion)> {
+        let mut report = self.reshard_allgather_swap()?;
+        let version = self.publish_gen_layout(bus)?;
+        report.bus_published_bytes = bus.get(version)?.total_bytes();
+        Ok((report, version))
+    }
+
+    /// Apply a uniform delta to one weight's payload (the testbed's
+    /// stand-in for a train step touching that weight), keeping the
+    /// update-layout slice copies coherent so the next gather sees the
+    /// new content.
+    pub fn perturb_weight(&mut self, name: &str, delta: f32) -> Result<()> {
+        let w = self
+            .weights
+            .weights
+            .iter_mut()
+            .find(|w| w.name == name)
+            .ok_or_else(|| anyhow!("unknown weight {name}"))?;
+        let data = w
+            .data
+            .as_mut()
+            .ok_or_else(|| anyhow!("weight {name} carries no payload to perturb"))?;
+        for x in data.iter_mut() {
+            *x += delta;
+        }
+        let full = data.clone();
+        for blk in &mut self.update_blocks {
+            if let Some((s, e, d)) = blk.slices.get_mut(name) {
+                if let Some(d) = d {
+                    *d = full[*s..*e].to_vec();
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Generation-layout shard payload (tests/verification).
@@ -494,6 +672,104 @@ mod tests {
             free_swap > free_naive,
             "allgather-swap must leave more KV headroom ({free_swap} vs {free_naive})"
         );
+    }
+
+    #[test]
+    fn alternating_reshards_free_gen_buffers_and_return_to_baseline() {
+        // the leak regression: naive-mode gathered buffers used to park in
+        // a "cleanup between runs" map that nothing ever drained, so
+        // alternating naive / allgather–swap runs grew device pools
+        // without bound and peak accounting compounded across runs
+        let mut r = dense_resharder(4, 1, 2, 2);
+        let baseline: Vec<u64> =
+            r.device_pools.iter().map(|p| p.live_bytes()).collect();
+        let mut naive_live: Option<Vec<u64>> = None;
+        for cycle in 0..3 {
+            r.reshard_naive().unwrap();
+            let live: Vec<u64> = r.device_pools.iter().map(|p| p.live_bytes()).collect();
+            match &naive_live {
+                None => naive_live = Some(live),
+                Some(first) => assert_eq!(
+                    &live, first,
+                    "cycle {cycle}: naive residency grew — gen buffers leaked"
+                ),
+            }
+            let rep = r.reshard_allgather_swap().unwrap();
+            // peak is rebased per reshard: it cannot exceed what a single
+            // swap reshard can touch (update block + temp + gen slices)
+            assert!(rep.peak_device_bytes > 0);
+            r.swap_back_h2d().unwrap();
+            let live: Vec<u64> = r.device_pools.iter().map(|p| p.live_bytes()).collect();
+            assert_eq!(live, baseline, "cycle {cycle}: live bytes did not return to baseline");
+            assert_eq!(
+                r.host_pools.iter().map(|p| p.live_bytes()).sum::<u64>(),
+                0,
+                "cycle {cycle}: host swap space leaked"
+            );
+        }
+        // explicit release also restores the baseline after a naive run
+        r.reshard_naive().unwrap();
+        r.release_generation_buffers().unwrap();
+        let live: Vec<u64> = r.device_pools.iter().map(|p| p.live_bytes()).collect();
+        assert_eq!(live, baseline);
+    }
+
+    #[test]
+    fn resharding_over_a_parked_block_is_rejected() {
+        let mut r = dense_resharder(4, 1, 2, 2);
+        r.reshard_allgather_swap().unwrap();
+        let err = r.reshard_allgather_swap().unwrap_err().to_string();
+        assert!(err.contains("swap_back_h2d"), "unhelpful error: {err}");
+        assert!(r.reshard_naive().is_err());
+        r.swap_back_h2d().unwrap();
+        r.reshard_allgather_swap().unwrap();
+    }
+
+    #[test]
+    fn reshard_publishes_gen_layout_into_bus_with_dedup() {
+        let mut r = dense_resharder(4, 1, 2, 2);
+        r.reshard_allgather_swap().unwrap();
+        let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+        let bus = r.seed_weight_bus(4, Some(Arc::clone(&pool))).unwrap();
+        let v1 = bus.head_version();
+        // the seeded version is the gen layout, slice for slice
+        let names = r.gen_slice_names().unwrap();
+        let view = bus.get(v1).unwrap();
+        assert_eq!(view.len(), names.len());
+        for (i, (dev, name)) in names.iter().enumerate() {
+            assert_eq!(
+                view.tensor(i).as_f32().unwrap(),
+                r.gen_shard(*dev, name).unwrap().as_slice(),
+                "slice ({dev}, {name}) differs from the published version"
+            );
+        }
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+
+        // next "iteration": one weight trains, the reshard republished —
+        // only that weight's slices mint new shards
+        r.swap_back_h2d().unwrap();
+        r.perturb_weight("l0.attn", 0.25).unwrap();
+        let before = bus.retained_bytes();
+        let (rep, v2) = r.reshard_allgather_swap_into(&bus).unwrap();
+        assert!(rep.bus_published_bytes > 0);
+        assert_eq!(v2.as_u64(), v1.as_u64() + 1);
+        let grew = bus.retained_bytes() - before;
+        let attn_bytes: u64 = names
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, n))| n == "l0.attn")
+            .map(|(i, _)| bus.get(v2).unwrap().tensor(i).size_bytes() as u64)
+            .sum();
+        assert_eq!(grew, attn_bytes, "only the perturbed weight's slices may mint shards");
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+        // both versions reconstruct bit-identically against the payloads
+        let v2_view = bus.get(v2).unwrap();
+        for (i, (dev, name)) in names.iter().enumerate() {
+            assert_eq!(
+                v2_view.tensor(i).as_f32().unwrap(),
+                r.gen_shard(*dev, name).unwrap().as_slice()
+            );
+        }
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! Payload movement is real (`Vec<f32>` slices are actually gathered,
 //! sliced and verified bit-exact against direct sharding); *time* comes
 //! from the bandwidth model; *memory* from the tracked pools (Fig. 10).
+//!
+//! The allgather–swap flow can also publish its generation-layout slices
+//! directly into the versioned weight bus
+//! ([`Resharder::reshard_allgather_swap_into`]) — one bus version per
+//! reshard, shard-deduplicated against the previous one, with retention
+//! charged to a tracked pool.
 
 mod engine;
 mod planner;

@@ -90,12 +90,21 @@ pub struct ReshardReport {
     pub t_d2h: f64,
     pub t_h2d: f64,
     pub t_total: f64,
+    /// bytes of generation-layout slices published straight into the
+    /// weight bus by `reshard_allgather_swap_into` (0 when resharding
+    /// standalone)
+    pub bus_published_bytes: u64,
 }
 
 impl ReshardReport {
     pub fn summary(&self) -> String {
+        let bus = if self.bus_published_bytes == 0 {
+            String::new()
+        } else {
+            format!(" bus_pub={}", crate::util::fmt_bytes(self.bus_published_bytes))
+        };
         format!(
-            "{}: redundant={} released={} peak={} post={} host={} t_ag={} t_d2h={} t_h2d={} total={}",
+            "{}: redundant={} released={} peak={} post={} host={} t_ag={} t_d2h={} t_h2d={} total={}{bus}",
             self.technique,
             crate::util::fmt_bytes(self.redundant_bytes),
             crate::util::fmt_bytes(self.released_bytes),

@@ -16,8 +16,10 @@
 //! Weight flow in pipelined mode mirrors the paper's train→infer
 //! resharding: the update thread owns the authoritative [`Policy`] and
 //! publishes each post-update snapshot on the versioned
-//! [`WeightBus`](crate::weights::WeightBus); publication returns a
-//! monotonically increasing [`WeightVersion`](crate::weights::WeightVersion).
+//! [`WeightBus`](crate::weights::WeightBus) (shard-level deduplicated
+//! retention, charged to a tracked `weightbus` memory pool); publication
+//! returns a monotonically increasing
+//! [`WeightVersion`](crate::weights::WeightVersion).
 //! The generation thread refreshes a head-tracking replica between
 //! batches and stamps every sample it writes back with the version it
 //! generated under; the old-logprob thread then scores each claimed
@@ -33,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
 use crate::generation::{GenEngine, SamplingParams};
+use crate::memory::MemoryPool;
 use crate::metrics::{throughput_tps, PipelineReport, StageTimers, VersionLag};
 use crate::rewards::group_advantages;
 use crate::runtime::{Engine, Policy, TrainStats};
@@ -107,6 +110,7 @@ pub(crate) fn run(
     cfg: &GrpoConfig,
     flow: Arc<dyn SampleFlow>,
 ) -> Result<TrainReport> {
+    cfg.validate()?;
     match cfg.pipeline {
         PipelineMode::Sync => run_sync(engine, cfg, flow),
         PipelineMode::Pipelined => run_pipelined(engine, cfg, flow),
@@ -245,7 +249,7 @@ fn run_sync(
         version_lags.push((iter, VersionLag { samples: ready.len() as u64, sum: 0, max: 0 }));
         weight_version += 1;
         if let Some(h) = &history {
-            let v = h.publish(&policy.params);
+            let v = h.publish(&policy.params)?;
             debug_assert_eq!(v, WeightVersion(weight_version));
         }
         let update_secs = t0.elapsed().as_secs_f64();
@@ -303,6 +307,7 @@ fn run_sync(
         wall_secs: t_run.elapsed().as_secs_f64(),
         busy: BTreeMap::new(),
         version_lag: version_lags,
+        bus: history.as_ref().map(|h| h.retention_stats()).unwrap_or_default(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -338,7 +343,7 @@ fn bus_capacity(cfg: &GrpoConfig, window: usize) -> usize {
     if cfg.keep_weight_history {
         HISTORY_CAPACITY
     } else {
-        (2 * window - 1) * cfg.prompts_per_iter + 2
+        WeightBus::required_capacity(window, cfg.prompts_per_iter)
     }
 }
 
@@ -598,7 +603,18 @@ fn run_pipelined(
     let a = engine.manifest.artifact("train_step")?.clone();
     let (b, s) = (a.batch, a.seq);
 
-    let bus = Arc::new(WeightBus::new(policy.params.clone(), bus_capacity(cfg, window)));
+    // the bus ring is validated against the staleness window at build
+    // time (typed CapacityBelowWindow instead of a mid-run Evicted), and
+    // its shard-level retention is charged to a tracked pool so the
+    // run's report carries Fig-10-style weight-channel accounting
+    let bus_pool = Arc::new(MemoryPool::unbounded("weightbus"));
+    let bus = Arc::new(WeightBus::new_checked(
+        policy.params.clone(),
+        bus_capacity(cfg, window),
+        window,
+        cfg.prompts_per_iter,
+        Some(Arc::clone(&bus_pool)),
+    )?);
     let shutdown = Arc::new(AtomicBool::new(false));
     let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
     let busy: Arc<Mutex<StageTimers>> = Arc::new(Mutex::new(StageTimers::default()));
@@ -830,7 +846,7 @@ fn run_pipelined(
                     acc.rewards.extend(rewards);
                     start = end;
                 }
-                head_version = bus.publish(&policy.params).as_u64();
+                head_version = bus.publish(&policy.params)?.as_u64();
                 busy.lock().unwrap().add("update", t0.elapsed().as_secs_f64());
 
                 // finalize fully-updated iterations, in order
@@ -905,11 +921,17 @@ fn run_pipelined(
         .expect("stage threads joined; no other owners")
         .into_inner()
         .unwrap();
+    debug_assert_eq!(
+        bus_pool.live_bytes(),
+        bus.retained_bytes(),
+        "bus pool charges must track unique retained shard bytes"
+    );
     let mut pipeline = PipelineReport {
         mode: PipelineMode::Pipelined.name().into(),
         wall_secs: t_run.elapsed().as_secs_f64(),
         busy: BTreeMap::new(),
         version_lag: version_lags,
+        bus: bus.retention_stats(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -64,6 +64,25 @@ pub struct GrpoConfig {
     pub log_every: usize,
 }
 
+impl GrpoConfig {
+    /// Structural validation, run at config load and again by the
+    /// executor before any thread spawns. Catches the degenerate values
+    /// that used to fail mid-run — most notably a staleness window of 0,
+    /// which would size the weight-bus ring below what in-flight samples
+    /// need and surface as an `Evicted` error deep inside the
+    /// old-logprob stage.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.prompts_per_iter >= 1, "prompts_per_iter must be >= 1");
+        anyhow::ensure!(self.group_size >= 1, "group_size must be >= 1");
+        anyhow::ensure!(
+            self.max_inflight_iters >= 1,
+            "max_inflight_iters must be >= 1 (1 = lockstep admission)"
+        );
+        anyhow::ensure!(self.max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        Ok(())
+    }
+}
+
 impl Default for GrpoConfig {
     fn default() -> Self {
         Self {
@@ -326,6 +345,13 @@ mod tests {
             assert!(m.reward_mean >= 0.0 && m.reward_mean <= 1.0);
         }
         assert_eq!(report.pipeline.mode, "pipelined");
+        // the versioned bus reports its shard-level retention accounting
+        let bus = &report.pipeline.bus;
+        assert!(bus.versions > 0 && bus.retained_bytes > 0, "bus retention unreported");
+        assert!(
+            bus.retained_bytes <= bus.naive_equivalent_bytes,
+            "dedup retention can never exceed the full-copy equivalent"
+        );
         // every stage must have recorded busy time
         for stage in ["generation", "old_logprob", "ref_logprob", "reward", "update"] {
             assert!(

@@ -5,11 +5,28 @@
 //! weights coherent with training while generation and update overlap.
 //! PR 1 approximated it with a single-head bus, which meant the
 //! old-logprob stage could only ever score against the *newest* weights —
-//! a silent off-policy bias once `--max-inflight > 1`. This module makes
-//! the weight channel versioned instead:
+//! a silent off-policy bias once `--max-inflight > 1`. PR 2 made the
+//! channel versioned; this revision makes retention **shard-level and
+//! content-deduplicated**, because a ring of full parameter snapshots is
+//! exactly the redundant-memory pattern the paper's allgather–swap
+//! strategy exists to kill (Eq. 3, Figs. 5/10):
 //!
-//! * [`WeightBus::publish`] returns a monotonically increasing
-//!   [`WeightVersion`]; the bus retains a bounded ring of snapshots.
+//! * A published version is a vector of [`WeightShard`]s, one per tensor
+//!   index, each keyed by its **content epoch** — the version whose
+//!   publish last changed that tensor. [`WeightBus::publish`] compares
+//!   each tensor against the head and stores a new shard only where the
+//!   content actually changed; unchanged tensors share the previous
+//!   shard's `Arc`. Worst-case bus memory drops from
+//!   `capacity × full-model` to `1 full model + Σ changed shards`.
+//! * [`WeightBus::get`] reconstructs any retained version as a
+//!   [`WeightView`] — a view over the shared shards, bit-identical to a
+//!   from-scratch snapshot (pinned by `tests/weight_bus_stress.rs`).
+//! * Retention is charged to an optional tracked
+//!   [`MemoryPool`](crate::memory::MemoryPool): every unique retained
+//!   shard allocates a pool buffer and frees it when the last retaining
+//!   version evicts, so Fig-10-style accounting covers the weight channel
+//!   (`pool.live_bytes() == bus.retained_bytes()` is an invariant the
+//!   stress suite asserts).
 //! * Every sample is stamped with the version active when it was
 //!   generated (`Sample::behavior_version`, threaded through the
 //!   transfer dock), and the old-logprob stage scores each claimed batch
@@ -17,22 +34,26 @@
 //!   ratio's denominator is the true behavior policy, exactly as
 //!   HybridFlow/DistFlow tag rollout batches with the producing policy
 //!   version to keep ratios well-defined under asynchrony.
-//! * Eviction is tied to the executor's staleness window: while a sample
-//!   is in flight its iteration cannot complete (though earlier ones can,
-//!   admitting successors), admission is gated at
-//!   `completed + max_inflight_iters`, and every publish retires at least
-//!   one whole GRPO group — so at most
-//!   `(2 × max_inflight_iters − 1) × G` publishes can land between a
-//!   sample's generation and its scoring (see the executor's
-//!   `bus_capacity` for the full derivation). A ring sized to that bound
-//!   never evicts a version still referenced by an in-flight sample; a
-//!   reader that nevertheless asks for an evicted (or not-yet-published)
-//!   version gets a typed [`WeightBusError`], never a panic.
+//! * Eviction is tied to the executor's staleness window (see
+//!   [`WeightBus::required_capacity`]); a ring sized to that bound never
+//!   evicts a version still referenced by an in-flight sample, and
+//!   [`WeightBus::new_checked`] rejects a capacity below the bound
+//!   **at build time** with a typed error instead of failing mid-run
+//!   deep inside the old-logprob stage. A reader that nevertheless asks
+//!   for an evicted (or not-yet-published) version gets a typed
+//!   [`WeightBusError`], never a panic.
+//!
+//! The resharding flow publishes directly into the bus:
+//! `Resharder::reshard_allgather_swap_into` turns its generation-layout
+//! slices into one bus version without materializing a full model copy —
+//! see `resharding/engine.rs`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
+use crate::memory::{BufferId, MemoryPool};
+use crate::metrics::BusRetention;
 use crate::runtime::{Policy, Tensor};
 
 /// Identity of one published weight snapshot. Version 1 is the initial
@@ -53,8 +74,9 @@ impl fmt::Display for WeightVersion {
     }
 }
 
-/// Typed failure of a versioned read — the regression the stress suite
-/// pins is that an evicted version is an *error value*, not a panic.
+/// Typed failure of a bus operation — the regression the stress suite
+/// pins is that an evicted version is an *error value*, not a panic, and
+/// that an undersized ring is rejected at build time, not mid-run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WeightBusError {
     /// The version fell out of the retention ring. Under the executor's
@@ -62,6 +84,16 @@ pub enum WeightBusError {
     Evicted { requested: u64, oldest: u64, newest: u64 },
     /// The version has not been published yet.
     NotYetPublished { requested: u64, newest: u64 },
+    /// Ring capacity below what the staleness window requires — caught
+    /// at config/build time by [`WeightBus::new_checked`].
+    CapacityBelowWindow { capacity: usize, required: usize, window: usize },
+    /// A publish changed the tensor universe (the bus is keyed by tensor
+    /// index; every version must cover the same indices).
+    WrongTensorCount { got: usize, expect: usize },
+    /// `publish_delta` named a tensor index outside the universe.
+    TensorIndexOutOfRange { index: usize, n_tensors: usize },
+    /// The attached accounting pool could not admit a new shard.
+    PoolExhausted { requested_bytes: u64, free_bytes: u64 },
 }
 
 impl fmt::Display for WeightBusError {
@@ -74,68 +106,408 @@ impl fmt::Display for WeightBusError {
             WeightBusError::NotYetPublished { requested, newest } => {
                 write!(f, "weight version v{requested} not yet published (newest is v{newest})")
             }
+            WeightBusError::CapacityBelowWindow { capacity, required, window } => write!(
+                f,
+                "weight bus capacity {capacity} below the {required} snapshots the \
+                 staleness window {window} requires — a still-stamped version would be \
+                 evicted mid-run"
+            ),
+            WeightBusError::WrongTensorCount { got, expect } => {
+                write!(f, "publish with {got} tensors on a bus of {expect}")
+            }
+            WeightBusError::TensorIndexOutOfRange { index, n_tensors } => {
+                write!(f, "publish_delta tensor index {index} outside universe of {n_tensors}")
+            }
+            WeightBusError::PoolExhausted { requested_bytes, free_bytes } => write!(
+                f,
+                "bus accounting pool exhausted ({} requested, {} free)",
+                crate::util::fmt_bytes(*requested_bytes),
+                crate::util::fmt_bytes(*free_bytes)
+            ),
         }
     }
 }
 
 impl std::error::Error for WeightBusError {}
 
-/// Single-producer, multi-reader ring of versioned weight snapshots.
+/// One tensor's content at one point in publish history. `epoch` is the
+/// version whose publish minted this content — two versions whose tensor
+/// `i` shards share an epoch share the same `Arc` (and the same bytes).
+#[derive(Debug)]
+pub struct WeightShard {
+    pub tensor_idx: usize,
+    /// content epoch: the version that last changed this tensor
+    pub epoch: u64,
+    pub data: Tensor,
+}
+
+impl WeightShard {
+    pub fn bytes(&self) -> u64 {
+        self.data.size_bytes() as u64
+    }
+
+    fn key(&self) -> ShardKey {
+        (self.tensor_idx, self.epoch)
+    }
+}
+
+type ShardKey = (usize, u64);
+
+/// A retained version reconstructed as a view over shared shards —
+/// bit-identical to the full snapshot that was published, at the cost of
+/// only the `Arc`s. Holding a view keeps its shards alive across bus
+/// eviction (the accounting pool charge is released on eviction
+/// regardless; a view is a reader-side borrow, not bus retention).
+#[derive(Debug, Clone)]
+pub struct WeightView {
+    version: WeightVersion,
+    shards: Vec<Arc<WeightShard>>,
+}
+
+impl WeightView {
+    pub fn version(&self) -> WeightVersion {
+        self.version
+    }
+
+    /// Tensors in the view (the bus's tensor universe size).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn tensor(&self, i: usize) -> &Tensor {
+        &self.shards[i].data
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<WeightShard> {
+        &self.shards[i]
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = &Tensor> {
+        self.shards.iter().map(|s| &s.data)
+    }
+
+    /// Materialize the full snapshot (one copy — what building an
+    /// inference replica costs anyway).
+    pub fn to_params(&self) -> Vec<Tensor> {
+        self.shards.iter().map(|s| s.data.clone()).collect()
+    }
+
+    /// Bytes of the full snapshot this view represents.
+    pub fn total_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+/// Bookkeeping for one unique retained shard.
+struct Retained {
+    /// how many retained versions reference this shard
+    refs: usize,
+    bytes: u64,
+    /// accounting-pool buffer (None when no pool is attached)
+    buffer: Option<BufferId>,
+}
+
+#[derive(Default)]
+struct Ring {
+    /// dense ascending (version, shards) entries; never empty
+    ring: VecDeque<(u64, Vec<Arc<WeightShard>>)>,
+    /// unique shards currently retained by the ring, by (tensor, epoch)
+    retained: HashMap<ShardKey, Retained>,
+    /// Σ bytes of unique retained shards (== pool live bytes)
+    unique_bytes: u64,
+    peak_unique_bytes: u64,
+}
+
+impl Ring {
+    /// What full-copy retention of the same versions would hold.
+    fn naive_equivalent_bytes(&self) -> u64 {
+        self.ring
+            .iter()
+            .map(|(_, shards)| shards.iter().map(|s| s.bytes()).sum::<u64>())
+            .sum()
+    }
+}
+
+/// Single-producer, multi-reader ring of versioned weight snapshots with
+/// shard-level, content-deduplicated retention.
 ///
-/// `publish` copies the weights outside the lock, so replica refreshes on
-/// the inference hot path only ever block on a pointer swap. Snapshots
-/// are `Arc`ed: eviction drops the ring's reference, but a reader already
-/// holding the snapshot keeps it alive.
+/// `publish` runs the content compare and the clones of changed tensors
+/// outside the lock (against a head snapshot), so readers on the
+/// generation hot path only ever block on the ring insert. Shards are
+/// `Arc`ed: eviction drops the ring's references, but a reader already
+/// holding a [`WeightView`] keeps its shards alive.
 pub struct WeightBus {
     capacity: usize,
-    /// dense ascending (version, snapshot) pairs; never empty
-    inner: Mutex<VecDeque<(u64, Arc<Vec<Tensor>>)>>,
+    pool: Option<Arc<MemoryPool>>,
+    inner: Mutex<Ring>,
 }
 
 impl WeightBus {
+    /// Ring capacity the executor's staleness window requires: while a
+    /// sample awaits scoring its iteration cannot complete, but earlier
+    /// ones can — admitting successors up to `window − 1` ahead — so at
+    /// most `(2·window − 1) × prompts_per_iter` publishes (each retires
+    /// at least one whole GRPO group) can land between a sample's stamp
+    /// and its scoring; +2 covers the stamp itself and slop (full
+    /// derivation in `trainers/executor.rs`).
+    pub fn required_capacity(window: usize, prompts_per_iter: usize) -> usize {
+        (2 * window.max(1) - 1) * prompts_per_iter.max(1) + 2
+    }
+
     /// Seed the bus with the initial parameters as version 1, retaining
-    /// up to `capacity` snapshots (clamped to at least 1).
+    /// up to `capacity` snapshots (clamped to at least 1). No accounting
+    /// pool — use [`Self::new_with_pool`] for tracked retention.
     pub fn new(initial: Vec<Tensor>, capacity: usize) -> Self {
-        let mut ring = VecDeque::new();
-        ring.push_back((1u64, Arc::new(initial)));
-        Self { capacity: capacity.max(1), inner: Mutex::new(ring) }
+        Self::build(initial, capacity, None)
+            .expect("pool-less bus construction cannot fail")
     }
 
-    /// Publish a new snapshot; returns its version. Evicts the oldest
-    /// snapshots beyond `capacity`.
-    pub fn publish(&self, params: &[Tensor]) -> WeightVersion {
-        let next = Arc::new(params.to_vec());
-        let mut g = self.inner.lock().unwrap();
-        let v = g.back().map(|(v, _)| v + 1).expect("bus ring is never empty");
-        g.push_back((v, next));
-        while g.len() > self.capacity {
-            g.pop_front();
+    /// As [`Self::new`], charging retention to `pool` (one buffer per
+    /// unique retained shard, freed on eviction).
+    ///
+    /// A publish charges its new shards *before* evicting the oldest
+    /// version, so a bounded pool needs one version's delta of headroom
+    /// above steady-state retention or a full-ring publish fails with
+    /// [`WeightBusError::PoolExhausted`]. Accounting pools
+    /// ([`MemoryPool::unbounded`]) are unaffected.
+    pub fn new_with_pool(
+        initial: Vec<Tensor>,
+        capacity: usize,
+        pool: Arc<MemoryPool>,
+    ) -> Result<Self, WeightBusError> {
+        Self::build(initial, capacity, Some(pool))
+    }
+
+    /// Validated construction: rejects a `capacity` below what the
+    /// staleness `window` requires (the config/build-time check that
+    /// turns a mid-run `Evicted` deep inside the old-logprob stage into
+    /// a typed error up front).
+    pub fn new_checked(
+        initial: Vec<Tensor>,
+        capacity: usize,
+        window: usize,
+        prompts_per_iter: usize,
+        pool: Option<Arc<MemoryPool>>,
+    ) -> Result<Self, WeightBusError> {
+        let required = Self::required_capacity(window, prompts_per_iter);
+        if capacity < required {
+            return Err(WeightBusError::CapacityBelowWindow { capacity, required, window });
         }
-        WeightVersion(v)
+        Self::build(initial, capacity, pool)
     }
 
-    /// Newest snapshot and its version.
-    pub fn head(&self) -> (WeightVersion, Arc<Vec<Tensor>>) {
+    fn build(
+        initial: Vec<Tensor>,
+        capacity: usize,
+        pool: Option<Arc<MemoryPool>>,
+    ) -> Result<Self, WeightBusError> {
+        let shards: Vec<Arc<WeightShard>> = initial
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| Arc::new(WeightShard { tensor_idx: i, epoch: 1, data: t }))
+            .collect();
+        let bus = Self {
+            capacity: capacity.max(1),
+            pool,
+            inner: Mutex::new(Ring::default()),
+        };
+        {
+            let mut g = bus.inner.lock().unwrap();
+            bus.insert_version(&mut g, 1, shards)?;
+        }
+        Ok(bus)
+    }
+
+    /// Commit one version: charge the pool for shards not yet retained
+    /// (rolled back atomically on exhaustion), bump refcounts, push the
+    /// ring entry, and evict beyond capacity (releasing pool charges for
+    /// shards no retained version references anymore).
+    fn insert_version(
+        &self,
+        g: &mut Ring,
+        version: u64,
+        shards: Vec<Arc<WeightShard>>,
+    ) -> Result<(), WeightBusError> {
+        let mut charged: Vec<ShardKey> = Vec::new();
+        for s in &shards {
+            let key = s.key();
+            if g.retained.contains_key(&key) {
+                continue;
+            }
+            let buffer = match &self.pool {
+                Some(pool) => {
+                    let label = format!("bus.t{}.e{}", s.tensor_idx, s.epoch);
+                    match pool.alloc(label, s.bytes()) {
+                        Ok(id) => Some(id),
+                        Err(_) => {
+                            let err = WeightBusError::PoolExhausted {
+                                requested_bytes: s.bytes(),
+                                free_bytes: pool.free_bytes(),
+                            };
+                            for k in charged {
+                                if let Some(r) = g.retained.remove(&k) {
+                                    g.unique_bytes -= r.bytes;
+                                    if let Some(id) = r.buffer {
+                                        let freed = pool.free(id);
+                                        debug_assert!(freed.is_ok(), "rollback double free");
+                                    }
+                                }
+                            }
+                            return Err(err);
+                        }
+                    }
+                }
+                None => None,
+            };
+            g.retained.insert(key, Retained { refs: 0, bytes: s.bytes(), buffer });
+            g.unique_bytes += s.bytes();
+            charged.push(key);
+        }
+        for s in &shards {
+            g.retained.get_mut(&s.key()).expect("charged above").refs += 1;
+        }
+        g.peak_unique_bytes = g.peak_unique_bytes.max(g.unique_bytes);
+        g.ring.push_back((version, shards));
+        while g.ring.len() > self.capacity {
+            let (_, old) = g.ring.pop_front().expect("len > capacity >= 1");
+            for s in old {
+                let key = s.key();
+                let gone = {
+                    let r = g.retained.get_mut(&key).expect("retained while ringed");
+                    r.refs -= 1;
+                    r.refs == 0
+                };
+                if gone {
+                    let r = g.retained.remove(&key).unwrap();
+                    g.unique_bytes -= r.bytes;
+                    if let (Some(pool), Some(id)) = (&self.pool, r.buffer) {
+                        // by construction every buffer is freed exactly once
+                        let freed = pool.free(id);
+                        debug_assert!(freed.is_ok(), "bus shard buffer freed twice");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One shard vector for `params`, sharing `head`'s shards where the
+    /// content is unchanged and minting epoch-`next` shards elsewhere.
+    fn dedup_against(
+        head: &[Arc<WeightShard>],
+        params: &[Tensor],
+        next: u64,
+    ) -> Vec<Arc<WeightShard>> {
+        params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if head[i].data == *t {
+                    head[i].clone()
+                } else {
+                    Arc::new(WeightShard { tensor_idx: i, epoch: next, data: t.clone() })
+                }
+            })
+            .collect()
+    }
+
+    /// Publish a new snapshot; returns its version. Tensors whose content
+    /// is unchanged since the head share the head's shards (no new
+    /// bytes); changed tensors mint shards with this version as their
+    /// content epoch. Evicts the oldest versions beyond `capacity`.
+    ///
+    /// The O(model) content compare and the clones of changed tensors run
+    /// *outside* the lock (against a head snapshot), so replica refreshes
+    /// on the generation hot path only ever block on the ring insert. If
+    /// a concurrent publish moves the head in between (multi-publisher
+    /// callers only — the executor is single-producer), the dedup redoes
+    /// against the live head under the lock.
+    pub fn publish(&self, params: &[Tensor]) -> Result<WeightVersion, WeightBusError> {
+        let (head_v, head_shards) = {
+            let g = self.inner.lock().unwrap();
+            let (v, shards) = g.ring.back().expect("bus ring is never empty");
+            (*v, shards.clone())
+        };
+        if params.len() != head_shards.len() {
+            return Err(WeightBusError::WrongTensorCount {
+                got: params.len(),
+                expect: head_shards.len(),
+            });
+        }
+        let next = head_v + 1;
+        let shards = Self::dedup_against(&head_shards, params, next);
+
+        let mut g = self.inner.lock().unwrap();
+        let live_head = g.ring.back().expect("bus ring is never empty").0;
+        if live_head == head_v {
+            self.insert_version(&mut g, next, shards)?;
+            return Ok(WeightVersion(next));
+        }
+        // head moved under us: epochs minted against the stale head could
+        // collide with the racing publisher's — rebuild under the lock
+        let next = live_head + 1;
+        let head_shards = g.ring.back().unwrap().1.clone();
+        let shards = Self::dedup_against(&head_shards, params, next);
+        self.insert_version(&mut g, next, shards)?;
+        Ok(WeightVersion(next))
+    }
+
+    /// Publish a version from only the tensors that (may have) changed;
+    /// unnamed indices inherit the head's shards. Content is still
+    /// compared, so passing an unchanged tensor costs no retention. This
+    /// is the resharding flow's publish path: the allgather–swap reshard
+    /// hands over its changed generation-layout slices without ever
+    /// materializing a full snapshot.
+    pub fn publish_delta(
+        &self,
+        changed: &[(usize, Tensor)],
+    ) -> Result<WeightVersion, WeightBusError> {
+        let mut g = self.inner.lock().unwrap();
+        let head = g.ring.back().expect("bus ring is never empty");
+        let next = head.0 + 1;
+        let mut shards = head.1.clone();
+        for (i, t) in changed {
+            let Some(slot) = shards.get_mut(*i) else {
+                return Err(WeightBusError::TensorIndexOutOfRange {
+                    index: *i,
+                    n_tensors: shards.len(),
+                });
+            };
+            if slot.data != *t {
+                *slot = Arc::new(WeightShard { tensor_idx: *i, epoch: next, data: t.clone() });
+            }
+        }
+        self.insert_version(&mut g, next, shards)?;
+        Ok(WeightVersion(next))
+    }
+
+    /// Newest snapshot (as a view) and its version.
+    pub fn head(&self) -> (WeightVersion, WeightView) {
         let g = self.inner.lock().unwrap();
-        let (v, p) = g.back().expect("bus ring is never empty");
-        (WeightVersion(*v), p.clone())
+        let (v, shards) = g.ring.back().expect("bus ring is never empty");
+        (WeightVersion(*v), WeightView { version: WeightVersion(*v), shards: shards.clone() })
     }
 
-    /// Newest version number without cloning the snapshot.
+    /// Newest version number without cloning any shard handles.
     pub fn head_version(&self) -> WeightVersion {
-        WeightVersion(self.inner.lock().unwrap().back().unwrap().0)
+        WeightVersion(self.inner.lock().unwrap().ring.back().unwrap().0)
     }
 
     /// Oldest version still retained.
     pub fn oldest(&self) -> WeightVersion {
-        WeightVersion(self.inner.lock().unwrap().front().unwrap().0)
+        WeightVersion(self.inner.lock().unwrap().ring.front().unwrap().0)
     }
 
-    /// Fetch a specific snapshot still inside the retention ring.
-    pub fn get(&self, version: WeightVersion) -> Result<Arc<Vec<Tensor>>, WeightBusError> {
+    /// Reconstruct a specific retained version as a view over shared
+    /// shards — bit-identical to the snapshot that was published.
+    pub fn get(&self, version: WeightVersion) -> Result<WeightView, WeightBusError> {
         let g = self.inner.lock().unwrap();
-        let oldest = g.front().unwrap().0;
-        let newest = g.back().unwrap().0;
+        let oldest = g.ring.front().unwrap().0;
+        let newest = g.ring.back().unwrap().0;
         if version.0 > newest {
             return Err(WeightBusError::NotYetPublished { requested: version.0, newest });
         }
@@ -143,24 +515,28 @@ impl WeightBus {
             return Err(WeightBusError::Evicted { requested: version.0, oldest, newest });
         }
         // versions are dense and ascending, so the ring indexes directly
-        Ok(g[(version.0 - oldest) as usize].1.clone())
+        let shards = g.ring[(version.0 - oldest) as usize].1.clone();
+        Ok(WeightView { version, shards })
     }
 
     /// Newest snapshot strictly newer than `seen`, if any (the replica
     /// refresh primitive).
-    pub fn newer_than(&self, seen: WeightVersion) -> Option<(WeightVersion, Arc<Vec<Tensor>>)> {
+    pub fn newer_than(&self, seen: WeightVersion) -> Option<(WeightVersion, WeightView)> {
         let g = self.inner.lock().unwrap();
-        let (v, p) = g.back().expect("bus ring is never empty");
+        let (v, shards) = g.ring.back().expect("bus ring is never empty");
         if *v > seen.0 {
-            Some((WeightVersion(*v), p.clone()))
+            Some((
+                WeightVersion(*v),
+                WeightView { version: WeightVersion(*v), shards: shards.clone() },
+            ))
         } else {
             None
         }
     }
 
-    /// Snapshots currently retained.
+    /// Versions currently retained.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap().ring.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -170,6 +546,40 @@ impl WeightBus {
     pub fn capacity(&self) -> usize {
         self.capacity
     }
+
+    /// Σ bytes of *unique* retained shards — the bus's actual memory
+    /// footprint. Equals the attached pool's live bytes.
+    pub fn retained_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().unique_bytes
+    }
+
+    /// Unique retained shards.
+    pub fn retained_shards(&self) -> usize {
+        self.inner.lock().unwrap().retained.len()
+    }
+
+    /// High-water mark of [`Self::retained_bytes`].
+    pub fn peak_retained_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().peak_unique_bytes
+    }
+
+    /// What PR 2's full-copy retention would hold for the same ring:
+    /// Σ over retained versions of their full snapshot bytes.
+    pub fn naive_equivalent_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().naive_equivalent_bytes()
+    }
+
+    /// Snapshot of the retention accounting for reports/benches.
+    pub fn retention_stats(&self) -> BusRetention {
+        let g = self.inner.lock().unwrap();
+        BusRetention {
+            versions: g.ring.len(),
+            unique_shards: g.retained.len(),
+            retained_bytes: g.unique_bytes,
+            peak_retained_bytes: g.peak_unique_bytes,
+            naive_equivalent_bytes: g.naive_equivalent_bytes(),
+        }
+    }
 }
 
 impl fmt::Debug for WeightBus {
@@ -177,8 +587,10 @@ impl fmt::Debug for WeightBus {
         let g = self.inner.lock().unwrap();
         f.debug_struct("WeightBus")
             .field("capacity", &self.capacity)
-            .field("oldest", &g.front().unwrap().0)
-            .field("newest", &g.back().unwrap().0)
+            .field("oldest", &g.ring.front().unwrap().0)
+            .field("newest", &g.ring.back().unwrap().0)
+            .field("unique_shards", &g.retained.len())
+            .field("retained_bytes", &g.unique_bytes)
             .finish()
     }
 }
@@ -192,17 +604,17 @@ pub struct WeightReplica {
 
 impl WeightReplica {
     pub fn new(bus: &WeightBus) -> Self {
-        let (version, params) = bus.head();
-        Self { version, policy: Policy::from_params((*params).clone()) }
+        let (version, view) = bus.head();
+        Self { version, policy: Policy::from_params(view.to_params()) }
     }
 
     /// Pick up the newest snapshot if the bus moved; returns whether the
     /// replica changed.
     pub fn refresh(&mut self, bus: &WeightBus) -> bool {
         match bus.newer_than(self.version) {
-            Some((version, params)) => {
+            Some((version, view)) => {
                 self.version = version;
-                self.policy = Policy::from_params((*params).clone());
+                self.policy = Policy::from_params(view.to_params());
                 true
             }
             None => false,
@@ -213,7 +625,7 @@ impl WeightReplica {
 /// Small MRU cache of *version-pinned* replicas for the old-logprob
 /// stage: claimed batches arrive grouped by stamped version, and
 /// adjacent batches usually share a version, so a handful of entries
-/// avoids rebuilding a `Policy` (one params clone) per batch.
+/// avoids rebuilding a `Policy` (one materialized snapshot) per batch.
 pub struct ReplicaCache {
     cap: usize,
     /// most-recently-used last
@@ -236,11 +648,11 @@ impl ReplicaCache {
             let hit = self.entries.remove(i);
             self.entries.push(hit);
         } else {
-            let params = bus.get(version)?;
+            let view = bus.get(version)?;
             if self.entries.len() >= self.cap {
                 self.entries.remove(0);
             }
-            self.entries.push((version.0, Policy::from_params((*params).clone())));
+            self.entries.push((version.0, Policy::from_params(view.to_params())));
         }
         Ok(&self.entries.last().unwrap().1)
     }
@@ -262,8 +674,17 @@ mod tests {
         vec![Tensor::f32(&[2], vec![tag, tag + 0.5]).unwrap()]
     }
 
-    fn tag_of(p: &[Tensor]) -> f32 {
-        p[0].as_f32().unwrap()[0]
+    /// Two tensors so dedup has something to distinguish: tensor 0 varies
+    /// with `a`, tensor 1 with `b`.
+    fn params2(a: f32, b: f32) -> Vec<Tensor> {
+        vec![
+            Tensor::f32(&[2], vec![a, a + 0.5]).unwrap(),
+            Tensor::f32(&[4], vec![b; 4]).unwrap(),
+        ]
+    }
+
+    fn tag_of(v: &WeightView) -> f32 {
+        v.tensor(0).as_f32().unwrap()[0]
     }
 
     #[test]
@@ -271,7 +692,7 @@ mod tests {
         let bus = WeightBus::new(params(0.0), 4);
         assert_eq!(bus.head_version(), WeightVersion(1));
         for i in 1..=5u64 {
-            let v = bus.publish(&params(i as f32));
+            let v = bus.publish(&params(i as f32)).unwrap();
             assert_eq!(v, WeightVersion(i + 1));
         }
         assert_eq!(bus.head_version(), WeightVersion(6));
@@ -280,19 +701,21 @@ mod tests {
     #[test]
     fn get_returns_the_exact_snapshot() {
         let bus = WeightBus::new(params(1.0), 8);
-        bus.publish(&params(2.0));
-        bus.publish(&params(3.0));
+        bus.publish(&params(2.0)).unwrap();
+        bus.publish(&params(3.0)).unwrap();
         for v in 1..=3u64 {
-            let snap = bus.get(WeightVersion(v)).unwrap();
-            assert_eq!(tag_of(&snap), v as f32);
+            let view = bus.get(WeightVersion(v)).unwrap();
+            assert_eq!(tag_of(&view), v as f32);
+            assert_eq!(view.version(), WeightVersion(v));
+            assert_eq!(view.to_params(), params(v as f32), "view must be bit-identical");
         }
     }
 
     #[test]
     fn eviction_honours_capacity_and_is_typed() {
         let bus = WeightBus::new(params(1.0), 2);
-        bus.publish(&params(2.0));
-        bus.publish(&params(3.0)); // evicts v1
+        bus.publish(&params(2.0)).unwrap();
+        bus.publish(&params(3.0)).unwrap(); // evicts v1
         assert_eq!(bus.len(), 2);
         assert_eq!(bus.oldest(), WeightVersion(2));
         match bus.get(WeightVersion(1)) {
@@ -309,30 +732,125 @@ mod tests {
     fn evicted_snapshot_survives_through_existing_arcs() {
         let bus = WeightBus::new(params(1.0), 1);
         let held = bus.get(WeightVersion(1)).unwrap();
-        bus.publish(&params(2.0)); // v1 leaves the ring
+        bus.publish(&params(2.0)).unwrap(); // v1 leaves the ring
         assert!(matches!(bus.get(WeightVersion(1)), Err(WeightBusError::Evicted { .. })));
-        assert_eq!(tag_of(&held), 1.0, "reader-held Arc must stay valid");
+        assert_eq!(tag_of(&held), 1.0, "reader-held view must stay valid");
     }
 
     #[test]
     fn newer_than_only_reports_progress() {
         let bus = WeightBus::new(params(1.0), 4);
         assert!(bus.newer_than(WeightVersion(1)).is_none());
-        bus.publish(&params(2.0));
-        let (v, p) = bus.newer_than(WeightVersion(1)).unwrap();
+        bus.publish(&params(2.0)).unwrap();
+        let (v, view) = bus.newer_than(WeightVersion(1)).unwrap();
         assert_eq!(v, WeightVersion(2));
-        assert_eq!(tag_of(&p), 2.0);
+        assert_eq!(tag_of(&view), 2.0);
         assert!(bus.newer_than(WeightVersion(2)).is_none());
+    }
+
+    #[test]
+    fn unchanged_tensors_share_shards() {
+        let bus = WeightBus::new(params2(1.0, 10.0), 8);
+        let full: u64 = params2(1.0, 10.0).iter().map(|t| t.size_bytes() as u64).sum();
+        // change only tensor 0 — tensor 1's shard must be reused
+        bus.publish(&params2(2.0, 10.0)).unwrap();
+        let (v1, v2) = (bus.get(WeightVersion(1)).unwrap(), bus.get(WeightVersion(2)).unwrap());
+        assert!(Arc::ptr_eq(v1.shard(1), v2.shard(1)), "unchanged shard not shared");
+        assert!(!Arc::ptr_eq(v1.shard(0), v2.shard(0)), "changed shard wrongly shared");
+        assert_eq!(v2.shard(0).epoch, 2);
+        assert_eq!(v2.shard(1).epoch, 1);
+        // retention: 1 full model + 1 changed shard, not 2 full models
+        let t0 = params2(0.0, 0.0)[0].size_bytes() as u64;
+        assert_eq!(bus.retained_bytes(), full + t0);
+        assert_eq!(bus.retained_shards(), 3);
+        assert_eq!(bus.naive_equivalent_bytes(), 2 * full);
+        // an identical publish re-shares everything: zero new bytes
+        let before = bus.retained_bytes();
+        bus.publish(&params2(2.0, 10.0)).unwrap();
+        assert_eq!(bus.retained_bytes(), before, "identical publish must cost nothing");
+    }
+
+    #[test]
+    fn publish_delta_inherits_head() {
+        let bus = WeightBus::new(params2(1.0, 10.0), 8);
+        let t1 = Tensor::f32(&[4], vec![20.0; 4]).unwrap();
+        let v = bus.publish_delta(&[(1, t1.clone())]).unwrap();
+        assert_eq!(v, WeightVersion(2));
+        let view = bus.get(v).unwrap();
+        assert_eq!(view.tensor(0), &params2(1.0, 0.0)[0], "index 0 inherited from head");
+        assert_eq!(view.tensor(1), &t1);
+        // out-of-range index is a typed error and mints no version
+        match bus.publish_delta(&[(7, t1)]) {
+            Err(WeightBusError::TensorIndexOutOfRange { index: 7, n_tensors: 2 }) => {}
+            other => panic!("expected out-of-range, got {other:?}"),
+        }
+        assert_eq!(bus.head_version(), WeightVersion(2));
+    }
+
+    #[test]
+    fn wrong_tensor_count_rejected() {
+        let bus = WeightBus::new(params2(1.0, 2.0), 4);
+        match bus.publish(&params(1.0)) {
+            Err(WeightBusError::WrongTensorCount { got: 1, expect: 2 }) => {}
+            other => panic!("expected wrong-count error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_below_window_is_typed_build_error() {
+        // the satellite regression: capacity=1 with window 2 would evict
+        // still-stamped versions mid-run — must fail at build time
+        let required = WeightBus::required_capacity(2, 16);
+        match WeightBus::new_checked(params(1.0), 1, 2, 16, None) {
+            Err(WeightBusError::CapacityBelowWindow { capacity: 1, required: r, window: 2 }) => {
+                assert_eq!(r, required)
+            }
+            other => panic!("expected CapacityBelowWindow, got {:?}", other.map(|_| ())),
+        }
+        // exactly the bound builds
+        assert!(WeightBus::new_checked(params(1.0), required, 2, 16, None).is_ok());
+        assert_eq!(WeightBus::required_capacity(1, 4), 6);
+        assert_eq!(WeightBus::required_capacity(2, 16), 50);
+    }
+
+    #[test]
+    fn pool_charges_track_unique_shard_bytes() {
+        let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+        let bus =
+            WeightBus::new_with_pool(params2(1.0, 10.0), 2, Arc::clone(&pool)).unwrap();
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+        bus.publish(&params2(2.0, 10.0)).unwrap();
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+        bus.publish(&params2(3.0, 11.0)).unwrap(); // evicts v1
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+        bus.publish(&params2(3.0, 11.0)).unwrap(); // evicts v2, dedups fully
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
+        assert!(pool.peak_bytes() >= pool.live_bytes());
+    }
+
+    #[test]
+    fn pool_exhaustion_is_typed_and_rolls_back() {
+        let full: u64 = params2(0.0, 0.0).iter().map(|t| t.size_bytes() as u64).sum();
+        // room for exactly one full snapshot: the second distinct publish
+        // must fail typed, leaving retention untouched
+        let pool = Arc::new(MemoryPool::new("tight", full));
+        let bus = WeightBus::new_with_pool(params2(1.0, 10.0), 4, Arc::clone(&pool)).unwrap();
+        match bus.publish(&params2(2.0, 11.0)) {
+            Err(WeightBusError::PoolExhausted { .. }) => {}
+            other => panic!("expected PoolExhausted, got {other:?}"),
+        }
+        assert_eq!(bus.head_version(), WeightVersion(1), "failed publish must not mint");
+        assert_eq!(pool.live_bytes(), bus.retained_bytes(), "rollback must balance charges");
     }
 
     #[test]
     fn replica_cache_pins_versions_and_evicts_lru() {
         let bus = WeightBus::new(params(1.0), 8);
-        bus.publish(&params(2.0));
-        bus.publish(&params(3.0));
+        bus.publish(&params(2.0)).unwrap();
+        bus.publish(&params(3.0)).unwrap();
         let mut cache = ReplicaCache::new(2);
         let p1 = cache.get_or_build(&bus, WeightVersion(1)).unwrap();
-        assert_eq!(tag_of(&p1.params), 1.0);
+        assert_eq!(p1.params[0].as_f32().unwrap()[0], 1.0);
         cache.get_or_build(&bus, WeightVersion(2)).unwrap();
         assert_eq!(cache.len(), 2);
         // touch v1 so v2 is the LRU, then bring in v3
@@ -340,11 +858,13 @@ mod tests {
         cache.get_or_build(&bus, WeightVersion(3)).unwrap();
         assert_eq!(cache.len(), 2);
         // v1 and v3 remain; all resolvable without error
-        assert_eq!(tag_of(&cache.get_or_build(&bus, WeightVersion(1)).unwrap().params), 1.0);
-        assert_eq!(tag_of(&cache.get_or_build(&bus, WeightVersion(3)).unwrap().params), 3.0);
+        for (v, tag) in [(1u64, 1.0f32), (3, 3.0)] {
+            let p = cache.get_or_build(&bus, WeightVersion(v)).unwrap();
+            assert_eq!(p.params[0].as_f32().unwrap()[0], tag);
+        }
         // an evicted bus version surfaces the typed error through the cache
         let tight = WeightBus::new(params(1.0), 1);
-        tight.publish(&params(2.0));
+        tight.publish(&params(2.0)).unwrap();
         let mut c2 = ReplicaCache::new(2);
         assert!(matches!(
             c2.get_or_build(&tight, WeightVersion(1)),

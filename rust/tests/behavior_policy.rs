@@ -185,10 +185,10 @@ fn old_logprob_matches_recompute_under_stamped_version() {
         let mut checked_positions = 0usize;
         for smp in &retired {
             assert!(smp.behavior_version >= 1, "{label}: sample {} unstamped", smp.index);
-            let params = bus
+            let view = bus
                 .get(WeightVersion(smp.behavior_version))
                 .unwrap_or_else(|e| panic!("{label}: stamped snapshot unavailable: {e}"));
-            let behavior_policy = Policy::from_params((*params).clone());
+            let behavior_policy = Policy::from_params(view.to_params());
             let want = recompute_row(&engine, &behavior_policy, smp);
             let got = smp.get(FieldKind::OldLp).unwrap().as_f32().unwrap();
             let mask = smp.get(FieldKind::RespMask).unwrap().as_f32().unwrap();

@@ -1,8 +1,14 @@
 //! Property tests (seeded-random, proptest-style) on the resharding flow:
 //! for arbitrary valid layout pairs, allgather-swap must produce gen
 //! shards bit-identical to direct sharding, release everything the naive
-//! flow leaves behind, and restore the update state exactly.
+//! flow leaves behind, restore the update state exactly, keep pool
+//! accounting balanced across alternating flows, and publish
+//! generation-layout versions into the weight bus that round-trip
+//! bit-identically with shard-level dedup.
 
+use std::sync::Arc;
+
+use mindspeed_rl::memory::MemoryPool;
 use mindspeed_rl::parallel::{ModelWeights, ParallelLayout};
 use mindspeed_rl::resharding::Resharder;
 use mindspeed_rl::transfer_dock::NetworkModel;
@@ -83,6 +89,91 @@ fn naive_bit_exact_and_never_less_redundant_than_swap() {
         }
         let _ = rep_n;
     }
+}
+
+/// The resharding→bus integration property: for random valid layout
+/// pairs, each reshard's generation layout published into the weight bus
+/// reconstructs bit-identically to the live gen shards, pool-charged bus
+/// bytes equal Σ unique shard bytes throughout, and when only one weight
+/// trains between reshards the shard-level retention stays strictly
+/// below the full-copy equivalent.
+#[test]
+fn reshard_bus_publish_round_trips_for_random_layouts() {
+    let mut rng = Rng::new(99);
+    let mut tested = 0;
+    for case in 0..12 {
+        let world = [2usize, 4][rng.below(2)];
+        let weights = ModelWeights::dense_like(2, 32, 64).with_test_data(500 + case);
+        let Some((u, g)) = random_layout_pair(&mut rng, world, false) else { continue };
+        let mut rs =
+            Resharder::new(weights, u, g, GIB, 64 * GIB, 8, NetworkModel::paper()).unwrap();
+        rs.reshard_allgather_swap().unwrap();
+        let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+        let bus = rs.seed_weight_bus(4, Some(Arc::clone(&pool))).unwrap();
+        let names = rs.gen_slice_names().unwrap();
+        for cycle in 0..3 {
+            rs.swap_back_h2d().unwrap();
+            // one weight "trains" between reshards
+            rs.perturb_weight("l0.attn", 0.5).unwrap();
+            let (rep, v) = rs.reshard_allgather_swap_into(&bus).unwrap();
+            assert!(rep.bus_published_bytes > 0, "case {case} cycle {cycle}");
+            rs.verify_gen_shards().unwrap();
+            // the published version is the gen layout, slice for slice
+            let view = bus.get(v).unwrap();
+            assert_eq!(view.len(), names.len());
+            for (i, (dev, name)) in names.iter().enumerate() {
+                assert_eq!(
+                    view.tensor(i).as_f32().unwrap(),
+                    rs.gen_shard(*dev, name).unwrap().as_slice(),
+                    "case {case} cycle {cycle}: slice ({dev}, {name}) mismatch"
+                );
+            }
+            // pool accounting tracks unique retained shard bytes exactly
+            assert_eq!(pool.live_bytes(), bus.retained_bytes(), "case {case} cycle {cycle}");
+            // single-weight deltas dedup: strictly below full copies
+            assert!(
+                bus.retained_bytes() < bus.naive_equivalent_bytes(),
+                "case {case} cycle {cycle}: {} !< {}",
+                bus.retained_bytes(),
+                bus.naive_equivalent_bytes()
+            );
+        }
+        tested += 1;
+    }
+    assert!(tested >= 6, "too few valid random cases ({tested})");
+}
+
+/// The leak regression generalized over random layouts: alternating
+/// naive / allgather–swap / swap-back cycles must return every device
+/// pool to its construction baseline — the naive flow's gathered buffers
+/// are freed eagerly at the start of the next reshard rather than parked
+/// forever.
+#[test]
+fn alternating_flows_restore_baseline_for_random_layouts() {
+    let mut rng = Rng::new(13);
+    let mut tested = 0;
+    for case in 0..8 {
+        let world = [2usize, 4][rng.below(2)];
+        let weights = ModelWeights::dense_like(2, 32, 64).with_test_data(900 + case);
+        let Some((u, g)) = random_layout_pair(&mut rng, world, false) else { continue };
+        let mut rs =
+            Resharder::new(weights, u, g, GIB, 64 * GIB, 8, NetworkModel::paper()).unwrap();
+        let baseline: Vec<u64> = rs.device_pools.iter().map(|p| p.live_bytes()).collect();
+        for cycle in 0..2 {
+            rs.reshard_naive().unwrap();
+            rs.reshard_allgather_swap().unwrap();
+            rs.swap_back_h2d().unwrap();
+            let live: Vec<u64> = rs.device_pools.iter().map(|p| p.live_bytes()).collect();
+            assert_eq!(live, baseline, "case {case} cycle {cycle}: baseline not restored");
+            assert_eq!(
+                rs.host_pools.iter().map(|p| p.live_bytes()).sum::<u64>(),
+                0,
+                "case {case} cycle {cycle}: host swap space leaked"
+            );
+        }
+        tested += 1;
+    }
+    assert!(tested >= 4, "too few valid random cases ({tested})");
 }
 
 #[test]

@@ -1,15 +1,22 @@
-//! Multithreaded stress suite for the versioned `WeightBus` ring:
-//! concurrent publishers and readers, eviction races, and the regression
-//! contract that a reader asking for an evicted version gets a *typed
-//! error*, never a panic. Runs without artifacts (host tensors only) —
-//! the CI stress job executes it under `--test-threads=8` for real
-//! parallelism.
+//! Multithreaded stress + property suite for the versioned `WeightBus`
+//! ring with shard-level, content-deduplicated retention: concurrent
+//! publishers and readers, eviction races, the regression contract that a
+//! reader asking for an evicted version gets a *typed error* (never a
+//! panic), and the retention properties — every retained version
+//! reconstructs bit-identically to a from-scratch full snapshot, and
+//! pool-charged bus bytes equal Σ live unique shard bytes at every point
+//! of a randomized publish/evict sequence. Runs without artifacts (host
+//! tensors only) — the CI stress job executes it under
+//! `--test-threads=8` for real parallelism.
 
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use mindspeed_rl::memory::MemoryPool;
 use mindspeed_rl::runtime::Tensor;
-use mindspeed_rl::weights::{WeightBus, WeightBusError, WeightVersion};
+use mindspeed_rl::util::rng::Rng;
+use mindspeed_rl::weights::{WeightBus, WeightBusError, WeightVersion, WeightView};
 
 /// A snapshot whose payload encodes its version, so readers can verify
 /// they were handed the weights they asked for.
@@ -17,8 +24,8 @@ fn params_for(version: u64) -> Vec<Tensor> {
     vec![Tensor::f32(&[2], vec![version as f32, (version * 2) as f32]).unwrap()]
 }
 
-fn tag_of(params: &[Tensor]) -> u64 {
-    params[0].as_f32().unwrap()[0] as u64
+fn tag_of(view: &WeightView) -> u64 {
+    view.tensor(0).as_f32().unwrap()[0] as u64
 }
 
 #[test]
@@ -40,7 +47,7 @@ fn concurrent_publishers_and_readers_stay_coherent() {
                     // a publisher cannot know its version before the call,
                     // so assert what it can: the minted version is never
                     // ahead of the head other threads observe
-                    let v = bus.publish(&params_for(0)).as_u64();
+                    let v = bus.publish(&params_for(0)).unwrap().as_u64();
                     assert!(bus.head_version().as_u64() >= v);
                 }
             });
@@ -53,7 +60,7 @@ fn concurrent_publishers_and_readers_stay_coherent() {
                 let mut last_seen = 0u64;
                 while !done.load(Ordering::Relaxed) {
                     // head() is always servable and monotone
-                    let (v, _p) = bus.head();
+                    let (v, _view) = bus.head();
                     assert!(v.as_u64() >= last_seen, "head went backwards");
                     last_seen = v.as_u64();
                     // a racing get() of the observed head either succeeds
@@ -98,7 +105,7 @@ fn unique_versions_under_publisher_contention() {
                 let bus = Arc::clone(&bus);
                 scope.spawn(move || {
                     (0..PER_PUBLISHER)
-                        .map(|_| bus.publish(&params_for(0)).as_u64())
+                        .map(|_| bus.publish(&params_for(0)).unwrap().as_u64())
                         .collect::<Vec<_>>()
                 })
             })
@@ -114,12 +121,15 @@ fn unique_versions_under_publisher_contention() {
 
 /// Readers hammer the *oldest* retained version while a publisher evicts
 /// from under them: every read must resolve to either the correct
-/// snapshot or a well-formed typed eviction error.
+/// snapshot or a well-formed typed eviction error — and the accounting
+/// pool's charges must balance exactly once the dust settles.
 #[test]
 fn eviction_race_yields_snapshot_or_typed_error() {
     const CAPACITY: usize = 3;
     const PUBLISHES: u64 = 500;
-    let bus = Arc::new(WeightBus::new(params_for(1), CAPACITY));
+    let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+    let bus =
+        Arc::new(WeightBus::new_with_pool(params_for(1), CAPACITY, Arc::clone(&pool)).unwrap());
     let done = Arc::new(AtomicBool::new(false));
 
     std::thread::scope(|scope| {
@@ -132,7 +142,9 @@ fn eviction_race_yields_snapshot_or_typed_error() {
                     match bus.get(oldest) {
                         // correctness: the snapshot handed back is the one
                         // the version names (payload encodes the version)
-                        Ok(p) => assert_eq!(tag_of(&p), oldest.as_u64(), "wrong snapshot served"),
+                        Ok(view) => {
+                            assert_eq!(tag_of(&view), oldest.as_u64(), "wrong snapshot served")
+                        }
                         Err(WeightBusError::Evicted { requested, oldest: o, newest }) => {
                             assert_eq!(requested, oldest.as_u64());
                             assert!(o > requested && newest >= o, "error fields inconsistent");
@@ -148,7 +160,7 @@ fn eviction_race_yields_snapshot_or_typed_error() {
             scope.spawn(move || {
                 for _ in 0..PUBLISHES {
                     let v = bus.head_version().as_u64() + 1;
-                    bus.publish(&params_for(v));
+                    bus.publish(&params_for(v)).unwrap();
                     std::thread::yield_now();
                 }
                 done.store(true, Ordering::Relaxed);
@@ -157,6 +169,10 @@ fn eviction_race_yields_snapshot_or_typed_error() {
     });
     assert_eq!(bus.head_version().as_u64(), PUBLISHES + 1);
     assert_eq!(bus.oldest().as_u64(), PUBLISHES + 1 - (CAPACITY as u64 - 1));
+    // reader-held views do not keep pool charges alive: after the race,
+    // charges equal exactly the unique bytes the ring retains
+    assert_eq!(pool.live_bytes(), bus.retained_bytes());
+    assert!(pool.live_bytes() > 0);
 }
 
 /// The regression case from the issue: a reader requesting an evicted
@@ -167,7 +183,7 @@ fn evicted_version_is_a_typed_error_not_a_panic() {
     let window = 4usize;
     let bus = WeightBus::new(params_for(1), window);
     for v in 2..=10u64 {
-        bus.publish(&params_for(v));
+        bus.publish(&params_for(v)).unwrap();
     }
     // head 10, ring holds 7..=10 (window = 4)
     assert_eq!(bus.head_version(), WeightVersion(10));
@@ -195,15 +211,158 @@ fn evicted_version_is_a_typed_error_not_a_panic() {
     assert!(msg.contains("v1") && msg.contains("evicted"), "{msg}");
 }
 
-/// A reader holding an `Arc` to a snapshot keeps it usable after the
-/// ring evicts it — eviction only drops the bus's own reference.
+/// A reader holding a view keeps its shards usable after the ring evicts
+/// the version — eviction only drops the bus's own references.
 #[test]
 fn held_snapshots_outlive_eviction() {
     let bus = WeightBus::new(params_for(1), 2);
     let held = bus.get(WeightVersion(1)).unwrap();
     for v in 2..=6u64 {
-        bus.publish(&params_for(v));
+        bus.publish(&params_for(v)).unwrap();
     }
     assert!(matches!(bus.get(WeightVersion(1)), Err(WeightBusError::Evicted { .. })));
     assert_eq!(tag_of(&held), 1, "held snapshot corrupted by eviction");
+}
+
+/// An undersized ring is a typed error at build time — the regression
+/// was test code passing `capacity=1` with a staleness window of 2 and
+/// dying mid-run with `Evicted` deep inside the old-logprob stage.
+#[test]
+fn undersized_ring_rejected_at_build_time() {
+    match WeightBus::new_checked(params_for(1), 1, 2, 16, None) {
+        Err(WeightBusError::CapacityBelowWindow { capacity: 1, required, window: 2 }) => {
+            assert_eq!(required, WeightBus::required_capacity(2, 16));
+        }
+        other => panic!("expected CapacityBelowWindow, got {:?}", other.map(|_| ())),
+    }
+    assert!(WeightBus::new_checked(
+        params_for(1),
+        WeightBus::required_capacity(2, 16),
+        2,
+        16,
+        None
+    )
+    .is_ok());
+}
+
+/// Multi-tensor model for the retention properties: each tensor's
+/// payload encodes (tensor index, mutation counter), so reconstruction
+/// errors are attributable.
+fn model(vals: &[f32]) -> Vec<Tensor> {
+    vals.iter()
+        .enumerate()
+        .map(|(i, &v)| Tensor::f32(&[8], vec![v + i as f32 * 1000.0; 8]).unwrap())
+        .collect()
+}
+
+/// Property: after every step of a randomized publish/evict sequence in
+/// which each publish mutates a random subset of tensors,
+///
+/// (1) every retained version reconstructs **bit-identically** to the
+///     from-scratch full snapshot recorded when it was published,
+/// (2) `retained_bytes` equals Σ bytes over the unique (tensor, epoch)
+///     shards a faithful shadow of the dedup scheme predicts, and
+/// (3) the accounting pool's live bytes equal `retained_bytes` exactly.
+#[test]
+fn shard_retention_bit_identical_and_pool_accounted_under_random_publishes() {
+    const N_TENSORS: usize = 6;
+    const CAPACITY: usize = 5;
+    const STEPS: usize = 150;
+    let tensor_bytes = 8u64 * 4;
+
+    let mut rng = Rng::new(0x5eed_cafe);
+    let mut vals = vec![0f32; N_TENSORS];
+    let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+    let bus = WeightBus::new_with_pool(model(&vals), CAPACITY, Arc::clone(&pool)).unwrap();
+
+    // shadow: (version, full snapshot, per-tensor content epochs)
+    let mut epochs = vec![1u64; N_TENSORS];
+    let mut shadow: VecDeque<(u64, Vec<Tensor>, Vec<u64>)> = VecDeque::new();
+    shadow.push_back((1, model(&vals), epochs.clone()));
+
+    for step in 0..STEPS {
+        let version = step as u64 + 2;
+        // mutate a random subset (sometimes empty — a no-op publish)
+        for (i, v) in vals.iter_mut().enumerate() {
+            if rng.below(3) == 0 {
+                *v += 1.0;
+                epochs[i] = version;
+            }
+        }
+        assert_eq!(bus.publish(&model(&vals)).unwrap().as_u64(), version);
+        shadow.push_back((version, model(&vals), epochs.clone()));
+        while shadow.len() > CAPACITY {
+            shadow.pop_front();
+        }
+
+        // (1) bit-identical reconstruction of every retained version
+        for (sv, snap, _) in &shadow {
+            let view = bus.get(WeightVersion(*sv)).unwrap();
+            assert_eq!(
+                &view.to_params(),
+                snap,
+                "step {step}: v{sv} reconstruction differs from its full snapshot"
+            );
+        }
+        // just-evicted versions are typed errors
+        let oldest = shadow.front().unwrap().0;
+        if oldest > 1 {
+            assert!(matches!(
+                bus.get(WeightVersion(oldest - 1)),
+                Err(WeightBusError::Evicted { .. })
+            ));
+        }
+
+        // (2) retained bytes == Σ unique (tensor, epoch) shard bytes
+        let mut unique: HashSet<(usize, u64)> = HashSet::new();
+        for (_, _, eps) in &shadow {
+            for (i, e) in eps.iter().enumerate() {
+                unique.insert((i, *e));
+            }
+        }
+        assert_eq!(bus.retained_shards(), unique.len(), "step {step}");
+        assert_eq!(bus.retained_bytes(), unique.len() as u64 * tensor_bytes, "step {step}");
+
+        // (3) pool charges mirror retention exactly, publish after evict
+        assert_eq!(pool.live_bytes(), bus.retained_bytes(), "step {step}");
+    }
+    assert!(pool.peak_bytes() >= pool.live_bytes());
+    assert_eq!(bus.peak_retained_bytes(), pool.peak_bytes());
+}
+
+/// The acceptance-criterion accounting assertion: when only a subset of
+/// tensors changes per publish, shard-level retention stores **strictly
+/// fewer** bytes than `len() × full-model bytes` (what PR 2's full-copy
+/// ring held).
+#[test]
+fn subset_changes_store_strictly_fewer_bytes_than_full_copies() {
+    const N_TENSORS: usize = 4;
+    const CAPACITY: usize = 8;
+    let tensor_bytes = 8u64 * 4;
+    let full_bytes = N_TENSORS as u64 * tensor_bytes;
+
+    let mut vals = vec![0f32; N_TENSORS];
+    let bus = WeightBus::new(model(&vals), CAPACITY);
+    // each publish changes tensor 0 only
+    for _ in 0..(CAPACITY - 1) {
+        vals[0] += 1.0;
+        bus.publish(&model(&vals)).unwrap();
+    }
+    assert_eq!(bus.len(), CAPACITY);
+    assert_eq!(
+        bus.naive_equivalent_bytes(),
+        bus.len() as u64 * full_bytes,
+        "the full-copy equivalent is len() × full-model bytes"
+    );
+    assert!(
+        bus.retained_bytes() < bus.len() as u64 * full_bytes,
+        "shard retention ({}) must be strictly below the full-copy ring ({})",
+        bus.retained_bytes(),
+        bus.len() as u64 * full_bytes
+    );
+    // exactly: one full model + one changed shard per later version
+    assert_eq!(
+        bus.retained_bytes(),
+        full_bytes + (CAPACITY as u64 - 1) * tensor_bytes
+    );
 }

@@ -81,6 +81,24 @@ impl Config {
             if let Some(v) = g.opt("gen_logprobs") {
                 d.gen_logprobs = v.bool()?;
             }
+            if let Some(v) = g.opt("lease_ticks") {
+                d.lease_ticks = v.u64()?;
+            }
+            if let Some(v) = g.opt("chaos_kill_rate") {
+                d.chaos_kill_rate = v.num()?;
+            }
+            if let Some(v) = g.opt("chaos_stall_rate") {
+                d.chaos_stall_rate = v.num()?;
+            }
+            if let Some(v) = g.opt("chaos_stall_ticks") {
+                d.chaos_stall_ticks = v.u64()?;
+            }
+            if let Some(v) = g.opt("chaos_seed") {
+                d.chaos_seed = v.u64()?;
+            }
+            if let Some(v) = g.opt("chaos_max_faults") {
+                d.chaos_max_faults = v.u64()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -121,6 +139,12 @@ impl Config {
         if args.has("gen-logprobs") {
             g.gen_logprobs = true;
         }
+        g.lease_ticks = args.u64_or("lease-ticks", g.lease_ticks)?;
+        g.chaos_kill_rate = args.f64_or("chaos-kill-rate", g.chaos_kill_rate)?;
+        g.chaos_stall_rate = args.f64_or("chaos-stall-rate", g.chaos_stall_rate)?;
+        g.chaos_stall_ticks = args.u64_or("chaos-stall-ticks", g.chaos_stall_ticks)?;
+        g.chaos_seed = args.u64_or("chaos-seed", g.chaos_seed)?;
+        g.chaos_max_faults = args.u64_or("chaos-max-faults", g.chaos_max_faults)?;
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -198,6 +222,67 @@ mod tests {
 
         let bad = Args::parse(["--pipeline", "warp"].iter().map(|s| s.to_string())).unwrap();
         assert!(Config::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn chaos_flags_parse_and_validate() {
+        let args = Args::parse(
+            [
+                "--pipeline",
+                "pipelined",
+                "--chaos-kill-rate",
+                "0.2",
+                "--chaos-stall-rate",
+                "0.1",
+                "--chaos-stall-ticks",
+                "9",
+                "--chaos-seed",
+                "77",
+                "--chaos-max-faults",
+                "5",
+                "--lease-ticks",
+                "6",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.grpo.chaos_kill_rate, 0.2);
+        assert_eq!(cfg.grpo.chaos_stall_rate, 0.1);
+        assert_eq!(cfg.grpo.chaos_stall_ticks, 9);
+        assert_eq!(cfg.grpo.chaos_seed, 77);
+        assert_eq!(cfg.grpo.chaos_max_faults, 5);
+        assert_eq!(cfg.grpo.lease_ticks, 6);
+        let plan = cfg.grpo.fault_plan().expect("plan");
+        assert_eq!(plan.seed, 77);
+
+        // chaos without the pipelined executor is rejected at load time
+        let bad = Args::parse(
+            ["--chaos-kill-rate", "0.2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // so is a nonsense rate
+        let bad = Args::parse(
+            ["--pipeline", "pipelined", "--chaos-kill-rate", "1.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // and file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_chaos_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"pipeline": "pipelined", "chaos_kill_rate": 0.3, "lease_ticks": 5}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.grpo.chaos_kill_rate, 0.3);
+        assert_eq!(cfg.grpo.lease_ticks, 5);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! mindspeed-rl smoke    [--preset tiny]           load + run every artifact
 //! mindspeed-rl train    [--preset small] [--config cfg.json] [--iterations N]
 //!                       [--pipeline sync|pipelined] [--max-inflight K]
-//!                       [--replay-buffer] [--gen-logprobs] [--eval-every K] ...
+//!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
+//!                       [--lease-ticks T] [--chaos-kill-rate P]
+//!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
+//!                       [--chaos-seed S] [--chaos-max-faults N] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos
 //! ```
 //!
 //! `--pipeline pipelined` runs every worker state (generation,
@@ -18,7 +21,15 @@
 //! scored under that exact version. `--gen-logprobs` emits the behavior
 //! logprobs straight from the sampler (old-logprob becomes
 //! verify-or-fill). `--pipeline sync` (default) keeps barrier-per-stage
-//! semantics and is deterministic per seed. See rust/DESIGN.md.
+//! semantics and is deterministic per seed.
+//!
+//! Sample dispatch is **lease-based**: a stage worker that claims work
+//! and then dies or stalls loses its claims after `--lease-ticks` logical
+//! ticks and the samples are redispatched (reclaim/redispatch counts land
+//! in the run summary). The `--chaos-*` flags inject seeded worker
+//! kills/stalls into the pipelined executor to exercise exactly that
+//! recovery path; `simulate --experiment chaos` runs the artifact-free
+//! harness sweep. See rust/DESIGN.md "Fault model & leases".
 
 use anyhow::Result;
 

@@ -140,6 +140,70 @@ impl BusRetention {
     }
 }
 
+/// Fault-recovery accounting for a lease-based sample flow: what the
+/// claim leases did over a run (granted / renewed / reclaimed after
+/// expiry / re-dispatched), plus the faults the executor injected
+/// (kills, stalls, stage restarts) when a chaos plan was active.
+///
+/// Conservation invariants, pinned by `tests/chaos.rs`:
+/// * every reclaim bumps exactly one attempt counter, so
+///   `reclaimed == attempt_bumps` always;
+/// * a redispatch is a grant of a sample some earlier lease lost, so
+///   `redispatched <= reclaimed`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlowRecovery {
+    /// claim leases handed out
+    pub leases_granted: u64,
+    /// lease extensions (writeback activity or explicit `renew`)
+    pub leases_renewed: u64,
+    /// leases that expired and returned their sample to the ready pool
+    pub reclaimed: u64,
+    /// grants of a sample whose earlier lease expired (attempt > 0)
+    pub redispatched: u64,
+    /// Σ attempt-counter bumps (== `reclaimed` by construction)
+    pub attempt_bumps: u64,
+    /// worst per-sample attempt count observed
+    pub max_attempt: u32,
+    /// writebacks dropped as stale (late writer after reclaim/retire)
+    pub superseded_writebacks: u64,
+    /// fault injections: stage workers killed mid-claim
+    pub kills: u64,
+    /// fault injections: stage workers stalled past their lease
+    pub stalls: u64,
+    /// stage-worker restarts after a kill
+    pub restarts: u64,
+}
+
+impl FlowRecovery {
+    pub fn merge(&mut self, other: &FlowRecovery) {
+        self.leases_granted += other.leases_granted;
+        self.leases_renewed += other.leases_renewed;
+        self.reclaimed += other.reclaimed;
+        self.redispatched += other.redispatched;
+        self.attempt_bumps += other.attempt_bumps;
+        self.max_attempt = self.max_attempt.max(other.max_attempt);
+        self.superseded_writebacks += other.superseded_writebacks;
+        self.kills += other.kills;
+        self.stalls += other.stalls;
+        self.restarts += other.restarts;
+    }
+
+    /// The lease-accounting invariants that must hold at any quiescent
+    /// point (no tick in flight): see the struct docs.
+    pub fn consistent(&self) -> bool {
+        self.reclaimed == self.attempt_bumps && self.redispatched <= self.reclaimed
+    }
+
+    /// Anything to report? (fault-free, never-expired runs stay silent)
+    pub fn any_recovery(&self) -> bool {
+        self.reclaimed > 0
+            || self.superseded_writebacks > 0
+            || self.kills > 0
+            || self.stalls > 0
+            || self.restarts > 0
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -160,6 +224,9 @@ pub struct PipelineReport {
     /// weight-bus retention at the end of the run (all-zero when the run
     /// had no bus: sync mode without `keep_weight_history`)
     pub bus: BusRetention,
+    /// lease/reclaim/fault accounting (all-zero for fault-free runs whose
+    /// leases never expired)
+    pub recovery: FlowRecovery,
 }
 
 impl PipelineReport {
@@ -227,13 +294,27 @@ impl PipelineReport {
                 crate::util::fmt_bytes(self.bus.naive_equivalent_bytes)
             )
         };
+        let rec = if !self.recovery.any_recovery() {
+            String::new()
+        } else {
+            format!(
+                " recovery[reclaim={} redisp={} stale-wb={} kills={} stalls={} restarts={}]",
+                self.recovery.reclaimed,
+                self.recovery.redispatched,
+                self.recovery.superseded_writebacks,
+                self.recovery.kills,
+                self.recovery.stalls,
+                self.recovery.restarts
+            )
+        };
         format!(
-            "[{}] wall={} overlap={}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
             lag,
             bus,
+            rec,
             stages
         )
     }
@@ -377,6 +458,45 @@ mod tests {
         // no bus in the run → no bus clause in the summary
         let r0 = PipelineReport { mode: "sync".into(), wall_secs: 1.0, ..Default::default() };
         assert!(!r0.summary().contains("bus["));
+    }
+
+    #[test]
+    fn flow_recovery_invariants_and_summary() {
+        let mut a = FlowRecovery {
+            leases_granted: 10,
+            leases_renewed: 3,
+            reclaimed: 2,
+            redispatched: 2,
+            attempt_bumps: 2,
+            max_attempt: 1,
+            superseded_writebacks: 1,
+            kills: 1,
+            stalls: 1,
+            restarts: 1,
+        };
+        assert!(a.consistent());
+        assert!(a.any_recovery());
+        let b = FlowRecovery { reclaimed: 1, attempt_bumps: 1, max_attempt: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.reclaimed, 3);
+        assert_eq!(a.max_attempt, 3);
+        assert!(a.consistent());
+        // broken bookkeeping is detectable
+        let bad = FlowRecovery { reclaimed: 2, attempt_bumps: 1, ..Default::default() };
+        assert!(!bad.consistent());
+        let bad2 = FlowRecovery { redispatched: 3, reclaimed: 1, attempt_bumps: 1, ..Default::default() };
+        assert!(!bad2.consistent());
+
+        // a quiet run keeps the summary free of the recovery clause
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("recovery["));
+        let loud = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            recovery: a,
+            ..Default::default()
+        };
+        assert!(loud.summary().contains("recovery[reclaim=3"), "{}", loud.summary());
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Chaos harness: drives the **real** sample-flow machinery (the
+//! transfer dock or the replay-buffer baseline — actual warehouses,
+//! controllers, leases, notification) with *synthetic* stage workers, so
+//! lease-based recovery can be exercised deterministically without HLO
+//! artifacts or a real engine.
+//!
+//! Stage outputs are pure functions of the sample (tokens derived from
+//! the prompt, logprobs zeros, reward from the answer), which makes every
+//! redispatch byte-idempotent: however many times a kill/stall forces a
+//! sample through a stage, the surviving writeback is identical. The
+//! harness's contract — pinned by `tests/chaos.rs` and printed by
+//! `simulate --experiment chaos` — is the paper's reliability claim in
+//! miniature: under any seeded `FaultPlan`, the run drains to the **same
+//! retired-sample set** as a fault-free run, with zero loss and exact
+//! byte conservation.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::TaskGenerator;
+use crate::metrics::FlowRecovery;
+use crate::runtime::Tensor;
+use crate::trainers::faults::{FaultInjector, FaultKind, FaultPlan, StageExit};
+use crate::transfer_dock::{
+    Conservation, DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage,
+    TransferDock,
+};
+
+/// One chaos run's shape.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub iterations: usize,
+    pub prompts_per_iter: usize,
+    pub group_size: usize,
+    pub nodes: usize,
+    /// admission window (iterations admitted ahead of the last fully
+    /// retired one; 1 = lockstep — the executor's `max_inflight_iters`)
+    pub max_inflight_iters: usize,
+    pub lease_ticks: u64,
+    /// workload seed (the prompt stream)
+    pub seed: u64,
+    /// the fault schedule (rates of 0 = fault-free)
+    pub plan: FaultPlan,
+    /// concurrent workers per pull-driven stage (2+ exercises the
+    /// redispatch-to-a-peer path: a stalled worker's reclaimed samples
+    /// are re-processed by its twin and the late writebacks land as
+    /// superseded duplicates)
+    pub workers_per_stage: usize,
+    /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
+    pub deadline: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            iterations: 4,
+            prompts_per_iter: 4,
+            group_size: 2,
+            nodes: 4,
+            max_inflight_iters: 2,
+            lease_ticks: 4,
+            seed: 0,
+            plan: FaultPlan::default(),
+            workers_per_stage: 1,
+            deadline: Duration::from_secs(60),
+        }
+    }
+}
+
+impl ChaosConfig {
+    pub fn total_samples(&self) -> usize {
+        self.iterations * self.prompts_per_iter * self.group_size
+    }
+}
+
+/// What a chaos run produced.
+#[derive(Debug)]
+pub struct ChaosOutcome {
+    /// retired samples: index → (group, prompt text) — the loss detector
+    pub retired: BTreeMap<u64, (u64, String)>,
+    /// lease/fault accounting at the end of the run
+    pub recovery: FlowRecovery,
+    /// per-store byte conservation (one entry per warehouse; one total
+    /// for the replay buffer)
+    pub conservation: Vec<Conservation>,
+    /// samples still resident after the drain (must be 0)
+    pub resident_after: usize,
+    /// logical lease-clock ticks the driver issued
+    pub ticks: u64,
+}
+
+impl ChaosOutcome {
+    /// Zero-loss check: every admitted sample retired exactly once and
+    /// every store conserves bytes.
+    pub fn lossless(&self, cfg: &ChaosConfig) -> bool {
+        self.retired.len() == cfg.total_samples()
+            && self.resident_after == 0
+            && self.conservation.iter().all(|c| c.holds())
+            && self.recovery.consistent()
+    }
+}
+
+/// Deterministic synthetic generation output for a sample: tokens are a
+/// pure function of the prompt bytes, so any redispatch regenerates the
+/// same response.
+fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize) {
+    let mut h = 0x9E37_79B9u32;
+    for b in s.prompt_text.bytes() {
+        h = h.wrapping_mul(31).wrapping_add(b as u32);
+    }
+    let tokens: Vec<i32> = (0..8).map(|i| ((h >> (i * 4)) & 0xF) as i32 + 1).collect();
+    let fields = vec![
+        (FieldKind::Tokens, Tensor::i32(&[8], tokens).unwrap()),
+        (FieldKind::RespMask, Tensor::zeros(&[7])),
+    ];
+    (fields, format!("{}", s.answer), 2)
+}
+
+/// One synthetic pull-driven stage worker (runs until shutdown; a
+/// fault-kill exits `Killed` and the supervisor respawns it).
+fn synthetic_stage(
+    flow: &dyn SampleFlow,
+    stage: Stage,
+    faults: Option<&FaultInjector>,
+    shutdown: &AtomicBool,
+) -> Result<StageExit> {
+    loop {
+        let metas = flow.wait_ready(stage, 16, Duration::from_millis(5))?;
+        if metas.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                return Ok(StageExit::Completed);
+            }
+            continue;
+        }
+        if let Some(inj) = faults {
+            match inj.decide(stage) {
+                Some(FaultKind::Kill) => {
+                    // abandon the claimed batch: no writeback, no release
+                    // — only the lease can bring the samples back
+                    return Ok(StageExit::Killed);
+                }
+                Some(FaultKind::Stall) => inj.stall(flow, shutdown),
+                None => {}
+            }
+        }
+        let samples = flow.fetch_resident(0, &metas)?;
+        for s in &samples {
+            match stage {
+                Stage::Generation => {
+                    let (fields, completion, resp_len) = synth_generation(s);
+                    flow.store_generation(0, s.index, fields, completion, resp_len, 1)?;
+                }
+                Stage::OldLogprob => {
+                    flow.store_fields(0, s.index, vec![(FieldKind::OldLp, Tensor::zeros(&[7]))])?
+                }
+                Stage::RefLogprob => {
+                    flow.store_fields(0, s.index, vec![(FieldKind::RefLp, Tensor::zeros(&[7]))])?
+                }
+                Stage::Reward => flow.store_fields(
+                    0,
+                    s.index,
+                    vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))],
+                )?,
+                Stage::Update => unreachable!("the driver consumes update-ready samples"),
+            }
+        }
+    }
+}
+
+fn admit_iteration(
+    flow: &dyn SampleFlow,
+    task_gen: &mut TaskGenerator,
+    cfg: &ChaosConfig,
+    iter: usize,
+) -> Result<()> {
+    let tasks = task_gen.batch(cfg.prompts_per_iter);
+    let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
+    for (gi, t) in tasks.iter().enumerate() {
+        let group = (iter * cfg.prompts_per_iter + gi) as u64;
+        for _ in 0..cfg.group_size {
+            samples.push(Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer));
+        }
+    }
+    flow.put_samples(samples)?;
+    Ok(())
+}
+
+/// Pipelined chaos run over the real transfer dock: four synthetic stage
+/// workers under supervisor restart loops, the driver playing the update
+/// state (windowed admission, retire-on-ready, lease-clock ticking on
+/// idle passes).
+pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
+    cfg.plan.validate()?;
+    let flow: Arc<TransferDock> =
+        Arc::new(TransferDock::with_lease(DockTopology::spread(cfg.nodes), cfg.lease_ticks));
+    let injector: Option<Arc<FaultInjector>> =
+        cfg.plan.enabled().then(|| Arc::new(FaultInjector::new(cfg.plan)));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut task_gen = TaskGenerator::train(cfg.seed);
+    let per_iter = cfg.prompts_per_iter * cfg.group_size;
+    let window = cfg.max_inflight_iters.max(1);
+
+    let mut retired: BTreeMap<u64, (u64, String)> = BTreeMap::new();
+    let mut remaining: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut admitted = 0usize;
+    let mut completed = 0usize;
+    let mut ticks = 0u64;
+    let deadline = Instant::now() + cfg.deadline;
+
+    std::thread::scope(|scope| -> Result<()> {
+        for stage in [Stage::Generation, Stage::OldLogprob, Stage::RefLogprob, Stage::Reward] {
+            for _worker in 0..cfg.workers_per_stage.max(1) {
+                let flow = Arc::clone(&flow);
+                let shutdown = Arc::clone(&shutdown);
+                let faults = injector.clone();
+                scope.spawn(move || loop {
+                    match synthetic_stage(flow.as_ref(), stage, faults.as_deref(), &shutdown) {
+                        Ok(StageExit::Completed) => break,
+                        Ok(StageExit::Killed) => {
+                            if let Some(inj) = faults.as_deref() {
+                                inj.note_restart();
+                            }
+                            if shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("[chaos] {stage:?} worker failed: {e:#}");
+                            shutdown.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                });
+            }
+        }
+
+        // ---- driver: the update state
+        let mut drive = |retired: &mut BTreeMap<u64, (u64, String)>,
+                     remaining: &mut BTreeMap<usize, usize>,
+                     admitted: &mut usize,
+                     completed: &mut usize,
+                     ticks: &mut u64|
+         -> Result<()> {
+            while *completed < cfg.iterations {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "chaos run wedged: {} of {} samples retired, recovery {:?}",
+                    retired.len(),
+                    cfg.total_samples(),
+                    flow.lease_stats()
+                );
+                while *admitted < cfg.iterations && *admitted < *completed + window {
+                    admit_iteration(flow.as_ref(), &mut task_gen, cfg, *admitted)?;
+                    remaining.insert(*admitted, per_iter);
+                    *admitted += 1;
+                }
+                let fresh = flow.wait_ready(Stage::Update, usize::MAX, Duration::from_millis(5))?;
+                if fresh.is_empty() {
+                    // idle pass: advance logical time so dead claims expire
+                    flow.tick_lease_clock();
+                    *ticks += 1;
+                    continue;
+                }
+                for m in &fresh {
+                    let Some(s) = flow.retire(m.index) else { continue };
+                    let dup = retired.insert(s.index, (s.group, s.prompt_text.clone()));
+                    anyhow::ensure!(dup.is_none(), "sample {} retired twice", s.index);
+                    let iter = (s.group as usize) / cfg.prompts_per_iter;
+                    let r = remaining
+                        .get_mut(&iter)
+                        .ok_or_else(|| anyhow::anyhow!("retire for unadmitted iteration {iter}"))?;
+                    *r -= 1;
+                }
+                while remaining.get(completed).copied() == Some(0) {
+                    remaining.remove(completed);
+                    *completed += 1;
+                }
+            }
+            Ok(())
+        };
+        let out = drive(&mut retired, &mut remaining, &mut admitted, &mut completed, &mut ticks);
+        shutdown.store(true, Ordering::Relaxed);
+        out
+    })?;
+
+    Ok(ChaosOutcome {
+        retired,
+        recovery: {
+            let mut r = flow.lease_stats();
+            if let Some(inj) = &injector {
+                r.kills = inj.kills();
+                r.stalls = inj.stalls();
+                r.restarts = inj.restarts();
+            }
+            r
+        },
+        conservation: flow.conservation(),
+        resident_after: flow.len(),
+        ticks,
+    })
+}
+
+/// Fault-free barrier-per-stage drain of the same seeded workload through
+/// the centralized replay buffer — the differential baseline: its retired
+/// set must equal any chaos run's.
+pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
+    let flow = ReplayBuffer::with_lease(0, cfg.lease_ticks);
+    let mut task_gen = TaskGenerator::train(cfg.seed);
+    let mut retired: BTreeMap<u64, (u64, String)> = BTreeMap::new();
+    for iter in 0..cfg.iterations {
+        admit_iteration(&flow, &mut task_gen, cfg, iter)?;
+        // barrier per stage, like the sync executor
+        for stage in [Stage::Generation, Stage::OldLogprob, Stage::RefLogprob, Stage::Reward] {
+            loop {
+                let metas = flow.request_ready(stage, 16)?;
+                if metas.is_empty() {
+                    break;
+                }
+                let samples = flow.fetch(0, &metas)?;
+                for s in &samples {
+                    match stage {
+                        Stage::Generation => {
+                            let (fields, completion, resp_len) = synth_generation(s);
+                            flow.store_generation(0, s.index, fields, completion, resp_len, 1)?;
+                        }
+                        Stage::OldLogprob => flow.store_fields(
+                            0,
+                            s.index,
+                            vec![(FieldKind::OldLp, Tensor::zeros(&[7]))],
+                        )?,
+                        Stage::RefLogprob => flow.store_fields(
+                            0,
+                            s.index,
+                            vec![(FieldKind::RefLp, Tensor::zeros(&[7]))],
+                        )?,
+                        Stage::Reward => flow.store_fields(
+                            0,
+                            s.index,
+                            vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))],
+                        )?,
+                        Stage::Update => unreachable!(),
+                    }
+                }
+            }
+        }
+        for m in flow.request_ready(Stage::Update, usize::MAX)? {
+            let s = flow.retire(m.index).expect("update-ready sample must be resident");
+            retired.insert(s.index, (s.group, s.prompt_text));
+        }
+    }
+    Ok(ChaosOutcome {
+        retired,
+        recovery: flow.lease_stats(),
+        conservation: vec![flow.conservation()],
+        resident_after: flow.len(),
+        ticks: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_chaos_matches_baseline() {
+        // long lease: a fault-free run must not reclaim even under a
+        // noisy CI scheduler
+        let cfg = ChaosConfig { lease_ticks: 256, ..Default::default() };
+        let a = run_chaos(&cfg).unwrap();
+        let b = run_baseline(&cfg).unwrap();
+        assert!(a.lossless(&cfg));
+        assert!(b.lossless(&cfg));
+        assert_eq!(a.retired, b.retired, "dataflows must retire identical sample sets");
+        assert_eq!(a.recovery.reclaimed, 0, "fault-free run must not reclaim");
+    }
+
+    #[test]
+    fn kills_recover_losslessly() {
+        // a rate this aggressive fires across the run's claim events no
+        // matter how the scheduler batches claims
+        let cfg = ChaosConfig {
+            iterations: 5,
+            plan: FaultPlan { seed: 5, kill_rate: 0.4, ..Default::default() },
+            ..Default::default()
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert!(out.lossless(&cfg), "{:?}", out.recovery);
+        assert!(out.recovery.kills > 0, "plan must actually fire: {:?}", out.recovery);
+        assert!(out.recovery.reclaimed > 0, "kills must surface as reclaims");
+        assert!(out.recovery.redispatched > 0);
+        assert_eq!(out.recovery.restarts, out.recovery.kills);
+    }
+}

@@ -15,14 +15,19 @@
 //! * Fig. 7 — end-to-end TPS: OpenRLHF / VeRL / MSRLP / MSRL, 3 models
 //! * Fig. 9 — weak-scaling linearity: VeRL / MSRLB / MSRL
 //! * Fig. 11 — DeepSeek-671B at 384 NPUs
+//! * chaos  — lease-based recovery under seeded worker kills/stalls
+//!   (drives the *real* dock machinery with synthetic stage workers —
+//!   see [`chaos`])
 
+pub mod chaos;
 mod costmodel;
 mod experiments;
 mod systems;
 
+pub use chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
 pub use costmodel::{ClusterSpec, DeviceSpec, PaperModel, RlWorkload, StageTimes};
 pub use experiments::{
-    fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
-    table1_rows_out, Fig7Row, Fig9Row, OverlapRow, Table1Row,
+    chaos_rows, fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
+    table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow, Table1Row,
 };
 pub use systems::{SystemKind, SystemModel};

@@ -48,6 +48,7 @@ use crate::weights::{ReplicaCache, WeightBus, WeightReplica, WeightVersion};
 use crate::workers::{ActorWorker, ReferenceWorker, RewardWorker};
 
 use super::eval::evaluate;
+use super::faults::{FaultInjector, FaultKind, StageExit};
 use super::grpo::{assemble_batch, GrpoConfig, IterationMetrics, TrainReport};
 
 /// Which execution model drives the worker states.
@@ -308,6 +309,9 @@ fn run_sync(
         busy: BTreeMap::new(),
         version_lag: version_lags,
         bus: history.as_ref().map(|h| h.retention_stats()).unwrap_or_default(),
+        // sync never ticks the lease clock, so reclaims stay zero; the
+        // grant counters still report for symmetry
+        recovery: flow.lease_stats(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -381,16 +385,40 @@ fn stage_failed(
     shutdown.store(true, Ordering::Relaxed);
 }
 
+/// Consult the chaos plan for a freshly claimed batch. `Some(Killed)`
+/// means the worker abandons the claims (no writeback, no release — the
+/// lease reclaims them) and asks the supervisor for a restart; a stall
+/// parks here until the logical clock has moved past the stall window,
+/// then falls through to process the (likely already reclaimed) batch and
+/// write back late.
+fn inject_fault(
+    faults: Option<&FaultInjector>,
+    stage: Stage,
+    flow: &dyn SampleFlow,
+    shutdown: &AtomicBool,
+) -> Option<StageExit> {
+    let inj = faults?;
+    match inj.decide(stage)? {
+        FaultKind::Kill => Some(StageExit::Killed),
+        FaultKind::Stall => {
+            inj.stall(flow, shutdown);
+            None
+        }
+    }
+}
+
 /// Long-lived actor generation state: claim → generate → write back.
+#[allow(clippy::too_many_arguments)]
 fn generation_stage(
     engine: &Engine,
     cfg: &GrpoConfig,
     placement: StagePlacement,
     flow: &dyn SampleFlow,
     bus: &WeightBus,
+    faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
-) -> Result<()> {
+) -> Result<StageExit> {
     let gen_engine = GenEngine::from_manifest(
         engine,
         SamplingParams { temperature: cfg.temperature, top_k: 0 },
@@ -408,9 +436,12 @@ fn generation_stage(
         let metas = flow.wait_ready(Stage::Generation, GEN_MAX_BATCH, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
-                return Ok(());
+                return Ok(StageExit::Completed);
             }
             continue;
+        }
+        if let Some(exit) = inject_fault(faults, Stage::Generation, flow, shutdown) {
+            return Ok(exit);
         }
         replica.refresh(bus);
         let t0 = Instant::now();
@@ -439,7 +470,9 @@ fn generation_stage(
 /// replica, so `old_lp` is the exact behavior-policy logprob no matter
 /// how far the update thread has run ahead. An evicted stamp is a hard
 /// error — the bus is sized so it cannot happen while the staleness
-/// window holds (see `bus_capacity`).
+/// window holds (see `bus_capacity`), and stamps are immutable once set
+/// (generation writebacks are first-writer-wins), so a stale reclaimed
+/// claim still names a servable version.
 #[allow(clippy::too_many_arguments)]
 fn old_logprob_stage(
     engine: &Engine,
@@ -447,9 +480,10 @@ fn old_logprob_stage(
     flow: &dyn SampleFlow,
     bus: &WeightBus,
     lp_serial: &Mutex<()>,
+    faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
-) -> Result<()> {
+) -> Result<StageExit> {
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     let a = engine.manifest.artifact("logprobs")?.clone();
     let mut replicas = ReplicaCache::new(4);
@@ -457,9 +491,12 @@ fn old_logprob_stage(
         let metas = flow.wait_ready(Stage::OldLogprob, a.batch, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
-                return Ok(());
+                return Ok(StageExit::Completed);
             }
             continue;
+        }
+        if let Some(exit) = inject_fault(faults, Stage::OldLogprob, flow, shutdown) {
+            return Ok(exit);
         }
         let mut by_version: BTreeMap<u64, Vec<SampleMeta>> = BTreeMap::new();
         for m in &metas {
@@ -475,7 +512,26 @@ fn old_logprob_stage(
                 version != 0,
                 "old-logprob claim for unstamped sample (generation must stamp)"
             );
-            let policy = replicas.get_or_build(bus, WeightVersion(version))?;
+            let policy = match replicas.get_or_build(bus, WeightVersion(version)) {
+                Ok(p) => p,
+                Err(e) => {
+                    // The ring retains every version a resident *unscored*
+                    // sample is stamped with (the sample blocks its
+                    // iteration, bounding publishes — see bus_capacity).
+                    // An evicted version can therefore only be named by
+                    // stale claims: samples already re-processed by a
+                    // redispatched peer (old_lp present) or retired. Those
+                    // claims are residue of a reclaimed lease — drop them.
+                    // Anything else is a real invariant violation.
+                    let samples = flow.fetch_resident(placement.actor, &group)?;
+                    anyhow::ensure!(
+                        samples.iter().all(|s| s.has(FieldKind::OldLp)),
+                        "behavior version {version} evicted while an unscored \
+                         sample still needs it: {e}"
+                    );
+                    continue;
+                }
+            };
             crate::workers::logprob_claimed(
                 engine,
                 policy,
@@ -494,23 +550,28 @@ fn old_logprob_stage(
 }
 
 /// Long-lived reference inference state (frozen policy, owns its weights).
+#[allow(clippy::too_many_arguments)]
 fn ref_logprob_stage(
     engine: &Engine,
     placement: StagePlacement,
     flow: &dyn SampleFlow,
     lp_serial: &Mutex<()>,
+    faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
-) -> Result<()> {
+) -> Result<StageExit> {
     let reference = ReferenceWorker::new(engine, placement.reference)?;
     let lp_batch = engine.manifest.artifact("logprobs")?.batch;
     loop {
         let metas = flow.wait_ready(Stage::RefLogprob, lp_batch, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
-                return Ok(());
+                return Ok(StageExit::Completed);
             }
             continue;
+        }
+        if let Some(exit) = inject_fault(faults, Stage::RefLogprob, flow, shutdown) {
+            return Ok(exit);
         }
         let _serial = lp_serial.lock().unwrap();
         let t0 = Instant::now();
@@ -524,17 +585,21 @@ fn ref_logprob_stage(
 fn reward_stage(
     placement: StagePlacement,
     flow: &dyn SampleFlow,
+    faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
-) -> Result<()> {
+) -> Result<StageExit> {
     let reward_worker = RewardWorker::new(placement.reward);
     loop {
         let metas = flow.wait_ready(Stage::Reward, REWARD_MAX_BATCH, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
-                return Ok(());
+                return Ok(StageExit::Completed);
             }
             continue;
+        }
+        if let Some(exit) = inject_fault(faults, Stage::Reward, flow, shutdown) {
+            return Ok(exit);
         }
         let t0 = Instant::now();
         reward_worker.score_claimed(flow, &metas)?;
@@ -618,6 +683,10 @@ fn run_pipelined(
     let shutdown = Arc::new(AtomicBool::new(false));
     let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
     let busy: Arc<Mutex<StageTimers>> = Arc::new(Mutex::new(StageTimers::default()));
+    // chaos: one injector shared by every stage incarnation, so the
+    // per-stage decision streams survive worker restarts
+    let injector: Option<Arc<FaultInjector>> =
+        cfg.fault_plan().map(|plan| Arc::new(FaultInjector::new(plan)));
     // keeps the shared `logprobs` executable single-flight across the
     // old-logprob and reference stages (see EngineShare's safety note)
     let lp_serial: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
@@ -631,83 +700,133 @@ fn run_pipelined(
         let eng = EngineShare(engine);
         let cfg_ref: &GrpoConfig = cfg;
 
+        // Each stage thread runs under a supervisor loop: a fault-killed
+        // incarnation abandons its claims (recovered by lease expiry) and
+        // is respawned with fresh worker state — the in-process analogue
+        // of a cluster restarting a dead worker pod. Real errors still
+        // fail the run through `stage_failed`.
+        macro_rules! supervise {
+            ($name:literal, $fail:ident, $shutdown:ident, $faults:ident, $run:expr) => {
+                loop {
+                    match $run {
+                        Ok(StageExit::Completed) => break,
+                        Ok(StageExit::Killed) => {
+                            if let Some(inj) = $faults.as_deref() {
+                                inj.note_restart();
+                            }
+                            if $shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            stage_failed(&$fail, &$shutdown, $name, e);
+                            break;
+                        }
+                    }
+                }
+            };
+        }
+
         {
-            let (flow, bus, shutdown, fail, busy) = (
+            let (flow, bus, faults, shutdown, fail, busy) = (
                 Arc::clone(&flow),
                 Arc::clone(&bus),
+                injector.clone(),
                 Arc::clone(&shutdown),
                 Arc::clone(&fail),
                 Arc::clone(&busy),
             );
             scope.spawn(move || {
-                if let Err(e) = generation_stage(
-                    eng.0,
-                    cfg_ref,
-                    placement,
-                    flow.as_ref(),
-                    &bus,
-                    &shutdown,
-                    &busy,
-                ) {
-                    stage_failed(&fail, &shutdown, "generation", e);
-                }
+                supervise!(
+                    "generation",
+                    fail,
+                    shutdown,
+                    faults,
+                    generation_stage(
+                        eng.0,
+                        cfg_ref,
+                        placement,
+                        flow.as_ref(),
+                        &bus,
+                        faults.as_deref(),
+                        &shutdown,
+                        &busy,
+                    )
+                );
             });
         }
         {
-            let (flow, bus, lp_serial, shutdown, fail, busy) = (
+            let (flow, bus, lp_serial, faults, shutdown, fail, busy) = (
                 Arc::clone(&flow),
                 Arc::clone(&bus),
                 Arc::clone(&lp_serial),
+                injector.clone(),
                 Arc::clone(&shutdown),
                 Arc::clone(&fail),
                 Arc::clone(&busy),
             );
             scope.spawn(move || {
-                if let Err(e) = old_logprob_stage(
-                    eng.0,
-                    placement,
-                    flow.as_ref(),
-                    &bus,
-                    &lp_serial,
-                    &shutdown,
-                    &busy,
-                ) {
-                    stage_failed(&fail, &shutdown, "old_logprob", e);
-                }
+                supervise!(
+                    "old_logprob",
+                    fail,
+                    shutdown,
+                    faults,
+                    old_logprob_stage(
+                        eng.0,
+                        placement,
+                        flow.as_ref(),
+                        &bus,
+                        &lp_serial,
+                        faults.as_deref(),
+                        &shutdown,
+                        &busy,
+                    )
+                );
             });
         }
         {
-            let (flow, lp_serial, shutdown, fail, busy) = (
+            let (flow, lp_serial, faults, shutdown, fail, busy) = (
                 Arc::clone(&flow),
                 Arc::clone(&lp_serial),
+                injector.clone(),
                 Arc::clone(&shutdown),
                 Arc::clone(&fail),
                 Arc::clone(&busy),
             );
             scope.spawn(move || {
-                if let Err(e) = ref_logprob_stage(
-                    eng.0,
-                    placement,
-                    flow.as_ref(),
-                    &lp_serial,
-                    &shutdown,
-                    &busy,
-                ) {
-                    stage_failed(&fail, &shutdown, "ref_logprob", e);
-                }
+                supervise!(
+                    "ref_logprob",
+                    fail,
+                    shutdown,
+                    faults,
+                    ref_logprob_stage(
+                        eng.0,
+                        placement,
+                        flow.as_ref(),
+                        &lp_serial,
+                        faults.as_deref(),
+                        &shutdown,
+                        &busy,
+                    )
+                );
             });
         }
         {
-            let (flow, shutdown, fail, busy) = (
+            let (flow, faults, shutdown, fail, busy) = (
                 Arc::clone(&flow),
+                injector.clone(),
                 Arc::clone(&shutdown),
                 Arc::clone(&fail),
                 Arc::clone(&busy),
             );
             scope.spawn(move || {
-                if let Err(e) = reward_stage(placement, flow.as_ref(), &shutdown, &busy) {
-                    stage_failed(&fail, &shutdown, "reward", e);
-                }
+                supervise!(
+                    "reward",
+                    fail,
+                    shutdown,
+                    faults,
+                    reward_stage(placement, flow.as_ref(), faults.as_deref(), &shutdown, &busy)
+                );
             });
         }
 
@@ -742,12 +861,33 @@ fn run_pipelined(
                 // *held* (claimed) rather than bounced through release —
                 // the update state is the stage's only consumer, and
                 // re-claiming every few ms would both spin this thread
-                // and pollute the comm ledger with phantom round-trips
-                let fresh = flow.wait_ready(Stage::Update, usize::MAX, UPDATE_WAIT)?;
-                if fresh.is_empty() && held.is_empty() {
-                    continue;
+                // and pollute the comm ledger with phantom round-trips.
+                // Held claims are renewed every pass (this thread is
+                // alive by definition), so they never lease-expire.
+                if !held.is_empty() {
+                    let held_idx: Vec<u64> = held.iter().map(|m| m.index).collect();
+                    flow.renew(Stage::Update, &held_idx);
                 }
-                held.extend(fresh);
+                let fresh = flow.wait_ready(Stage::Update, usize::MAX, UPDATE_WAIT)?;
+                if fresh.is_empty() {
+                    // an idle driver pass is the "nothing is moving"
+                    // signal: advance the logical lease clock so claims
+                    // of dead/stalled stage workers can expire and their
+                    // samples return to the ready pool. While stages make
+                    // progress the clock stands still — leases measure
+                    // silence, not wall time.
+                    flow.tick_lease_clock();
+                    if held.is_empty() {
+                        continue;
+                    }
+                }
+                // dedupe defensively: a reclaimed-and-regranted duplicate
+                // of a held claim must not inflate its group
+                for m in fresh {
+                    if !held.iter().any(|h| h.index == m.index) {
+                        held.push(m);
+                    }
+                }
 
                 // bucket held claims into complete groups per iteration
                 let mut by_group: BTreeMap<u64, Vec<SampleMeta>> = BTreeMap::new();
@@ -926,12 +1066,23 @@ fn run_pipelined(
         bus.retained_bytes(),
         "bus pool charges must track unique retained shard bytes"
     );
+    let mut recovery = flow.lease_stats();
+    if let Some(inj) = &injector {
+        recovery.kills = inj.kills();
+        recovery.stalls = inj.stalls();
+        recovery.restarts = inj.restarts();
+    }
+    debug_assert!(
+        recovery.consistent(),
+        "lease accounting inconsistent: {recovery:?}"
+    );
     let mut pipeline = PipelineReport {
         mode: PipelineMode::Pipelined.name().into(),
         wall_secs: t_run.elapsed().as_secs_f64(),
         busy: BTreeMap::new(),
         version_lag: version_lags,
         bus: bus.retention_stats(),
+        recovery,
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -1,0 +1,266 @@
+//! Deterministic fault injection for stage workers: the chaos half of the
+//! lease-based recovery mechanism.
+//!
+//! A [`FaultPlan`] is a *pure function* of its seed: whether the `n`-th
+//! claim a stage makes is killed, stalled, or untouched depends only on
+//! `(seed, stage, n)` — never on thread timing or wall time — so a chaos
+//! run's fault schedule is reproducible even though the OS scheduler
+//! interleaves the stage threads differently every run. Time is the
+//! flow's logical lease clock throughout (a stalled worker waits for
+//! *ticks*, not milliseconds).
+//!
+//! Fault semantics, mirroring what a dead/stuck worker process does to a
+//! real cluster:
+//! * **Kill** — the worker abandons its freshly claimed batch without a
+//!   writeback or a release and its stage loop exits; the executor
+//!   respawns the stage (a *restart*, with fresh worker state). The
+//!   abandoned claims are recovered by lease expiry.
+//! * **Stall** — the worker holds its claims silently for `stall_ticks`
+//!   logical ticks, then resumes and writes back *late*. If the stall
+//!   outlives the lease, the samples are reclaimed and re-dispatched
+//!   meanwhile, and the late writebacks land as superseded duplicates
+//!   (dropped by the store's first-writer-wins / post-retire rules).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::transfer_dock::{SampleFlow, Stage};
+use crate::util::rng::Rng;
+
+/// What the plan does to one claim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Kill,
+    Stall,
+}
+
+/// Seeded, rate-based fault schedule for the four pull-driven stage
+/// workers (generation / old-logprob / ref-logprob / reward). The update
+/// state is the driver and is never faulted — it plays the role of the
+/// paper's controller process, whose failure is the run's failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// decision-stream seed (independent of the workload seed)
+    pub seed: u64,
+    /// probability a claim's worker is killed right after claiming
+    pub kill_rate: f64,
+    /// probability a claim's worker stalls before processing
+    pub stall_rate: f64,
+    /// how many logical lease-clock ticks a stall withholds writebacks
+    /// (longer than the flow's lease → the claims get reclaimed)
+    pub stall_ticks: u64,
+    /// stop injecting after this many faults (0 = unbounded); a cheap
+    /// guarantee of convergence for aggressive rates
+    pub max_faults: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self { seed: 0, kill_rate: 0.0, stall_rate: 0.0, stall_ticks: 12, max_faults: 0 }
+    }
+}
+
+impl FaultPlan {
+    pub fn enabled(&self) -> bool {
+        self.kill_rate > 0.0 || self.stall_rate > 0.0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, r) in [("kill_rate", self.kill_rate), ("stall_rate", self.stall_rate)] {
+            anyhow::ensure!(r.is_finite() && (0.0..=1.0).contains(&r), "chaos {name} must be in [0,1]");
+        }
+        anyhow::ensure!(
+            self.kill_rate + self.stall_rate <= 1.0,
+            "chaos kill_rate + stall_rate must not exceed 1"
+        );
+        anyhow::ensure!(self.stall_ticks >= 1, "chaos stall_ticks must be >= 1");
+        Ok(())
+    }
+
+    /// The deterministic decision for the `seq`-th claim of `stage`.
+    pub fn decide_at(&self, stage: Stage, seq: u64) -> Option<FaultKind> {
+        if !self.enabled() {
+            return None;
+        }
+        let tag = stage_index(stage) as u64 + 1;
+        let mut rng = Rng::new(
+            self.seed
+                ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (seq + 1).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let d = rng.f64();
+        if d < self.kill_rate {
+            Some(FaultKind::Kill)
+        } else if d < self.kill_rate + self.stall_rate {
+            Some(FaultKind::Stall)
+        } else {
+            None
+        }
+    }
+}
+
+fn stage_index(stage: Stage) -> usize {
+    Stage::ALL.iter().position(|&s| s == stage).unwrap()
+}
+
+/// How a stage loop ended: ran to shutdown, or was fault-killed and wants
+/// the supervisor to respawn it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageExit {
+    Completed,
+    Killed,
+}
+
+/// Shared across stage-thread incarnations: per-stage claim sequence
+/// numbers (so the decision stream survives restarts) plus injected-fault
+/// accounting.
+#[derive(Debug)]
+pub struct FaultInjector {
+    pub plan: FaultPlan,
+    seq: [AtomicU64; 5],
+    injected: AtomicU64,
+    kills: AtomicU64,
+    stalls: AtomicU64,
+    restarts: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            seq: Default::default(),
+            injected: AtomicU64::new(0),
+            kills: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+        }
+    }
+
+    /// Consume the next decision of `stage`'s claim stream.
+    pub fn decide(&self, stage: Stage) -> Option<FaultKind> {
+        let seq = self.seq[stage_index(stage)].fetch_add(1, Ordering::Relaxed);
+        let fault = self.plan.decide_at(stage, seq)?;
+        if self.plan.max_faults > 0 {
+            // reserve an injection slot atomically: concurrent stage
+            // threads must not overshoot the cap (it is the convergence
+            // guarantee for aggressive rates)
+            let reserved = self.injected.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < self.plan.max_faults).then_some(n + 1)
+            });
+            if reserved.is_err() {
+                return None;
+            }
+        } else {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        match fault {
+            FaultKind::Kill => self.kills.fetch_add(1, Ordering::Relaxed),
+            FaultKind::Stall => self.stalls.fetch_add(1, Ordering::Relaxed),
+        };
+        Some(fault)
+    }
+
+    /// Deterministic stall: park until the flow's logical lease clock has
+    /// advanced `stall_ticks` past the stall's start (or shutdown). The
+    /// clock only moves on the driver's idle passes, so the stall's
+    /// length is measured in reclaim opportunities, not milliseconds.
+    pub fn stall(&self, flow: &dyn SampleFlow, shutdown: &AtomicBool) {
+        let target = flow.lease_now().saturating_add(self.plan.stall_ticks);
+        while flow.lease_now() < target && !shutdown.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Record a stage respawn after a kill.
+    pub fn note_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn kills(&self) -> u64 {
+        self.kills.load(Ordering::Relaxed)
+    }
+
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_in_seed_stage_seq() {
+        let plan = FaultPlan { seed: 42, kill_rate: 0.3, stall_rate: 0.3, ..Default::default() };
+        for stage in Stage::ALL {
+            for seq in 0..50 {
+                assert_eq!(plan.decide_at(stage, seq), plan.decide_at(stage, seq));
+            }
+        }
+        // different stages see different streams
+        let a: Vec<_> = (0..50).map(|s| plan.decide_at(Stage::Generation, s)).collect();
+        let b: Vec<_> = (0..50).map(|s| plan.decide_at(Stage::Reward, s)).collect();
+        assert_ne!(a, b, "stage streams should decorrelate");
+        // a different seed reshuffles the schedule
+        let plan2 = FaultPlan { seed: 43, ..plan };
+        let a2: Vec<_> = (0..50).map(|s| plan2.decide_at(Stage::Generation, s)).collect();
+        assert_ne!(a, a2);
+    }
+
+    #[test]
+    fn rates_partition_the_draw() {
+        let never = FaultPlan::default();
+        assert!(!never.enabled());
+        assert_eq!(never.decide_at(Stage::Generation, 0), None);
+        let always_kill = FaultPlan { kill_rate: 1.0, ..Default::default() };
+        let always_stall = FaultPlan { stall_rate: 1.0, ..Default::default() };
+        for seq in 0..20 {
+            assert_eq!(always_kill.decide_at(Stage::Reward, seq), Some(FaultKind::Kill));
+            assert_eq!(always_stall.decide_at(Stage::Reward, seq), Some(FaultKind::Stall));
+        }
+    }
+
+    #[test]
+    fn observed_rates_track_configured_rates() {
+        let plan = FaultPlan { seed: 7, kill_rate: 0.25, stall_rate: 0.25, ..Default::default() };
+        let n = 2000;
+        let faults = (0..n)
+            .filter(|&s| plan.decide_at(Stage::OldLogprob, s).is_some())
+            .count() as f64;
+        let frac = faults / n as f64;
+        assert!((0.40..=0.60).contains(&frac), "observed fault rate {frac}");
+    }
+
+    #[test]
+    fn injector_caps_and_counts() {
+        let plan = FaultPlan { seed: 1, kill_rate: 1.0, max_faults: 3, ..Default::default() };
+        let inj = FaultInjector::new(plan);
+        let mut hit = 0;
+        for _ in 0..10 {
+            if inj.decide(Stage::Generation).is_some() {
+                hit += 1;
+            }
+        }
+        assert_eq!(hit, 3, "max_faults must cap injection");
+        assert_eq!(inj.kills(), 3);
+        inj.note_restart();
+        assert_eq!(inj.restarts(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_rates() {
+        assert!(FaultPlan { kill_rate: -0.1, ..Default::default() }.validate().is_err());
+        assert!(FaultPlan { kill_rate: 0.7, stall_rate: 0.7, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FaultPlan { stall_ticks: 0, stall_rate: 0.1, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FaultPlan { kill_rate: 0.5, stall_rate: 0.5, ..Default::default() }
+            .validate()
+            .is_ok());
+    }
+}

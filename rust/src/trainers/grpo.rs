@@ -58,6 +58,23 @@ pub struct GrpoConfig {
     /// property suite to recompute each sample's old-logprob from scratch
     /// under its stamped version.
     pub keep_weight_history: bool,
+    /// claim-lease duration in logical ticks (the executor ticks the
+    /// clock only on idle driver passes): a stage worker that claims work
+    /// and then shows no writeback activity for this many ticks loses the
+    /// claim — the samples return to the ready pool for redispatch
+    pub lease_ticks: u64,
+    /// chaos: probability each stage claim's worker is killed (pipelined
+    /// mode only; 0 disables)
+    pub chaos_kill_rate: f64,
+    /// chaos: probability each stage claim's worker stalls past its lease
+    pub chaos_stall_rate: f64,
+    /// chaos: stall length in logical lease-clock ticks
+    pub chaos_stall_ticks: u64,
+    /// chaos: fault-schedule seed (independent of the workload seed so
+    /// the same training stream can be replayed under different faults)
+    pub chaos_seed: u64,
+    /// chaos: stop injecting after this many faults (0 = unbounded)
+    pub chaos_max_faults: u64,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -79,7 +96,34 @@ impl GrpoConfig {
             "max_inflight_iters must be >= 1 (1 = lockstep admission)"
         );
         anyhow::ensure!(self.max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        anyhow::ensure!(
+            self.lease_ticks >= 2,
+            "lease_ticks must be >= 2: a lease of T ticks expires on the T-th \
+             tick after grant/renewal, so T=1 would reclaim held claims on the \
+             very pass that renewed them"
+        );
+        self.fault_plan().map(|p| p.validate()).unwrap_or(Ok(()))?;
+        anyhow::ensure!(
+            self.fault_plan().is_none() || self.pipeline == PipelineMode::Pipelined,
+            "chaos fault injection requires --pipeline pipelined (sync has no \
+             concurrent stage workers to kill)"
+        );
         Ok(())
+    }
+
+    /// The configured chaos schedule, if any (None when both rates are 0).
+    pub fn fault_plan(&self) -> Option<super::faults::FaultPlan> {
+        let plan = super::faults::FaultPlan {
+            // default the fault stream to the workload seed, but keep it
+            // overridable so the same training stream can be replayed
+            // under a different fault schedule
+            seed: if self.chaos_seed != 0 { self.chaos_seed } else { self.seed ^ 0xc4a0_5 },
+            kill_rate: self.chaos_kill_rate,
+            stall_rate: self.chaos_stall_rate,
+            stall_ticks: self.chaos_stall_ticks,
+            max_faults: self.chaos_max_faults,
+        };
+        plan.enabled().then_some(plan)
     }
 }
 
@@ -99,6 +143,12 @@ impl Default for GrpoConfig {
             max_inflight_iters: 2,
             gen_logprobs: false,
             keep_weight_history: false,
+            lease_ticks: crate::transfer_dock::DEFAULT_LEASE_TICKS,
+            chaos_kill_rate: 0.0,
+            chaos_stall_rate: 0.0,
+            chaos_stall_ticks: 12,
+            chaos_seed: 0,
+            chaos_max_faults: 0,
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -177,9 +227,9 @@ impl TrainReport {
 /// Run GRPO end-to-end on the loaded artifacts.
 pub fn run_grpo(engine: &Engine, cfg: &GrpoConfig) -> Result<TrainReport> {
     let flow: Arc<dyn SampleFlow> = if cfg.use_replay_buffer {
-        Arc::new(ReplayBuffer::new(0))
+        Arc::new(ReplayBuffer::with_lease(0, cfg.lease_ticks))
     } else {
-        Arc::new(TransferDock::new(DockTopology::spread(cfg.nodes)))
+        Arc::new(TransferDock::with_lease(DockTopology::spread(cfg.nodes), cfg.lease_ticks))
     };
     run_grpo_on_flow(engine, cfg, flow)
 }
@@ -246,6 +296,35 @@ fn resize_f32(v: &[f32], n: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::runtime::artifact_dir;
+
+    #[test]
+    fn chaos_config_gating() {
+        // no rates → no plan
+        assert!(GrpoConfig::default().fault_plan().is_none());
+        // rates in pipelined mode validate; in sync mode they are rejected
+        let mut cfg = GrpoConfig {
+            chaos_kill_rate: 0.2,
+            chaos_stall_rate: 0.1,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_ok());
+        let plan = cfg.fault_plan().expect("rates > 0 must build a plan");
+        assert!(plan.enabled());
+        assert_ne!(plan.seed, 0, "fault seed must default off the workload seed");
+        cfg.pipeline = PipelineMode::Sync;
+        assert!(cfg.validate().is_err(), "chaos requires the pipelined executor");
+        // degenerate lease is rejected
+        let bad = GrpoConfig { lease_ticks: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        // out-of-range rates are rejected
+        let bad = GrpoConfig {
+            chaos_kill_rate: 1.5,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
 
     #[test]
     fn two_iterations_end_to_end_dock() {

@@ -8,10 +8,12 @@
 
 mod eval;
 mod executor;
+pub mod faults;
 mod grpo;
 mod variants;
 
 pub use eval::{evaluate, EvalResult};
 pub use executor::{PipelineMode, StagePlacement};
+pub use faults::{FaultInjector, FaultKind, FaultPlan, StageExit};
 pub use grpo::{run_grpo, run_grpo_on_flow, GrpoConfig, IterationMetrics, TrainReport};
 pub use variants::{AdvantageKind, filter_groups_dapo, pf_ppo_reweight, ppo_gae_advantages};

@@ -5,11 +5,19 @@
 //! ready samples (a node-local request when the controller is co-located
 //! with the worker, which is the paper's point: it removes the cross-node
 //! request storm of a central buffer).
+//!
+//! Dispatch is **lease-based** (see [`super::lease`]): a handout latches
+//! the sample against double dispatch only for as long as the claiming
+//! worker shows liveness. Writebacks renew the lease, completion clears
+//! it, and expiry returns the sample to the ready pool with a bumped
+//! attempt counter so a died/stalled worker can never strand work.
 
-use std::collections::{BTreeMap, HashSet};
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
+use super::lease::{LeaseClock, LeaseTable, DEFAULT_LEASE_TICKS};
 use super::sample::{FieldKind, Stage};
+use crate::metrics::FlowRecovery;
 
 /// Metadata about one sample, as replicated to every controller.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,38 +67,59 @@ pub struct Controller {
     pub stage: Stage,
     /// node the controller lives on (co-located with its worker)
     pub node: usize,
+    /// flow-wide logical clock the claim leases are measured against
+    clock: Arc<LeaseClock>,
+    /// lease duration granted to this stage's claims, in clock ticks
+    lease_ticks: u64,
     inner: Mutex<Inner>,
 }
 
 #[derive(Debug, Default)]
 struct Inner {
     metas: BTreeMap<u64, SampleMeta>,
-    /// samples handed out for this stage and not yet re-broadcast
-    in_flight: HashSet<u64>,
+    /// samples handed out for this stage, with lease + attempt tracking
+    leases: LeaseTable,
     /// metadata traffic received (bytes), for Eq. (4) accounting
     meta_bytes: u64,
 }
 
 impl Controller {
+    /// Standalone controller with its own clock (unit tests; a clock
+    /// nobody ticks reproduces the pre-lease latch semantics exactly).
     pub fn new(stage: Stage, node: usize) -> Self {
-        Self { stage, node, inner: Mutex::new(Inner::default()) }
+        Self::with_lease(stage, node, Arc::new(LeaseClock::default()), DEFAULT_LEASE_TICKS)
+    }
+
+    /// Controller sharing the owning flow's lease clock.
+    pub fn with_lease(
+        stage: Stage,
+        node: usize,
+        clock: Arc<LeaseClock>,
+        lease_ticks: u64,
+    ) -> Self {
+        Self { stage, node, clock, lease_ticks, inner: Mutex::new(Inner::default()) }
     }
 
     /// Receive a metadata broadcast from a warehouse.
     ///
-    /// The in-flight latch is cleared only when the broadcast shows the
+    /// The claim lease is cleared only when the broadcast shows the
     /// sample is no longer ready for *this* stage (its work completed).
     /// A cross-stage writeback — e.g. the reward landing while an
-    /// old-logprob claim is outstanding — leaves the claim latched, so
-    /// concurrent stage workers never dispatch the same work twice.
+    /// old-logprob claim is outstanding — leaves the claim latched but
+    /// **renews its lease**: writeback traffic for the sample is evidence
+    /// the flow is alive, so concurrent stage workers never dispatch the
+    /// same work twice while progress is being made.
     pub fn on_broadcast(&self, meta: SampleMeta) {
         let mut g = self.inner.lock().unwrap();
         g.meta_bytes += SampleMeta::WIRE_BYTES;
         if meta.ready_for(self.stage) {
             g.metas.insert(meta.index, meta);
+            if g.leases.is_claimed(meta.index) {
+                g.leases.renew(meta.index, self.clock.now(), self.lease_ticks);
+            }
         } else {
             g.metas.remove(&meta.index);
-            g.in_flight.remove(&meta.index);
+            g.leases.complete(meta.index);
         }
     }
 
@@ -99,24 +128,26 @@ impl Controller {
         let mut g = self.inner.lock().unwrap();
         g.meta_bytes += SampleMeta::WIRE_BYTES;
         g.metas.remove(&index);
-        g.in_flight.remove(&index);
+        g.leases.forget(index);
     }
 
-    /// Hand out up to `max_n` ready samples (marks them in-flight so the
-    /// same work is not dispatched twice).
+    /// Hand out up to `max_n` ready samples under fresh leases (live
+    /// leases are not re-issued, so the same work is never dispatched
+    /// twice while the claimant is live).
     pub fn request(&self, max_n: usize) -> Vec<SampleMeta> {
+        let now = self.clock.now();
         let mut g = self.inner.lock().unwrap();
         let mut out = Vec::new();
         for (&idx, meta) in g.metas.iter() {
             if out.len() >= max_n {
                 break;
             }
-            if !g.in_flight.contains(&idx) {
+            if !g.leases.is_claimed(idx) {
                 out.push(*meta);
             }
         }
         for m in &out {
-            g.in_flight.insert(m.index);
+            g.leases.claim(m.index, now, self.lease_ticks);
         }
         out
     }
@@ -125,17 +156,42 @@ impl Controller {
     pub fn release(&self, indices: &[u64]) {
         let mut g = self.inner.lock().unwrap();
         for i in indices {
-            g.in_flight.remove(i);
+            g.leases.release(*i);
         }
+    }
+
+    /// Extend the leases of claims the caller still holds.
+    pub fn renew(&self, indices: &[u64]) {
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        for i in indices {
+            g.leases.renew(*i, now, self.lease_ticks);
+        }
+    }
+
+    /// Reclaim claims whose lease expired by `now`; the samples become
+    /// requestable again. Returns the reclaimed count.
+    pub fn expire(&self, now: u64) -> usize {
+        self.inner.lock().unwrap().leases.expire(now).len()
+    }
+
+    /// Prior expired dispatches of one sample (0 once it completes).
+    pub fn attempt(&self, index: u64) -> u32 {
+        self.inner.lock().unwrap().leases.attempt(index)
     }
 
     pub fn ready_count(&self) -> usize {
         let g = self.inner.lock().unwrap();
-        g.metas.len() - g.in_flight.len()
+        g.metas.len() - g.leases.live()
     }
 
     pub fn meta_bytes(&self) -> u64 {
         self.inner.lock().unwrap().meta_bytes
+    }
+
+    /// Lease accounting for this controller.
+    pub fn lease_stats(&self) -> FlowRecovery {
+        self.inner.lock().unwrap().leases.stats()
     }
 }
 
@@ -226,5 +282,58 @@ mod tests {
         c.on_broadcast(meta(1, 0));
         c.on_retire(1);
         assert_eq!(c.meta_bytes(), 2 * SampleMeta::WIRE_BYTES);
+    }
+
+    #[test]
+    fn expired_lease_reclaims_and_counts_redispatch() {
+        let clock = Arc::new(LeaseClock::default());
+        let c = Controller::with_lease(Stage::Generation, 0, Arc::clone(&clock), 2);
+        c.on_broadcast(meta(1, 0));
+        assert_eq!(c.request(10).len(), 1);
+        assert!(c.request(10).is_empty());
+        // one tick: lease (2 ticks) still live
+        assert_eq!(c.expire(clock.advance()), 0);
+        assert!(c.request(10).is_empty(), "live lease must hold through a tick");
+        // second tick: lease expires, sample returns to the pool
+        assert_eq!(c.expire(clock.advance()), 1);
+        assert_eq!(c.attempt(1), 1);
+        let again = c.request(10);
+        assert_eq!(again.len(), 1, "reclaimed sample must be requestable");
+        let s = c.lease_stats();
+        assert_eq!(s.reclaimed, 1);
+        assert_eq!(s.redispatched, 1);
+        assert!(s.consistent());
+    }
+
+    #[test]
+    fn writeback_renews_outstanding_lease() {
+        let clock = Arc::new(LeaseClock::default());
+        let c = Controller::with_lease(Stage::OldLogprob, 0, Arc::clone(&clock), 2);
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit()));
+        assert_eq!(c.request(10).len(), 1);
+        clock.advance();
+        // a cross-stage writeback (reward) renews the old-lp claim's
+        // lease: granted at tick 0 (expiry 2), renewed at tick 1 → 3
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit() | FieldKind::Reward.bit()));
+        // the original expiry (tick 2) passes without a reclaim ...
+        assert_eq!(c.expire(clock.advance()), 0, "renewed lease expired early");
+        // ... and the renewed lease expires at tick 3
+        assert_eq!(c.expire(clock.advance()), 1);
+        assert!(c.lease_stats().leases_renewed >= 1);
+    }
+
+    #[test]
+    fn completion_clears_attempt_history() {
+        let clock = Arc::new(LeaseClock::default());
+        let c = Controller::with_lease(Stage::Generation, 0, Arc::clone(&clock), 1);
+        c.on_broadcast(meta(1, 0));
+        c.request(10);
+        c.expire(clock.advance());
+        assert_eq!(c.attempt(1), 1);
+        c.request(10);
+        // generation completes: sample no longer generation-ready
+        c.on_broadcast(meta(1, FieldKind::Tokens.bit()));
+        assert_eq!(c.attempt(1), 0, "completion must clear the attempt counter");
+        assert_eq!(c.ready_count(), 0);
     }
 }

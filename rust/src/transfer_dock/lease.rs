@@ -1,0 +1,230 @@
+//! Claim leases: logical-time liveness tracking for dispatched samples.
+//!
+//! A `request`/`wait_ready` handout is no longer an unconditional latch —
+//! it is a **lease** against a logical clock. The clock is ticked by the
+//! driving executor (never by wall time, so fault tests stay fully
+//! deterministic): while the stage workers make progress the driver has
+//! work and the clock stands still; when the flow stalls the driver's
+//! idle passes advance it. A lease that outlives `lease_ticks` ticks
+//! without a renewing writeback is **reclaimed** — the sample returns to
+//! the ready pool with a bumped attempt counter, and the next grant of
+//! that sample counts as a **redispatch**. `release` cancels a lease
+//! cooperatively (no attempt bump: the worker gave the claim back);
+//! completion and retire drop the lease and its attempt history.
+//!
+//! This is the recovery half of the paper's reliability claim: a stage
+//! worker that dies or stalls after claiming work can no longer strand
+//! its samples forever — the dataflow notices the silence and re-routes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::metrics::FlowRecovery;
+
+/// Default lease duration in logical ticks. The executor ticks only on
+/// idle driver passes (~50 ms apart), so the default tolerates several
+/// seconds of a stage worker making zero writebacks before reclaiming.
+pub const DEFAULT_LEASE_TICKS: u64 = 64;
+
+/// The flow-wide logical clock leases are measured against. Shared by
+/// every controller of a flow; advanced only by the driving executor.
+#[derive(Debug, Default)]
+pub struct LeaseClock {
+    tick: AtomicU64,
+}
+
+impl LeaseClock {
+    pub fn now(&self) -> u64 {
+        self.tick.load(Ordering::Acquire)
+    }
+
+    /// Advance logical time by one tick; returns the new now.
+    pub fn advance(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+/// Lease bookkeeping for one claim domain (one controller's stage, or one
+/// stage partition of the centralized replay buffer). Not thread-safe on
+/// its own — lives inside the owning flow's mutex.
+#[derive(Debug, Default)]
+pub struct LeaseTable {
+    /// live claims: sample index → tick at which the lease expires
+    leases: HashMap<u64, u64>,
+    /// reclaim history: sample index → expired dispatch attempts
+    attempts: HashMap<u64, u32>,
+    granted: u64,
+    renewed: u64,
+    reclaimed: u64,
+    redispatched: u64,
+    attempt_bumps: u64,
+    max_attempt: u32,
+}
+
+impl LeaseTable {
+    pub fn is_claimed(&self, index: u64) -> bool {
+        self.leases.contains_key(&index)
+    }
+
+    pub fn live(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Prior expired dispatches of this sample.
+    pub fn attempt(&self, index: u64) -> u32 {
+        self.attempts.get(&index).copied().unwrap_or(0)
+    }
+
+    /// A lease of `ticks` expires on the `ticks`-th tick after the grant
+    /// or renewal (`expires_at <= now` reclaims). Drivers that renew
+    /// once per pass and tick on the same pass therefore need
+    /// `ticks >= 2` for renewal to be effective — `GrpoConfig::validate`
+    /// enforces that for the executor.
+    fn expiry(now: u64, ticks: u64) -> u64 {
+        now.saturating_add(ticks.max(1))
+    }
+
+    /// Grant a lease (the caller has verified the sample is ready and
+    /// unclaimed). A grant of a previously-reclaimed sample counts as a
+    /// redispatch.
+    pub fn claim(&mut self, index: u64, now: u64, ticks: u64) {
+        self.granted += 1;
+        if self.attempt(index) > 0 {
+            self.redispatched += 1;
+        }
+        self.leases.insert(index, Self::expiry(now, ticks));
+    }
+
+    /// Extend a live lease (writeback activity or an explicit renew from
+    /// a long-holding consumer). No-op for unclaimed samples.
+    pub fn renew(&mut self, index: u64, now: u64, ticks: u64) -> bool {
+        match self.leases.get_mut(&index) {
+            Some(exp) => {
+                *exp = Self::expiry(now, ticks);
+                self.renewed += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Cooperative give-back: the worker still holds the claim and hands
+    /// it back unprocessed. Not a failure — no attempt bump.
+    pub fn release(&mut self, index: u64) {
+        self.leases.remove(&index);
+    }
+
+    /// The claimed work completed (a writeback made the sample unready
+    /// for this domain): drop the lease and the attempt history.
+    pub fn complete(&mut self, index: u64) {
+        self.leases.remove(&index);
+        self.attempts.remove(&index);
+    }
+
+    /// The sample left the flow entirely (retired).
+    pub fn forget(&mut self, index: u64) {
+        self.leases.remove(&index);
+        self.attempts.remove(&index);
+    }
+
+    /// Reclaim every lease that expired at or before `now`: the sample
+    /// returns to the ready pool and its attempt counter bumps. Returns
+    /// the reclaimed sample indices.
+    pub fn expire(&mut self, now: u64) -> Vec<u64> {
+        let dead: Vec<u64> = self
+            .leases
+            .iter()
+            .filter(|(_, &exp)| exp <= now)
+            .map(|(&idx, _)| idx)
+            .collect();
+        for &idx in &dead {
+            self.leases.remove(&idx);
+            let a = self.attempts.entry(idx).or_insert(0);
+            *a += 1;
+            self.max_attempt = self.max_attempt.max(*a);
+            self.reclaimed += 1;
+            self.attempt_bumps += 1;
+        }
+        dead
+    }
+
+    /// Accounting snapshot (lease counters only; the executor fills the
+    /// fault-injection fields).
+    pub fn stats(&self) -> FlowRecovery {
+        FlowRecovery {
+            leases_granted: self.granted,
+            leases_renewed: self.renewed,
+            reclaimed: self.reclaimed,
+            redispatched: self.redispatched,
+            attempt_bumps: self.attempt_bumps,
+            max_attempt: self.max_attempt,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let c = LeaseClock::default();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(), 1);
+        assert_eq!(c.advance(), 2);
+        assert_eq!(c.now(), 2);
+    }
+
+    #[test]
+    fn lease_lifecycle_grant_expire_redispatch() {
+        let mut t = LeaseTable::default();
+        t.claim(7, 0, 2);
+        assert!(t.is_claimed(7));
+        // not yet: expires at tick 2
+        assert!(t.expire(1).is_empty());
+        assert_eq!(t.expire(2), vec![7]);
+        assert!(!t.is_claimed(7));
+        assert_eq!(t.attempt(7), 1);
+        // the re-grant is a redispatch
+        t.claim(7, 2, 2);
+        let s = t.stats();
+        assert_eq!(s.leases_granted, 2);
+        assert_eq!(s.reclaimed, 1);
+        assert_eq!(s.redispatched, 1);
+        assert_eq!(s.attempt_bumps, 1);
+        assert_eq!(s.max_attempt, 1);
+        assert!(s.consistent());
+    }
+
+    #[test]
+    fn renew_extends_and_complete_clears_history() {
+        let mut t = LeaseTable::default();
+        t.claim(1, 0, 2);
+        assert!(t.renew(1, 3, 2)); // now expires at 5
+        assert!(t.expire(4).is_empty());
+        assert_eq!(t.expire(5), vec![1]);
+        // second dispatch completes: attempt history is dropped
+        t.claim(1, 5, 2);
+        t.complete(1);
+        assert_eq!(t.attempt(1), 0);
+        assert!(!t.renew(9, 0, 2), "renewing an unclaimed sample is a no-op");
+    }
+
+    #[test]
+    fn release_is_not_a_failure() {
+        let mut t = LeaseTable::default();
+        t.claim(3, 0, 2);
+        t.release(3);
+        assert!(!t.is_claimed(3));
+        assert_eq!(t.attempt(3), 0, "release must not bump attempts");
+        assert_eq!(t.stats().reclaimed, 0);
+    }
+
+    #[test]
+    fn saturating_lease_never_expires() {
+        let mut t = LeaseTable::default();
+        t.claim(1, 5, u64::MAX);
+        assert!(t.expire(u64::MAX - 1).is_empty());
+    }
+}

@@ -21,6 +21,7 @@
 
 mod controller;
 mod dock;
+pub mod lease;
 mod network;
 mod notify;
 mod replay_buffer;
@@ -30,11 +31,12 @@ mod warehouse;
 
 pub use controller::{Controller, SampleMeta};
 pub use dock::{DockTopology, TransferDock};
+pub use lease::{LeaseClock, DEFAULT_LEASE_TICKS};
 pub use network::{CommLedger, LinkClass, NetworkModel};
 pub use replay_buffer::ReplayBuffer;
 pub use sample::{FieldKind, Sample, Stage, FIELD_ORDER};
 pub use volume::{td_tcv_gb, tcv_gb, cv_update_gb, VolumeParams};
-pub use warehouse::Warehouse;
+pub use warehouse::{Conservation, StoreOutcome, Warehouse};
 
 use anyhow::Result;
 
@@ -58,9 +60,40 @@ pub trait SampleFlow: Send + Sync {
     ) -> Result<Vec<SampleMeta>>;
     /// Return claimed-but-unprocessed samples to the ready pool (e.g. the
     /// update state handing back groups that are not yet complete).
+    /// Cooperative: the caller asserts it still holds the claim — a worker
+    /// that outlived its lease must NOT release (its claim already went
+    /// back to the pool, possibly to another worker).
     fn release(&self, stage: Stage, indices: &[u64]);
+    /// Advance the flow's logical lease clock by one tick and reclaim
+    /// every claim whose lease expired — the sample returns to the ready
+    /// pool with a bumped attempt counter. Called by the *driving*
+    /// executor on idle passes (logical time, never wall time, so chaos
+    /// tests stay deterministic). Returns how many claims were reclaimed.
+    fn tick_lease_clock(&self) -> usize {
+        0
+    }
+    /// Current logical lease time (0 for flows without a lease clock).
+    fn lease_now(&self) -> u64 {
+        0
+    }
+    /// Extend the leases of claims the caller legitimately still holds
+    /// (e.g. the update state holding partial GRPO groups across ticks).
+    fn renew(&self, _stage: Stage, _indices: &[u64]) {}
+    /// Lease / reclaim / redispatch accounting across the flow.
+    fn lease_stats(&self) -> crate::metrics::FlowRecovery {
+        crate::metrics::FlowRecovery::default()
+    }
     /// Fetch full payloads for the given metadata (records comm bytes).
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
+    /// Lease-tolerant fetch for stage workers: metas whose sample is no
+    /// longer resident (a stale claim whose sample was reclaimed,
+    /// re-processed, and retired while this worker was stalled) are
+    /// silently skipped instead of erroring, so a recovered flow never
+    /// kills the late worker. Defaults to the strict [`Self::fetch`] for
+    /// flows without leases.
+    fn fetch_resident(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
+        self.fetch(requester_node, metas)
+    }
     /// Write fields back for a sample after a stage completes.
     fn store_fields(
         &self,

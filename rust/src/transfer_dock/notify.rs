@@ -28,6 +28,15 @@ impl Notifier {
         self.cv.notify_all();
     }
 
+    /// Conditional [`Self::notify`]: wake waiters only when something
+    /// actually changed (the lease-clock tick path reclaims in bulk and
+    /// must not wake every stage worker on a quiet tick).
+    pub fn notify_if(&self, changed: bool) {
+        if changed {
+            self.notify();
+        }
+    }
+
     /// Current epoch; read *before* polling so a concurrent change between
     /// poll and wait is never missed.
     pub fn epoch(&self) -> u64 {

@@ -4,18 +4,23 @@
 //! One store on one node; every worker on every other node pays an
 //! inter-node payload transfer for every request, and readiness tracking
 //! is a scan of the central map (the congestion the paper's Eq. 2
-//! quantifies).
+//! quantifies). Dispatch is lease-based exactly like the dock's (one
+//! [`LeaseTable`] per stage against a shared logical clock), so the
+//! `SampleFlow` recovery contract holds identically for both dataflows.
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::controller::SampleMeta;
+use super::lease::{LeaseClock, LeaseTable, DEFAULT_LEASE_TICKS};
 use super::network::{CommLedger, LinkClass, SharedLedger};
 use super::notify::{wait_ready_impl, Notifier};
 use super::sample::{FieldKind, Sample, Stage};
+use super::warehouse::Conservation;
 use super::SampleFlow;
+use crate::metrics::FlowRecovery;
 use crate::runtime::Tensor;
 
 pub struct ReplayBuffer {
@@ -26,23 +31,45 @@ pub struct ReplayBuffer {
     next_index: AtomicU64,
     /// wakes blocked stage workers on every state change (wait_ready)
     notify: Notifier,
+    clock: Arc<LeaseClock>,
+    lease_ticks: u64,
 }
 
 #[derive(Default)]
 struct Inner {
     samples: BTreeMap<u64, Sample>,
-    in_flight: std::collections::HashSet<(Stage, u64)>,
+    /// per-stage claim leases (the dock keeps these in its controllers)
+    leases: HashMap<Stage, LeaseTable>,
     traffic_bytes: u64,
+    /// running resident-byte counter + conservation accounting, matching
+    /// the warehouse's invariant: admitted == resident + retired
+    resident_bytes: u64,
+    admitted_bytes: u64,
+    retired_bytes: u64,
+    superseded: u64,
+}
+
+impl Inner {
+    fn lease(&mut self, stage: Stage) -> &mut LeaseTable {
+        self.leases.entry(stage).or_default()
+    }
 }
 
 impl ReplayBuffer {
     pub fn new(node: usize) -> Self {
+        Self::with_lease(node, DEFAULT_LEASE_TICKS)
+    }
+
+    /// Build with an explicit claim-lease duration (logical ticks).
+    pub fn with_lease(node: usize, lease_ticks: u64) -> Self {
         Self {
             node,
             inner: Mutex::new(Inner::default()),
             ledger: SharedLedger::default(),
             next_index: AtomicU64::new(0),
             notify: Notifier::default(),
+            clock: Arc::new(LeaseClock::default()),
+            lease_ticks,
         }
     }
 
@@ -66,9 +93,10 @@ impl ReplayBuffer {
         }
     }
 
-    /// Scan for ready samples and latch them in-flight; returns the picks
-    /// plus how many candidates were scanned (the ledger-cost driver).
+    /// Scan for ready samples and lease them out; returns the picks plus
+    /// how many candidates were scanned (the ledger-cost driver).
     fn scan_ready(&self, stage: Stage, max_n: usize) -> (Vec<SampleMeta>, u64) {
+        let now = self.clock.now();
         let mut g = self.inner.lock().unwrap();
         let mut out = Vec::new();
         let mut scanned = 0u64;
@@ -79,13 +107,15 @@ impl ReplayBuffer {
                 break;
             }
             let meta = Self::meta_of(s);
-            if meta.ready_for(stage) && !g.in_flight.contains(&(stage, idx)) {
+            if meta.ready_for(stage) && !g.leases.get(&stage).is_some_and(|t| t.is_claimed(idx)) {
                 out.push(meta);
                 picked.push(idx);
             }
         }
+        let ticks = self.lease_ticks;
+        let table = g.lease(stage);
         for idx in picked {
-            g.in_flight.insert((stage, idx));
+            table.claim(idx, now, ticks);
         }
         (out, scanned)
     }
@@ -94,9 +124,104 @@ impl ReplayBuffer {
     fn retire_inner(&self, index: u64) -> Option<Sample> {
         let mut g = self.inner.lock().unwrap();
         for st in Stage::ALL {
-            g.in_flight.remove(&(st, index));
+            g.lease(st).forget(index);
         }
-        g.samples.remove(&index)
+        let s = g.samples.remove(&index)?;
+        let bytes = s.payload_bytes() as u64;
+        g.resident_bytes -= bytes;
+        g.retired_bytes += bytes;
+        Some(s)
+    }
+
+    /// Byte-conservation snapshot of the central store.
+    pub fn conservation(&self) -> Conservation {
+        let g = self.inner.lock().unwrap();
+        debug_assert_eq!(
+            g.resident_bytes,
+            g.samples.values().map(|s| s.payload_bytes() as u64).sum::<u64>(),
+            "replay buffer: resident-byte counter diverged from the scan"
+        );
+        Conservation {
+            admitted_bytes: g.admitted_bytes,
+            resident_bytes: g.resident_bytes,
+            retired_bytes: g.retired_bytes,
+        }
+    }
+
+    /// Stale writebacks dropped (first-writer-wins / post-retire).
+    pub fn superseded_writebacks(&self) -> u64 {
+        self.inner.lock().unwrap().superseded
+    }
+
+    /// The single writeback path: merge fields (plus the generation
+    /// completion when present) under the lease rules — missing samples
+    /// and duplicate generations are dropped as superseded, completed
+    /// claims clear their lease, still-ready claimed samples get a lease
+    /// renewal (writeback activity is liveness evidence).
+    fn writeback(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: Option<(String, usize, u64)>,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        self.ledger.record(self.link(requester_node), bytes);
+        self.ledger.note_requests_on(self.link(requester_node), 1);
+        g.traffic_bytes += bytes;
+        let stale = match g.samples.get(&index) {
+            None => true,
+            Some(s) => completion.is_some() && s.has(FieldKind::Tokens),
+        };
+        if stale {
+            // staleness requires a reclaim, and reclaims require ticks —
+            // in a never-ticked flow a dropped writeback is a caller bug,
+            // so keep it loud in debug builds (mirrors the dock)
+            debug_assert!(
+                self.clock.now() > 0,
+                "writeback for sample {index} dropped as superseded, but this \
+                 flow's lease clock never ticked (no reclaim can have happened \
+                 — wrong index or write-after-retire at the call site?)"
+            );
+            g.superseded += 1;
+            return Ok(());
+        }
+        let mut overwritten: u64 = 0;
+        let s = g.samples.get_mut(&index).expect("residency checked above");
+        for (k, t) in fields {
+            if let Some(old) = s.get(k) {
+                overwritten += old.size_bytes() as u64;
+            }
+            s.put(k, t);
+        }
+        if let Some((text, resp_len, behavior_version)) = completion {
+            s.completion_text = text;
+            s.resp_len = resp_len;
+            s.behavior_version = behavior_version;
+        }
+        let meta = Self::meta_of(s);
+        g.resident_bytes += bytes;
+        g.resident_bytes -= overwritten;
+        g.admitted_bytes += bytes;
+        g.retired_bytes += overwritten;
+        // clear leases only for stages this write completed; a cross-stage
+        // write must not re-dispatch an outstanding claim, but it renews
+        // the claim's lease (the sample is visibly alive)
+        let ticks = self.lease_ticks;
+        for st in Stage::ALL {
+            let table = g.lease(st);
+            if !meta.ready_for(st) {
+                table.complete(index);
+            } else if table.is_claimed(index) {
+                table.renew(index, now, ticks);
+            }
+        }
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        drop(g);
+        self.notify.notify();
+        Ok(())
     }
 }
 
@@ -108,9 +233,12 @@ impl SampleFlow for ReplayBuffer {
             let index = self.next_index.fetch_add(1, Ordering::Relaxed);
             s.index = index;
             // ingest from node 0's data loader to the buffer node
-            self.ledger.record(self.link(0), s.payload_bytes() as u64);
+            let bytes = s.payload_bytes() as u64;
+            self.ledger.record(self.link(0), bytes);
             self.ledger.note_requests_on(self.link(0), 1);
-            g.traffic_bytes += s.payload_bytes() as u64;
+            g.traffic_bytes += bytes;
+            g.resident_bytes += bytes;
+            g.admitted_bytes += bytes;
             g.samples.insert(index, s);
             out.push(index);
         }
@@ -144,10 +272,46 @@ impl SampleFlow for ReplayBuffer {
     fn release(&self, stage: Stage, indices: &[u64]) {
         let mut g = self.inner.lock().unwrap();
         for &i in indices {
-            g.in_flight.remove(&(stage, i));
+            g.lease(stage).release(i);
         }
         drop(g);
         self.notify.notify();
+    }
+
+    fn tick_lease_clock(&self) -> usize {
+        let now = self.clock.advance();
+        let mut g = self.inner.lock().unwrap();
+        let mut reclaimed = 0;
+        for st in Stage::ALL {
+            reclaimed += g.lease(st).expire(now).len();
+        }
+        drop(g);
+        self.notify.notify_if(reclaimed > 0);
+        reclaimed
+    }
+
+    fn lease_now(&self) -> u64 {
+        self.clock.now()
+    }
+
+    fn renew(&self, stage: Stage, indices: &[u64]) {
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        let ticks = self.lease_ticks;
+        let table = g.lease(stage);
+        for &i in indices {
+            table.renew(i, now, ticks);
+        }
+    }
+
+    fn lease_stats(&self) -> FlowRecovery {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = FlowRecovery::default();
+        for st in Stage::ALL {
+            out.merge(&g.lease(st).stats());
+        }
+        out.superseded_writebacks = g.superseded;
+        out
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
@@ -180,36 +344,28 @@ impl SampleFlow for ReplayBuffer {
         Ok(out)
     }
 
+    fn fetch_resident(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
+        self.ledger.note_requests_on(self.link(requester_node), 1);
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(metas.len());
+        for m in metas {
+            // a missing sample is a stale claim, not an error
+            let Some(s) = g.samples.get(&m.index).cloned() else { continue };
+            self.ledger.record(self.link(requester_node), s.payload_bytes() as u64);
+            g.traffic_bytes += s.payload_bytes() as u64;
+            out.push(s);
+        }
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        Ok(out)
+    }
+
     fn store_fields(
         &self,
         requester_node: usize,
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
     ) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        self.ledger.record(self.link(requester_node), bytes);
-        self.ledger.note_requests_on(self.link(requester_node), 1);
-        g.traffic_bytes += bytes;
-        let s = g
-            .samples
-            .get_mut(&index)
-            .ok_or_else(|| anyhow!("replay buffer: no sample {index}"))?;
-        for (k, t) in fields {
-            s.put(k, t);
-        }
-        // clear in-flight latches only for stages this write completed —
-        // a cross-stage write must not re-dispatch an outstanding claim
-        let meta = Self::meta_of(s);
-        for st in Stage::ALL {
-            if !meta.ready_for(st) {
-                g.in_flight.remove(&(st, index));
-            }
-        }
-        self.ledger.note_store_bytes(g.traffic_bytes);
-        drop(g);
-        self.notify.notify();
-        Ok(())
+        self.writeback(requester_node, index, fields, None)
     }
 
     fn store_generation(
@@ -221,13 +377,11 @@ impl SampleFlow for ReplayBuffer {
         resp_len: usize,
         behavior_version: u64,
     ) -> Result<()> {
-        self.store_generation_inner(
+        self.writeback(
             requester_node,
             index,
             fields,
-            completion,
-            resp_len,
-            behavior_version,
+            Some((completion, resp_len, behavior_version)),
         )
     }
 
@@ -247,32 +401,6 @@ impl SampleFlow for ReplayBuffer {
 
     fn len(&self) -> usize {
         self.inner.lock().unwrap().samples.len()
-    }
-}
-
-impl ReplayBuffer {
-    /// Generation-stage writeback including the completion text and the
-    /// behavior-policy version stamp.
-    fn store_generation_inner(
-        &self,
-        requester_node: usize,
-        index: u64,
-        fields: Vec<(FieldKind, Tensor)>,
-        completion: String,
-        resp_len: usize,
-        behavior_version: u64,
-    ) -> Result<()> {
-        {
-            let mut g = self.inner.lock().unwrap();
-            let s = g
-                .samples
-                .get_mut(&index)
-                .ok_or_else(|| anyhow!("replay buffer: no sample {index}"))?;
-            s.completion_text = completion;
-            s.resp_len = resp_len;
-            s.behavior_version = behavior_version;
-        }
-        self.store_fields(requester_node, index, fields)
     }
 }
 
@@ -326,5 +454,54 @@ mod tests {
         let after = rb.ledger().inter_node_bytes;
         // scanning 100 unready samples costs ~100 metadata records
         assert!(after - before >= 100 * SampleMeta::WIRE_BYTES);
+    }
+
+    #[test]
+    fn lease_expiry_matches_dock_semantics() {
+        let rb = ReplayBuffer::with_lease(0, 2);
+        rb.put_samples(prompts(2)).unwrap();
+        assert_eq!(rb.request_ready(Stage::Generation, 10).unwrap().len(), 2);
+        assert!(rb.request_ready(Stage::Generation, 10).unwrap().is_empty());
+        assert_eq!(rb.tick_lease_clock(), 0);
+        assert_eq!(rb.tick_lease_clock(), 2);
+        assert_eq!(rb.request_ready(Stage::Generation, 10).unwrap().len(), 2);
+        let s = rb.lease_stats();
+        assert_eq!(s.reclaimed, 2);
+        assert_eq!(s.redispatched, 2);
+        assert!(s.consistent());
+    }
+
+    #[test]
+    fn duplicate_generation_and_post_retire_writebacks_drop() {
+        let rb = ReplayBuffer::new(0);
+        // a ticked clock marks this as a lease-driven flow (stale
+        // writebacks are a legitimate possibility, not a caller bug)
+        rb.tick_lease_clock();
+        let idx = rb.put_samples(prompts(1)).unwrap()[0];
+        rb.store_generation(
+            0,
+            idx,
+            vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+            "first".into(),
+            1,
+            3,
+        )
+        .unwrap();
+        rb.store_generation(
+            0,
+            idx,
+            vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![9; 4]).unwrap())],
+            "late".into(),
+            2,
+            9,
+        )
+        .unwrap();
+        let s = rb.fetch(0, &rb.request_ready(Stage::Reward, 1).unwrap()).unwrap();
+        assert_eq!(s[0].completion_text, "first", "first generation must win");
+        assert_eq!(s[0].behavior_version, 3);
+        assert!(rb.retire(idx).is_some());
+        rb.store_fields(0, idx, vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))]).unwrap();
+        assert_eq!(rb.superseded_writebacks(), 2);
+        assert!(rb.conservation().holds());
     }
 }

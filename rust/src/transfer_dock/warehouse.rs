@@ -7,6 +7,45 @@ use std::sync::Mutex;
 use super::sample::{FieldKind, Sample};
 use crate::runtime::Tensor;
 
+/// Byte-conservation snapshot of one payload store: everything that ever
+/// became resident is either still resident or has left through a retire
+/// / overwrite — `admitted == resident + retired` at every quiescent
+/// point (the chaos suite's conservation invariant).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Conservation {
+    /// Σ bytes that entered residency (admissions + merged writebacks)
+    pub admitted_bytes: u64,
+    /// bytes currently resident
+    pub resident_bytes: u64,
+    /// Σ bytes that left residency (retired samples + overwritten fields)
+    pub retired_bytes: u64,
+}
+
+impl Conservation {
+    pub fn holds(&self) -> bool {
+        self.admitted_bytes == self.resident_bytes + self.retired_bytes
+    }
+
+    pub fn merge(&mut self, other: &Conservation) {
+        self.admitted_bytes += other.admitted_bytes;
+        self.resident_bytes += other.resident_bytes;
+        self.retired_bytes += other.retired_bytes;
+    }
+}
+
+/// Outcome of a writeback merge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOutcome {
+    /// fields merged; the new presence bitmask
+    Merged(u8),
+    /// stale writeback dropped: the sample is gone (reclaimed claim whose
+    /// sample was re-processed and retired) or a later generation already
+    /// landed (generation writebacks are first-writer-wins, so a sample's
+    /// response — and its `behavior_version` stamp — never changes once
+    /// set, keeping every downstream recompute idempotent)
+    Superseded,
+}
+
 /// A payload shard. Thread-safe; workers on any node may fetch from it,
 /// and the dock records the link class of each access based on node ids.
 #[derive(Debug)]
@@ -22,6 +61,16 @@ struct Inner {
     samples: HashMap<u64, Sample>,
     /// cumulative bytes served + stored (congestion measure)
     traffic_bytes: u64,
+    /// running resident-byte counter — kept exact in `put` /
+    /// `store_fields` / `remove` so residency queries are O(1) instead of
+    /// an O(n) payload scan under the mutex
+    resident_bytes: u64,
+    /// cumulative bytes that entered residency
+    admitted_bytes: u64,
+    /// cumulative bytes that left residency (retires + overwrites)
+    retired_bytes: u64,
+    /// stale writebacks dropped (first-writer-wins / post-retire)
+    superseded: u64,
 }
 
 impl Warehouse {
@@ -31,8 +80,16 @@ impl Warehouse {
 
     pub fn put(&self, sample: Sample) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        g.traffic_bytes += sample.payload_bytes() as u64;
-        g.samples.insert(sample.index, sample);
+        let bytes = sample.payload_bytes() as u64;
+        g.traffic_bytes += bytes;
+        g.resident_bytes += bytes;
+        g.admitted_bytes += bytes;
+        if let Some(old) = g.samples.insert(sample.index, sample) {
+            // defensive: replacing a resident sample retires its bytes
+            let old_bytes = old.payload_bytes() as u64;
+            g.resident_bytes -= old_bytes;
+            g.retired_bytes += old_bytes;
+        }
         Ok(())
     }
 
@@ -49,23 +106,43 @@ impl Warehouse {
         Ok(s)
     }
 
-    /// Merge produced fields into a stored sample; returns the new
-    /// presence bitmask. A generation writeback additionally carries the
-    /// completion text, response length, and the behavior-policy weight
-    /// version that produced the response.
+    /// Merge produced fields into a stored sample. A generation writeback
+    /// additionally carries the completion text, response length, and the
+    /// behavior-policy weight version that produced the response.
+    ///
+    /// Fault tolerance makes two writeback classes *stale* rather than
+    /// erroneous, both dropped as [`StoreOutcome::Superseded`]:
+    /// * a writeback for a sample that is no longer resident (the claim
+    ///   expired, another worker re-processed it, and the update state
+    ///   already retired it);
+    /// * a second generation writeback for a sample whose tokens already
+    ///   landed (first writer wins, so the stamped response is immutable
+    ///   and late logprob/reward recomputes stay byte-identical).
     pub fn store_fields(
         &self,
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
         completion: Option<(String, usize, u64)>,
-    ) -> Result<u8> {
+    ) -> Result<StoreOutcome> {
         let mut g = self.inner.lock().unwrap();
         let added: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        let s = g
-            .samples
-            .get_mut(&index)
-            .ok_or_else(|| anyhow!("warehouse {}: no sample {index}", self.id))?;
+        // the bytes arrived at the store either way (congestion is real
+        // even for a writeback that loses the race)
+        g.traffic_bytes += added;
+        let stale = match g.samples.get(&index) {
+            None => true,
+            Some(s) => completion.is_some() && s.has(FieldKind::Tokens),
+        };
+        if stale {
+            g.superseded += 1;
+            return Ok(StoreOutcome::Superseded);
+        }
+        let mut overwritten: u64 = 0;
+        let s = g.samples.get_mut(&index).expect("residency checked above");
         for (k, t) in fields {
+            if let Some(old) = s.get(k) {
+                overwritten += old.size_bytes() as u64;
+            }
             s.put(k, t);
         }
         if let Some((text, resp_len, behavior_version)) = completion {
@@ -74,8 +151,11 @@ impl Warehouse {
             s.behavior_version = behavior_version;
         }
         let mask = s.present_mask();
-        g.traffic_bytes += added;
-        Ok(mask)
+        g.resident_bytes += added;
+        g.resident_bytes -= overwritten;
+        g.admitted_bytes += added;
+        g.retired_bytes += overwritten;
+        Ok(StoreOutcome::Merged(mask))
     }
 
     /// Metadata snapshot without cloning the payload (what a warehouse
@@ -98,7 +178,12 @@ impl Warehouse {
     }
 
     pub fn remove(&self, index: u64) -> Option<Sample> {
-        self.inner.lock().unwrap().samples.remove(&index)
+        let mut g = self.inner.lock().unwrap();
+        let s = g.samples.remove(&index)?;
+        let bytes = s.payload_bytes() as u64;
+        g.resident_bytes -= bytes;
+        g.retired_bytes += bytes;
+        Some(s)
     }
 
     pub fn len(&self) -> usize {
@@ -113,10 +198,33 @@ impl Warehouse {
         self.inner.lock().unwrap().traffic_bytes
     }
 
-    /// Bytes currently resident (memory pressure of the shard).
+    /// Bytes currently resident (memory pressure of the shard). O(1): a
+    /// running counter, with a debug-mode assertion that it matches the
+    /// full payload scan.
     pub fn resident_bytes(&self) -> u64 {
         let g = self.inner.lock().unwrap();
-        g.samples.values().map(|s| s.payload_bytes() as u64).sum()
+        debug_assert_eq!(
+            g.resident_bytes,
+            g.samples.values().map(|s| s.payload_bytes() as u64).sum::<u64>(),
+            "warehouse {}: resident-byte counter diverged from the scan",
+            self.id
+        );
+        g.resident_bytes
+    }
+
+    /// Byte-conservation snapshot (admitted / resident / retired).
+    pub fn conservation(&self) -> Conservation {
+        let g = self.inner.lock().unwrap();
+        Conservation {
+            admitted_bytes: g.admitted_bytes,
+            resident_bytes: g.resident_bytes,
+            retired_bytes: g.retired_bytes,
+        }
+    }
+
+    /// Stale writebacks this shard dropped.
+    pub fn superseded_writebacks(&self) -> u64 {
+        self.inner.lock().unwrap().superseded
     }
 }
 
@@ -145,13 +253,14 @@ mod tests {
     fn store_fields_updates_mask() {
         let w = Warehouse::new(0, 0);
         w.put(sample(2)).unwrap();
-        let mask = w
+        let out = w
             .store_fields(
                 2,
                 vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1, 2, 3, 4]).unwrap())],
                 Some(("2".into(), 2, 5)),
             )
             .unwrap();
+        let StoreOutcome::Merged(mask) = out else { panic!("first writeback must merge") };
         assert_ne!(mask & FieldKind::Tokens.bit(), 0);
         let s = w.fetch(2).unwrap();
         assert_eq!(s.completion_text, "2");
@@ -168,5 +277,67 @@ mod tests {
         let t0 = w.traffic_bytes();
         w.fetch(1).unwrap();
         assert!(w.traffic_bytes() > t0);
+    }
+
+    #[test]
+    fn resident_counter_tracks_lifecycle() {
+        let w = Warehouse::new(0, 0);
+        assert_eq!(w.resident_bytes(), 0);
+        w.put(sample(1)).unwrap();
+        let after_put = w.resident_bytes();
+        assert!(after_put > 0);
+        w.store_fields(1, vec![(FieldKind::OldLp, Tensor::zeros(&[7]))], None).unwrap();
+        let after_field = w.resident_bytes();
+        assert_eq!(after_field, after_put + 7 * 4);
+        // overwriting a field with a same-size tensor keeps residency flat
+        w.store_fields(1, vec![(FieldKind::OldLp, Tensor::zeros(&[7]))], None).unwrap();
+        assert_eq!(w.resident_bytes(), after_field);
+        w.remove(1).unwrap();
+        assert_eq!(w.resident_bytes(), 0);
+        let c = w.conservation();
+        assert!(c.holds(), "{c:?}");
+        assert_eq!(c.resident_bytes, 0);
+        assert_eq!(c.admitted_bytes, c.retired_bytes);
+    }
+
+    #[test]
+    fn generation_writeback_is_first_writer_wins() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(3)).unwrap();
+        let first = w
+            .store_fields(
+                3,
+                vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+                Some(("a".into(), 1, 7)),
+            )
+            .unwrap();
+        assert!(matches!(first, StoreOutcome::Merged(_)));
+        // a late duplicate generation (stalled worker) must be dropped
+        let late = w
+            .store_fields(
+                3,
+                vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![9; 4]).unwrap())],
+                Some(("b".into(), 2, 9)),
+            )
+            .unwrap();
+        assert_eq!(late, StoreOutcome::Superseded);
+        let s = w.fetch(3).unwrap();
+        assert_eq!(s.completion_text, "a", "first generation must win");
+        assert_eq!(s.behavior_version, 7, "stamp is immutable once set");
+        assert_eq!(w.superseded_writebacks(), 1);
+        assert!(w.conservation().holds());
+    }
+
+    #[test]
+    fn post_retire_writeback_is_superseded_not_error() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(4)).unwrap();
+        w.remove(4).unwrap();
+        let out = w
+            .store_fields(4, vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))], None)
+            .unwrap();
+        assert_eq!(out, StoreOutcome::Superseded);
+        assert_eq!(w.superseded_writebacks(), 1);
+        assert!(w.conservation().holds());
     }
 }

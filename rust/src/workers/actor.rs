@@ -83,7 +83,12 @@ impl ActorWorker {
         if metas.is_empty() {
             return Ok(GenerationOutcome::default());
         }
-        let samples = dock.fetch(self.node, metas)?;
+        // lease-tolerant: a stale claim (reclaimed + retired while this
+        // worker was stalled) is skipped, not an error
+        let samples = dock.fetch_resident(self.node, metas)?;
+        if samples.is_empty() {
+            return Ok(GenerationOutcome::default());
+        }
         let mut requests = Vec::with_capacity(samples.len());
         // encode once; the writeback loop reuses the ids by request id
         // instead of re-tokenizing and linearly re-finding each sample
@@ -220,7 +225,11 @@ pub(crate) fn logprob_claimed(
 ) -> Result<usize> {
     let mut done = 0usize;
     for chunk in metas.chunks(b) {
-        let samples = flow.fetch(node, chunk)?;
+        // lease-tolerant fetch: stale claims in the chunk are skipped
+        let samples = flow.fetch_resident(node, chunk)?;
+        if samples.is_empty() {
+            continue;
+        }
         let refs: Vec<&_> = samples.iter().collect();
         let tokens = super::stack_tokens(tokenizer, &refs, b, s)?;
         let lp = policy.logprobs(engine, &tokens)?;

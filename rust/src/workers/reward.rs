@@ -67,7 +67,9 @@ impl RewardWorker {
         flow: &dyn SampleFlow,
         metas: &[SampleMeta],
     ) -> Result<Vec<ScoredSample>> {
-        let samples = flow.fetch(self.node, metas)?;
+        // lease-tolerant fetch: stale claims (reclaimed + retired while
+        // this worker was stalled) are skipped, not an error
+        let samples = flow.fetch_resident(self.node, metas)?;
         let mut out = Vec::with_capacity(samples.len());
         for s in samples {
             let task = Task {

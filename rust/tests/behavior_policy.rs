@@ -70,8 +70,32 @@ impl SampleFlow for RecordingFlow {
         self.inner.release(stage, indices)
     }
 
+    fn tick_lease_clock(&self) -> usize {
+        self.inner.tick_lease_clock()
+    }
+
+    fn lease_now(&self) -> u64 {
+        self.inner.lease_now()
+    }
+
+    fn renew(&self, stage: Stage, indices: &[u64]) {
+        self.inner.renew(stage, indices)
+    }
+
+    fn lease_stats(&self) -> mindspeed_rl::metrics::FlowRecovery {
+        self.inner.lease_stats()
+    }
+
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> anyhow::Result<Vec<Sample>> {
         self.inner.fetch(requester_node, metas)
+    }
+
+    fn fetch_resident(
+        &self,
+        requester_node: usize,
+        metas: &[SampleMeta],
+    ) -> anyhow::Result<Vec<Sample>> {
+        self.inner.fetch_resident(requester_node, metas)
     }
 
     fn store_fields(

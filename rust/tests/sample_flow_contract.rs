@@ -14,6 +14,7 @@ use mindspeed_rl::runtime::Tensor;
 use mindspeed_rl::transfer_dock::{
     DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage, TransferDock,
 };
+use mindspeed_rl::util::rng::Rng;
 
 fn flows() -> Vec<(&'static str, Arc<dyn SampleFlow>)> {
     vec![
@@ -336,5 +337,140 @@ fn multithreaded_producers_consumers() {
             flow.request_ready(Stage::OldLogprob, TOTAL).unwrap().is_empty(),
             "{name}"
         );
+    }
+}
+
+/// Lease-lifecycle contract, identical across both flows: claims never
+/// expire while the clock stands still, expire exactly at the configured
+/// tick, come back requestable with bumped attempt counters, and the
+/// recovery accounting stays self-consistent.
+#[test]
+fn abandoned_claims_reclaim_identically_on_both_flows() {
+    let flows: Vec<(&'static str, Arc<dyn SampleFlow>)> = vec![
+        ("transfer_dock", Arc::new(TransferDock::with_lease(DockTopology::spread(4), 3))),
+        ("replay_buffer", Arc::new(ReplayBuffer::with_lease(0, 3))),
+    ];
+    for (name, flow) in flows {
+        flow.put_samples(prompts(6)).unwrap();
+        // a worker claims everything, then "dies" (no writeback, no
+        // release, the claim simply goes silent)
+        let claimed = flow.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(claimed.len(), 6, "{name}");
+        assert!(flow.request_ready(Stage::Generation, 10).unwrap().is_empty(), "{name}");
+        // the clock alone decides recovery: 2 ticks < lease of 3 → held
+        assert_eq!(flow.tick_lease_clock(), 0, "{name}");
+        assert_eq!(flow.tick_lease_clock(), 0, "{name}");
+        assert!(flow.request_ready(Stage::Generation, 10).unwrap().is_empty(), "{name}");
+        // third tick: every claim expires at once
+        assert_eq!(flow.tick_lease_clock(), 6, "{name}");
+        let again = flow.request_ready(Stage::Generation, 10).unwrap();
+        assert_eq!(again.len(), 6, "{name}: reclaimed samples must redispatch");
+        let s = flow.lease_stats();
+        assert_eq!(s.reclaimed, 6, "{name}");
+        assert_eq!(s.redispatched, 6, "{name}");
+        assert_eq!(s.attempt_bumps, 6, "{name}");
+        assert_eq!(s.max_attempt, 1, "{name}");
+        assert!(s.consistent(), "{name}: {s:?}");
+    }
+}
+
+/// Satellite: randomized interleavings of `release`, `store_fields`, and
+/// `retire` across stage threads with fixed seeds. Invariants: no double
+/// dispatch while leases are live (the latch holds under contention), no
+/// double retire, and no permanently-stranded sample — after the dust
+/// settles plus a lease worth of ticks, every surviving sample is either
+/// done or claimable again.
+#[test]
+fn release_store_retire_interleavings_leave_nothing_stranded() {
+    const N: usize = 24;
+    const THREADS: usize = 3;
+    let flows: Vec<(&'static str, Arc<dyn SampleFlow>)> = vec![
+        ("transfer_dock", Arc::new(TransferDock::with_lease(DockTopology::spread(4), 64))),
+        ("replay_buffer", Arc::new(ReplayBuffer::with_lease(0, 64))),
+    ];
+    for (name, flow) in flows {
+        let idx = flow.put_samples(prompts(N)).unwrap();
+        for &i in &idx {
+            finish_generation(flow.as_ref(), i);
+        }
+        // sample → currently-claimed-by-a-thread latch mirror; used to
+        // prove the flow never hands one sample to two threads at once
+        let active: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+        let retired: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+        let settled = Arc::new(AtomicUsize::new(0)); // OldLp stored or retired
+
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let flow = Arc::clone(&flow);
+                let active = Arc::clone(&active);
+                let retired = Arc::clone(&retired);
+                let settled = Arc::clone(&settled);
+                scope.spawn(move || {
+                    let mut rng = Rng::new(0x5eed ^ t as u64);
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    while settled.load(Ordering::Relaxed) < N {
+                        assert!(Instant::now() < deadline, "interleaving test wedged");
+                        let metas = flow
+                            .wait_ready(Stage::OldLogprob, 4, Duration::from_millis(5))
+                            .unwrap();
+                        for m in &metas {
+                            assert!(
+                                active.lock().unwrap().insert(m.index),
+                                "sample {} dispatched to two threads at once",
+                                m.index
+                            );
+                        }
+                        for m in &metas {
+                            match rng.below(10) {
+                                // 50%: do the work
+                                0..=4 => {
+                                    flow.store_fields(
+                                        1,
+                                        m.index,
+                                        vec![(FieldKind::OldLp, Tensor::zeros(&[7]))],
+                                    )
+                                    .unwrap();
+                                    active.lock().unwrap().remove(&m.index);
+                                    settled.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // 30%: hand the claim back
+                                5..=7 => {
+                                    active.lock().unwrap().remove(&m.index);
+                                    flow.release(Stage::OldLogprob, &[m.index]);
+                                }
+                                // 20%: consume the sample outright
+                                _ => {
+                                    active.lock().unwrap().remove(&m.index);
+                                    let s = flow.retire(m.index);
+                                    assert!(s.is_some(), "sample {} retired twice", m.index);
+                                    assert!(
+                                        retired.lock().unwrap().insert(m.index),
+                                        "retired set saw {} twice",
+                                        m.index
+                                    );
+                                    settled.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        // nothing stranded: after a full lease of ticks, whatever is
+        // still resident must be either past OldLogprob or claimable
+        for _ in 0..65 {
+            flow.tick_lease_clock();
+        }
+        let leftover = flow.request_ready(Stage::OldLogprob, usize::MAX).unwrap();
+        assert!(
+            leftover.is_empty(),
+            "{name}: {} samples still claim OldLogprob work after settling",
+            leftover.len()
+        );
+        let n_retired = retired.lock().unwrap().len();
+        assert_eq!(flow.len(), N - n_retired, "{name}: resident count must match retires");
+        let s = flow.lease_stats();
+        assert!(s.consistent(), "{name}: {s:?}");
     }
 }

@@ -56,6 +56,21 @@ fn main() -> Result<()> {
             csv.row_f64(&[i as f64, tps]);
         }
         csv.write("results/fig11.csv")?;
+        println!();
+    }
+    if all || which == "scaling" {
+        sim::run_named_experiment("scaling")?;
+        let mut csv = CsvWriter::new(&["gen_replicas", "gen_secs", "wall_secs", "tps", "speedup"]);
+        for r in sim::scaling_rows() {
+            csv.row_f64(&[
+                r.gen_replicas as f64,
+                r.gen_secs,
+                r.wall_secs,
+                r.tps,
+                r.speedup,
+            ]);
+        }
+        csv.write("results/scaling.csv")?;
     }
     println!("\nCSV series written to results/");
     Ok(())

@@ -13,10 +13,12 @@ use mindspeed_rl::memory::MemoryPool;
 use mindspeed_rl::parallel::{ModelWeights, ParallelLayout};
 use mindspeed_rl::resharding::{eq3_redundant_bytes, Resharder};
 use mindspeed_rl::transfer_dock::NetworkModel;
-use mindspeed_rl::util::bench::{bench, Table};
+use mindspeed_rl::util::bench::{bench, BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
 use mindspeed_rl::util::fmt_bytes;
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
     // Qwen2.5-32B dims at bf16-equivalent byte sizes: our payload type is
     // f32 while the paper reshards bf16, so 32 "layers" of the 64-layer
     // model make the BYTES match (TW ≈ 63 GiB, like the real model)
@@ -72,6 +74,20 @@ fn main() {
         fmt_bytes(released),
         fmt_bytes(eq3_redundant_bytes(&weights, &update, &gen))
     );
+
+    if json_mode {
+        // tracked-pool byte counts are deterministic: gate the released
+        // KV headroom and the swap flow's peak residency
+        let mut json = BenchJson::new("fig10_memory");
+        json.higher("released_kv_bytes_per_dev", released as f64);
+        json.lower("swap_peak_device_bytes", rep_swap.peak_device_bytes as f64);
+        json.lower(
+            "naive_redundant_bytes_per_dev",
+            (rep_naive.redundant_bytes / update.world() as u64) as f64,
+        );
+        json.emit().unwrap();
+        return;
+    }
 
     // timed: real-payload reshard at small scale (correctness-bearing path)
     let small = ModelWeights::dense_like(8, 512, 1024).with_test_data(3);

@@ -5,11 +5,23 @@
 use mindspeed_rl::runtime::{artifact_dir, Engine};
 use mindspeed_rl::sim::fig11_series;
 use mindspeed_rl::trainers::{run_grpo, GrpoConfig};
-use mindspeed_rl::util::bench::Table;
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
     // simulated throughput series
     let series = fig11_series(100, 0);
+    if json_mode {
+        // the fixed-seed simulated series is deterministic end to end
+        let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
+        let min = series.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
+        let mut json = BenchJson::new("fig11_moe");
+        json.higher("mean_tps_384npu", mean);
+        json.higher("min_tps_384npu", min);
+        json.emit().unwrap();
+        return;
+    }
     let mut t = Table::new(
         "Fig. 11 — DeepSeek-R1-671B @384 NPUs (MSRL, simulated)",
         &["iteration", "TPS"],

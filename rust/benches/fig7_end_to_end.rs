@@ -8,21 +8,37 @@ use mindspeed_rl::runtime::{artifact_dir, Engine};
 use mindspeed_rl::sim::fig7_rows;
 use mindspeed_rl::trainers::{run_grpo_on_flow, GrpoConfig};
 use mindspeed_rl::transfer_dock::{DockTopology, ReplayBuffer, SampleFlow, TransferDock};
-use mindspeed_rl::util::bench::Table;
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
     // simulated cluster (the paper's configuration)
     let mut t = Table::new(
         "Fig. 7 — end-to-end TPS, 16 NPUs (G=256 N=16 PL=2K SL=8K)",
         &["model", "system", "TPS", "vs OpenRLHF"],
     );
-    for r in fig7_rows() {
+    let rows = fig7_rows();
+    for r in &rows {
         t.row(vec![
             r.model.name().into(),
             r.system.name().into(),
             format!("{:.0}", r.tps),
             format!("{:.2}x", r.speedup_vs_openrlhf),
         ]);
+    }
+    if json_mode {
+        // deterministic cost-model headline: MSRL on Qwen2.5-7B
+        let mut json = BenchJson::new("fig7_end_to_end");
+        if let Some(msrl) = rows
+            .iter()
+            .find(|r| r.system.name() == "MSRL" && r.model.name().contains("7B"))
+        {
+            json.higher("msrl_tps_qwen7b", msrl.tps);
+            json.higher("msrl_speedup_vs_openrlhf_qwen7b", msrl.speedup_vs_openrlhf);
+        }
+        json.emit().unwrap();
+        return;
     }
     t.print();
 

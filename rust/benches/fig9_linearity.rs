@@ -8,7 +8,8 @@ use mindspeed_rl::transfer_dock::{
     DockTopology, FieldKind, NetworkModel, ReplayBuffer, Sample, SampleFlow, Stage,
     TransferDock,
 };
-use mindspeed_rl::util::bench::Table;
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
 
 /// Drive one "iteration" of sample flow with 64 prompts per node and
 /// return the implied dispatch seconds (paper bandwidths).
@@ -44,6 +45,24 @@ fn implied_dispatch(flow: &dyn SampleFlow, nodes: usize) -> f64 {
 }
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
+    if json_mode {
+        // deterministic gated metrics: cost-model linearity at the far
+        // end of the sweep, and the *ledger-derived* (byte-count, not
+        // wall-clock) dispatch of the real structures at 8 nodes
+        let mut json = BenchJson::new("fig9_linearity");
+        let rows = fig9_rows();
+        let last = |k: SystemKind| rows.iter().filter(|r| r.system == k).last().unwrap().linearity;
+        json.higher("msrl_linearity_24n", last(SystemKind::Msrl));
+        let dock = TransferDock::new(DockTopology::spread(8));
+        let d = implied_dispatch(&dock, 8);
+        let rb = ReplayBuffer::new(0);
+        let r = implied_dispatch(&rb, 8);
+        json.lower("dock_dispatch_secs_8n", d);
+        json.higher("rb_over_dock_dispatch_8n", r / d);
+        json.emit().unwrap();
+        return;
+    }
     let mut t = Table::new(
         "Fig. 9 — simulated linearity (paper @192 NPUs: MSRL 81.1 / MSRLB 61.9 / VeRL 40.4)",
         &["system", "nodes", "NPUs", "TPS/dev", "linearity"],

@@ -9,10 +9,44 @@ use mindspeed_rl::runtime::Tensor;
 use mindspeed_rl::transfer_dock::{
     DockTopology, FieldKind, Sample, SampleFlow, Stage, TransferDock,
 };
-use mindspeed_rl::util::bench::{bench, header};
+use mindspeed_rl::util::bench::{bench, header, BenchJson};
+use mindspeed_rl::util::cli::Args;
 use mindspeed_rl::util::rng::Rng;
 
 fn main() {
+    if Args::from_env().unwrap().has("json") {
+        // gated metric: the dock round trip's *ledger bytes* — a
+        // deterministic function of the dataflow code, unlike the timed
+        // loops below (which stay out of the gate)
+        let mut json = BenchJson::new("hotpath");
+        let dock = TransferDock::new(DockTopology::spread(8));
+        let samples: Vec<Sample> = (0..256)
+            .map(|i| Sample::new_prompt(u64::MAX, i / 8, format!("{i}+1="), 1))
+            .collect();
+        let idx = dock.put_samples(samples).unwrap();
+        let metas = dock.request_ready(Stage::Generation, 256).unwrap();
+        let _ = dock.fetch(0, &metas).unwrap();
+        for &i in &idx {
+            dock.store_generation(
+                0,
+                i,
+                vec![(FieldKind::Tokens, Tensor::i32(&[256], vec![1; 256]).unwrap())],
+                "1".into(),
+                1,
+                1,
+            )
+            .unwrap();
+            dock.retire(i);
+        }
+        let led = dock.ledger();
+        json.lower("dock_roundtrip_256_total_bytes", led.total_bytes() as f64);
+        json.lower(
+            "dock_roundtrip_256_round_trips",
+            (led.requests + led.local_requests) as f64,
+        );
+        json.emit().unwrap();
+        return;
+    }
     println!("{}", header());
 
     // tensor → literal → tensor round trip (the PJRT boundary cost)

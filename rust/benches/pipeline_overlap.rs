@@ -13,13 +13,22 @@ use std::sync::Arc;
 use mindspeed_rl::runtime::{artifact_dir, Engine};
 use mindspeed_rl::trainers::{run_grpo_on_flow, GrpoConfig, PipelineMode};
 use mindspeed_rl::transfer_dock::{DockTopology, SampleFlow, TransferDock};
+use mindspeed_rl::util::bench::BenchJson;
+use mindspeed_rl::util::cli::Args;
 use mindspeed_rl::util::fmt_secs;
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
+    let mut json = BenchJson::new("pipeline_overlap");
     let engine = match Engine::load(artifact_dir("tiny")) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("skipping pipeline A/B (run `make artifacts`): {e}");
+            if json_mode {
+                // artifact-dependent throughout: emit an empty (ungated)
+                // summary so the CI merge step still sees the bench
+                json.emit().unwrap();
+            }
             return;
         }
     };
@@ -44,6 +53,15 @@ fn main() {
         let report = run_grpo_on_flow(&engine, &cfg, flow).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         walls.push(wall);
+        json.info(&format!("{}_wall_secs", mode.name()), wall);
+        json.info(
+            &format!("{}_overlap_ratio", mode.name()),
+            report.pipeline.overlap_ratio(),
+        );
+        json.info(
+            &format!("{}_bus_retained_bytes", mode.name()),
+            report.pipeline.bus.retained_bytes as f64,
+        );
         println!(
             "{:<10} wall={}  reward {:.3} → {:.3}",
             mode.name(),
@@ -80,4 +98,8 @@ fn main() {
         pipe_wall / sync_wall,
         if pipe_wall < sync_wall { "pipelined wins" } else { "sync wins" }
     );
+    if json_mode {
+        json.info("pipelined_over_sync_wall", pipe_wall / sync_wall);
+        json.emit().unwrap();
+    }
 }

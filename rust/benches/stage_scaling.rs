@@ -1,0 +1,125 @@
+//! Bench: elastic data-parallel stage replicas — modeled and measured.
+//!
+//! Part 1 (always runs, deterministic, the CI perf gate's input): the
+//! cost-model sweep of generation replica counts on the Qwen2.5-7B
+//! long-CoT configuration (`sim::scaling_rows`, same table as
+//! `simulate --experiment scaling`). Each added generation replica must
+//! strictly raise modeled throughput while generation stays the binding
+//! stage — the tentpole's headline claim.
+//!
+//! Part 2 (artifact-gated): a real-executor A/B on the tiny preset —
+//! single-replica pipelined vs `--stage-replicas gen=2,logprob=2` vs
+//! autoscaled — printing walls, replica-aware utilization, and the
+//! scaling report. Wall-clock numbers are informational (CPU testbed,
+//! no gate).
+//!
+//! `--json` emits the single-line summary for `ci/bench_gate.py`.
+
+use std::sync::Arc;
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::sim::scaling_rows;
+use mindspeed_rl::trainers::{
+    run_grpo_on_flow, GrpoConfig, PipelineMode, StageReplicas,
+};
+use mindspeed_rl::transfer_dock::{DockTopology, SampleFlow, TransferDock};
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
+use mindspeed_rl::util::fmt_secs;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let json_mode = args.has("json");
+    let mut json = BenchJson::new("stage_scaling");
+
+    // ---- part 1: deterministic cost-model sweep (the gated metrics)
+    let rows = scaling_rows();
+    let mut t = Table::new(
+        "Elastic stage replicas — modeled TPS vs generation replicas \
+         (Qwen2.5-7B long-CoT, 16 NPUs, MSRL, logprob=2)",
+        &["gen replicas", "gen (s)", "wall (s)", "TPS", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.gen_replicas.to_string(),
+            format!("{:.0}", r.gen_secs),
+            format!("{:.0}", r.wall_secs),
+            format!("{:.1}", r.tps),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    if !json_mode {
+        t.print();
+    }
+    for r in &rows {
+        json.higher(&format!("modeled_tps_r{}", r.gen_replicas), r.tps);
+    }
+    let last = rows.last().unwrap();
+    json.higher(&format!("modeled_speedup_r{}", last.gen_replicas), last.speedup);
+
+    // ---- part 2: real-executor A/B (informational; needs artifacts)
+    match Engine::load(artifact_dir("tiny")) {
+        Ok(engine) => {
+            let base = GrpoConfig {
+                iterations: 4,
+                prompts_per_iter: 8,
+                group_size: 4,
+                max_new_tokens: 6,
+                nodes: 4,
+                pipeline: PipelineMode::Pipelined,
+                max_inflight_iters: 2,
+                log_every: 0,
+                ..Default::default()
+            };
+            let configs: Vec<(&str, GrpoConfig)> = vec![
+                ("1 replica/stage", base.clone()),
+                (
+                    "gen=2,logprob=2",
+                    GrpoConfig {
+                        stage_replicas: StageReplicas::parse("gen=2,logprob=2").unwrap(),
+                        ..base.clone()
+                    },
+                ),
+                (
+                    "autoscaled (max 3)",
+                    GrpoConfig {
+                        autoscale: true,
+                        autoscale_max: 3,
+                        autoscale_backlog_hi: 8,
+                        autoscale_up_ticks: 2,
+                        ..base.clone()
+                    },
+                ),
+            ];
+            for (i, (name, cfg)) in configs.into_iter().enumerate() {
+                let flow: Arc<dyn SampleFlow> =
+                    Arc::new(TransferDock::new(DockTopology::spread(cfg.nodes)));
+                let t0 = std::time::Instant::now();
+                let report = run_grpo_on_flow(&engine, &cfg, flow).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                json.info(&format!("real_wall_secs_cfg{i}"), wall);
+                if !json_mode {
+                    println!("\n{name:<20} wall={}", fmt_secs(wall));
+                    println!("  {}", report.pipeline.summary());
+                    for stage in ["generation", "old_logprob"] {
+                        let u = report.pipeline.utilization(stage);
+                        assert!(
+                            (0.0..=1.0).contains(&u),
+                            "replica-aware utilization out of range: {stage} {u}"
+                        );
+                        println!("  {stage} utilization={:.0}% (slot-time basis)", u * 100.0);
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            if !json_mode {
+                eprintln!("skipping real-executor A/B (run `make artifacts`): {e}");
+            }
+        }
+    }
+
+    if json_mode {
+        json.emit().unwrap();
+    }
+}

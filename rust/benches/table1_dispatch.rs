@@ -12,7 +12,8 @@ use mindspeed_rl::sim::table1_rows_out;
 use mindspeed_rl::transfer_dock::{
     DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage, TransferDock,
 };
-use mindspeed_rl::util::bench::{bench, header, Table};
+use mindspeed_rl::util::bench::{bench, header, BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
 
 fn drive_flow(flow: &dyn SampleFlow, n_samples: usize, payload_elems: usize) {
     let samples: Vec<Sample> = (0..n_samples)
@@ -45,6 +46,7 @@ fn drive_flow(flow: &dyn SampleFlow, n_samples: usize, payload_elems: usize) {
 }
 
 fn main() {
+    let json_mode = Args::from_env().unwrap().has("json");
     // Part 1: the paper's table
     let paper: [(f64, f64, f64); 6] = [
         (0.96, 9.92, 0.97),
@@ -72,6 +74,26 @@ fn main() {
         ]);
     }
     t.print();
+
+    if json_mode {
+        // fast deterministic config only: the analytic Table-1 row the
+        // paper headlines (G=256 N=16 SL=8K → row 2) plus the
+        // ledger-implied dispatch seconds, all byte-derived — no
+        // wall-clock in the gated set
+        let mut json = BenchJson::new("table1_dispatch");
+        let rows = table1_rows_out();
+        json.lower("tcv_gb_row2", rows[2].tcv_gb);
+        json.lower("t100_secs_row2", rows[2].t100_s);
+        let dock = TransferDock::new(DockTopology::spread(8));
+        drive_flow(&dock, 256, 1024);
+        let rb = ReplayBuffer::new(0);
+        drive_flow(&rb, 256, 1024);
+        let net = mindspeed_rl::transfer_dock::NetworkModel::paper();
+        json.lower("dock_dispatch_secs_256", dock.dispatch_secs(&net));
+        json.higher("rb_over_dock_dispatch_256", rb.dispatch_secs(&net) / dock.dispatch_secs(&net));
+        json.emit().unwrap();
+        return;
+    }
 
     // Part 2: measured round-trip micro-bench (payloads scaled down so
     // the bench finishes; the ledger bytes scale exactly)

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Bench-JSON merge + perf gate for the CI `bench` job.
+
+Every bench's `--json` mode writes a single-line summary to
+`target/bench/<name>.json` with two buckets of metrics:
+
+    {"bench": "...",
+     "gated": {"higher": {...}, "lower": {...}},   # deterministic, gated
+     "info":  {...}}                               # context, never gated
+
+Subcommands:
+
+  merge <dir> -o <out>      merge every *.json summary in <dir> into one
+                            {"benches": {name: summary}} document
+                            (uploaded as the BENCH_PR.json artifact)
+
+  gate <baseline> <pr>      compare the PR's merged document against the
+                            committed baseline: any gated metric that
+                            regresses by more than --tolerance (default
+                            10%) fails with exit code 1. A missing
+                            baseline is "seed mode": print how to commit
+                            one and exit 0 — the first commit seeds the
+                            perf trajectory.
+
+Direction semantics: "higher" metrics fail when
+`new < old * (1 - tol)`; "lower" metrics fail when
+`new > old * (1 + tol) + eps` (eps absorbs float noise near zero).
+Improvements are reported but never fail; to ratchet the baseline
+forward, re-run the bench job and commit the uploaded BENCH_PR.json as
+`rust/bench-baseline.json`.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+EPS = 1e-9
+
+
+def merge(args: argparse.Namespace) -> int:
+    src = pathlib.Path(args.dir)
+    benches = {}
+    for path in sorted(src.glob("*.json")):
+        if path.name == "BENCH_PR.json":
+            continue
+        with path.open() as f:
+            doc = json.load(f)
+        name = doc.get("bench")
+        if not name:
+            print(f"::warning::{path} has no 'bench' key; skipped")
+            continue
+        benches[name] = doc
+    if not benches:
+        print(f"::error::no bench summaries found under {src}")
+        return 1
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"benches": benches}, sort_keys=True) + "\n")
+    print(f"merged {len(benches)} bench summaries -> {out}")
+    return 0
+
+
+def gated_metrics(doc: dict) -> dict:
+    """(key -> (value, direction)) for one bench summary."""
+    out = {}
+    gated = doc.get("gated", {})
+    for direction in ("higher", "lower"):
+        for key, value in gated.get(direction, {}).items():
+            out[key] = (float(value), direction)
+    return out
+
+
+def gate(args: argparse.Namespace) -> int:
+    baseline_path = pathlib.Path(args.baseline)
+    if not baseline_path.exists():
+        print(
+            f"::notice::no committed baseline at {baseline_path} — seed mode. "
+            "Download this run's BENCH_PR.json artifact and commit it as "
+            f"{baseline_path} to arm the perf gate."
+        )
+        return 0
+    with baseline_path.open() as f:
+        baseline = json.load(f)
+    with pathlib.Path(args.pr).open() as f:
+        pr = json.load(f)
+
+    tol = args.tolerance
+    failures = []
+    rows = []
+    for bench, base_doc in sorted(baseline.get("benches", {}).items()):
+        base_metrics = gated_metrics(base_doc)
+        pr_doc = pr.get("benches", {}).get(bench)
+        if pr_doc is None:
+            if base_metrics:
+                failures.append(f"{bench}: bench missing from PR run")
+            continue
+        pr_metrics = gated_metrics(pr_doc)
+        for key, (old, direction) in sorted(base_metrics.items()):
+            if key not in pr_metrics:
+                failures.append(f"{bench}.{key}: gated metric missing from PR run")
+                continue
+            new = pr_metrics[key][0]
+            if direction == "higher":
+                regressed = new < old * (1.0 - tol) - EPS
+                delta = (new - old) / old if old else 0.0
+            else:
+                regressed = new > old * (1.0 + tol) + EPS
+                delta = (old - new) / old if old else 0.0
+            mark = "REGRESSED" if regressed else "ok"
+            rows.append(
+                f"  {bench}.{key} ({direction}): {old:g} -> {new:g} "
+                f"({delta:+.1%}) {mark}"
+            )
+            if regressed:
+                failures.append(
+                    f"{bench}.{key}: {old:g} -> {new:g} "
+                    f"(worse than the {tol:.0%} tolerance, {direction} is better)"
+                )
+
+    print(f"perf gate vs {baseline_path} (tolerance {tol:.0%}):")
+    for row in rows:
+        print(row)
+    if failures:
+        for f_ in failures:
+            print(f"::error::perf gate: {f_}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    m = sub.add_parser("merge", help="merge per-bench JSON summaries")
+    m.add_argument("dir", help="directory holding the per-bench *.json files")
+    m.add_argument("-o", "--out", required=True, help="merged output path")
+    m.set_defaults(func=merge)
+    g = sub.add_parser("gate", help="fail on >tolerance regressions vs baseline")
+    g.add_argument("baseline", help="committed bench-baseline.json")
+    g.add_argument("pr", help="this run's merged BENCH_PR.json")
+    g.add_argument("--tolerance", type=float, default=0.10)
+    g.set_defaults(func=gate)
+    args = parser.parse_args()
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

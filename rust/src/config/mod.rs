@@ -6,7 +6,7 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
-use crate::trainers::{GrpoConfig, PipelineMode};
+use crate::trainers::{GrpoConfig, PipelineMode, StageReplicas};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -99,6 +99,30 @@ impl Config {
             if let Some(v) = g.opt("chaos_max_faults") {
                 d.chaos_max_faults = v.u64()?;
             }
+            if let Some(v) = g.opt("stage_replicas") {
+                d.stage_replicas = StageReplicas::parse(v.str()?)?;
+            }
+            if let Some(v) = g.opt("autoscale") {
+                d.autoscale = v.bool()?;
+            }
+            if let Some(v) = g.opt("autoscale_min") {
+                d.autoscale_min = v.usize()?;
+            }
+            if let Some(v) = g.opt("autoscale_max") {
+                d.autoscale_max = v.usize()?;
+            }
+            if let Some(v) = g.opt("autoscale_backlog_hi") {
+                d.autoscale_backlog_hi = v.usize()?;
+            }
+            if let Some(v) = g.opt("autoscale_backlog_lo") {
+                d.autoscale_backlog_lo = v.usize()?;
+            }
+            if let Some(v) = g.opt("autoscale_up_ticks") {
+                d.autoscale_up_ticks = v.usize()? as u32;
+            }
+            if let Some(v) = g.opt("autoscale_down_ticks") {
+                d.autoscale_down_ticks = v.usize()? as u32;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -145,6 +169,20 @@ impl Config {
         g.chaos_stall_ticks = args.u64_or("chaos-stall-ticks", g.chaos_stall_ticks)?;
         g.chaos_seed = args.u64_or("chaos-seed", g.chaos_seed)?;
         g.chaos_max_faults = args.u64_or("chaos-max-faults", g.chaos_max_faults)?;
+        if let Some(s) = args.get("stage-replicas") {
+            g.stage_replicas = StageReplicas::parse(s)?;
+        }
+        if args.has("autoscale") {
+            g.autoscale = true;
+        }
+        g.autoscale_min = args.usize_or("autoscale-min", g.autoscale_min)?;
+        g.autoscale_max = args.usize_or("autoscale-max", g.autoscale_max)?;
+        g.autoscale_backlog_hi = args.usize_or("autoscale-backlog-hi", g.autoscale_backlog_hi)?;
+        g.autoscale_backlog_lo = args.usize_or("autoscale-backlog-lo", g.autoscale_backlog_lo)?;
+        g.autoscale_up_ticks =
+            args.usize_or("autoscale-up-ticks", g.autoscale_up_ticks as usize)? as u32;
+        g.autoscale_down_ticks =
+            args.usize_or("autoscale-down-ticks", g.autoscale_down_ticks as usize)? as u32;
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -283,6 +321,61 @@ mod tests {
         let cfg = Config::from_file(&p).unwrap();
         assert_eq!(cfg.grpo.chaos_kill_rate, 0.3);
         assert_eq!(cfg.grpo.lease_ticks, 5);
+    }
+
+    #[test]
+    fn elastic_flags_parse_and_validate() {
+        let args = Args::parse(
+            [
+                "--pipeline",
+                "pipelined",
+                "--stage-replicas",
+                "gen=4,logprob=2",
+                "--autoscale-max",
+                "6",
+                "--autoscale-up-ticks",
+                "2",
+                "--autoscale", // boolean flags last (see Args::parse note)
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.grpo.stage_replicas.generation, 4);
+        assert_eq!(cfg.grpo.stage_replicas.old_logprob, 2);
+        assert!(cfg.grpo.autoscale);
+        let ac = cfg.grpo.autoscale_config().unwrap();
+        assert_eq!(ac.max_replicas, 6);
+        assert_eq!(ac.up_ticks, 2);
+
+        // replicas without the pipelined executor are rejected at load
+        let bad =
+            Args::parse(["--stage-replicas", "gen=2"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // malformed replica spec is a parse error, not a silent default
+        let bad = Args::parse(
+            ["--pipeline", "pipelined", "--stage-replicas", "gen=zero"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_elastic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"pipeline": "pipelined", "stage_replicas": "gen=3",
+                "autoscale": true, "autoscale_max": 8, "autoscale_backlog_hi": 32}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.grpo.stage_replicas.generation, 3);
+        assert!(cfg.grpo.autoscale);
+        assert_eq!(cfg.grpo.autoscale_max, 8);
+        assert_eq!(cfg.grpo.autoscale_backlog_hi, 32);
     }
 
     #[test]

@@ -4,19 +4,29 @@
 //! mindspeed-rl smoke    [--preset tiny]           load + run every artifact
 //! mindspeed-rl train    [--preset small] [--config cfg.json] [--iterations N]
 //!                       [--pipeline sync|pipelined] [--max-inflight K]
+//!                       [--stage-replicas gen=4,logprob=2] [--autoscale]
+//!                       [--autoscale-min N] [--autoscale-max N]
+//!                       [--autoscale-backlog-hi D] [--autoscale-backlog-lo D]
+//!                       [--autoscale-up-ticks K] [--autoscale-down-ticks K]
 //!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
 //!                       [--lease-ticks T] [--chaos-kill-rate P]
 //!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
 //!                       [--chaos-seed S] [--chaos-max-faults N] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling
 //! ```
 //!
 //! `--pipeline pipelined` runs every worker state (generation,
 //! old-logprobs, reference, reward, update) as its own thread pulling from
 //! the transfer dock; `--max-inflight` bounds how many iterations may be
 //! admitted ahead of the last completed update (off-policy staleness
-//! window). Weights flow over a versioned bus: every sample is stamped
+//! window). `--stage-replicas` widens any pull-driven state into N
+//! data-parallel replica threads over the same dock controller (leases
+//! prevent double dispatch; claims fair-share across pullers), and
+//! `--autoscale` lets the backlog-driven autoscaler grow/shrink the
+//! replica counts within bounds on lease ticks — scale-down is
+//! drain-then-retire, so no claim is ever abandoned. See rust/DESIGN.md
+//! "Elastic stages". Weights flow over a versioned bus: every sample is stamped
 //! with the weight version that generated it and its old-logprob is
 //! scored under that exact version. `--gen-logprobs` emits the behavior
 //! logprobs straight from the sampler (old-logprob becomes

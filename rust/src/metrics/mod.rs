@@ -204,6 +204,87 @@ impl FlowRecovery {
     }
 }
 
+/// One stage's elastic-replica accounting over a run: how the replica
+/// count moved (timeline of `(lease tick, live replicas)` at each
+/// change), what drove it (backlog high-water, idle observations), and
+/// the replica-second integral that replica-aware utilization divides
+/// by. Produced by the executor's `ReplicaSet`s plus the `Autoscaler`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageScale {
+    /// replicas at run start (after the configured initial spawn)
+    pub initial: usize,
+    /// replicas live when the run ended
+    pub final_replicas: usize,
+    /// most replicas ever live at once
+    pub max_replicas: usize,
+    /// autoscaler grow decisions applied
+    pub grows: u64,
+    /// autoscaler drain-then-retire decisions applied
+    pub shrinks: u64,
+    /// worst ready-queue depth the autoscaler observed
+    pub backlog_high_water: usize,
+    /// observations with at least one idle replica
+    pub idle_obs: u64,
+    /// total autoscaler observations of this stage
+    pub obs: u64,
+    /// Σ over time of (live replicas × seconds) — the slot-time
+    /// denominator for replica-aware utilization
+    pub replica_secs: f64,
+    /// `(lease tick, live replicas)` at every count change
+    pub timeline: Vec<(u64, usize)>,
+}
+
+impl StageScale {
+    /// Fraction of observations with an idle replica.
+    pub fn idle_ratio(&self) -> f64 {
+        if self.obs == 0 {
+            0.0
+        } else {
+            self.idle_obs as f64 / self.obs as f64
+        }
+    }
+}
+
+/// Per-stage elastic-replica report for a whole run (empty for sync mode
+/// and for pipelined runs that never configured replicas).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageScaling {
+    pub stages: BTreeMap<String, StageScale>,
+    /// high-water mark of the tracked `stage-replicas` pool: what the
+    /// replicas' materialized weight views (generation head-trackers,
+    /// old-logprob pinned caches) cost at their widest
+    pub replica_weight_bytes_peak: u64,
+}
+
+impl StageScaling {
+    /// Anything beyond the one-thread-per-stage baseline?
+    pub fn any_scaled(&self) -> bool {
+        self.stages
+            .values()
+            .any(|s| s.max_replicas > 1 || s.grows + s.shrinks > 0)
+    }
+
+    /// Replica-second denominator for `stage`, when recorded.
+    pub fn replica_secs(&self, stage: &str) -> Option<f64> {
+        self.stages.get(stage).map(|s| s.replica_secs).filter(|&s| s >= MIN_WALL_SECS)
+    }
+
+    /// Compact `gen 1→4 …` clause for run summaries.
+    pub fn summary(&self) -> String {
+        self.stages
+            .iter()
+            .filter(|(_, s)| s.max_replicas > 1 || s.grows + s.shrinks > 0)
+            .map(|(name, s)| {
+                format!(
+                    "{name} {}→{} (max={} bklg^={})",
+                    s.initial, s.final_replicas, s.max_replicas, s.backlog_high_water
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -227,6 +308,9 @@ pub struct PipelineReport {
     /// lease/reclaim/fault accounting (all-zero for fault-free runs whose
     /// leases never expired)
     pub recovery: FlowRecovery,
+    /// elastic stage-replica accounting (empty when every stage ran one
+    /// thread, i.e. sync mode or an unreplicated pipelined run)
+    pub scaling: StageScaling,
 }
 
 impl PipelineReport {
@@ -244,13 +328,18 @@ impl PipelineReport {
         }
     }
 
-    /// Fraction of the wall clock a single stage was busy (0 for a
-    /// degenerate wall clock).
+    /// Fraction of the stage's *slot time* it was busy. With elastic
+    /// replicas the denominator is the stage's replica-seconds (Σ live
+    /// replicas × seconds), so utilization stays in [0, 1] however many
+    /// replicas ran; stages without a replica record (sync mode, the
+    /// update driver) fall back to the wall clock, the one-thread case
+    /// where slot time == wall time. 0 for a degenerate denominator.
     pub fn utilization(&self, stage: &str) -> f64 {
-        if self.wall_secs < MIN_WALL_SECS {
+        let denom = self.scaling.replica_secs(stage).unwrap_or(self.wall_secs);
+        if denom < MIN_WALL_SECS {
             0.0
         } else {
-            self.busy.get(stage).copied().unwrap_or(0.0) / self.wall_secs
+            self.busy.get(stage).copied().unwrap_or(0.0) / denom
         }
     }
 
@@ -294,6 +383,11 @@ impl PipelineReport {
                 crate::util::fmt_bytes(self.bus.naive_equivalent_bytes)
             )
         };
+        let scaling = if !self.scaling.any_scaled() {
+            String::new()
+        } else {
+            format!(" scaling[{}]", self.scaling.summary())
+        };
         let rec = if !self.recovery.any_recovery() {
             String::new()
         } else {
@@ -308,12 +402,13 @@ impl PipelineReport {
             )
         };
         format!(
-            "[{}] wall={} overlap={}{}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
             lag,
             bus,
+            scaling,
             rec,
             stages
         )
@@ -497,6 +592,41 @@ mod tests {
             ..Default::default()
         };
         assert!(loud.summary().contains("recovery[reclaim=3"), "{}", loud.summary());
+    }
+
+    #[test]
+    fn utilization_is_replica_aware() {
+        // the satellite regression: with N replica threads the old
+        // busy/wall ratio exceeded 1.0 — slot time must divide instead
+        let mut r = PipelineReport { mode: "pipelined".into(), wall_secs: 2.0, ..Default::default() };
+        r.busy.insert("generation".into(), 3.6);
+        // two generation replicas for the whole run: 4 replica-seconds
+        r.scaling.stages.insert(
+            "generation".into(),
+            StageScale {
+                initial: 2,
+                final_replicas: 2,
+                max_replicas: 2,
+                replica_secs: 4.0,
+                ..Default::default()
+            },
+        );
+        let u = r.utilization("generation");
+        assert!((u - 0.9).abs() < 1e-12, "{u}");
+        assert!(u <= 1.0);
+        // a stage without a replica record keeps the wall denominator
+        r.busy.insert("update".into(), 1.0);
+        assert!((r.utilization("update") - 0.5).abs() < 1e-12);
+        // scaled runs advertise the replica timeline in the summary
+        assert!(r.scaling.any_scaled());
+        assert!(r.summary().contains("scaling[generation 2→2"), "{}", r.summary());
+        // unscaled runs stay silent
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("scaling["));
+        // idle-ratio arithmetic
+        let s = StageScale { idle_obs: 3, obs: 4, ..Default::default() };
+        assert!((s.idle_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(StageScale::default().idle_ratio(), 0.0);
     }
 
     #[test]

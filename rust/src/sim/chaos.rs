@@ -16,13 +16,17 @@
 
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
-use crate::metrics::FlowRecovery;
+use crate::metrics::{FlowRecovery, StageScaling};
 use crate::runtime::Tensor;
+use crate::trainers::autoscale::{
+    finish_scaling, observe_and_scale, spawn_initial, AutoscaleConfig, Autoscaler, ReplicaSet,
+    StageReplicas, SCALABLE_STAGES,
+};
 use crate::trainers::faults::{FaultInjector, FaultKind, FaultPlan, StageExit};
 use crate::transfer_dock::{
     Conservation, DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage,
@@ -49,6 +53,12 @@ pub struct ChaosConfig {
     /// are re-processed by its twin and the late writebacks land as
     /// superseded duplicates)
     pub workers_per_stage: usize,
+    /// per-stage initial replica counts; overrides the uniform
+    /// `workers_per_stage` when set (the executor's `--stage-replicas`)
+    pub stage_replicas: Option<StageReplicas>,
+    /// backlog-driven elastic autoscaling of the stage workers, driven
+    /// by the harness driver on its lease ticks
+    pub autoscale: Option<AutoscaleConfig>,
     /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
     pub deadline: Duration,
 }
@@ -65,6 +75,8 @@ impl Default for ChaosConfig {
             seed: 0,
             plan: FaultPlan::default(),
             workers_per_stage: 1,
+            stage_replicas: None,
+            autoscale: None,
             deadline: Duration::from_secs(60),
         }
     }
@@ -74,13 +86,22 @@ impl ChaosConfig {
     pub fn total_samples(&self) -> usize {
         self.iterations * self.prompts_per_iter * self.group_size
     }
+
+    /// Initial replicas per stage: the explicit per-stage counts when
+    /// set, else `workers_per_stage` uniformly.
+    pub fn initial_replicas(&self) -> StageReplicas {
+        self.stage_replicas
+            .unwrap_or_else(|| StageReplicas::uniform(self.workers_per_stage.max(1)))
+    }
 }
 
 /// What a chaos run produced.
 #[derive(Debug)]
 pub struct ChaosOutcome {
-    /// retired samples: index → (group, prompt text) — the loss detector
-    pub retired: BTreeMap<u64, (u64, String)>,
+    /// retired samples: index → (group, prompt text, behavior stamp) —
+    /// the loss detector, and (since the stamp is a pure function of the
+    /// sample here) the elastic differential's stamp-identity detector
+    pub retired: BTreeMap<u64, (u64, String, u64)>,
     /// lease/fault accounting at the end of the run
     pub recovery: FlowRecovery,
     /// per-store byte conservation (one entry per warehouse; one total
@@ -90,6 +111,11 @@ pub struct ChaosOutcome {
     pub resident_after: usize,
     /// logical lease-clock ticks the driver issued
     pub ticks: u64,
+    /// elastic replica accounting: one entry per pull-driven stage
+    /// (recorded unconditionally in the harness — unlike the executor's
+    /// report, which stays empty for unreplicated runs); the baseline
+    /// drain leaves it default
+    pub scaling: StageScaling,
 }
 
 impl ChaosOutcome {
@@ -103,10 +129,13 @@ impl ChaosOutcome {
     }
 }
 
-/// Deterministic synthetic generation output for a sample: tokens are a
-/// pure function of the prompt bytes, so any redispatch regenerates the
-/// same response.
-fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize) {
+/// Deterministic synthetic generation output for a sample: tokens *and
+/// the behavior-version stamp* are pure functions of the prompt bytes,
+/// so any redispatch regenerates the same response with the same stamp —
+/// which is exactly what makes the elastic differential meaningful: if
+/// replicas or the autoscaler could lose, duplicate, or re-stamp a
+/// sample, the retired `(set, stamps)` comparison would catch it.
+fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize, u64) {
     let mut h = 0x9E37_79B9u32;
     for b in s.prompt_text.bytes() {
         h = h.wrapping_mul(31).wrapping_add(b as u32);
@@ -116,18 +145,28 @@ fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize) {
         (FieldKind::Tokens, Tensor::i32(&[8], tokens).unwrap()),
         (FieldKind::RespMask, Tensor::zeros(&[7])),
     ];
-    (fields, format!("{}", s.answer), 2)
+    // a non-trivial stamp (1..=4): distinct per prompt, identical across
+    // redispatches and replica configurations
+    let stamp = 1 + (h % 4) as u64;
+    (fields, format!("{}", s.answer), 2, stamp)
 }
 
 /// One synthetic pull-driven stage worker (runs until shutdown; a
-/// fault-kill exits `Killed` and the supervisor respawns it).
+/// fault-kill exits `Killed` and the supervisor respawns it; a set
+/// retire flag — autoscale scale-down — exits `Retired` between claim
+/// batches, never while holding one).
 fn synthetic_stage(
     flow: &dyn SampleFlow,
     stage: Stage,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
 ) -> Result<StageExit> {
     loop {
+        if retire.load(Ordering::Relaxed) {
+            return Ok(StageExit::Retired);
+        }
         let metas = flow.wait_ready(stage, 16, Duration::from_millis(5))?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
@@ -146,27 +185,37 @@ fn synthetic_stage(
                 None => {}
             }
         }
-        let samples = flow.fetch_resident(0, &metas)?;
-        for s in &samples {
-            match stage {
-                Stage::Generation => {
-                    let (fields, completion, resp_len) = synth_generation(s);
-                    flow.store_generation(0, s.index, fields, completion, resp_len, 1)?;
+        busy_slots.fetch_add(1, Ordering::Relaxed);
+        let done = (|| -> Result<()> {
+            let samples = flow.fetch_resident(0, &metas)?;
+            for s in &samples {
+                match stage {
+                    Stage::Generation => {
+                        let (fields, completion, resp_len, stamp) = synth_generation(s);
+                        flow.store_generation(0, s.index, fields, completion, resp_len, stamp)?;
+                    }
+                    Stage::OldLogprob => flow.store_fields(
+                        0,
+                        s.index,
+                        vec![(FieldKind::OldLp, Tensor::zeros(&[7]))],
+                    )?,
+                    Stage::RefLogprob => flow.store_fields(
+                        0,
+                        s.index,
+                        vec![(FieldKind::RefLp, Tensor::zeros(&[7]))],
+                    )?,
+                    Stage::Reward => flow.store_fields(
+                        0,
+                        s.index,
+                        vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))],
+                    )?,
+                    Stage::Update => unreachable!("the driver consumes update-ready samples"),
                 }
-                Stage::OldLogprob => {
-                    flow.store_fields(0, s.index, vec![(FieldKind::OldLp, Tensor::zeros(&[7]))])?
-                }
-                Stage::RefLogprob => {
-                    flow.store_fields(0, s.index, vec![(FieldKind::RefLp, Tensor::zeros(&[7]))])?
-                }
-                Stage::Reward => flow.store_fields(
-                    0,
-                    s.index,
-                    vec![(FieldKind::Reward, Tensor::scalar_f32(1.0))],
-                )?,
-                Stage::Update => unreachable!("the driver consumes update-ready samples"),
             }
-        }
+            Ok(())
+        })();
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        done?;
     }
 }
 
@@ -188,12 +237,15 @@ fn admit_iteration(
     Ok(())
 }
 
-/// Pipelined chaos run over the real transfer dock: four synthetic stage
-/// workers under supervisor restart loops, the driver playing the update
-/// state (windowed admission, retire-on-ready, lease-clock ticking on
-/// idle passes).
+/// Pipelined chaos run over the real transfer dock: elastic replica sets
+/// of synthetic stage workers under supervisor restart loops, the driver
+/// playing the update state (windowed admission, retire-on-ready,
+/// lease-clock ticking — and autoscale decisions — on idle passes).
 pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     cfg.plan.validate()?;
+    if let Some(ac) = &cfg.autoscale {
+        ac.validate()?;
+    }
     let flow: Arc<TransferDock> =
         Arc::new(TransferDock::with_lease(DockTopology::spread(cfg.nodes), cfg.lease_ticks));
     let injector: Option<Arc<FaultInjector>> =
@@ -202,23 +254,43 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     let mut task_gen = TaskGenerator::train(cfg.seed);
     let per_iter = cfg.prompts_per_iter * cfg.group_size;
     let window = cfg.max_inflight_iters.max(1);
+    let replicas0 = cfg.initial_replicas();
 
-    let mut retired: BTreeMap<u64, (u64, String)> = BTreeMap::new();
+    let mut retired: BTreeMap<u64, (u64, String, u64)> = BTreeMap::new();
     let mut remaining: BTreeMap<usize, usize> = BTreeMap::new();
     let mut admitted = 0usize;
     let mut completed = 0usize;
     let mut ticks = 0u64;
+    // replica sets + autoscaler outlive the scope so their slot-time
+    // accounting closes only after every worker thread has joined
+    let mut sets: Vec<ReplicaSet> =
+        SCALABLE_STAGES.iter().map(|&s| ReplicaSet::new(s)).collect();
+    let mut scaler = cfg.autoscale.map(Autoscaler::new);
     let deadline = Instant::now() + cfg.deadline;
 
     std::thread::scope(|scope| -> Result<()> {
-        for stage in [Stage::Generation, Stage::OldLogprob, Stage::RefLogprob, Stage::Reward] {
-            for _worker in 0..cfg.workers_per_stage.max(1) {
-                let flow = Arc::clone(&flow);
-                let shutdown = Arc::clone(&shutdown);
-                let faults = injector.clone();
-                scope.spawn(move || loop {
-                    match synthetic_stage(flow.as_ref(), stage, faults.as_deref(), &shutdown) {
-                        Ok(StageExit::Completed) => break,
+        // one spawner for every synthetic stage replica; the autoscaler
+        // calls it again mid-run (scoped threads may be spawned while
+        // the scope is live). The thread flips `exited` on its way out,
+        // ending the replica's slot-time accounting.
+        let spawn_replica = |stage: Stage,
+                             retire: Arc<AtomicBool>,
+                             busy_slots: Arc<AtomicUsize>,
+                             exited: Arc<AtomicBool>| {
+            let flow = Arc::clone(&flow);
+            let shutdown = Arc::clone(&shutdown);
+            let faults = injector.clone();
+            scope.spawn(move || {
+                loop {
+                    match synthetic_stage(
+                        flow.as_ref(),
+                        stage,
+                        &retire,
+                        &busy_slots,
+                        faults.as_deref(),
+                        &shutdown,
+                    ) {
+                        Ok(StageExit::Completed) | Ok(StageExit::Retired) => break,
                         Ok(StageExit::Killed) => {
                             if let Some(inj) = faults.as_deref() {
                                 inj.note_restart();
@@ -233,16 +305,22 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                             break;
                         }
                     }
-                });
-            }
-        }
+                }
+                exited.store(true, Ordering::Release);
+            });
+        };
+        spawn_initial(&mut sets, flow.as_ref(), replicas0, |st, _id, r, b, e| {
+            spawn_replica(st, r, b, e)
+        });
 
         // ---- driver: the update state
-        let mut drive = |retired: &mut BTreeMap<u64, (u64, String)>,
+        let mut drive = |retired: &mut BTreeMap<u64, (u64, String, u64)>,
                      remaining: &mut BTreeMap<usize, usize>,
                      admitted: &mut usize,
                      completed: &mut usize,
-                     ticks: &mut u64|
+                     ticks: &mut u64,
+                     sets: &mut Vec<ReplicaSet>,
+                     scaler: &mut Option<Autoscaler>|
          -> Result<()> {
             while *completed < cfg.iterations {
                 anyhow::ensure!(
@@ -259,14 +337,22 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                 }
                 let fresh = flow.wait_ready(Stage::Update, usize::MAX, Duration::from_millis(5))?;
                 if fresh.is_empty() {
-                    // idle pass: advance logical time so dead claims expire
+                    // idle pass: advance logical time so dead claims
+                    // expire, and let the autoscaler observe each stage's
+                    // backlog + idle ratio at this tick
                     flow.tick_lease_clock();
                     *ticks += 1;
+                    if let Some(sc) = scaler.as_mut() {
+                        observe_and_scale(sc, sets, flow.as_ref(), *ticks, |st, _id, r, b, e| {
+                            spawn_replica(st, r, b, e)
+                        });
+                    }
                     continue;
                 }
                 for m in &fresh {
                     let Some(s) = flow.retire(m.index) else { continue };
-                    let dup = retired.insert(s.index, (s.group, s.prompt_text.clone()));
+                    let dup = retired
+                        .insert(s.index, (s.group, s.prompt_text.clone(), s.behavior_version));
                     anyhow::ensure!(dup.is_none(), "sample {} retired twice", s.index);
                     let iter = (s.group as usize) / cfg.prompts_per_iter;
                     let r = remaining
@@ -281,10 +367,21 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
             }
             Ok(())
         };
-        let out = drive(&mut retired, &mut remaining, &mut admitted, &mut completed, &mut ticks);
+        let out = drive(
+            &mut retired,
+            &mut remaining,
+            &mut admitted,
+            &mut completed,
+            &mut ticks,
+            &mut sets,
+            &mut scaler,
+        );
         shutdown.store(true, Ordering::Relaxed);
         out
     })?;
+
+    // every worker thread has joined: close the replica accounting
+    let scaling = finish_scaling(scaler.take(), &mut sets);
 
     Ok(ChaosOutcome {
         retired,
@@ -300,6 +397,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         conservation: flow.conservation(),
         resident_after: flow.len(),
         ticks,
+        scaling,
     })
 }
 
@@ -309,7 +407,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
 pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     let flow = ReplayBuffer::with_lease(0, cfg.lease_ticks);
     let mut task_gen = TaskGenerator::train(cfg.seed);
-    let mut retired: BTreeMap<u64, (u64, String)> = BTreeMap::new();
+    let mut retired: BTreeMap<u64, (u64, String, u64)> = BTreeMap::new();
     for iter in 0..cfg.iterations {
         admit_iteration(&flow, &mut task_gen, cfg, iter)?;
         // barrier per stage, like the sync executor
@@ -323,8 +421,10 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                 for s in &samples {
                     match stage {
                         Stage::Generation => {
-                            let (fields, completion, resp_len) = synth_generation(s);
-                            flow.store_generation(0, s.index, fields, completion, resp_len, 1)?;
+                            let (fields, completion, resp_len, stamp) = synth_generation(s);
+                            flow.store_generation(
+                                0, s.index, fields, completion, resp_len, stamp,
+                            )?;
                         }
                         Stage::OldLogprob => flow.store_fields(
                             0,
@@ -348,7 +448,7 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         }
         for m in flow.request_ready(Stage::Update, usize::MAX)? {
             let s = flow.retire(m.index).expect("update-ready sample must be resident");
-            retired.insert(s.index, (s.group, s.prompt_text));
+            retired.insert(s.index, (s.group, s.prompt_text, s.behavior_version));
         }
     }
     Ok(ChaosOutcome {
@@ -357,6 +457,7 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         conservation: vec![flow.conservation()],
         resident_after: flow.len(),
         ticks: 0,
+        scaling: StageScaling::default(),
     })
 }
 
@@ -375,6 +476,24 @@ mod tests {
         assert!(b.lossless(&cfg));
         assert_eq!(a.retired, b.retired, "dataflows must retire identical sample sets");
         assert_eq!(a.recovery.reclaimed, 0, "fault-free run must not reclaim");
+    }
+
+    #[test]
+    fn replicated_stages_match_baseline() {
+        // gen=4,logprob=2 replicas, fault-free: the retired set AND the
+        // per-sample stamps must equal the single-replica baseline's
+        let cfg = ChaosConfig {
+            lease_ticks: 256,
+            stage_replicas: Some(StageReplicas::parse("gen=4,logprob=2").unwrap()),
+            ..Default::default()
+        };
+        let a = run_chaos(&cfg).unwrap();
+        let b = run_baseline(&cfg).unwrap();
+        assert!(a.lossless(&cfg));
+        assert_eq!(a.retired, b.retired, "replicas changed the retired set or stamps");
+        assert_eq!(a.recovery.reclaimed, 0, "fault-free replicas must never reclaim");
+        assert_eq!(a.scaling.stages["generation"].initial, 4);
+        assert_eq!(a.scaling.stages["old_logprob"].initial, 2);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub use chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
 pub use costmodel::{ClusterSpec, DeviceSpec, PaperModel, RlWorkload, StageTimes};
 pub use experiments::{
     chaos_rows, fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
-    table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow, Table1Row,
+    scaling_rows, table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow, ScalingRow,
+    Table1Row,
 };
 pub use systems::{SystemKind, SystemModel};

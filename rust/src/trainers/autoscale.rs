@@ -1,0 +1,662 @@
+//! Elastic data-parallel stage replicas: configuration, backlog-driven
+//! autoscaling, and the replica-set bookkeeping shared by the pipelined
+//! executor and the chaos harness.
+//!
+//! The paper's scalability claim is that throughput scales by *widening*
+//! the dataflow graph's nodes, not only by pipelining them (DistFlow's
+//! fully-distributed multi-worker stages; HybridFlow's tunable per-stage
+//! resource ratios). PR 4's lease-based claims already make concurrent
+//! pullers safe by construction — a grant latches a sample for exactly
+//! one worker while its lease is live — so a worker state can run `N ≥ 1`
+//! replica threads against the same controller with no new dispatch
+//! machinery.
+//!
+//! On top of static replica counts ([`StageReplicas`], the
+//! `--stage-replicas gen=4,logprob=2` flag), the [`Autoscaler`] grows and
+//! shrinks each stage's replica set from two *logical* observations taken
+//! on the driving executor's lease ticks:
+//!
+//! * **backlog** — the stage controller's ready-and-unclaimed queue depth
+//!   (`SampleFlow::ready_depth`), and
+//! * **idle ratio** — how many live replicas are currently not processing
+//!   a claimed batch.
+//!
+//! Decisions are pure functions of tick counts and observed depths —
+//! never wall time — so autoscaled runs stay reproducible in the same
+//! sense as the chaos suite: whatever the OS scheduler does, a decision
+//! at tick `t` depends only on what the flow looked like at ticks
+//! `..= t`. Hysteresis (scale up only after `up_ticks` *consecutive*
+//! over-backlog observations, down only after `down_ticks` consecutive
+//! idle-and-drained ones) keeps an oscillating backlog from flapping the
+//! replica count. Scale-down is **drain-then-retire**: the retiring
+//! replica's flag is checked only between claim batches, so a live lease
+//! is never abandoned — the replica finishes (and writes back) whatever
+//! it holds, then exits.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{StageScale, StageScaling};
+use crate::transfer_dock::Stage;
+
+/// The four pull-driven worker states replicas apply to. The update
+/// state is the driver (it owns the policy and the lease clock) and is
+/// never replicated — the analogue of the paper's controller process.
+pub const SCALABLE_STAGES: [Stage; 4] =
+    [Stage::Generation, Stage::OldLogprob, Stage::RefLogprob, Stage::Reward];
+
+/// Per-stage replica counts for the pull-driven worker states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageReplicas {
+    pub generation: usize,
+    pub old_logprob: usize,
+    pub ref_logprob: usize,
+    pub reward: usize,
+}
+
+impl Default for StageReplicas {
+    fn default() -> Self {
+        Self { generation: 1, old_logprob: 1, ref_logprob: 1, reward: 1 }
+    }
+}
+
+impl StageReplicas {
+    pub fn get(&self, stage: Stage) -> usize {
+        match stage {
+            Stage::Generation => self.generation,
+            Stage::OldLogprob => self.old_logprob,
+            Stage::RefLogprob => self.ref_logprob,
+            Stage::Reward => self.reward,
+            Stage::Update => 1,
+        }
+    }
+
+    pub fn set(&mut self, stage: Stage, n: usize) {
+        match stage {
+            Stage::Generation => self.generation = n,
+            Stage::OldLogprob => self.old_logprob = n,
+            Stage::RefLogprob => self.ref_logprob = n,
+            Stage::Reward => self.reward = n,
+            Stage::Update => {}
+        }
+    }
+
+    /// Every stage at one replica (the pre-elastic executor shape).
+    pub fn all_single(&self) -> bool {
+        self.max_count() == 1
+    }
+
+    pub fn max_count(&self) -> usize {
+        self.generation.max(self.old_logprob).max(self.ref_logprob).max(self.reward)
+    }
+
+    pub fn min_count(&self) -> usize {
+        self.generation.min(self.old_logprob).min(self.ref_logprob).min(self.reward)
+    }
+
+    /// Uniform count for every pull-driven stage.
+    pub fn uniform(n: usize) -> Self {
+        Self { generation: n, old_logprob: n, ref_logprob: n, reward: n }
+    }
+
+    /// Parse the `--stage-replicas` syntax: comma-separated `key=count`
+    /// pairs, e.g. `gen=4,logprob=2`. Unnamed stages keep 1 replica.
+    /// Accepted keys (aliases): `gen|generation`, `logprob|old_logprob`,
+    /// `ref|reference|ref_logprob`, `reward`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut out = Self::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--stage-replicas expects key=count, got {part:?}"))?;
+            let n: usize = val
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("--stage-replicas {key}: bad count {val:?}"))?;
+            anyhow::ensure!(n >= 1, "--stage-replicas {key}: count must be >= 1");
+            let stage = match key.trim() {
+                "gen" | "generation" => Stage::Generation,
+                "logprob" | "old_logprob" => Stage::OldLogprob,
+                "ref" | "reference" | "ref_logprob" => Stage::RefLogprob,
+                "reward" => Stage::Reward,
+                other => {
+                    anyhow::bail!(
+                        "--stage-replicas: unknown stage {other:?} \
+                         (gen|logprob|ref|reward)"
+                    )
+                }
+            };
+            out.set(stage, n);
+        }
+        Ok(out)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "gen={} logprob={} ref={} reward={}",
+            self.generation, self.old_logprob, self.ref_logprob, self.reward
+        )
+    }
+}
+
+/// Autoscaler knobs. Thresholds are in samples (controller ready-queue
+/// depth); windows are in lease-clock ticks' worth of consecutive
+/// observations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleConfig {
+    /// never shrink a stage below this many replicas
+    pub min_replicas: usize,
+    /// never grow a stage beyond this many replicas
+    pub max_replicas: usize,
+    /// scale-up pressure: backlog above this depth with zero idle
+    /// replicas counts as an over-backlog observation
+    pub backlog_hi: usize,
+    /// scale-down pressure: backlog at or below this depth with at least
+    /// one idle replica counts as an idle observation
+    pub backlog_lo: usize,
+    /// consecutive over-backlog observations before growing by one
+    pub up_ticks: u32,
+    /// consecutive idle observations before retiring one replica
+    pub down_ticks: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min_replicas: 1,
+            max_replicas: 4,
+            backlog_hi: 16,
+            backlog_lo: 0,
+            up_ticks: 3,
+            down_ticks: 6,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.min_replicas >= 1, "autoscale min_replicas must be >= 1");
+        anyhow::ensure!(
+            self.max_replicas >= self.min_replicas,
+            "autoscale max_replicas {} below min_replicas {}",
+            self.max_replicas,
+            self.min_replicas
+        );
+        anyhow::ensure!(
+            self.backlog_hi > self.backlog_lo,
+            "autoscale backlog_hi ({}) must exceed backlog_lo ({})",
+            self.backlog_hi,
+            self.backlog_lo
+        );
+        anyhow::ensure!(self.up_ticks >= 1, "autoscale up_ticks must be >= 1");
+        anyhow::ensure!(self.down_ticks >= 1, "autoscale down_ticks must be >= 1");
+        Ok(())
+    }
+}
+
+/// What the autoscaler wants done to one stage's replica set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// spawn one more replica
+    Grow,
+    /// drain-then-retire one replica
+    Shrink,
+    Hold,
+}
+
+#[derive(Debug, Default)]
+struct StageState {
+    /// consecutive over-backlog observations
+    over: u32,
+    /// consecutive idle-and-drained observations
+    under: u32,
+}
+
+/// Backlog-driven replica autoscaler. Pure bookkeeping: the caller (the
+/// update thread, or the chaos-harness driver) takes the observations on
+/// its lease ticks and applies the decisions; this type only decides and
+/// records the [`StageScaling`] report.
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    state: BTreeMap<&'static str, StageState>,
+    scaling: StageScaling,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Self { cfg, state: BTreeMap::new(), scaling: StageScaling::default() }
+    }
+
+    /// One observation of `stage` at logical tick `tick`: ready-queue
+    /// depth `backlog`, `live` replicas (of which `idle` are not
+    /// currently processing) plus `draining` retired-but-not-yet-exited
+    /// ones. Returns the (already-bounded) decision; the caller must
+    /// apply it, and decisions assume the caller does.
+    ///
+    /// The grow bound counts `live + draining`: a draining replica still
+    /// runs a thread, holds its weight view, and pulls from the
+    /// controller until it observes its flag, so `max_replicas` caps the
+    /// *actual* concurrent replica count, not just the target.
+    ///
+    /// Hysteresis: the over/under counters reset whenever the opposing
+    /// (or neutral) condition is observed, so an oscillating backlog
+    /// never accumulates enough consecutive pressure to flap.
+    pub fn observe(
+        &mut self,
+        stage: Stage,
+        tick: u64,
+        backlog: usize,
+        live: usize,
+        draining: usize,
+        idle: usize,
+    ) -> ScaleDecision {
+        let cfg = self.cfg;
+        let st = self.state.entry(stage.name()).or_default();
+        let scale = self.scaling.stages.entry(stage.name().to_string()).or_default();
+        scale.obs += 1;
+        scale.backlog_high_water = scale.backlog_high_water.max(backlog);
+        if idle > 0 {
+            scale.idle_obs += 1;
+        }
+        if backlog > cfg.backlog_hi && idle == 0 {
+            st.over += 1;
+            st.under = 0;
+        } else if backlog <= cfg.backlog_lo && idle > 0 {
+            st.under += 1;
+            st.over = 0;
+        } else {
+            st.over = 0;
+            st.under = 0;
+        }
+        if st.over >= cfg.up_ticks && live + draining < cfg.max_replicas {
+            st.over = 0;
+            scale.grows += 1;
+            scale.timeline.push((tick, live + 1));
+            return ScaleDecision::Grow;
+        }
+        if st.under >= cfg.down_ticks && live > cfg.min_replicas {
+            st.under = 0;
+            scale.shrinks += 1;
+            scale.timeline.push((tick, live - 1));
+            return ScaleDecision::Shrink;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// The scaling report accumulated so far (the caller fills in the
+    /// wall-clock fields — `replica_secs`, initial/final counts — that
+    /// only the replica sets know).
+    pub fn into_report(self) -> StageScaling {
+        self.scaling
+    }
+}
+
+/// One replica's control handles: the drain-then-retire flag the set
+/// flips, and the exited flag the replica's thread sets when its
+/// supervisor loop returns for good.
+struct Slot {
+    retire: Arc<AtomicBool>,
+    exited: Arc<AtomicBool>,
+}
+
+/// One stage's live replica set: retire flags for drain-then-retire
+/// scale-down, a shared busy counter for idle-ratio observations, and
+/// replica-second accounting (the denominator of replica-aware
+/// utilization in [`crate::metrics::PipelineReport`]).
+///
+/// Slot-time accounting must *bound busy time from above* so
+/// utilization never exceeds 1: a retired replica keeps draining its
+/// claimed batch (and may even claim one more before it observes the
+/// flag), so it moves to a `draining` list and keeps accruing slot time
+/// until its thread confirms exit — never the reverse. Callers finalize
+/// (`finish_into`) only after every replica thread has joined, at which
+/// point the busy totals are final too.
+pub struct ReplicaSet {
+    pub stage: Stage,
+    /// live replicas, in spawn order; `shrink` retires the most
+    /// recently spawned one
+    slots: Vec<Slot>,
+    /// retired replicas whose threads have not yet confirmed exit:
+    /// still occupying a slot for accounting purposes
+    draining: Vec<Slot>,
+    /// replicas currently inside a claimed batch (shared with the
+    /// replica threads)
+    busy: Arc<AtomicUsize>,
+    next_id: usize,
+    initial: usize,
+    max_seen: usize,
+    replica_secs: f64,
+    last_change: Instant,
+}
+
+impl ReplicaSet {
+    pub fn new(stage: Stage) -> Self {
+        Self {
+            stage,
+            slots: Vec::new(),
+            draining: Vec::new(),
+            busy: Arc::new(AtomicUsize::new(0)),
+            next_id: 0,
+            initial: 0,
+            max_seen: 0,
+            replica_secs: 0.0,
+            last_change: Instant::now(),
+        }
+    }
+
+    /// Charge slot time for every live *and still-draining* replica,
+    /// then drop draining entries whose threads have exited. Charging
+    /// up to the sweep (not the unobservable exit instant) overcounts
+    /// the denominator slightly — the safe direction for a utilization
+    /// that must stay ≤ 1.
+    fn account(&mut self) {
+        let now = Instant::now();
+        let occupied = self.slots.len() + self.draining.len();
+        self.replica_secs += occupied as f64 * now.duration_since(self.last_change).as_secs_f64();
+        self.last_change = now;
+        self.draining.retain(|s| !s.exited.load(Ordering::Acquire));
+    }
+
+    /// Add one replica: `spawn` receives the replica id, its retire
+    /// flag, the stage's shared busy counter, and the exited flag the
+    /// thread must set (Release) when its supervisor loop returns.
+    pub fn grow(
+        &mut self,
+        spawn: impl FnOnce(usize, Arc<AtomicBool>, Arc<AtomicUsize>, Arc<AtomicBool>),
+    ) {
+        self.account();
+        let slot = Slot {
+            retire: Arc::new(AtomicBool::new(false)),
+            exited: Arc::new(AtomicBool::new(false)),
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let (retire, exited) = (Arc::clone(&slot.retire), Arc::clone(&slot.exited));
+        self.slots.push(slot);
+        self.max_seen = self.max_seen.max(self.slots.len());
+        spawn(id, retire, Arc::clone(&self.busy), exited);
+    }
+
+    /// Record the post-initial-spawn count as the run's starting point.
+    pub fn mark_initial(&mut self) {
+        self.initial = self.slots.len();
+    }
+
+    /// Drain-then-retire the most recent replica: its flag flips, and
+    /// the worker exits at its next between-batches check — while it
+    /// holds claims it keeps processing, so no live lease is abandoned
+    /// (and its slot time keeps accruing until the thread exits).
+    /// Returns false when no replica is left to retire.
+    pub fn shrink(&mut self) -> bool {
+        self.account();
+        match self.slots.pop() {
+            Some(slot) => {
+                slot.retire.store(true, Ordering::Relaxed);
+                self.draining.push(slot);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Retired replicas whose threads have not yet confirmed exit.
+    pub fn draining_count(&self) -> usize {
+        self.draining.len()
+    }
+
+    pub fn idle(&self) -> usize {
+        self.slots.len().saturating_sub(self.busy.load(Ordering::Relaxed))
+    }
+
+    pub fn busy_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.busy)
+    }
+
+    /// Close the accounting and fold this set's wall-clock numbers into
+    /// the stage's [`StageScale`] entry. Call only after the replica
+    /// threads have joined (busy totals final, no further slot time).
+    pub fn finish_into(&mut self, scale: &mut StageScale) {
+        self.account();
+        scale.initial = self.initial;
+        scale.final_replicas = self.slots.len();
+        scale.max_replicas = scale.max_replicas.max(self.max_seen);
+        scale.replica_secs = self.replica_secs;
+    }
+}
+
+/// The replica-scaling driver protocol, shared by the pipelined
+/// executor and the chaos harness so the two cannot drift. `spawn`
+/// receives `(stage, replica id, retire flag, busy counter, exited
+/// flag)` and must start the worker thread.
+///
+/// Spawn the configured initial replicas and register the puller counts.
+pub fn spawn_initial(
+    sets: &mut [ReplicaSet],
+    flow: &dyn crate::transfer_dock::SampleFlow,
+    counts: StageReplicas,
+    mut spawn: impl FnMut(Stage, usize, Arc<AtomicBool>, Arc<AtomicUsize>, Arc<AtomicBool>),
+) {
+    for set in sets.iter_mut() {
+        let stage = set.stage;
+        for _ in 0..counts.get(stage) {
+            set.grow(|id, retire, busy, exited| spawn(stage, id, retire, busy, exited));
+        }
+        set.mark_initial();
+        flow.note_pullers(stage, set.live());
+    }
+}
+
+/// One autoscale round at lease tick `tick`: observe every stage's
+/// backlog and idle ratio, apply the decisions (spawning replicas via
+/// `spawn`, drain-then-retiring via the retire flags), and keep the
+/// flow's puller registration current.
+pub fn observe_and_scale(
+    scaler: &mut Autoscaler,
+    sets: &mut [ReplicaSet],
+    flow: &dyn crate::transfer_dock::SampleFlow,
+    tick: u64,
+    mut spawn: impl FnMut(Stage, usize, Arc<AtomicBool>, Arc<AtomicUsize>, Arc<AtomicBool>),
+) {
+    for set in sets.iter_mut() {
+        let stage = set.stage;
+        let backlog = flow.ready_depth(stage);
+        let decision =
+            scaler.observe(stage, tick, backlog, set.live(), set.draining_count(), set.idle());
+        match decision {
+            ScaleDecision::Grow => {
+                set.grow(|id, retire, busy, exited| spawn(stage, id, retire, busy, exited));
+                flow.note_pullers(stage, set.live());
+            }
+            ScaleDecision::Shrink => {
+                if set.shrink() {
+                    flow.note_pullers(stage, set.live());
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+    }
+}
+
+/// Close the run's replica accounting: autoscaler decision report plus
+/// every set's slot time. Call only after the replica threads joined.
+pub fn finish_scaling(scaler: Option<Autoscaler>, sets: &mut [ReplicaSet]) -> StageScaling {
+    let mut scaling = scaler.map(Autoscaler::into_report).unwrap_or_default();
+    for set in sets.iter_mut() {
+        let entry = scaling.stages.entry(set.stage.name().to_string()).or_default();
+        set.finish_into(entry);
+    }
+    scaling
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_replicas_parse_and_aliases() {
+        let r = StageReplicas::parse("gen=4,logprob=2").unwrap();
+        assert_eq!(r.generation, 4);
+        assert_eq!(r.old_logprob, 2);
+        assert_eq!(r.ref_logprob, 1);
+        assert_eq!(r.reward, 1);
+        assert_eq!(r.get(Stage::Update), 1, "the update driver is never replicated");
+        assert!(!r.all_single());
+        assert_eq!(r.max_count(), 4);
+
+        let r = StageReplicas::parse("generation=2, reference=3 ,reward=2").unwrap();
+        assert_eq!((r.generation, r.ref_logprob, r.reward), (2, 3, 2));
+        assert!(StageReplicas::parse("").unwrap().all_single());
+
+        for bad in ["gen", "gen=0", "gen=x", "warp=2"] {
+            assert!(StageReplicas::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn autoscale_config_validates() {
+        assert!(AutoscaleConfig::default().validate().is_ok());
+        let bad = AutoscaleConfig { min_replicas: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AutoscaleConfig { max_replicas: 1, min_replicas: 2, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AutoscaleConfig { backlog_hi: 0, backlog_lo: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AutoscaleConfig { up_ticks: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn scale_up_requires_consecutive_pressure() {
+        let cfg = AutoscaleConfig { up_ticks: 3, backlog_hi: 4, ..Default::default() };
+        let mut a = Autoscaler::new(cfg);
+        // two over-backlog ticks, then relief: counter must reset
+        for t in 0..2 {
+            assert_eq!(a.observe(Stage::Generation, t, 10, 1, 0, 0), ScaleDecision::Hold);
+        }
+        assert_eq!(a.observe(Stage::Generation, 2, 0, 1, 0, 1), ScaleDecision::Hold);
+        for t in 3..5 {
+            assert_eq!(a.observe(Stage::Generation, t, 10, 1, 0, 0), ScaleDecision::Hold);
+        }
+        // third consecutive over-backlog observation grows
+        assert_eq!(a.observe(Stage::Generation, 5, 10, 1, 0, 0), ScaleDecision::Grow);
+        let report = a.into_report();
+        let g = &report.stages["generation"];
+        assert_eq!(g.grows, 1);
+        assert_eq!(g.backlog_high_water, 10);
+        assert_eq!(g.timeline, vec![(5, 2)]);
+    }
+
+    #[test]
+    fn oscillating_backlog_never_flaps() {
+        // alternating hi/lo observations: neither counter can reach its
+        // threshold, so the replica count must never change
+        let cfg = AutoscaleConfig { up_ticks: 2, down_ticks: 2, backlog_hi: 4, ..Default::default() };
+        let mut a = Autoscaler::new(cfg);
+        for t in 0..100 {
+            let d = if t % 2 == 0 {
+                a.observe(Stage::Reward, t, 10, 2, 0, 0) // pressure
+            } else {
+                a.observe(Stage::Reward, t, 0, 2, 0, 1) // idle
+            };
+            assert_eq!(d, ScaleDecision::Hold, "flap at tick {t}");
+        }
+        let report = a.into_report();
+        let g = &report.stages["reward"];
+        assert_eq!(g.grows + g.shrinks, 0);
+    }
+
+    #[test]
+    fn bounds_and_shrink_hysteresis() {
+        let cfg = AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            up_ticks: 1,
+            down_ticks: 2,
+            backlog_hi: 2,
+            ..Default::default()
+        };
+        let mut a = Autoscaler::new(cfg);
+        assert_eq!(a.observe(Stage::Generation, 0, 5, 1, 0, 0), ScaleDecision::Grow);
+        // at max: pressure no longer grows
+        assert_eq!(a.observe(Stage::Generation, 1, 5, 2, 0, 0), ScaleDecision::Hold);
+        assert_eq!(a.observe(Stage::Generation, 2, 5, 2, 0, 0), ScaleDecision::Hold);
+        // drained + idle long enough: shrink, but never below min
+        assert_eq!(a.observe(Stage::Generation, 3, 0, 2, 0, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(Stage::Generation, 4, 0, 2, 0, 2), ScaleDecision::Shrink);
+        assert_eq!(a.observe(Stage::Generation, 5, 0, 1, 0, 1), ScaleDecision::Hold);
+        assert_eq!(a.observe(Stage::Generation, 6, 0, 1, 0, 1), ScaleDecision::Hold);
+        assert_eq!(
+            a.observe(Stage::Generation, 7, 0, 1, 0, 1),
+            ScaleDecision::Hold,
+            "min_replicas must floor scale-down"
+        );
+    }
+
+    #[test]
+    fn draining_replicas_count_toward_the_max_bound() {
+        // a retired-but-still-draining replica occupies a real thread
+        // and weight copy: live=1 + draining=1 at max=2 must not grow,
+        // or the actual concurrent count would exceed the cap
+        let cfg = AutoscaleConfig { max_replicas: 2, up_ticks: 1, backlog_hi: 2, ..Default::default() };
+        let mut a = Autoscaler::new(cfg);
+        assert_eq!(a.observe(Stage::Generation, 0, 9, 1, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.observe(Stage::Generation, 1, 9, 1, 1, 0), ScaleDecision::Hold);
+        // the drained thread exits: the slot frees and growth resumes
+        assert_eq!(a.observe(Stage::Generation, 2, 9, 1, 0, 0), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn busy_replicas_block_scale_down() {
+        // backlog drained but every replica is mid-batch: not idle, so
+        // no shrink pressure accumulates (drain-then-retire would have
+        // nobody safe to retire)
+        let cfg = AutoscaleConfig { down_ticks: 1, ..Default::default() };
+        let mut a = Autoscaler::new(cfg);
+        for t in 0..10 {
+            assert_eq!(a.observe(Stage::OldLogprob, t, 0, 2, 0, 0), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn replica_set_accounting() {
+        let mut set = ReplicaSet::new(Stage::Generation);
+        let mut spawned = Vec::new();
+        for _ in 0..3 {
+            set.grow(|id, retire, busy, exited| {
+                spawned.push((id, retire, busy, exited));
+            });
+        }
+        set.mark_initial();
+        assert_eq!(set.live(), 3);
+        assert_eq!(set.idle(), 3);
+        // a replica goes busy
+        spawned[0].2.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(set.idle(), 2);
+        // shrink retires the most recent spawn via its flag; until the
+        // thread confirms exit the slot still counts toward slot time
+        assert!(set.shrink());
+        assert_eq!(set.live(), 2);
+        assert!(spawned[2].1.load(Ordering::Relaxed), "retire flag must flip");
+        assert!(!spawned[0].1.load(Ordering::Relaxed));
+        assert_eq!(set.draining.len(), 1, "retired replica drains until exit");
+        // the thread exits: the next accounting sweep clears it
+        spawned[2].3.store(true, Ordering::Release);
+        set.account();
+        assert!(set.draining.is_empty(), "exited replica must leave the drain list");
+        let mut scale = StageScale::default();
+        set.finish_into(&mut scale);
+        assert_eq!(scale.initial, 3);
+        assert_eq!(scale.final_replicas, 2);
+        assert_eq!(scale.max_replicas, 3);
+        assert!(scale.replica_secs >= 0.0);
+    }
+}

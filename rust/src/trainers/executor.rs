@@ -29,14 +29,14 @@
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
 use crate::generation::{GenEngine, SamplingParams};
 use crate::memory::MemoryPool;
-use crate::metrics::{throughput_tps, PipelineReport, StageTimers, VersionLag};
+use crate::metrics::{throughput_tps, PipelineReport, StageScaling, StageTimers, VersionLag};
 use crate::rewards::group_advantages;
 use crate::runtime::{Engine, Policy, TrainStats};
 use crate::tokenizer::Tokenizer;
@@ -47,6 +47,9 @@ use crate::util::rng::Rng;
 use crate::weights::{ReplicaCache, WeightBus, WeightReplica, WeightVersion};
 use crate::workers::{ActorWorker, ReferenceWorker, RewardWorker};
 
+use super::autoscale::{
+    finish_scaling, observe_and_scale, spawn_initial, Autoscaler, ReplicaSet, SCALABLE_STAGES,
+};
 use super::eval::evaluate;
 use super::faults::{FaultInjector, FaultKind, StageExit};
 use super::grpo::{assemble_batch, GrpoConfig, IterationMetrics, TrainReport};
@@ -312,6 +315,8 @@ fn run_sync(
         // sync never ticks the lease clock, so reclaims stay zero; the
         // grant counters still report for symmetry
         recovery: flow.lease_stats(),
+        // one thread runs every stage: no replica accounting
+        scaling: StageScaling::default(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -360,12 +365,14 @@ const HISTORY_CAPACITY: usize = usize::MAX / 2;
 /// pool; `Engine`'s only interior mutability (`exec_stats`) is behind a
 /// `Mutex`. The `xla` binding types simply don't declare `Send`/`Sync`,
 /// so the executor asserts it at this single boundary instead of
-/// scattering `unsafe` through the workers. Defensively, the executor
-/// still keeps each compiled artifact single-flight in steady state: the
-/// two stages that share the `logprobs` executable serialize on
-/// `lp_serial`, generation alone runs `decode_step`, and the update
-/// thread alone runs `train_step` (periodic eval on the update thread is
-/// the one documented exception).
+/// scattering `unsafe` through the workers. The executor still keeps the
+/// *shared* `logprobs` executable single-flight across the old-logprob
+/// and reference stages (`lp_serial`) and `train_step` on the update
+/// thread alone (periodic eval on the update thread is the one
+/// documented exception); `decode_step` runs concurrently across the
+/// elastic generation replicas — each replica owns its engine state
+/// (KV buffers, sampler RNG) and only the thread-compatible `Execute`
+/// is shared, which is precisely the concurrency PJRT supports.
 #[derive(Clone, Copy)]
 struct EngineShare<'a>(&'a Engine);
 unsafe impl Send for EngineShare<'_> {}
@@ -407,7 +414,19 @@ fn inject_fault(
     }
 }
 
-/// Long-lived actor generation state: claim → generate → write back.
+/// Distinct per-replica RNG stream tag (replica 0 keeps the original
+/// stream, so a single-replica run is bit-identical to the pre-elastic
+/// executor).
+fn replica_tag(replica: usize) -> u64 {
+    (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Long-lived actor generation replica: claim → generate → write back.
+/// `retire` is the drain-then-retire flag (checked only between claim
+/// batches, so a set flag never abandons a live lease); `busy_slots`
+/// counts replicas currently inside a batch (the autoscaler's idle-ratio
+/// signal). Each replica holds its own head-tracking weight view,
+/// charged to the tracked `replica_pool`.
 #[allow(clippy::too_many_arguments)]
 fn generation_stage(
     engine: &Engine,
@@ -415,6 +434,10 @@ fn generation_stage(
     placement: StagePlacement,
     flow: &dyn SampleFlow,
     bus: &WeightBus,
+    replica_pool: &Arc<MemoryPool>,
+    replica_id: usize,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
@@ -430,9 +453,17 @@ fn generation_stage(
         cfg.max_new_tokens,
         cfg.gen_logprobs,
     );
-    let mut rng = Rng::new(cfg.seed ^ 0x6765_6e65_7261_7465);
-    let mut replica = WeightReplica::new(bus);
+    let mut rng = Rng::new(cfg.seed ^ 0x6765_6e65_7261_7465 ^ replica_tag(replica_id));
+    let mut replica = WeightReplica::new_with_pool(
+        bus,
+        Arc::clone(replica_pool),
+        &format!("gen{replica_id}"),
+    )
+    .map_err(|e| anyhow!(e))?;
     loop {
+        if retire.load(Ordering::Relaxed) {
+            return Ok(StageExit::Retired);
+        }
         let metas = flow.wait_ready(Stage::Generation, GEN_MAX_BATCH, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
@@ -443,20 +474,23 @@ fn generation_stage(
         if let Some(exit) = inject_fault(faults, Stage::Generation, flow, shutdown) {
             return Ok(exit);
         }
-        replica.refresh(bus);
+        busy_slots.fetch_add(1, Ordering::Relaxed);
+        replica.refresh(bus).map_err(|e| anyhow!(e))?;
         let t0 = Instant::now();
         // the whole claimed batch generates under one snapshot; its
         // version is stamped onto every writeback — the sample's
         // behavior-policy identity from here on
-        actor.generate_claimed(
+        let out = actor.generate_claimed(
             engine,
             &replica.policy,
             flow,
             &mut rng,
             &metas,
             replica.version.as_u64(),
-        )?;
+        );
         busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        out?;
     }
 }
 
@@ -479,15 +513,23 @@ fn old_logprob_stage(
     placement: StagePlacement,
     flow: &dyn SampleFlow,
     bus: &WeightBus,
+    replica_pool: &Arc<MemoryPool>,
     lp_serial: &Mutex<()>,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
 ) -> Result<StageExit> {
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     let a = engine.manifest.artifact("logprobs")?.clone();
-    let mut replicas = ReplicaCache::new(4);
+    // each replica pins its own small set of version-pinned views,
+    // charged to the shared replica pool (released when it retires)
+    let mut replicas = ReplicaCache::with_pool(4, Arc::clone(replica_pool));
     loop {
+        if retire.load(Ordering::Relaxed) {
+            return Ok(StageExit::Retired);
+        }
         let metas = flow.wait_ready(Stage::OldLogprob, a.batch, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
@@ -498,64 +540,93 @@ fn old_logprob_stage(
         if let Some(exit) = inject_fault(faults, Stage::OldLogprob, flow, shutdown) {
             return Ok(exit);
         }
+        busy_slots.fetch_add(1, Ordering::Relaxed);
         let mut by_version: BTreeMap<u64, Vec<SampleMeta>> = BTreeMap::new();
         for m in &metas {
             by_version.entry(m.behavior_version).or_default().push(*m);
         }
-        let _serial = lp_serial.lock().unwrap();
-        // busy starts after the serialization lock: waiting for the
-        // shared executable is not compute, and booking it would fake
-        // overlap in PipelineReport
-        let t0 = Instant::now();
-        for (version, group) in by_version {
-            anyhow::ensure!(
-                version != 0,
-                "old-logprob claim for unstamped sample (generation must stamp)"
-            );
-            let policy = match replicas.get_or_build(bus, WeightVersion(version)) {
-                Ok(p) => p,
-                Err(e) => {
-                    // The ring retains every version a resident *unscored*
-                    // sample is stamped with (the sample blocks its
-                    // iteration, bounding publishes — see bus_capacity).
-                    // An evicted version can therefore only be named by
-                    // stale claims: samples already re-processed by a
-                    // redispatched peer (old_lp present) or retired. Those
-                    // claims are residue of a reclaimed lease — drop them.
-                    // Anything else is a real invariant violation.
-                    let samples = flow.fetch_resident(placement.actor, &group)?;
-                    anyhow::ensure!(
-                        samples.iter().all(|s| s.has(FieldKind::OldLp)),
-                        "behavior version {version} evicted while an unscored \
-                         sample still needs it: {e}"
-                    );
-                    continue;
-                }
-            };
-            crate::workers::logprob_claimed(
-                engine,
-                policy,
-                flow,
-                &tokenizer,
-                placement.actor,
-                FieldKind::OldLp,
-                &group,
-                a.batch,
-                a.seq,
+        let done = (|| -> Result<()> {
+            let _serial = lp_serial.lock().unwrap();
+            // busy starts after the serialization lock: waiting for the
+            // shared executable is not compute, and booking it would fake
+            // overlap in PipelineReport
+            let t0 = Instant::now();
+            score_by_version(
+                engine, placement, flow, bus, &tokenizer, &a, &mut replicas, by_version,
             )?;
-        }
-        drop(_serial);
-        busy.lock().unwrap().add("old_logprob", t0.elapsed().as_secs_f64());
+            busy.lock().unwrap().add("old_logprob", t0.elapsed().as_secs_f64());
+            Ok(())
+        })();
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        done?;
     }
 }
 
-/// Long-lived reference inference state (frozen policy, owns its weights).
+/// Score each stamped-version group of one claimed batch under its
+/// recorded behavior version (the old-logprob stage's core loop, split
+/// out so the replica loop stays readable).
+#[allow(clippy::too_many_arguments)]
+fn score_by_version(
+    engine: &Engine,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    bus: &WeightBus,
+    tokenizer: &Tokenizer,
+    a: &crate::runtime::ArtifactInfo,
+    replicas: &mut ReplicaCache,
+    by_version: BTreeMap<u64, Vec<SampleMeta>>,
+) -> Result<()> {
+    for (version, group) in by_version {
+        anyhow::ensure!(
+            version != 0,
+            "old-logprob claim for unstamped sample (generation must stamp)"
+        );
+        let policy = match replicas.get_or_build(bus, WeightVersion(version)) {
+            Ok(p) => p,
+            Err(e) => {
+                // The ring retains every version a resident *unscored*
+                // sample is stamped with (the sample blocks its
+                // iteration, bounding publishes — see bus_capacity).
+                // An evicted version can therefore only be named by
+                // stale claims: samples already re-processed by a
+                // redispatched peer (old_lp present) or retired. Those
+                // claims are residue of a reclaimed lease — drop them.
+                // Anything else is a real invariant violation.
+                let samples = flow.fetch_resident(placement.actor, &group)?;
+                anyhow::ensure!(
+                    samples.iter().all(|s| s.has(FieldKind::OldLp)),
+                    "behavior version {version} evicted while an unscored \
+                     sample still needs it: {e}"
+                );
+                continue;
+            }
+        };
+        crate::workers::logprob_claimed(
+            engine,
+            policy,
+            flow,
+            tokenizer,
+            placement.actor,
+            FieldKind::OldLp,
+            &group,
+            a.batch,
+            a.seq,
+        )?;
+    }
+    Ok(())
+}
+
+/// Long-lived reference inference replica (frozen policy, owns its
+/// weights — no version pinning needed, so no replica-pool charge beyond
+/// the worker's own frozen copy).
 #[allow(clippy::too_many_arguments)]
 fn ref_logprob_stage(
     engine: &Engine,
     placement: StagePlacement,
     flow: &dyn SampleFlow,
     lp_serial: &Mutex<()>,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
@@ -563,6 +634,9 @@ fn ref_logprob_stage(
     let reference = ReferenceWorker::new(engine, placement.reference)?;
     let lp_batch = engine.manifest.artifact("logprobs")?.batch;
     loop {
+        if retire.load(Ordering::Relaxed) {
+            return Ok(StageExit::Retired);
+        }
         let metas = flow.wait_ready(Stage::RefLogprob, lp_batch, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
@@ -573,24 +647,36 @@ fn ref_logprob_stage(
         if let Some(exit) = inject_fault(faults, Stage::RefLogprob, flow, shutdown) {
             return Ok(exit);
         }
-        let _serial = lp_serial.lock().unwrap();
-        let t0 = Instant::now();
-        reference.run_claimed(engine, flow, &metas)?;
-        drop(_serial);
-        busy.lock().unwrap().add("ref_logprob", t0.elapsed().as_secs_f64());
+        busy_slots.fetch_add(1, Ordering::Relaxed);
+        let done = (|| -> Result<()> {
+            let _serial = lp_serial.lock().unwrap();
+            let t0 = Instant::now();
+            reference.run_claimed(engine, flow, &metas)?;
+            drop(_serial);
+            busy.lock().unwrap().add("ref_logprob", t0.elapsed().as_secs_f64());
+            Ok(())
+        })();
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        done?;
     }
 }
 
-/// Long-lived rule-reward state.
+/// Long-lived rule-reward replica.
+#[allow(clippy::too_many_arguments)]
 fn reward_stage(
     placement: StagePlacement,
     flow: &dyn SampleFlow,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
 ) -> Result<StageExit> {
     let reward_worker = RewardWorker::new(placement.reward);
     loop {
+        if retire.load(Ordering::Relaxed) {
+            return Ok(StageExit::Retired);
+        }
         let metas = flow.wait_ready(Stage::Reward, REWARD_MAX_BATCH, STAGE_WAIT)?;
         if metas.is_empty() {
             if shutdown.load(Ordering::Relaxed) {
@@ -601,9 +687,12 @@ fn reward_stage(
         if let Some(exit) = inject_fault(faults, Stage::Reward, flow, shutdown) {
             return Ok(exit);
         }
+        busy_slots.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        reward_worker.score_claimed(flow, &metas)?;
+        let out = reward_worker.score_claimed(flow, &metas);
         busy.lock().unwrap().add("reward", t0.elapsed().as_secs_f64());
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        out?;
     }
 }
 
@@ -691,25 +780,39 @@ fn run_pipelined(
     // old-logprob and reference stages (see EngineShare's safety note)
     let lp_serial: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
 
+    // elastic replicas: every materialized per-replica weight view
+    // (generation head-trackers, old-logprob pinned caches) is charged
+    // here, so the report can say what widening the stages cost in bytes
+    let replica_pool = Arc::new(MemoryPool::unbounded("stage-replicas"));
+    let elastic = !cfg.stage_replicas.all_single() || cfg.autoscale;
+
     let mut iterations = Vec::with_capacity(cfg.iterations);
     let mut version_lags = Vec::with_capacity(cfg.iterations);
     let mut evals = Vec::new();
+    // replica sets + autoscaler live outside the scope so their final
+    // slot-time accounting runs after every replica thread has joined —
+    // busy totals are final by then, which is what bounds replica-aware
+    // utilization by 1
+    let mut sets: Vec<ReplicaSet> =
+        SCALABLE_STAGES.iter().map(|&s| ReplicaSet::new(s)).collect();
+    let mut scaler = cfg.autoscale_config().map(Autoscaler::new);
     let t_run = Instant::now();
 
     let scope_result: Result<()> = std::thread::scope(|scope| {
         let eng = EngineShare(engine);
         let cfg_ref: &GrpoConfig = cfg;
 
-        // Each stage thread runs under a supervisor loop: a fault-killed
+        // Each replica thread runs under a supervisor loop: a fault-killed
         // incarnation abandons its claims (recovered by lease expiry) and
         // is respawned with fresh worker state — the in-process analogue
-        // of a cluster restarting a dead worker pod. Real errors still
+        // of a cluster restarting a dead worker pod. A drain-then-retire
+        // exit (autoscale scale-down) leaves for good. Real errors still
         // fail the run through `stage_failed`.
         macro_rules! supervise {
             ($name:literal, $fail:ident, $shutdown:ident, $faults:ident, $run:expr) => {
                 loop {
                     match $run {
-                        Ok(StageExit::Completed) => break,
+                        Ok(StageExit::Completed) | Ok(StageExit::Retired) => break,
                         Ok(StageExit::Killed) => {
                             if let Some(inj) = $faults.as_deref() {
                                 inj.note_restart();
@@ -727,17 +830,27 @@ fn run_pipelined(
             };
         }
 
-        {
-            let (flow, bus, faults, shutdown, fail, busy) = (
-                Arc::clone(&flow),
-                Arc::clone(&bus),
-                injector.clone(),
-                Arc::clone(&shutdown),
-                Arc::clone(&fail),
-                Arc::clone(&busy),
-            );
+        // One spawner for every stage replica, callable again mid-run by
+        // the autoscaler (scoped threads may be spawned while the scope
+        // is live). Each call clones what the replica thread owns; the
+        // thread sets `exited` when its supervisor loop returns, ending
+        // the replica's slot-time accounting.
+        let spawn_replica = |stage: Stage,
+                             replica_id: usize,
+                             retire: Arc<AtomicBool>,
+                             busy_slots: Arc<AtomicUsize>,
+                             exited: Arc<AtomicBool>| {
+            let flow = Arc::clone(&flow);
+            let bus = Arc::clone(&bus);
+            let lp_serial = Arc::clone(&lp_serial);
+            let replica_pool = Arc::clone(&replica_pool);
+            let faults = injector.clone();
+            let shutdown = Arc::clone(&shutdown);
+            let fail = Arc::clone(&fail);
+            let busy = Arc::clone(&busy);
             scope.spawn(move || {
-                supervise!(
+                match stage {
+                Stage::Generation => supervise!(
                     "generation",
                     fail,
                     shutdown,
@@ -748,25 +861,16 @@ fn run_pipelined(
                         placement,
                         flow.as_ref(),
                         &bus,
+                        &replica_pool,
+                        replica_id,
+                        &retire,
+                        &busy_slots,
                         faults.as_deref(),
                         &shutdown,
                         &busy,
                     )
-                );
-            });
-        }
-        {
-            let (flow, bus, lp_serial, faults, shutdown, fail, busy) = (
-                Arc::clone(&flow),
-                Arc::clone(&bus),
-                Arc::clone(&lp_serial),
-                injector.clone(),
-                Arc::clone(&shutdown),
-                Arc::clone(&fail),
-                Arc::clone(&busy),
-            );
-            scope.spawn(move || {
-                supervise!(
+                ),
+                Stage::OldLogprob => supervise!(
                     "old_logprob",
                     fail,
                     shutdown,
@@ -776,25 +880,16 @@ fn run_pipelined(
                         placement,
                         flow.as_ref(),
                         &bus,
+                        &replica_pool,
                         &lp_serial,
+                        &retire,
+                        &busy_slots,
                         faults.as_deref(),
                         &shutdown,
                         &busy,
                     )
-                );
-            });
-        }
-        {
-            let (flow, lp_serial, faults, shutdown, fail, busy) = (
-                Arc::clone(&flow),
-                Arc::clone(&lp_serial),
-                injector.clone(),
-                Arc::clone(&shutdown),
-                Arc::clone(&fail),
-                Arc::clone(&busy),
-            );
-            scope.spawn(move || {
-                supervise!(
+                ),
+                Stage::RefLogprob => supervise!(
                     "ref_logprob",
                     fail,
                     shutdown,
@@ -804,31 +899,39 @@ fn run_pipelined(
                         placement,
                         flow.as_ref(),
                         &lp_serial,
+                        &retire,
+                        &busy_slots,
                         faults.as_deref(),
                         &shutdown,
                         &busy,
                     )
-                );
-            });
-        }
-        {
-            let (flow, faults, shutdown, fail, busy) = (
-                Arc::clone(&flow),
-                injector.clone(),
-                Arc::clone(&shutdown),
-                Arc::clone(&fail),
-                Arc::clone(&busy),
-            );
-            scope.spawn(move || {
-                supervise!(
+                ),
+                Stage::Reward => supervise!(
                     "reward",
                     fail,
                     shutdown,
                     faults,
-                    reward_stage(placement, flow.as_ref(), faults.as_deref(), &shutdown, &busy)
-                );
+                    reward_stage(
+                        placement,
+                        flow.as_ref(),
+                        &retire,
+                        &busy_slots,
+                        faults.as_deref(),
+                        &shutdown,
+                        &busy,
+                    )
+                ),
+                Stage::Update => unreachable!("the update state is the driver"),
+                }
+                exited.store(true, Ordering::Release);
             });
-        }
+        };
+
+        // initial replica sets per the configured counts; the flow is
+        // told the puller count so claim handouts fair-share across them
+        spawn_initial(&mut sets, flow.as_ref(), cfg.stage_replicas, |st, id, r, b, e| {
+            spawn_replica(st, id, r, b, e)
+        });
 
         // ---- actor update state (this thread): admission window, group
         //      assembly, train steps, weight publication, metrics
@@ -877,6 +980,17 @@ fn run_pipelined(
                     // progress the clock stands still — leases measure
                     // silence, not wall time.
                     flow.tick_lease_clock();
+                    // the same ticks pace the autoscaler: sample each
+                    // stage's backlog (ready-queue depth) and idle ratio,
+                    // grow under sustained pressure, drain-then-retire
+                    // under sustained idleness — decisions are functions
+                    // of tick counts and observed depths, never wall time
+                    if let Some(sc) = scaler.as_mut() {
+                        let tick = flow.lease_now();
+                        observe_and_scale(sc, &mut sets, flow.as_ref(), tick, |st, id, r, b, e| {
+                            spawn_replica(st, id, r, b, e)
+                        });
+                    }
                     if held.is_empty() {
                         continue;
                     }
@@ -1056,6 +1170,22 @@ fn run_pipelined(
         run_out
     });
     scope_result?;
+    // Every replica thread has joined: fold the run's replica accounting
+    // into the report — autoscaler decisions/timelines plus the sets'
+    // slot time, now exact (no busy second can accrue past this point).
+    // Only elastic runs record entries: an unreplicated run keeps the
+    // pre-elastic report shape (and the wall-clock utilization
+    // denominator, which equals slot time for one thread).
+    let mut scaling_out = StageScaling::default();
+    if elastic {
+        scaling_out = finish_scaling(scaler.take(), &mut sets);
+        scaling_out.replica_weight_bytes_peak = replica_pool.peak_bytes();
+    }
+    debug_assert_eq!(
+        replica_pool.live_bytes(),
+        0,
+        "every replica weight view must release its pool charge on exit"
+    );
 
     let timers = Arc::try_unwrap(busy)
         .expect("stage threads joined; no other owners")
@@ -1083,6 +1213,7 @@ fn run_pipelined(
         version_lag: version_lags,
         bus: bus.retention_stats(),
         recovery,
+        scaling: scaling_out,
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -102,12 +102,15 @@ fn stage_index(stage: Stage) -> usize {
     Stage::ALL.iter().position(|&s| s == stage).unwrap()
 }
 
-/// How a stage loop ended: ran to shutdown, or was fault-killed and wants
-/// the supervisor to respawn it.
+/// How a stage loop ended: ran to shutdown, was fault-killed and wants
+/// the supervisor to respawn it, or was drained-and-retired by an
+/// autoscale scale-down (exits for good — no respawn, no abandoned
+/// claims: the retire flag is only honored between claim batches).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StageExit {
     Completed,
     Killed,
+    Retired,
 }
 
 /// Shared across stage-thread incarnations: per-stage claim sequence

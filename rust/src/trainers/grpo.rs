@@ -75,6 +75,27 @@ pub struct GrpoConfig {
     pub chaos_seed: u64,
     /// chaos: stop injecting after this many faults (0 = unbounded)
     pub chaos_max_faults: u64,
+    /// pipelined mode only: data-parallel replica threads per pull-driven
+    /// worker state (`--stage-replicas gen=4,logprob=2`); leases make the
+    /// concurrent pullers safe, fair-share batching splits claims across
+    /// them, and the update driver stays single — it owns the policy
+    pub stage_replicas: super::autoscale::StageReplicas,
+    /// enable the backlog-driven replica autoscaler (pipelined only):
+    /// replica counts move within [autoscale_min, autoscale_max] from
+    /// backlog/idle observations taken on lease ticks, with hysteresis
+    pub autoscale: bool,
+    pub autoscale_min: usize,
+    pub autoscale_max: usize,
+    /// scale-up pressure threshold: ready-queue depth that counts as
+    /// over-backlog when no replica is idle
+    pub autoscale_backlog_hi: usize,
+    /// scale-down threshold: depth at or below this with an idle replica
+    /// counts as idle pressure
+    pub autoscale_backlog_lo: usize,
+    /// consecutive over-backlog ticks before growing by one replica
+    pub autoscale_up_ticks: u32,
+    /// consecutive idle ticks before drain-then-retiring one replica
+    pub autoscale_down_ticks: u32,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -108,7 +129,43 @@ impl GrpoConfig {
             "chaos fault injection requires --pipeline pipelined (sync has no \
              concurrent stage workers to kill)"
         );
+        anyhow::ensure!(
+            self.stage_replicas.min_count() >= 1,
+            "--stage-replicas: every stage needs at least one replica"
+        );
+        anyhow::ensure!(
+            (self.stage_replicas.all_single() && !self.autoscale)
+                || self.pipeline == PipelineMode::Pipelined,
+            "--stage-replicas / --autoscale require --pipeline pipelined (sync \
+             runs every stage on one thread by definition)"
+        );
+        if let Some(ac) = self.autoscale_config() {
+            ac.validate()?;
+            anyhow::ensure!(
+                (ac.min_replicas..=ac.max_replicas)
+                    .contains(&self.stage_replicas.max_count())
+                    && (ac.min_replicas..=ac.max_replicas)
+                        .contains(&self.stage_replicas.min_count()),
+                "--stage-replicas ({}) must start inside the autoscale bounds \
+                 [{}, {}]",
+                self.stage_replicas.describe(),
+                ac.min_replicas,
+                ac.max_replicas
+            );
+        }
         Ok(())
+    }
+
+    /// The configured autoscaler, if enabled.
+    pub fn autoscale_config(&self) -> Option<super::autoscale::AutoscaleConfig> {
+        self.autoscale.then(|| super::autoscale::AutoscaleConfig {
+            min_replicas: self.autoscale_min,
+            max_replicas: self.autoscale_max,
+            backlog_hi: self.autoscale_backlog_hi,
+            backlog_lo: self.autoscale_backlog_lo,
+            up_ticks: self.autoscale_up_ticks,
+            down_ticks: self.autoscale_down_ticks,
+        })
     }
 
     /// The configured chaos schedule, if any (None when both rates are 0).
@@ -149,6 +206,14 @@ impl Default for GrpoConfig {
             chaos_stall_ticks: 12,
             chaos_seed: 0,
             chaos_max_faults: 0,
+            stage_replicas: super::autoscale::StageReplicas::default(),
+            autoscale: false,
+            autoscale_min: 1,
+            autoscale_max: 4,
+            autoscale_backlog_hi: 16,
+            autoscale_backlog_lo: 0,
+            autoscale_up_ticks: 3,
+            autoscale_down_ticks: 6,
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -320,6 +385,51 @@ mod tests {
         // out-of-range rates are rejected
         let bad = GrpoConfig {
             chaos_kill_rate: 1.5,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn elastic_config_gating() {
+        use super::super::autoscale::StageReplicas;
+        // replicas / autoscale require the pipelined executor
+        let bad = GrpoConfig {
+            stage_replicas: StageReplicas::parse("gen=4,logprob=2").unwrap(),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err(), "replicas in sync mode must be rejected");
+        let bad = GrpoConfig { autoscale: true, ..Default::default() };
+        assert!(bad.validate().is_err(), "autoscale in sync mode must be rejected");
+        let ok = GrpoConfig {
+            stage_replicas: StageReplicas::parse("gen=4,logprob=2").unwrap(),
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        // autoscale bounds must admit the starting counts
+        let bad = GrpoConfig {
+            stage_replicas: StageReplicas::uniform(8),
+            autoscale: true,
+            autoscale_max: 4,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = GrpoConfig {
+            autoscale: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        let ac = ok.autoscale_config().expect("autoscale on builds a config");
+        assert_eq!(ac.max_replicas, 4);
+        assert!(GrpoConfig::default().autoscale_config().is_none());
+        // degenerate knobs are rejected at validation
+        let bad = GrpoConfig {
+            autoscale: true,
+            autoscale_up_ticks: 0,
             pipeline: PipelineMode::Pipelined,
             ..Default::default()
         };

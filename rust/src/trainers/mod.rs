@@ -6,12 +6,14 @@
 //! DAPO / PF-PPO advantage-and-filtering variants on top of the same
 //! sample flow (Table 2 feature rows).
 
+pub mod autoscale;
 mod eval;
 mod executor;
 pub mod faults;
 mod grpo;
 mod variants;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ReplicaSet, ScaleDecision, StageReplicas};
 pub use eval::{evaluate, EvalResult};
 pub use executor::{PipelineMode, StagePlacement};
 pub use faults::{FaultInjector, FaultKind, FaultPlan, StageExit};

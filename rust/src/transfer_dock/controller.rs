@@ -13,6 +13,7 @@
 //! attempt counter so a died/stalled worker can never strand work.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::lease::{LeaseClock, LeaseTable, DEFAULT_LEASE_TICKS};
@@ -71,6 +72,10 @@ pub struct Controller {
     clock: Arc<LeaseClock>,
     /// lease duration granted to this stage's claims, in clock ticks
     lease_ticks: u64,
+    /// concurrent replica workers pulling this stage (fair-share claim
+    /// batching divides handouts by this; 0/1 = no cap, the pre-elastic
+    /// behavior)
+    pullers: AtomicUsize,
     inner: Mutex<Inner>,
 }
 
@@ -97,7 +102,19 @@ impl Controller {
         clock: Arc<LeaseClock>,
         lease_ticks: u64,
     ) -> Self {
-        Self { stage, node, clock, lease_ticks, inner: Mutex::new(Inner::default()) }
+        Self {
+            stage,
+            node,
+            clock,
+            lease_ticks,
+            pullers: AtomicUsize::new(1),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Register how many replica workers concurrently pull this stage.
+    pub fn set_pullers(&self, n: usize) {
+        self.pullers.store(n.max(1), Ordering::Relaxed);
     }
 
     /// Receive a metadata broadcast from a warehouse.
@@ -134,12 +151,25 @@ impl Controller {
     /// Hand out up to `max_n` ready samples under fresh leases (live
     /// leases are not re-issued, so the same work is never dispatched
     /// twice while the claimant is live).
+    ///
+    /// With `P > 1` registered pullers the handout is additionally
+    /// capped at `⌈available / P⌉` (never below 1): N replicas racing
+    /// `wait_ready` each take a fair share of the ready queue instead
+    /// of the first one draining it into a single oversized batch and
+    /// starving its peers.
     pub fn request(&self, max_n: usize) -> Vec<SampleMeta> {
         let now = self.clock.now();
+        let pullers = self.pullers.load(Ordering::Relaxed).max(1);
         let mut g = self.inner.lock().unwrap();
+        let cap = if pullers > 1 {
+            let avail = g.metas.len() - g.leases.live();
+            max_n.min(avail.div_ceil(pullers).max(1))
+        } else {
+            max_n
+        };
         let mut out = Vec::new();
         for (&idx, meta) in g.metas.iter() {
-            if out.len() >= max_n {
+            if out.len() >= cap {
                 break;
             }
             if !g.leases.is_claimed(idx) {
@@ -274,6 +304,29 @@ mod tests {
             FieldKind::Tokens.bit() | FieldKind::Reward.bit() | FieldKind::OldLp.bit(),
         ));
         assert_eq!(c.ready_count(), 0);
+    }
+
+    #[test]
+    fn fair_share_caps_handouts_across_pullers() {
+        let c = Controller::new(Stage::Generation, 0);
+        for i in 0..8 {
+            c.on_broadcast(meta(i, 0));
+        }
+        c.set_pullers(2);
+        // 8 ready over 2 pullers: one greedy request gets ⌈8/2⌉ = 4
+        let a = c.request(usize::MAX);
+        assert_eq!(a.len(), 4, "fair share must cap a greedy claim");
+        // the remaining 4 split again: ⌈4/2⌉ = 2, then 1, then 1
+        assert_eq!(c.request(usize::MAX).len(), 2);
+        assert_eq!(c.request(usize::MAX).len(), 1);
+        assert_eq!(c.request(usize::MAX).len(), 1);
+        assert!(c.request(usize::MAX).is_empty(), "everything claimed exactly once");
+        // the explicit max_n still binds below the fair cap
+        c.release(&a.iter().map(|m| m.index).collect::<Vec<_>>());
+        assert_eq!(c.request(1).len(), 1);
+        // deregistering pullers restores the greedy handout
+        c.set_pullers(1);
+        assert_eq!(c.request(usize::MAX).len(), 3);
     }
 
     #[test]

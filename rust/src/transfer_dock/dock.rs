@@ -281,6 +281,16 @@ impl SampleFlow for TransferDock {
         out
     }
 
+    fn ready_depth(&self, stage: Stage) -> usize {
+        self.controllers.get(&stage).map(|c| c.ready_count()).unwrap_or(0)
+    }
+
+    fn note_pullers(&self, stage: Stage, n: usize) {
+        if let Some(c) = self.controllers.get(&stage) {
+            c.set_pullers(n);
+        }
+    }
+
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
         let c = self
             .controllers

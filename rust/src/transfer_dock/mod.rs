@@ -83,6 +83,21 @@ pub trait SampleFlow: Send + Sync {
     fn lease_stats(&self) -> crate::metrics::FlowRecovery {
         crate::metrics::FlowRecovery::default()
     }
+    /// Ready-and-unclaimed queue depth for `stage` — the backlog signal
+    /// the elastic autoscaler samples on lease ticks. Control-plane
+    /// introspection by the driving executor: costs no ledger bytes
+    /// (the driver reads its co-located controller's counter, it does
+    /// not move metadata).
+    fn ready_depth(&self, _stage: Stage) -> usize {
+        0
+    }
+    /// Tell the flow how many replica workers concurrently pull `stage`
+    /// so claim handouts can be fair-shared: with `n > 1` pullers a
+    /// single request is capped near `⌈ready/n⌉` instead of draining the
+    /// whole queue into one replica's batch. Called by the executor
+    /// whenever a stage's replica count changes; flows without fairness
+    /// support ignore it.
+    fn note_pullers(&self, _stage: Stage, _n: usize) {}
     /// Fetch full payloads for the given metadata (records comm bytes).
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
     /// Lease-tolerant fetch for stage workers: metas whose sample is no

@@ -40,6 +40,9 @@ struct Inner {
     samples: BTreeMap<u64, Sample>,
     /// per-stage claim leases (the dock keeps these in its controllers)
     leases: HashMap<Stage, LeaseTable>,
+    /// per-stage registered concurrent pullers (fair-share claim cap,
+    /// matching the dock controller's semantics)
+    pullers: HashMap<Stage, usize>,
     traffic_bytes: u64,
     /// running resident-byte counter + conservation accounting, matching
     /// the warehouse's invariant: admitted == resident + retired
@@ -94,16 +97,21 @@ impl ReplayBuffer {
     }
 
     /// Scan for ready samples and lease them out; returns the picks plus
-    /// how many candidates were scanned (the ledger-cost driver).
+    /// how many candidates were scanned (the ledger-cost driver). With
+    /// `P > 1` registered pullers the handout is fair-share capped at
+    /// `⌈available / P⌉` like the dock controller's — which forces a full
+    /// scan (the cap needs the total), the centralized store paying its
+    /// readiness-scan tax once more.
     fn scan_ready(&self, stage: Stage, max_n: usize) -> (Vec<SampleMeta>, u64) {
         let now = self.clock.now();
         let mut g = self.inner.lock().unwrap();
+        let pullers = g.pullers.get(&stage).copied().unwrap_or(1);
         let mut out = Vec::new();
         let mut scanned = 0u64;
         let mut picked = Vec::new();
         for (&idx, s) in g.samples.iter() {
             scanned += 1;
-            if out.len() >= max_n {
+            if pullers <= 1 && out.len() >= max_n {
                 break;
             }
             let meta = Self::meta_of(s);
@@ -111,6 +119,11 @@ impl ReplayBuffer {
                 out.push(meta);
                 picked.push(idx);
             }
+        }
+        if pullers > 1 {
+            let cap = max_n.min(out.len().div_ceil(pullers).max(1));
+            out.truncate(cap);
+            picked.truncate(cap);
         }
         let ticks = self.lease_ticks;
         let table = g.lease(stage);
@@ -312,6 +325,28 @@ impl SampleFlow for ReplayBuffer {
         }
         out.superseded_writebacks = g.superseded;
         out
+    }
+
+    fn ready_depth(&self, stage: Stage) -> usize {
+        // Control-plane introspection for the driving executor: no
+        // claims, no ledger charge (symmetric with the dock's counter).
+        // O(resident) scan, but residency is bounded by the admission
+        // window (max_inflight × G × N samples), not the run length —
+        // and the central store pays a scan per readiness query anyway;
+        // that asymmetry vs the dock's O(1) counter IS the baseline's
+        // modeled cost.
+        let g = self.inner.lock().unwrap();
+        g.samples
+            .values()
+            .filter(|s| {
+                Self::meta_of(s).ready_for(stage)
+                    && !g.leases.get(&stage).is_some_and(|t| t.is_claimed(s.index))
+            })
+            .count()
+    }
+
+    fn note_pullers(&self, stage: Stage, n: usize) {
+        self.inner.lock().unwrap().pullers.insert(stage, n.max(1));
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {

@@ -94,6 +94,100 @@ fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
     }
 }
 
+/// Machine-readable bench summary for the CI perf gate: every bench's
+/// `--json` mode emits one single-line JSON object to stdout and to
+/// `target/bench/<name>.json`, which `ci/bench_gate.py` merges into
+/// `BENCH_PR.json` and diffs against the committed `bench-baseline.json`
+/// (>10% regression on any gated metric fails the job).
+///
+/// Metrics come in two buckets:
+/// * **gated** (`higher` / `lower` by better-direction) — deterministic
+///   values only: analytic volumes, cost-model TPS, ledger-derived
+///   dispatch seconds, tracked-pool byte counts. These are what the CI
+///   gate compares run-over-run.
+/// * **info** — wall-clock measurements and anything artifact-dependent;
+///   recorded for the artifact trail, never gated (CI runners are too
+///   noisy for a 10% wall-clock gate to mean anything).
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    name: String,
+    gated_higher: Vec<(String, f64)>,
+    gated_lower: Vec<(String, f64)>,
+    info: Vec<(String, f64)>,
+}
+
+/// JSON-safe float: the format has no NaN/Inf, and a non-finite metric
+/// is a bench bug — surface it as an impossible sentinel rather than
+/// emitting invalid JSON.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "-1".into()
+    }
+}
+
+fn json_map(pairs: &[(String, f64)]) -> String {
+    let body = pairs
+        .iter()
+        .map(|(k, v)| {
+            debug_assert!(
+                k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "metric keys must be snake_case identifiers: {k:?}"
+            );
+            format!("\"{k}\":{}", json_num(*v))
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{{{body}}}")
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Gated metric where bigger is better (throughput, speedup, saved bytes).
+    pub fn higher(&mut self, key: &str, v: f64) -> &mut Self {
+        self.gated_higher.push((key.to_string(), v));
+        self
+    }
+
+    /// Gated metric where smaller is better (seconds, bytes held).
+    pub fn lower(&mut self, key: &str, v: f64) -> &mut Self {
+        self.gated_lower.push((key.to_string(), v));
+        self
+    }
+
+    /// Ungated context metric (wall-clock and artifact-dependent values).
+    pub fn info(&mut self, key: &str, v: f64) -> &mut Self {
+        self.info.push((key.to_string(), v));
+        self
+    }
+
+    /// The single-line JSON document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"gated\":{{\"higher\":{},\"lower\":{}}},\"info\":{}}}",
+            self.name,
+            json_map(&self.gated_higher),
+            json_map(&self.gated_lower),
+            json_map(&self.info)
+        )
+    }
+
+    /// Print the summary line and write `target/bench/<name>.json`.
+    pub fn emit(&self) -> anyhow::Result<std::path::PathBuf> {
+        let line = self.render();
+        println!("{line}");
+        let dir = std::path::Path::new("target/bench");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, format!("{line}\n"))?;
+        Ok(path)
+    }
+}
+
 /// Fixed-width table printer for paper-shaped output.
 pub struct Table {
     pub title: String,
@@ -165,6 +259,26 @@ mod tests {
     fn throughput_counts_ops() {
         let (_, ops) = bench_throughput("batch", 0, 5, || 100);
         assert!(ops > 0.0);
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_parser() {
+        let mut j = BenchJson::new("stage_scaling");
+        j.higher("modeled_tps_r4", 123.5)
+            .lower("dispatch_secs", 0.25)
+            .info("wall_secs", f64::NAN);
+        let line = j.render();
+        assert!(!line.contains('\n'), "summary must be single-line");
+        let parsed = crate::util::json::Json::parse(&line).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().str().unwrap(), "stage_scaling");
+        let gated = parsed.get("gated").unwrap();
+        assert_eq!(
+            gated.get("higher").unwrap().get("modeled_tps_r4").unwrap().num().unwrap(),
+            123.5
+        );
+        assert_eq!(gated.get("lower").unwrap().get("dispatch_secs").unwrap().num().unwrap(), 0.25);
+        // non-finite values become the -1 sentinel, never invalid JSON
+        assert_eq!(parsed.get("info").unwrap().get("wall_secs").unwrap().num().unwrap(), -1.0);
     }
 
     #[test]

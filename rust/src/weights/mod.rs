@@ -595,29 +595,103 @@ impl fmt::Debug for WeightBus {
     }
 }
 
-/// A stage thread's head-tracking inference replica (used by generation,
-/// which always wants the freshest weights and stamps what it got).
+/// Bytes one materialized replica of `params` holds.
+fn params_bytes(params: &[Tensor]) -> u64 {
+    params.iter().map(|t| t.size_bytes() as u64).sum()
+}
+
+/// Charge one replica snapshot to the accounting pool, mapping pool
+/// exhaustion to the bus's typed error.
+fn charge_replica(
+    pool: &MemoryPool,
+    label: String,
+    bytes: u64,
+) -> Result<BufferId, WeightBusError> {
+    pool.alloc(label, bytes).map_err(|_| WeightBusError::PoolExhausted {
+        requested_bytes: bytes,
+        free_bytes: pool.free_bytes(),
+    })
+}
+
+/// A stage thread's head-tracking inference replica (used by generation
+/// replicas, which always want the freshest weights and stamp what they
+/// got). Optionally charged to a tracked [`MemoryPool`], so a run with
+/// `N` elastic generation replicas accounts for its `N` materialized
+/// weight copies the same way the bus accounts for retention.
 pub struct WeightReplica {
     pub version: WeightVersion,
     pub policy: Policy,
+    pool: Option<Arc<MemoryPool>>,
+    buffer: Option<BufferId>,
+    /// pool-charge label prefix (identifies the owning replica in the
+    /// pool's live set across refreshes)
+    label: String,
 }
 
 impl WeightReplica {
     pub fn new(bus: &WeightBus) -> Self {
         let (version, view) = bus.head();
-        Self { version, policy: Policy::from_params(view.to_params()) }
+        Self {
+            version,
+            policy: Policy::from_params(view.to_params()),
+            pool: None,
+            buffer: None,
+            label: String::new(),
+        }
+    }
+
+    /// As [`Self::new`], charging the materialized snapshot to `pool`
+    /// (re-charged on every refresh under the same `label` prefix,
+    /// freed on drop).
+    pub fn new_with_pool(
+        bus: &WeightBus,
+        pool: Arc<MemoryPool>,
+        label: &str,
+    ) -> Result<Self, WeightBusError> {
+        let (version, view) = bus.head();
+        let params = view.to_params();
+        let buffer = charge_replica(&pool, format!("{label}.{version}"), params_bytes(&params))?;
+        Ok(Self {
+            version,
+            policy: Policy::from_params(params),
+            pool: Some(pool),
+            buffer: Some(buffer),
+            label: label.to_string(),
+        })
     }
 
     /// Pick up the newest snapshot if the bus moved; returns whether the
-    /// replica changed.
-    pub fn refresh(&mut self, bus: &WeightBus) -> bool {
+    /// replica changed. Pool-charged replicas swap their charge (free
+    /// old, alloc new, same replica label) so the pool's live bytes keep
+    /// tracking the materialized copies, attributably.
+    pub fn refresh(&mut self, bus: &WeightBus) -> Result<bool, WeightBusError> {
         match bus.newer_than(self.version) {
             Some((version, view)) => {
+                let params = view.to_params();
+                if let Some(pool) = &self.pool {
+                    if let Some(old) = self.buffer.take() {
+                        let freed = pool.free(old);
+                        debug_assert!(freed.is_ok(), "replica buffer freed twice");
+                    }
+                    self.buffer = Some(charge_replica(
+                        pool,
+                        format!("{}.{version}", self.label),
+                        params_bytes(&params),
+                    )?);
+                }
                 self.version = version;
-                self.policy = Policy::from_params(view.to_params());
-                true
+                self.policy = Policy::from_params(params);
+                Ok(true)
             }
-            None => false,
+            None => Ok(false),
+        }
+    }
+}
+
+impl Drop for WeightReplica {
+    fn drop(&mut self) {
+        if let (Some(pool), Some(id)) = (&self.pool, self.buffer.take()) {
+            let _ = pool.free(id);
         }
     }
 }
@@ -626,33 +700,61 @@ impl WeightReplica {
 /// stage: claimed batches arrive grouped by stamped version, and
 /// adjacent batches usually share a version, so a handful of entries
 /// avoids rebuilding a `Policy` (one materialized snapshot) per batch.
+/// Each elastic old-logprob replica owns its own cache; attach a pool
+/// ([`Self::with_pool`]) and every cached snapshot is charged to it
+/// (freed on LRU eviction and on drop), so the run's report covers the
+/// replicas' weight memory, not just the bus's.
 pub struct ReplicaCache {
     cap: usize,
     /// most-recently-used last
-    entries: Vec<(u64, Policy)>,
+    entries: Vec<(u64, Policy, Option<BufferId>)>,
+    pool: Option<Arc<MemoryPool>>,
 }
 
 impl ReplicaCache {
     pub fn new(cap: usize) -> Self {
-        Self { cap: cap.max(1), entries: Vec::new() }
+        Self { cap: cap.max(1), entries: Vec::new(), pool: None }
+    }
+
+    /// As [`Self::new`], charging every cached replica to `pool`.
+    pub fn with_pool(cap: usize, pool: Arc<MemoryPool>) -> Self {
+        Self { cap: cap.max(1), entries: Vec::new(), pool: Some(pool) }
+    }
+
+    fn evict(&mut self, i: usize) {
+        let (_, _, buffer) = self.entries.remove(i);
+        if let (Some(pool), Some(id)) = (&self.pool, buffer) {
+            let freed = pool.free(id);
+            debug_assert!(freed.is_ok(), "replica cache buffer freed twice");
+        }
     }
 
     /// Replica for `version`, built from the bus on a miss. Propagates
-    /// the bus's typed error if the version is outside the ring.
+    /// the bus's typed error if the version is outside the ring (or the
+    /// accounting pool cannot admit the snapshot).
     pub fn get_or_build(
         &mut self,
         bus: &WeightBus,
         version: WeightVersion,
     ) -> Result<&Policy, WeightBusError> {
-        if let Some(i) = self.entries.iter().position(|(v, _)| *v == version.0) {
+        if let Some(i) = self.entries.iter().position(|(v, ..)| *v == version.0) {
             let hit = self.entries.remove(i);
             self.entries.push(hit);
         } else {
             let view = bus.get(version)?;
             if self.entries.len() >= self.cap {
-                self.entries.remove(0);
+                self.evict(0);
             }
-            self.entries.push((version.0, Policy::from_params(view.to_params())));
+            let params = view.to_params();
+            let buffer = match &self.pool {
+                Some(pool) => Some(charge_replica(
+                    pool,
+                    format!("replica.cache.{version}"),
+                    params_bytes(&params),
+                )?),
+                None => None,
+            };
+            self.entries.push((version.0, Policy::from_params(params), buffer));
         }
         Ok(&self.entries.last().unwrap().1)
     }
@@ -663,6 +765,14 @@ impl ReplicaCache {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+}
+
+impl Drop for ReplicaCache {
+    fn drop(&mut self) {
+        while !self.entries.is_empty() {
+            self.evict(0);
+        }
     }
 }
 
@@ -841,6 +951,37 @@ mod tests {
         }
         assert_eq!(bus.head_version(), WeightVersion(1), "failed publish must not mint");
         assert_eq!(pool.live_bytes(), bus.retained_bytes(), "rollback must balance charges");
+    }
+
+    #[test]
+    fn replica_views_charge_and_release_the_pool() {
+        let bus = WeightBus::new(params(1.0), 8);
+        let one = params_bytes(&params(1.0));
+        let pool = Arc::new(MemoryPool::unbounded("stage-replicas"));
+        // a head-tracking generation replica: one snapshot charged
+        let mut rep =
+            WeightReplica::new_with_pool(&bus, Arc::clone(&pool), "gen0").unwrap();
+        assert_eq!(pool.live_bytes(), one);
+        // refresh swaps the charge, never doubles it
+        bus.publish(&params(2.0)).unwrap();
+        assert!(rep.refresh(&bus).unwrap());
+        assert_eq!(pool.live_bytes(), one);
+        assert!(!rep.refresh(&bus).unwrap(), "no newer version, no change");
+        // a version-pinned cache: one charge per cached entry, LRU
+        // eviction releases, drop releases the rest
+        {
+            let mut cache = ReplicaCache::with_pool(2, Arc::clone(&pool));
+            cache.get_or_build(&bus, WeightVersion(1)).unwrap();
+            cache.get_or_build(&bus, WeightVersion(2)).unwrap();
+            assert_eq!(pool.live_bytes(), 3 * one);
+            bus.publish(&params(3.0)).unwrap();
+            cache.get_or_build(&bus, WeightVersion(3)).unwrap(); // evicts v1
+            assert_eq!(cache.len(), 2);
+            assert_eq!(pool.live_bytes(), 3 * one, "eviction must release its charge");
+        }
+        assert_eq!(pool.live_bytes(), one, "dropping the cache releases every entry");
+        drop(rep);
+        assert_eq!(pool.live_bytes(), 0, "dropping the replica releases its snapshot");
     }
 
     #[test]

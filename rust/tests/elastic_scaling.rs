@@ -1,0 +1,254 @@
+//! Elastic data-parallel stage replicas: the differential suite.
+//!
+//! The headline invariant, in the style of `tests/chaos.rs`: for ANY
+//! replica configuration and ANY autoscale schedule, the run retires the
+//! **identical sample set with identical behavior-version stamps** as
+//! the single-replica run at the same seed. The harness's synthetic
+//! generation makes stamps a pure function of the sample, so a replica
+//! or autoscaler that loses, duplicates, or re-generates work under a
+//! different identity shows up as a set or stamp mismatch here.
+//!
+//! Also pinned: drain-then-retire scale-down never abandons a live
+//! lease (a fault-free autoscaled run reclaims nothing), and elasticity
+//! composes with the chaos machinery (replicas + kills/stalls still
+//! converge losslessly).
+
+use mindspeed_rl::sim::chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
+use mindspeed_rl::trainers::faults::FaultPlan;
+use mindspeed_rl::trainers::{AutoscaleConfig, StageReplicas};
+
+fn base_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig {
+        iterations: 4,
+        prompts_per_iter: 4,
+        group_size: 2,
+        // generous lease: fault-free runs must not reclaim even when the
+        // CI scheduler deschedules a worker briefly
+        lease_ticks: 256,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_equivalent(name: &str, cfg: &ChaosConfig, out: &ChaosOutcome, reference: &ChaosOutcome) {
+    assert!(
+        out.lossless(cfg),
+        "{name}: loss — retired {}/{} resident {} recovery {:?}",
+        out.retired.len(),
+        cfg.total_samples(),
+        out.resident_after,
+        out.recovery
+    );
+    assert_eq!(
+        out.retired, reference.retired,
+        "{name}: retired set or behavior-version stamps diverged from the \
+         single-replica run"
+    );
+    for c in &out.conservation {
+        assert!(c.holds(), "{name}: byte conservation violated: {c:?}");
+    }
+    assert!(out.recovery.consistent(), "{name}: {:?}", out.recovery);
+}
+
+// --------------------------------------------- static replica configs
+
+/// Acceptance criterion: `--stage-replicas gen=4,logprob=2` (and other
+/// shapes) retire the identical `(set, stamps)` as the single-replica
+/// run at the same seed.
+#[test]
+fn replica_configs_are_stamp_identical_to_single_replica() {
+    for seed in [0u64, 7, 42] {
+        let single = run_chaos(&base_cfg(seed)).unwrap();
+        assert!(single.lossless(&base_cfg(seed)));
+        for spec in ["gen=4,logprob=2", "gen=2,ref=3,reward=2", "gen=4,logprob=4,ref=4,reward=4"] {
+            let cfg = ChaosConfig {
+                stage_replicas: Some(StageReplicas::parse(spec).unwrap()),
+                ..base_cfg(seed)
+            };
+            let out = run_chaos(&cfg).unwrap();
+            assert_equivalent(&format!("{spec} seed={seed}"), &cfg, &out, &single);
+            assert_eq!(
+                out.recovery.reclaimed, 0,
+                "{spec}: fault-free replicas must never trip a lease"
+            );
+        }
+        // and the centralized baseline agrees with all of them
+        let rb = run_baseline(&base_cfg(seed)).unwrap();
+        assert_eq!(single.retired, rb.retired);
+    }
+}
+
+// ------------------------------------------------- autoscale schedule
+
+/// Acceptance criterion: with `--autoscale` under a tick-driven
+/// schedule, the retired `(set, stamps)` still equals the
+/// single-replica run's — whatever grow/shrink decisions fired — and
+/// drain-then-retire scale-down never abandons a live lease (zero
+/// reclaims without faults).
+#[test]
+fn autoscaled_run_is_stamp_identical_and_never_abandons_leases() {
+    for seed in [3u64, 11] {
+        let single = run_chaos(&base_cfg(seed)).unwrap();
+        // aggressive knobs so decisions actually fire during the short
+        // drain: scale up after 1 over-backlog tick, down after 2 idle
+        let cfg = ChaosConfig {
+            iterations: 6,
+            autoscale: Some(AutoscaleConfig {
+                min_replicas: 1,
+                max_replicas: 4,
+                backlog_hi: 2,
+                backlog_lo: 0,
+                up_ticks: 1,
+                down_ticks: 2,
+            }),
+            ..base_cfg(seed)
+        };
+        let single6 = run_chaos(&ChaosConfig { iterations: 6, ..base_cfg(seed) }).unwrap();
+        let out = run_chaos(&cfg).unwrap();
+        assert_equivalent(&format!("autoscale seed={seed}"), &cfg, &out, &single6);
+        assert_eq!(
+            out.recovery.reclaimed, 0,
+            "drain-then-retire must never abandon a live lease: {:?}",
+            out.recovery
+        );
+        // the scaling report is recorded for every pull-driven stage,
+        // replica counts stayed inside the configured bounds, and the
+        // short 4-iteration reference also matches on its prefix shape
+        for stage in ["generation", "old_logprob", "ref_logprob", "reward"] {
+            let s = &out.scaling.stages[stage];
+            assert!(s.max_replicas >= 1 && s.max_replicas <= 4, "{stage}: {s:?}");
+            assert!(s.final_replicas >= 1, "{stage}: {s:?}");
+            assert_eq!(
+                s.timeline.len() as u64,
+                s.grows + s.shrinks,
+                "{stage}: one timeline entry per applied decision: {s:?}"
+            );
+            // the autoscaler observes every stage on every idle-pass
+            // tick, no more and no less
+            assert_eq!(s.obs, out.ticks, "{stage}: one observation per tick");
+        }
+        // the 4-iteration single-replica run ran the same per-sample
+        // pipeline: the 6-iteration retired map extends it
+        assert!(single.retired.iter().all(|(k, v)| out.retired.get(k) == Some(v)));
+    }
+}
+
+/// Elasticity composes with fault injection: replicated stages under a
+/// seeded kill/stall plan still converge to the fault-free retired set
+/// with zero loss (the lease machinery and the replica machinery are
+/// the same machinery).
+#[test]
+fn replicas_and_chaos_compose_losslessly() {
+    let seed = 42u64;
+    let reference = run_chaos(&ChaosConfig {
+        iterations: 5,
+        stage_replicas: Some(StageReplicas::uniform(2)),
+        ..base_cfg(seed)
+    })
+    .unwrap();
+    let cfg = ChaosConfig {
+        iterations: 5,
+        stage_replicas: Some(StageReplicas::uniform(2)),
+        lease_ticks: 4,
+        plan: FaultPlan {
+            seed: seed ^ 0xe1a5,
+            kill_rate: 0.25,
+            stall_rate: 0.15,
+            stall_ticks: 8,
+            ..Default::default()
+        },
+        ..base_cfg(seed)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    assert_equivalent("replicas+chaos", &cfg, &out, &reference);
+    assert!(
+        out.recovery.kills + out.recovery.stalls > 0,
+        "plan must fire at these rates: {:?}",
+        out.recovery
+    );
+}
+
+/// Autoscaling under faults: grow/shrink decisions interleaved with
+/// kills and reclaims still lose nothing.
+#[test]
+fn autoscale_and_chaos_compose_losslessly() {
+    let seed = 9u64;
+    let reference = run_chaos(&ChaosConfig { iterations: 5, ..base_cfg(seed) }).unwrap();
+    let cfg = ChaosConfig {
+        iterations: 5,
+        lease_ticks: 4,
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            backlog_hi: 2,
+            backlog_lo: 0,
+            up_ticks: 1,
+            down_ticks: 2,
+        }),
+        plan: FaultPlan { seed: seed ^ 0xface, kill_rate: 0.3, ..Default::default() },
+        ..base_cfg(seed)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    assert_equivalent("autoscale+chaos", &cfg, &out, &reference);
+}
+
+// ------------------------------------------------- executor (gated)
+
+/// Executor-level acceptance: `run_grpo` in pipelined mode with
+/// `--stage-replicas gen=4,logprob=2` — and again with `--autoscale` —
+/// completes every iteration with finite losses, full sample counts,
+/// replica-aware utilization inside [0, 1], and a scaling report.
+/// Needs HLO artifacts; skips with a message otherwise.
+#[test]
+fn pipelined_executor_runs_with_replicas_and_autoscale() {
+    use mindspeed_rl::runtime::{artifact_dir, Engine};
+    use mindspeed_rl::trainers::{run_grpo, GrpoConfig, PipelineMode};
+
+    let Ok(engine) = Engine::load(artifact_dir("tiny")) else {
+        eprintln!("[elastic] skipping executor test: run `make artifacts` first");
+        return;
+    };
+    let base = GrpoConfig {
+        iterations: 3,
+        prompts_per_iter: 4,
+        group_size: 2,
+        max_new_tokens: 4,
+        pipeline: PipelineMode::Pipelined,
+        max_inflight_iters: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let replicated = GrpoConfig {
+        stage_replicas: StageReplicas::parse("gen=4,logprob=2").unwrap(),
+        ..base.clone()
+    };
+    let autoscaled = GrpoConfig {
+        autoscale: true,
+        autoscale_max: 3,
+        autoscale_backlog_hi: 4,
+        autoscale_up_ticks: 1,
+        ..base.clone()
+    };
+    for (name, cfg) in [("replicated", replicated), ("autoscaled", autoscaled)] {
+        let report = run_grpo(&engine, &cfg).unwrap();
+        assert_eq!(report.iterations.len(), 3, "{name}: every iteration must finalize");
+        for m in &report.iterations {
+            assert!(m.loss.is_finite(), "{name}");
+            assert!(m.reward_mean >= 0.0 && m.reward_mean <= 1.0, "{name}");
+        }
+        // replica-aware utilization: in [0,1] for every recorded stage
+        for stage in ["generation", "old_logprob", "ref_logprob", "reward"] {
+            let u = report.pipeline.utilization(stage);
+            assert!(
+                (0.0..=1.0).contains(&u),
+                "{name}: utilization({stage}) = {u} outside [0,1]"
+            );
+        }
+        let scaling = &report.pipeline.scaling;
+        assert!(
+            !scaling.stages.is_empty(),
+            "{name}: elastic runs must record a scaling report"
+        );
+        assert!(report.pipeline.recovery.consistent(), "{name}");
+    }
+}

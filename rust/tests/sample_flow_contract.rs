@@ -340,6 +340,114 @@ fn multithreaded_producers_consumers() {
     }
 }
 
+/// Elastic replicas pull through registered puller counts: a greedy
+/// request takes only its fair share (⌈ready/P⌉), successive requests
+/// drain the rest, and nothing is dispatched twice or lost — identical
+/// semantics on the dock and the centralized buffer.
+#[test]
+fn fair_share_claims_across_registered_pullers() {
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(8)).unwrap();
+        flow.note_pullers(Stage::Generation, 2);
+        assert_eq!(flow.ready_depth(Stage::Generation), 8, "{name}");
+        let a = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(a.len(), 4, "{name}: greedy claim must be fair-share capped");
+        assert_eq!(flow.ready_depth(Stage::Generation), 4, "{name}");
+        // peers drain the remainder; every sample dispatched exactly once
+        let mut seen: HashSet<u64> = a.iter().map(|m| m.index).collect();
+        loop {
+            let more = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+            if more.is_empty() {
+                break;
+            }
+            for m in &more {
+                assert!(seen.insert(m.index), "{name}: double dispatch of {}", m.index);
+            }
+        }
+        assert_eq!(seen.len(), idx.len(), "{name}: every sample claimed exactly once");
+        assert_eq!(flow.ready_depth(Stage::Generation), 0, "{name}");
+        // deregistering restores the greedy handout
+        flow.release(Stage::Generation, &idx);
+        flow.note_pullers(Stage::Generation, 1);
+        assert_eq!(
+            flow.request_ready(Stage::Generation, usize::MAX).unwrap().len(),
+            8,
+            "{name}: single puller takes the whole queue again"
+        );
+    }
+}
+
+/// N concurrent replica threads per stage racing `wait_ready` on the
+/// same controller: no double dispatch, no lost samples, and the claim
+/// distribution is fair enough that every replica gets work (the
+/// fair-share cap keeps one fast thread from monopolizing the queue).
+#[test]
+fn concurrent_stage_replicas_share_the_queue() {
+    const REPLICAS: usize = 4;
+    const TOTAL: usize = 64;
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(TOTAL)).unwrap();
+        for &i in &idx {
+            finish_generation(flow.as_ref(), i);
+        }
+        flow.note_pullers(Stage::OldLogprob, REPLICAS);
+        let processed = Arc::new(AtomicUsize::new(0));
+        let seen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+        let mut per_replica = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..REPLICAS {
+                let flow = Arc::clone(&flow);
+                let processed = Arc::clone(&processed);
+                let seen = Arc::clone(&seen);
+                handles.push(scope.spawn(move || {
+                    let mut max_gulp = 0usize;
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    while processed.load(Ordering::Relaxed) < TOTAL {
+                        assert!(Instant::now() < deadline, "replica race wedged");
+                        let metas = flow
+                            .wait_ready(Stage::OldLogprob, usize::MAX, Duration::from_millis(10))
+                            .unwrap();
+                        max_gulp = max_gulp.max(metas.len());
+                        for m in &metas {
+                            assert!(
+                                seen.lock().unwrap().insert(m.index),
+                                "sample {} dispatched to two replicas",
+                                m.index
+                            );
+                            flow.store_fields(
+                                1,
+                                m.index,
+                                vec![(FieldKind::OldLp, Tensor::zeros(&[7]))],
+                            )
+                            .unwrap();
+                            processed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    max_gulp
+                }));
+            }
+            for h in handles {
+                per_replica.push(h.join().unwrap());
+            }
+        });
+        assert_eq!(processed.load(Ordering::Relaxed), TOTAL, "{name}: no sample lost");
+        assert_eq!(seen.lock().unwrap().len(), TOTAL, "{name}");
+        // fair-share cap: with 64 samples over 4 registered pullers no
+        // single claim may exceed ⌈64/4⌉ = 16 — a replica claiming the
+        // whole queue in one gulp (the pre-fairness failure mode) is
+        // impossible by construction, every gulp leaves work for peers
+        assert!(
+            per_replica.iter().all(|&g| g <= TOTAL / REPLICAS),
+            "{name}: a single claim exceeded the fair share: {per_replica:?}"
+        );
+        assert!(
+            flow.request_ready(Stage::OldLogprob, usize::MAX).unwrap().is_empty(),
+            "{name}"
+        );
+    }
+}
+
 /// Lease-lifecycle contract, identical across both flows: claims never
 /// expire while the clock stands still, expire exactly at the configured
 /// tick, come back requestable with bumped attempt counters, and the

@@ -1,0 +1,121 @@
+//! Bench: streaming generation (continuous batching) vs batch decode —
+//! modeled and measured.
+//!
+//! Part 1 (always runs, deterministic, the CI perf gate's input): the
+//! token-level cost-model comparison on the long-tail response-length
+//! workload (`sim::streaming_rows`, same table as
+//! `simulate --experiment streaming`). At every slot count, continuous
+//! batching must deliver strictly higher modeled TPS than admission-
+//! order batch decode — the tentpole's headline claim — and the slot
+//! occupancies of both policies are recorded alongside.
+//!
+//! Part 2 (artifact-gated): a real-executor A/B on the tiny preset —
+//! pipelined batch-decode vs `--gen-streaming` — printing walls and the
+//! stream report (occupancy, TTFT, per-step retirement, KV deferrals).
+//! Wall-clock numbers are informational (CPU testbed, no gate).
+//!
+//! `--json` emits the single-line summary for `ci/bench_gate.py`.
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::sim::streaming_rows;
+use mindspeed_rl::trainers::{run_grpo, GrpoConfig, PipelineMode};
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
+use mindspeed_rl::util::fmt_secs;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let json_mode = args.has("json");
+    let mut json = BenchJson::new("continuous_batching");
+
+    // ---- part 1: deterministic cost-model sweep (the gated metrics)
+    let rows = streaming_rows(0);
+    let mut t = Table::new(
+        "Continuous batching vs batch decode — modeled TPS on the \
+         long-tail workload (Qwen2.5-7B decode, exponential lengths)",
+        &["slots", "stream TPS", "batch TPS", "speedup", "stream occ", "batch occ"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.slots.to_string(),
+            format!("{:.1}", r.streaming_tps),
+            format!("{:.1}", r.batch_tps),
+            format!("{:.2}x", r.speedup),
+            format!("{:.0}%", r.streaming_occupancy * 100.0),
+            format!("{:.0}%", r.batch_occupancy * 100.0),
+        ]);
+    }
+    if !json_mode {
+        t.print();
+    }
+    for r in &rows {
+        // the acceptance criterion, asserted here so the bench itself
+        // fails loudly if the model ever loses the streaming advantage
+        assert!(
+            r.speedup > 1.0,
+            "streaming must strictly beat batch decode at {} slots: {:.3}x",
+            r.slots,
+            r.speedup
+        );
+        json.higher(&format!("streaming_tps_s{}", r.slots), r.streaming_tps);
+        json.higher(&format!("streaming_over_batch_speedup_s{}", r.slots), r.speedup);
+        json.higher(&format!("streaming_occupancy_s{}", r.slots), r.streaming_occupancy);
+        json.info(&format!("batch_tps_s{}", r.slots), r.batch_tps);
+        json.info(&format!("batch_occupancy_s{}", r.slots), r.batch_occupancy);
+    }
+
+    // ---- part 2: real-executor A/B (informational; needs artifacts)
+    match Engine::load(artifact_dir("tiny")) {
+        Ok(engine) => {
+            let base = GrpoConfig {
+                iterations: 4,
+                prompts_per_iter: 8,
+                group_size: 4,
+                max_new_tokens: 6,
+                nodes: 4,
+                pipeline: PipelineMode::Pipelined,
+                max_inflight_iters: 2,
+                log_every: 0,
+                ..Default::default()
+            };
+            let configs: Vec<(&str, GrpoConfig)> = vec![
+                ("batch decode", base.clone()),
+                (
+                    "streaming (chunk=2, blk=8)",
+                    GrpoConfig {
+                        gen_streaming: true,
+                        prefill_chunk: 2,
+                        kv_block_tokens: 8,
+                        ..base.clone()
+                    },
+                ),
+            ];
+            for (i, (name, cfg)) in configs.into_iter().enumerate() {
+                let t0 = std::time::Instant::now();
+                let report = run_grpo(&engine, &cfg).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                json.info(&format!("real_wall_secs_cfg{i}"), wall);
+                let gs = &report.pipeline.gen_stream;
+                if cfg.gen_streaming {
+                    assert!(gs.active(), "streaming run must record a stream report");
+                    assert_eq!(gs.kv_deferrals, 0, "sized pool must never defer");
+                    json.info("real_stream_occupancy", gs.occupancy());
+                    json.info("real_stream_ttft_steps", gs.mean_ttft_steps());
+                }
+                if !json_mode {
+                    println!("\n{name:<28} wall={}", fmt_secs(wall));
+                    println!("  {}", report.pipeline.summary());
+                }
+            }
+        }
+        Err(e) => {
+            if !json_mode {
+                eprintln!("skipping real-executor A/B (run `make artifacts`): {e}");
+            }
+        }
+    }
+
+    if json_mode {
+        json.emit().unwrap();
+    }
+}

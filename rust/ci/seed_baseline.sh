@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Seed (or ratchet) the committed perf-gate baseline from a real bench
+# run on a toolchain-equipped machine.
+#
+# The CI perf gate (ci/bench_gate.py, wired in .github/workflows/ci.yml)
+# compares every gated metric in the PR's merged BENCH_PR.json against
+# the committed rust/bench-baseline.json. Until that baseline exists the
+# gate runs in "seed mode" (informational, exit 0). Baselines must come
+# from an actual `cargo bench` run — never hand-written numbers: a
+# fabricated baseline would make the first honest run look like a
+# regression (or mask a real one).
+#
+# Usage, from rust/ on a machine with the Rust toolchain:
+#
+#   ci/seed_baseline.sh            # build, test, bench, install baseline
+#   ci/seed_baseline.sh --no-test  # skip the tier-1 pass (already green)
+#
+# then commit the resulting rust/bench-baseline.json. Re-run any time to
+# ratchet the baseline forward after a deliberate perf change.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BENCHES=(
+    table1_dispatch fig7_end_to_end fig9_linearity fig10_memory
+    fig11_moe hotpath pipeline_overlap stage_scaling continuous_batching
+)
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — the baseline must come from a real bench run" >&2
+    exit 1
+fi
+
+if [[ "${1:-}" != "--no-test" ]]; then
+    echo "== tier-1 pass (anything broken here would poison the baseline) =="
+    cargo build --release
+    cargo test -q
+fi
+
+echo "== benches (json mode, deterministic gated metrics only) =="
+rm -rf target/bench
+for b in "${BENCHES[@]}"; do
+    cargo bench --bench "$b" -- --json
+done
+
+python3 ci/bench_gate.py merge target/bench -o target/bench/BENCH_PR.json
+cp target/bench/BENCH_PR.json bench-baseline.json
+echo "baseline installed at rust/bench-baseline.json — review and commit it"

@@ -123,6 +123,15 @@ impl Config {
             if let Some(v) = g.opt("autoscale_down_ticks") {
                 d.autoscale_down_ticks = v.usize()? as u32;
             }
+            if let Some(v) = g.opt("gen_streaming") {
+                d.gen_streaming = v.bool()?;
+            }
+            if let Some(v) = g.opt("prefill_chunk") {
+                d.prefill_chunk = v.usize()?;
+            }
+            if let Some(v) = g.opt("kv_block_tokens") {
+                d.kv_block_tokens = v.usize()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -183,6 +192,11 @@ impl Config {
             args.usize_or("autoscale-up-ticks", g.autoscale_up_ticks as usize)? as u32;
         g.autoscale_down_ticks =
             args.usize_or("autoscale-down-ticks", g.autoscale_down_ticks as usize)? as u32;
+        if args.has("gen-streaming") {
+            g.gen_streaming = true;
+        }
+        g.prefill_chunk = args.usize_or("prefill-chunk", g.prefill_chunk)?;
+        g.kv_block_tokens = args.usize_or("kv-block-tokens", g.kv_block_tokens)?;
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -376,6 +390,59 @@ mod tests {
         assert!(cfg.grpo.autoscale);
         assert_eq!(cfg.grpo.autoscale_max, 8);
         assert_eq!(cfg.grpo.autoscale_backlog_hi, 32);
+    }
+
+    #[test]
+    fn streaming_flags_parse_and_validate() {
+        let args = Args::parse(
+            [
+                "--pipeline",
+                "pipelined",
+                "--prefill-chunk",
+                "8",
+                "--kv-block-tokens",
+                "32",
+                "--gen-streaming", // boolean flags last (see Args::parse note)
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert!(cfg.grpo.gen_streaming);
+        assert_eq!(cfg.grpo.prefill_chunk, 8);
+        assert_eq!(cfg.grpo.kv_block_tokens, 32);
+
+        // streaming without the pipelined executor is rejected at load
+        let bad = Args::parse(["--gen-streaming"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // degenerate paging knobs are rejected
+        let bad = Args::parse(
+            ["--pipeline", "pipelined", "--kv-block-tokens", "0", "--gen-streaming"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // defaults: streaming stays opt-in, knobs carry their documented values
+        let dflt = Config::from_args(&Args::parse(std::iter::empty()).unwrap()).unwrap();
+        assert!(!dflt.grpo.gen_streaming);
+        assert_eq!(dflt.grpo.prefill_chunk, 4);
+        assert_eq!(dflt.grpo.kv_block_tokens, 16);
+        // file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_streaming_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"pipeline": "pipelined", "gen_streaming": true,
+                "prefill_chunk": 2, "kv_block_tokens": 64}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert!(cfg.grpo.gen_streaming);
+        assert_eq!(cfg.grpo.prefill_chunk, 2);
+        assert_eq!(cfg.grpo.kv_block_tokens, 64);
     }
 
     #[test]

@@ -36,8 +36,23 @@ pub struct GenStats {
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
     pub wall_secs: f64,
-    /// slot-steps that carried a live sequence / total slot-steps
-    pub occupancy: f64,
+    /// slot-steps that carried a live sequence — kept as a raw counter
+    /// (not a pre-divided ratio) so merges across claims and replicas of
+    /// different sizes stay slot-step-weighted
+    pub busy_slot_steps: u64,
+    /// total slot-steps (busy + idle)
+    pub total_slot_steps: u64,
+}
+
+impl GenStats {
+    /// Fraction of slot-steps that carried a live sequence.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_slot_steps == 0 {
+            0.0
+        } else {
+            self.busy_slot_steps as f64 / self.total_slot_steps as f64
+        }
+    }
 }
 
 /// State of one batch slot.
@@ -61,6 +76,32 @@ pub struct GenEngine {
     pub eos_id: i32,
     pub pad_id: i32,
     pub params: SamplingParams,
+}
+
+/// Pop the next runnable request. Degenerate requests — `max_new_tokens
+/// == 0`, or a prompt already at/over `max_seq` (no position left to
+/// sample into) — complete immediately with an empty response instead of
+/// occupying a slot; without this guard a zero-budget request would emit
+/// one token before its length check and an over-long prompt would feed
+/// past the KV tensor's last row.
+fn pop_runnable(
+    queue: &mut VecDeque<GenRequest>,
+    results: &mut Vec<GenResult>,
+    max_seq: usize,
+) -> Option<GenRequest> {
+    while let Some(req) = queue.pop_front() {
+        if req.max_new_tokens == 0 || req.prompt_ids.len() + 1 > max_seq {
+            results.push(GenResult {
+                id: req.id,
+                response_ids: Vec::new(),
+                response_logprobs: Vec::new(),
+                finished_by_eos: false,
+            });
+            continue;
+        }
+        return Some(req);
+    }
+    None
 }
 
 impl GenEngine {
@@ -97,7 +138,7 @@ impl GenEngine {
 
         // admit initial requests
         for slot in slots.iter_mut() {
-            if let Some(req) = queue.pop_front() {
+            if let Some(req) = pop_runnable(&mut queue, &mut results, self.max_seq) {
                 stats.prompt_tokens += req.prompt_ids.len() as u64;
                 *slot = Slot::Busy {
                     req,
@@ -109,15 +150,12 @@ impl GenEngine {
             }
         }
 
-        let mut busy_slot_steps = 0u64;
-        let mut total_slot_steps = 0u64;
-
         loop {
             // prepare this step's inputs: each busy slot feeds its next
             // prompt token (prefill) or its last sampled token (decode)
             let mut any_busy = false;
             for (i, slot) in slots.iter_mut().enumerate() {
-                total_slot_steps += 1;
+                stats.total_slot_steps += 1;
                 match slot {
                     Slot::Idle => {
                         tok_v[i] = self.pad_id;
@@ -125,7 +163,7 @@ impl GenEngine {
                     }
                     Slot::Busy { req, fed, pos, response, .. } => {
                         any_busy = true;
-                        busy_slot_steps += 1;
+                        stats.busy_slot_steps += 1;
                         let next = if *fed < req.prompt_ids.len() {
                             req.prompt_ids[*fed]
                         } else {
@@ -167,22 +205,27 @@ impl GenEngine {
                     response.push(tok);
                     logprobs.push(token_logprob(row, tok as usize));
                     stats.tokens_generated += 1;
-                    let hit_eos = tok == self.eos_id;
-                    let hit_len = response.len() >= req.max_new_tokens
-                        || (*pos as usize) + 1 >= self.max_seq;
-                    if hit_eos || hit_len {
+                    let (fin, by_eos) = super::scheduler::seq_finished(
+                        tok,
+                        self.eos_id,
+                        response.len(),
+                        req.max_new_tokens,
+                        *pos,
+                        self.max_seq,
+                    );
+                    if fin {
                         finished = Some(GenResult {
                             id: req.id,
                             response_ids: std::mem::take(response),
                             response_logprobs: std::mem::take(logprobs),
-                            finished_by_eos: hit_eos,
+                            finished_by_eos: by_eos,
                         });
                     }
                 }
                 if let Some(r) = finished {
                     results.push(r);
                     // continuous batching: swap the next request in now
-                    *slot = match queue.pop_front() {
+                    *slot = match pop_runnable(&mut queue, &mut results, self.max_seq) {
                         Some(req) => {
                             stats.prompt_tokens += req.prompt_ids.len() as u64;
                             pos_v[i] = 0;
@@ -201,11 +244,6 @@ impl GenEngine {
         }
 
         stats.wall_secs = t0.elapsed().as_secs_f64();
-        stats.occupancy = if total_slot_steps == 0 {
-            0.0
-        } else {
-            busy_slot_steps as f64 / total_slot_steps as f64
-        };
         debug_assert_eq!(results.len(), n_total);
         Ok((results, stats))
     }
@@ -249,8 +287,60 @@ mod tests {
             );
             assert!(r.response_logprobs.iter().all(|lp| lp.is_finite() && *lp <= 0.0));
         }
-        assert!(stats.occupancy > 0.5, "refill should keep slots busy: {}", stats.occupancy);
+        assert!(
+            stats.occupancy() > 0.5,
+            "refill should keep slots busy: {}",
+            stats.occupancy()
+        );
+        assert!(stats.busy_slot_steps <= stats.total_slot_steps);
         assert!(stats.tokens_generated >= n as u64);
+    }
+
+    #[test]
+    fn empty_request_list_returns_empty() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let mut rng = Rng::new(0);
+        let (results, stats) = ge.generate(&engine, &policy, Vec::new(), &mut rng).unwrap();
+        assert!(results.is_empty());
+        assert_eq!(stats.tokens_generated, 0);
+        assert_eq!(stats.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn zero_max_new_tokens_yields_empty_response() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let reqs = vec![
+            GenRequest { id: 0, prompt_ids: vec![1, 3], max_new_tokens: 0 },
+            GenRequest { id: 1, prompt_ids: vec![1, 3], max_new_tokens: 3 },
+        ];
+        let mut rng = Rng::new(0);
+        let (results, _) = ge.generate(&engine, &policy, reqs, &mut rng).unwrap();
+        assert_eq!(results.len(), 2);
+        let zero = results.iter().find(|r| r.id == 0).unwrap();
+        assert!(zero.response_ids.is_empty(), "zero budget must not emit a token");
+        assert!(!zero.finished_by_eos);
+        let live = results.iter().find(|r| r.id == 1).unwrap();
+        assert!(!live.response_ids.is_empty());
+    }
+
+    #[test]
+    fn prompt_at_or_over_max_seq_yields_empty_response() {
+        let (engine, policy) = setup();
+        let ge = GenEngine::from_manifest(&engine, SamplingParams::default()).unwrap();
+        let ms = engine.manifest.model.max_seq;
+        let reqs = vec![
+            GenRequest { id: 0, prompt_ids: vec![1; ms], max_new_tokens: 4 },
+            GenRequest { id: 1, prompt_ids: vec![1; ms + 5], max_new_tokens: 4 },
+        ];
+        let mut rng = Rng::new(0);
+        let (results, _) = ge.generate(&engine, &policy, reqs, &mut rng).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(
+            results.iter().all(|r| r.response_ids.is_empty()),
+            "a prompt with no room to sample must complete empty, not overrun KV"
+        );
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Paged KV-cache accounting for the streaming generation scheduler.
+//!
+//! The decode artifact's KV cache is one monolithic tensor sized for
+//! `batch × max_seq` tokens, so this module does not move bytes — it makes
+//! the cache's *occupancy* visible to the tracked [`MemoryPool`] the way
+//! vLLM's block tables make it visible to the allocator. Every admitted
+//! sequence charges fixed-size token blocks (`block_tokens` tokens each)
+//! against the pool; retirement frees them. The invariant the tests pin:
+//!
+//! ```text
+//! pool.live_bytes() == live_blocks() × block_bytes()
+//! ```
+//!
+//! Paging is **reservation-at-admission**: a sequence reserves its full
+//! worst-case block count (`min(prompt_len + max_new, max_seq)` tokens,
+//! rounded up to whole blocks) when it is admitted, so a mid-decode
+//! allocation can never fail — admission is the single backpressure
+//! point. When the pool is tight, [`KvBlockAllocator::try_admit`] returns
+//! `None` and the scheduler defers the sequence (it stays queued; nothing
+//! errors and nothing tramples live cache rows — the failure mode the
+//! vLLM-on-NPU memory patches exist to prevent is exactly an implicit
+//! allocator letting a new sequence land on pages a live one still owns).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::memory::{BufferId, MemoryPool};
+
+/// A sequence's block reservation: the pool buffer ids backing it.
+#[derive(Debug)]
+struct SeqBlocks {
+    blocks: Vec<BufferId>,
+    tokens_reserved: usize,
+}
+
+/// Block-granular KV accounting against a tracked [`MemoryPool`].
+#[derive(Debug)]
+pub struct KvBlockAllocator {
+    pool: Arc<MemoryPool>,
+    /// tokens per block (the paging granularity)
+    block_tokens: usize,
+    /// bytes one block charges to the pool
+    block_bytes: u64,
+    seqs: HashMap<u64, SeqBlocks>,
+    live_blocks: u64,
+    /// admissions deferred because the pool was tight (backpressure events)
+    deferrals: u64,
+}
+
+impl KvBlockAllocator {
+    /// `bytes_per_token` is the KV footprint of one token in one slot —
+    /// for the monolithic decode artifact, `kv.size_bytes() / (batch ×
+    /// max_seq)`.
+    pub fn new(pool: Arc<MemoryPool>, block_tokens: usize, bytes_per_token: u64) -> Self {
+        assert!(block_tokens >= 1, "kv block size must be at least one token");
+        Self {
+            pool,
+            block_tokens,
+            block_bytes: block_tokens as u64 * bytes_per_token,
+            seqs: HashMap::new(),
+            live_blocks: 0,
+            deferrals: 0,
+        }
+    }
+
+    /// Pool capacity (in blocks) that exactly covers a `batch × max_seq`
+    /// monolithic cache after block rounding — sized so a full slot set
+    /// of worst-case sequences always fits, mirroring the physical
+    /// tensor.
+    pub fn capacity_bytes_for(batch: usize, max_seq: usize, block_tokens: usize, bytes_per_token: u64) -> u64 {
+        let blocks_per_seq = max_seq.div_ceil(block_tokens.max(1)) as u64;
+        batch as u64 * blocks_per_seq * block_tokens.max(1) as u64 * bytes_per_token
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// Reserve blocks for a sequence's worst case. Returns the block
+    /// count on success; `None` means the pool is tight and admission
+    /// must be deferred (counted as a backpressure event). Never panics
+    /// and never partially reserves: a failed admission rolls back every
+    /// block it grabbed.
+    pub fn try_admit(&mut self, seq_id: u64, worst_case_tokens: usize) -> Option<usize> {
+        debug_assert!(!self.seqs.contains_key(&seq_id), "sequence {seq_id} admitted twice");
+        let n = self.blocks_for(worst_case_tokens);
+        let mut blocks = Vec::with_capacity(n);
+        for b in 0..n {
+            match self.pool.alloc(format!("kv.seq{seq_id}.b{b}"), self.block_bytes) {
+                Ok(id) => blocks.push(id),
+                Err(_) => {
+                    // backpressure, not an error: roll back and defer
+                    for id in blocks {
+                        self.pool.free(id).expect("rollback frees blocks we just allocated");
+                    }
+                    self.deferrals += 1;
+                    return None;
+                }
+            }
+        }
+        self.live_blocks += n as u64;
+        self.seqs.insert(seq_id, SeqBlocks { blocks, tokens_reserved: n * self.block_tokens });
+        Some(n)
+    }
+
+    /// Free every block a retired sequence holds. Unknown ids are a
+    /// caller bug only in debug builds (a reclaimed-then-retired claim
+    /// may legitimately release twice under chaos).
+    pub fn release(&mut self, seq_id: u64) {
+        if let Some(s) = self.seqs.remove(&seq_id) {
+            self.live_blocks -= s.blocks.len() as u64;
+            for id in s.blocks {
+                self.pool.free(id).expect("kv blocks are pool-backed until release");
+            }
+        }
+    }
+
+    pub fn holds(&self, seq_id: u64) -> bool {
+        self.seqs.contains_key(&seq_id)
+    }
+
+    /// Tokens reserved for a live sequence (block-rounded).
+    pub fn reserved_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|s| s.tokens_reserved)
+    }
+
+    pub fn live_blocks(&self) -> u64 {
+        self.live_blocks
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Admissions deferred on pool pressure so far.
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals
+    }
+
+    /// The paging invariant: every live block is exactly one pool buffer.
+    pub fn invariant_holds(&self) -> bool {
+        self.pool.live_bytes() == self.live_blocks * self.block_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(blocks: u64, block_tokens: usize, bytes_per_token: u64) -> Arc<MemoryPool> {
+        Arc::new(MemoryPool::new(
+            "kv-test",
+            blocks * block_tokens as u64 * bytes_per_token,
+        ))
+    }
+
+    #[test]
+    fn admission_charges_block_rounded_bytes() {
+        let p = pool(8, 16, 4);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 16, 4);
+        // 20 tokens → 2 blocks of 16
+        assert_eq!(a.try_admit(1, 20), Some(2));
+        assert_eq!(a.live_blocks(), 2);
+        assert_eq!(a.reserved_tokens(1), Some(32));
+        assert_eq!(p.live_bytes(), 2 * 16 * 4);
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn exhaustion_defers_instead_of_erroring() {
+        // room for exactly 3 blocks
+        let p = pool(3, 8, 2);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 8, 2);
+        assert_eq!(a.try_admit(0, 16), Some(2));
+        // needs 2 blocks, only 1 free: deferred, partial grab rolled back
+        assert_eq!(a.try_admit(1, 16), None);
+        assert_eq!(a.deferrals(), 1);
+        assert!(!a.holds(1));
+        assert_eq!(a.live_blocks(), 2, "failed admission must roll back fully");
+        assert!(a.invariant_holds());
+        // a 1-block sequence still fits
+        assert_eq!(a.try_admit(2, 5), Some(1));
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn release_returns_pool_to_baseline() {
+        let p = pool(16, 4, 8);
+        let baseline = p.live_bytes();
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 4, 8);
+        for id in 0..5u64 {
+            assert!(a.try_admit(id, 4 + id as usize).is_some());
+        }
+        assert!(a.invariant_holds());
+        for id in 0..5u64 {
+            a.release(id);
+        }
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.live_seqs(), 0);
+        assert_eq!(p.live_bytes(), baseline, "drain must return the pool to baseline");
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn double_release_is_harmless() {
+        let p = pool(4, 4, 1);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 4, 1);
+        a.try_admit(7, 4).unwrap();
+        a.release(7);
+        a.release(7); // chaos: reclaimed claim retired twice
+        assert_eq!(p.live_bytes(), 0);
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn zero_token_admission_still_reserves_one_block() {
+        let p = pool(2, 4, 1);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 4, 1);
+        // max_new_tokens = 0 with an empty prompt still occupies a slot
+        assert_eq!(a.try_admit(0, 0), Some(1));
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn capacity_helper_always_fits_a_full_slot_set() {
+        for (batch, max_seq, block) in [(4, 64, 16), (3, 100, 7), (8, 33, 32)] {
+            let cap = KvBlockAllocator::capacity_bytes_for(batch, max_seq, block, 2);
+            let p = Arc::new(MemoryPool::new("kv", cap));
+            let mut a = KvBlockAllocator::new(Arc::clone(&p), block, 2);
+            for id in 0..batch as u64 {
+                assert!(
+                    a.try_admit(id, max_seq).is_some(),
+                    "batch={batch} max_seq={max_seq} block={block}: slot {id} must fit"
+                );
+            }
+            assert!(a.invariant_holds());
+        }
+    }
+}

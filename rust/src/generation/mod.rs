@@ -7,9 +7,20 @@
 //! waiting request is swapped in immediately — no draining barrier — which
 //! is what keeps the batch full under the long-tail response lengths the
 //! paper's generation stage faces.
+//!
+//! [`GenEngine`] refills slots within one `generate()` call; [`GenSession`]
+//! (`--gen-streaming`) extends the same slot machinery *across* claims:
+//! a persistent session the stage worker steps externally, admitting newly
+//! claimed samples at decode-step granularity, chunking prefill, retiring
+//! finished sequences one at a time, and charging KV occupancy through the
+//! paged [`KvBlockAllocator`].
 
 mod batcher;
+mod kv_cache;
 mod sampler;
+mod scheduler;
 
 pub use batcher::{GenEngine, GenRequest, GenResult, GenStats};
+pub use kv_cache::KvBlockAllocator;
 pub use sampler::{token_logprob, SamplingParams};
+pub use scheduler::{GenSession, StreamConfig, StreamStats};

@@ -1,0 +1,600 @@
+//! Streaming generation scheduler: cross-claim continuous batching.
+//!
+//! [`GenEngine::generate`](super::GenEngine::generate) refills slots
+//! *within* one call but still runs a claimed batch to completion — the
+//! long tail of each claim holds every finished sequence's writeback
+//! hostage and newly ready samples cannot join in-flight decode. A
+//! [`GenSession`] is the long-lived alternative: it owns the decode
+//! slots, the KV tensor, and the paged KV accounting **across claims**,
+//! and exposes decode as an externally driven [`GenSession::step`] so the
+//! gen stage worker can, between steps,
+//!
+//! * admit newly claimed samples at decode-step granularity
+//!   ([`GenSession::submit`] into any idle slot, gated by
+//!   [`KvBlockAllocator`] admission),
+//! * retire finished sequences immediately (each `step` returns the
+//!   sequences that completed on that step, for per-sequence writeback),
+//! * renew its claim leases on a decode-tick cadence so long sequences
+//!   never expire mid-decode.
+//!
+//! **Chunked prefill.** The decode artifact consumes one token per slot
+//! per call, so a prompt of `P` tokens classically costs `P` steps during
+//! which the slot produces nothing. With `prefill_chunk = K > 1`, a
+//! `step` runs up to `K` back-to-back decode calls in which *prefilling*
+//! slots consume one prompt token each while *decoding* slots are frozen:
+//! a frozen slot re-feeds the token it fed on its last advancing call at
+//! the same position, which rewrites its current KV row with identical
+//! bytes (a slot's KV row depends only on its own token at that position
+//! and its own earlier rows — per-slot attention masking isolates lanes),
+//! so freezing is idempotent and prefill drains `K×` faster without
+//! perturbing in-flight decodes.
+//!
+//! **Per-sequence sampling streams.** The batch engine draws from one
+//! shared RNG, so its token stream depends on slot packing. A session
+//! derives an independent stream per sequence (`seed ⊕ id`), making each
+//! sequence's tokens a pure function of `(seed, id, prompt)` — invariant
+//! under admission timing, chunk size, and slot assignment. That is what
+//! lets streaming mode retire the identical sample set as batch mode in
+//! the differential suites.
+
+use anyhow::Result;
+use std::collections::VecDeque;
+
+use super::batcher::{GenRequest, GenResult};
+use super::kv_cache::KvBlockAllocator;
+use super::sampler::{token_logprob, SamplingParams};
+use crate::runtime::{Engine, Policy, Tensor};
+use crate::util::rng::Rng;
+
+/// Session geometry + sampling configuration.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// decode artifact batch — the slot count
+    pub batch: usize,
+    pub max_seq: usize,
+    pub eos_id: i32,
+    pub pad_id: i32,
+    pub params: SamplingParams,
+    /// prompt tokens a prefilling slot may consume per scheduler step
+    pub prefill_chunk: usize,
+    /// base seed for the per-sequence sampling streams
+    pub seed: u64,
+}
+
+impl StreamConfig {
+    pub fn from_manifest(
+        engine: &Engine,
+        params: SamplingParams,
+        prefill_chunk: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let a = engine.manifest.artifact("decode_step")?;
+        Ok(Self {
+            batch: a.batch,
+            max_seq: engine.manifest.model.max_seq,
+            eos_id: engine.manifest.eos_id as i32,
+            pad_id: engine.manifest.pad_id as i32,
+            params,
+            prefill_chunk: prefill_chunk.max(1),
+            seed,
+        })
+    }
+}
+
+/// Cumulative session statistics. Occupancy is carried as raw slot-step
+/// counters (never a pre-divided ratio) so merges across sessions and
+/// replicas stay weighted correctly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    /// scheduler steps ([`GenSession::step`] calls that did work)
+    pub steps: u64,
+    /// engine decode calls (≥ steps: chunked prefill adds micro-calls)
+    pub decode_calls: u64,
+    /// slot-calls that advanced a live sequence
+    pub busy_slot_steps: u64,
+    /// slot-calls total (busy + idle + frozen)
+    pub total_slot_steps: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    /// sequences admitted into a slot
+    pub admitted: u64,
+    /// sequences retired (incl. degenerate immediate completions)
+    pub retired: u64,
+    /// steps on which at least one sequence retired
+    pub retire_steps: u64,
+    /// most sequences retired on a single step
+    pub max_retired_in_step: u64,
+    /// Σ (admission step − submit step) over admitted sequences
+    pub admit_wait_steps: u64,
+    /// Σ (first-token step − admission step) over started sequences
+    pub first_token_steps: u64,
+    /// sequences that have sampled at least one token
+    pub first_token_seqs: u64,
+    /// admissions deferred on KV-pool backpressure
+    pub kv_deferrals: u64,
+}
+
+impl StreamStats {
+    pub fn occupancy(&self) -> f64 {
+        if self.total_slot_steps == 0 {
+            0.0
+        } else {
+            self.busy_slot_steps as f64 / self.total_slot_steps as f64
+        }
+    }
+
+    /// Mean scheduler steps from admission to first sampled token.
+    pub fn mean_ttft_steps(&self) -> f64 {
+        if self.first_token_seqs == 0 {
+            0.0
+        } else {
+            self.first_token_steps as f64 / self.first_token_seqs as f64
+        }
+    }
+
+    /// Mean scheduler steps a request waited before getting a slot.
+    pub fn mean_admit_wait_steps(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.admit_wait_steps as f64 / self.admitted as f64
+        }
+    }
+}
+
+/// The decode-loop finish rule, shared by the batch engine and the
+/// session and unit-tested directly: `tok` was just sampled as the
+/// `resp_len`-th response token with the slot now at `pos`.
+/// Returns `(finished, by_eos)`.
+pub(crate) fn seq_finished(
+    tok: i32,
+    eos_id: i32,
+    resp_len: usize,
+    max_new_tokens: usize,
+    pos: i32,
+    max_seq: usize,
+) -> (bool, bool) {
+    let by_eos = tok == eos_id;
+    let by_len = resp_len >= max_new_tokens || (pos as usize) + 1 >= max_seq;
+    (by_eos || by_len, by_eos)
+}
+
+struct ActiveSeq {
+    req: GenRequest,
+    /// prompt tokens consumed so far
+    fed: usize,
+    pos: i32,
+    response: Vec<i32>,
+    logprobs: Vec<f32>,
+    rng: Rng,
+    /// token/pos fed on this slot's last advancing decode call — what a
+    /// frozen slot re-feeds (identical KV rewrite)
+    frozen: (i32, i32),
+    admitted_at: u64,
+}
+
+enum Slot {
+    Idle,
+    Busy(Box<ActiveSeq>),
+}
+
+struct Pending {
+    req: GenRequest,
+    submitted_at: u64,
+}
+
+/// A persistent streaming decode session (one per generation replica).
+pub struct GenSession {
+    cfg: StreamConfig,
+    slots: Vec<Slot>,
+    kv: Option<Tensor>,
+    /// submitted requests waiting for a slot + KV admission, FIFO
+    pending: VecDeque<Pending>,
+    /// degenerate submissions completed without touching the engine
+    immediate: Vec<GenResult>,
+    kv_alloc: KvBlockAllocator,
+    stats: StreamStats,
+}
+
+impl GenSession {
+    pub fn new(cfg: StreamConfig, kv_alloc: KvBlockAllocator) -> Self {
+        let slots = (0..cfg.batch).map(|_| Slot::Idle).collect();
+        Self {
+            cfg,
+            slots,
+            kv: None,
+            pending: VecDeque::new(),
+            immediate: Vec::new(),
+            kv_alloc,
+            stats: StreamStats::default(),
+        }
+    }
+
+    fn seq_rng(&self, id: u64) -> Rng {
+        Rng::new(self.cfg.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Submit a claimed request. Degenerate requests (`max_new_tokens ==
+    /// 0`, or a prompt already at/over `max_seq`, which has no position
+    /// left to sample into) complete immediately with an empty response —
+    /// they never occupy a slot or KV blocks. Everything else queues for
+    /// admission on the next step.
+    pub fn submit(&mut self, req: GenRequest) {
+        if req.max_new_tokens == 0 || req.prompt_ids.len() + 1 > self.cfg.max_seq {
+            self.immediate.push(GenResult {
+                id: req.id,
+                response_ids: Vec::new(),
+                response_logprobs: Vec::new(),
+                finished_by_eos: false,
+            });
+            return;
+        }
+        self.pending.push_back(Pending { req, submitted_at: self.stats.steps });
+        self.place();
+    }
+
+    /// Move pending requests into idle slots while KV admission allows.
+    /// FIFO and head-blocking: a deferred head is *not* overtaken by a
+    /// smaller later request, so KV backpressure cannot starve a long
+    /// prompt forever.
+    fn place(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if !matches!(slot, Slot::Idle) {
+                continue;
+            }
+            let Some(head) = self.pending.front() else { break };
+            let worst = (head.req.prompt_ids.len() + head.req.max_new_tokens).min(self.cfg.max_seq);
+            if self.kv_alloc.try_admit(head.req.id, worst).is_none() {
+                self.stats.kv_deferrals = self.kv_alloc.deferrals();
+                break;
+            }
+            let p = self.pending.pop_front().unwrap();
+            self.stats.admitted += 1;
+            self.stats.admit_wait_steps += self.stats.steps - p.submitted_at;
+            self.stats.prompt_tokens += p.req.prompt_ids.len() as u64;
+            let rng = self.seq_rng(p.req.id);
+            *slot = Slot::Busy(Box::new(ActiveSeq {
+                rng,
+                frozen: (self.cfg.pad_id, 0),
+                fed: 0,
+                pos: 0,
+                response: Vec::new(),
+                logprobs: Vec::new(),
+                admitted_at: self.stats.steps,
+                req: p.req,
+            }));
+        }
+    }
+
+    /// Drain completions that never needed the engine (degenerate
+    /// submissions). `step` drains these too; this exists so a caller
+    /// holding only degenerate work need not run a decode step.
+    pub fn poll_finished(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.immediate)
+    }
+
+    /// Sequences resident in the session (busy slots + pending queue).
+    pub fn in_flight(&self) -> usize {
+        self.busy_count() + self.pending.len()
+    }
+
+    /// Claim indices the session currently holds — what the worker
+    /// renews its leases for on decode ticks.
+    pub fn held_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .slots
+            .iter()
+            .filter_map(|s| match s {
+                Slot::Busy(a) => Some(a.req.id),
+                Slot::Idle => None,
+            })
+            .collect();
+        ids.extend(self.pending.iter().map(|p| p.req.id));
+        ids
+    }
+
+    fn busy_count(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Busy(_))).count()
+    }
+
+    /// Idle slots not already spoken for by the pending queue — how many
+    /// more claims are worth taking right now. Zero while KV-deferred
+    /// requests queue, which is the admission backpressure reaching the
+    /// dock: the worker stops claiming and the samples stay grantable to
+    /// other replicas.
+    pub fn room(&self) -> usize {
+        let idle = self.cfg.batch - self.busy_count();
+        idle.saturating_sub(self.pending.len())
+    }
+
+    /// Nothing decoding, nothing queued, nothing to drain.
+    pub fn is_idle(&self) -> bool {
+        self.busy_count() == 0 && self.pending.is_empty() && self.immediate.is_empty()
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// One scheduler step: up to `prefill_chunk` engine decode calls in
+    /// which prefilling slots consume one prompt token each while decoding
+    /// slots advance exactly once (on the first call) and are frozen
+    /// after. Returns every sequence that finished on this step, in slot
+    /// order — the caller writes each back and releases it immediately.
+    pub fn step(&mut self, engine: &Engine, policy: &Policy) -> Result<Vec<GenResult>> {
+        let mut finished: Vec<GenResult> = self.poll_finished();
+        self.place();
+        if self.busy_count() == 0 {
+            if !finished.is_empty() {
+                self.note_retired(finished.len() as u64);
+            }
+            return Ok(finished);
+        }
+        self.stats.steps += 1;
+
+        if self.kv.is_none() {
+            self.kv = Some(policy.init_kv(engine)?);
+        }
+        let batch = self.cfg.batch;
+        let v = engine.manifest.model.vocab_size;
+        let mut pos_v = vec![0i32; batch];
+        let mut tok_v = vec![self.cfg.pad_id; batch];
+
+        for micro in 0..self.cfg.prefill_chunk {
+            // a micro-call runs iff it is the step's first call, or some
+            // slot still has prefill budget to spend
+            let any_prefill = self.slots.iter().any(|s| match s {
+                Slot::Busy(a) => a.fed < a.req.prompt_ids.len(),
+                Slot::Idle => false,
+            });
+            if micro > 0 && !any_prefill {
+                break;
+            }
+            // phase 1: choose each slot's input
+            let mut advancing = vec![false; batch];
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                self.stats.total_slot_steps += 1;
+                match slot {
+                    Slot::Idle => {
+                        tok_v[i] = self.cfg.pad_id;
+                        pos_v[i] = 0;
+                    }
+                    Slot::Busy(a) => {
+                        let prefilling = a.fed < a.req.prompt_ids.len();
+                        let advance = prefilling || micro == 0;
+                        if advance {
+                            let next = if prefilling {
+                                a.req.prompt_ids[a.fed]
+                            } else {
+                                *a.response.last().expect("decode phase has a last token")
+                            };
+                            tok_v[i] = next;
+                            pos_v[i] = a.pos;
+                            a.frozen = (next, a.pos);
+                            advancing[i] = true;
+                            self.stats.busy_slot_steps += 1;
+                        } else {
+                            // frozen: identical KV rewrite, logits discarded
+                            let (t, p) = a.frozen;
+                            tok_v[i] = t;
+                            pos_v[i] = p;
+                        }
+                    }
+                }
+            }
+
+            let pos_t = Tensor::i32(&[batch], pos_v.clone())?;
+            let tok_t = Tensor::i32(&[batch], tok_v.clone())?;
+            let kv = self.kv.as_ref().expect("kv initialized above");
+            let (logits, new_kv) = policy.decode_step(engine, kv, &pos_t, &tok_t)?;
+            self.kv = Some(new_kv);
+            self.stats.decode_calls += 1;
+            let lraw = logits.as_f32()?;
+
+            // phase 2: advance the slots that fed a fresh token
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                if !advancing[i] {
+                    continue;
+                }
+                let mut done: Option<GenResult> = None;
+                if let Slot::Busy(a) = slot {
+                    a.pos += 1;
+                    if a.fed < a.req.prompt_ids.len() {
+                        a.fed += 1;
+                        // sample only once the full prompt is in
+                        if a.fed < a.req.prompt_ids.len() {
+                            continue;
+                        }
+                    }
+                    let row = &lraw[i * v..(i + 1) * v];
+                    let tok = self.cfg.params.sample(row, &mut a.rng) as i32;
+                    if a.response.is_empty() {
+                        self.stats.first_token_seqs += 1;
+                        self.stats.first_token_steps += self.stats.steps - a.admitted_at;
+                    }
+                    a.response.push(tok);
+                    a.logprobs.push(token_logprob(row, tok as usize));
+                    self.stats.tokens_generated += 1;
+                    let (fin, by_eos) = seq_finished(
+                        tok,
+                        self.cfg.eos_id,
+                        a.response.len(),
+                        a.req.max_new_tokens,
+                        a.pos,
+                        self.cfg.max_seq,
+                    );
+                    if fin {
+                        done = Some(GenResult {
+                            id: a.req.id,
+                            response_ids: std::mem::take(&mut a.response),
+                            response_logprobs: std::mem::take(&mut a.logprobs),
+                            finished_by_eos: by_eos,
+                        });
+                    }
+                }
+                if let Some(r) = done {
+                    // per-sequence retirement: free the KV blocks and the
+                    // slot now; the caller writes the sample back as soon
+                    // as this step returns
+                    self.kv_alloc.release(r.id);
+                    finished.push(r);
+                    *slot = Slot::Idle;
+                }
+            }
+            // freed slots admit pending work between micro-calls too
+            self.place();
+        }
+
+        if !finished.is_empty() {
+            self.note_retired(finished.len() as u64);
+        }
+        self.stats.kv_deferrals = self.kv_alloc.deferrals();
+        Ok(finished)
+    }
+
+    fn note_retired(&mut self, n: u64) {
+        self.stats.retired += n;
+        self.stats.retire_steps += 1;
+        self.stats.max_retired_in_step = self.stats.max_retired_in_step.max(n);
+    }
+
+    /// The paging invariant, re-exported for tests and debug asserts.
+    pub fn kv_invariant_holds(&self) -> bool {
+        self.kv_alloc.invariant_holds()
+    }
+
+    pub fn kv_live_blocks(&self) -> u64 {
+        self.kv_alloc.live_blocks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::MemoryPool;
+    use std::sync::Arc;
+
+    fn cfg(batch: usize, max_seq: usize) -> StreamConfig {
+        StreamConfig {
+            batch,
+            max_seq,
+            eos_id: 2,
+            pad_id: 0,
+            params: SamplingParams::default(),
+            prefill_chunk: 4,
+            seed: 7,
+        }
+    }
+
+    fn session(batch: usize, max_seq: usize, kv_blocks: u64) -> GenSession {
+        let block_tokens = 8;
+        let pool = Arc::new(MemoryPool::new("kv", kv_blocks * block_tokens as u64));
+        let alloc = KvBlockAllocator::new(pool, block_tokens, 1);
+        GenSession::new(cfg(batch, max_seq), alloc)
+    }
+
+    fn req(id: u64, prompt: usize, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt_ids: vec![1; prompt], max_new_tokens: max_new }
+    }
+
+    // ------------------------------------------------ finish rule (pure)
+
+    #[test]
+    fn finish_rule_eos_on_first_token() {
+        let (fin, by_eos) = seq_finished(2, 2, 1, 8, 5, 64);
+        assert!(fin && by_eos);
+    }
+
+    #[test]
+    fn finish_rule_max_new_cap() {
+        let (fin, by_eos) = seq_finished(9, 2, 8, 8, 12, 64);
+        assert!(fin && !by_eos);
+        let (fin, _) = seq_finished(9, 2, 7, 8, 12, 64);
+        assert!(!fin);
+    }
+
+    #[test]
+    fn finish_rule_max_seq_cap() {
+        // slot at pos 63 of a 64-seq model: no room for another token
+        let (fin, by_eos) = seq_finished(9, 2, 1, 100, 63, 64);
+        assert!(fin && !by_eos);
+        let (fin, _) = seq_finished(9, 2, 1, 100, 62, 64);
+        assert!(!fin);
+    }
+
+    // -------------------------------------- degenerate submissions (no engine)
+
+    #[test]
+    fn zero_max_new_tokens_completes_immediately() {
+        let mut s = session(2, 64, 16);
+        s.submit(req(5, 4, 0));
+        assert!(s.room() == 2, "degenerate request must not occupy a slot");
+        let out = s.poll_finished();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 5);
+        assert!(out[0].response_ids.is_empty());
+        assert!(!out[0].finished_by_eos);
+        assert!(s.is_idle());
+        assert!(s.kv_invariant_holds());
+        assert_eq!(s.kv_live_blocks(), 0);
+    }
+
+    #[test]
+    fn prompt_at_or_over_max_seq_completes_immediately() {
+        let mut s = session(2, 16, 16);
+        s.submit(req(1, 16, 4)); // prompt fills max_seq: nowhere to sample
+        s.submit(req(2, 20, 4)); // prompt over max_seq
+        let out = s.poll_finished();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.response_ids.is_empty()));
+        assert_eq!(s.kv_live_blocks(), 0, "degenerates must not charge KV");
+    }
+
+    #[test]
+    fn empty_submission_set_is_idle() {
+        let mut s = session(2, 64, 16);
+        assert!(s.is_idle());
+        assert!(s.poll_finished().is_empty());
+        assert_eq!(s.stats().steps, 0);
+    }
+
+    // ------------------------------------------- admission + backpressure
+
+    #[test]
+    fn kv_exhaustion_defers_admission_without_panic() {
+        // 2 blocks of 8 tokens total; each request reserves 2 blocks
+        // (prompt 4 + max_new 8 = 12 tokens → 2 blocks)
+        let mut s = session(4, 64, 2);
+        s.submit(req(0, 4, 8));
+        s.submit(req(1, 4, 8));
+        // slot 0 admitted, request 1 deferred on KV despite 3 idle slots
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.held_ids(), vec![0, 1]);
+        assert_eq!(s.kv_live_blocks(), 2);
+        assert!(s.kv_invariant_holds());
+        assert_eq!(s.room(), 0, "deferred pending must stop further claiming");
+        assert!(s.stats().kv_deferrals >= 1, "deferral must be counted");
+    }
+
+    #[test]
+    fn room_tracks_slots_and_pending() {
+        let mut s = session(3, 64, 64);
+        assert_eq!(s.room(), 3);
+        s.submit(req(0, 2, 4));
+        assert_eq!(s.room(), 2, "admitted request occupies a slot");
+        s.submit(req(1, 2, 0));
+        assert_eq!(s.room(), 2, "degenerate completion holds nothing");
+    }
+
+    #[test]
+    fn admission_is_fifo_under_backpressure() {
+        // one 8-token block free after the first admit; the big head
+        // request must not be overtaken by the small one behind it
+        let mut s = session(4, 64, 3);
+        s.submit(req(0, 4, 8)); // 2 blocks
+        s.submit(req(1, 30, 30)); // needs 8 blocks: deferred
+        s.submit(req(2, 2, 2)); // 1 block would fit, but queues behind 1
+        assert_eq!(s.kv_live_blocks(), 2, "only request 0 admitted");
+        assert_eq!(s.held_ids(), vec![0, 1, 2]);
+    }
+}

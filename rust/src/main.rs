@@ -8,12 +8,14 @@
 //!                       [--autoscale-min N] [--autoscale-max N]
 //!                       [--autoscale-backlog-hi D] [--autoscale-backlog-lo D]
 //!                       [--autoscale-up-ticks K] [--autoscale-down-ticks K]
+//!                       [--gen-streaming] [--prefill-chunk K]
+//!                       [--kv-block-tokens B]
 //!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
 //!                       [--lease-ticks T] [--chaos-kill-rate P]
 //!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
 //!                       [--chaos-seed S] [--chaos-max-faults N] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming
 //! ```
 //!
 //! `--pipeline pipelined` runs every worker state (generation,
@@ -26,7 +28,14 @@
 //! `--autoscale` lets the backlog-driven autoscaler grow/shrink the
 //! replica counts within bounds on lease ticks — scale-down is
 //! drain-then-retire, so no claim is ever abandoned. See rust/DESIGN.md
-//! "Elastic stages". Weights flow over a versioned bus: every sample is stamped
+//! "Elastic stages". `--gen-streaming` replaces the claim-a-batch-and-drain
+//! generation loop with a persistent continuous-batching session: new
+//! claims join at decode-step granularity, finished sequences retire (and
+//! write back) individually, prefill is chunked (`--prefill-chunk`), and
+//! KV is charged through a paged block allocator (`--kv-block-tokens`)
+//! whose exhaustion defers admission instead of failing. See
+//! rust/DESIGN.md "Streaming generation".
+//! Weights flow over a versioned bus: every sample is stamped
 //! with the weight version that generated it and its old-logprob is
 //! scored under that exact version. `--gen-logprobs` emits the behavior
 //! logprobs straight from the sampler (old-logprob becomes

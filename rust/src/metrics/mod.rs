@@ -285,6 +285,109 @@ impl StageScaling {
     }
 }
 
+/// Streaming-generation scheduler telemetry, aggregated across every
+/// session (one per generation replica incarnation) of a run. All-zero
+/// when the run decoded claim-at-a-time (`--gen-streaming` off).
+///
+/// Everything is a raw counter — occupancy, time-to-first-token, and
+/// admit latency are derived on read, so reports from differently-sized
+/// sessions merge slot-step- and sequence-weighted rather than
+/// session-weighted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamGenReport {
+    /// sessions absorbed (≥ replica incarnations that decoded anything)
+    pub sessions: u64,
+    /// scheduler steps across all sessions
+    pub steps: u64,
+    /// engine decode calls (≥ steps: chunked prefill adds micro-calls)
+    pub decode_calls: u64,
+    /// slot-calls that advanced a live sequence
+    pub busy_slot_steps: u64,
+    /// slot-calls total (busy + idle + frozen)
+    pub total_slot_steps: u64,
+    /// response tokens sampled
+    pub tokens: u64,
+    /// sequences retired by the scheduler
+    pub retired: u64,
+    /// steps on which at least one sequence retired
+    pub retire_steps: u64,
+    /// most sequences retired on a single step
+    pub max_retired_in_step: u64,
+    /// sequences admitted into a slot
+    pub admitted: u64,
+    /// Σ (admission step − submit step)
+    pub admit_wait_steps: u64,
+    /// Σ (first-token step − admission step)
+    pub first_token_steps: u64,
+    /// sequences that sampled at least one token
+    pub first_token_seqs: u64,
+    /// admissions deferred on KV-pool backpressure
+    pub kv_deferrals: u64,
+}
+
+impl StreamGenReport {
+    /// Fold one session's cumulative stats in.
+    pub fn absorb(&mut self, s: &crate::generation::StreamStats) {
+        self.sessions += 1;
+        self.steps += s.steps;
+        self.decode_calls += s.decode_calls;
+        self.busy_slot_steps += s.busy_slot_steps;
+        self.total_slot_steps += s.total_slot_steps;
+        self.tokens += s.tokens_generated;
+        self.retired += s.retired;
+        self.retire_steps += s.retire_steps;
+        self.max_retired_in_step = self.max_retired_in_step.max(s.max_retired_in_step);
+        self.admitted += s.admitted;
+        self.admit_wait_steps += s.admit_wait_steps;
+        self.first_token_steps += s.first_token_steps;
+        self.first_token_seqs += s.first_token_seqs;
+        self.kv_deferrals += s.kv_deferrals;
+    }
+
+    /// Fraction of slot-calls that advanced a live sequence.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_slot_steps == 0 {
+            0.0
+        } else {
+            self.busy_slot_steps as f64 / self.total_slot_steps as f64
+        }
+    }
+
+    /// Mean scheduler steps from admission to first sampled token.
+    pub fn mean_ttft_steps(&self) -> f64 {
+        if self.first_token_seqs == 0 {
+            0.0
+        } else {
+            self.first_token_steps as f64 / self.first_token_seqs as f64
+        }
+    }
+
+    /// Mean scheduler steps a request waited before getting a slot.
+    pub fn mean_admit_wait_steps(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.admit_wait_steps as f64 / self.admitted as f64
+        }
+    }
+
+    /// Mean sequences retired per retiring step (per-sequence retirement
+    /// keeps this near 1; batch-style draining pushes it toward the slot
+    /// count).
+    pub fn mean_retired_per_retire_step(&self) -> f64 {
+        if self.retire_steps == 0 {
+            0.0
+        } else {
+            self.retired as f64 / self.retire_steps as f64
+        }
+    }
+
+    /// Did the run stream at all? (quiet-summary gate)
+    pub fn active(&self) -> bool {
+        self.sessions > 0 && self.total_slot_steps > 0
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -311,6 +414,9 @@ pub struct PipelineReport {
     /// elastic stage-replica accounting (empty when every stage ran one
     /// thread, i.e. sync mode or an unreplicated pipelined run)
     pub scaling: StageScaling,
+    /// streaming-generation scheduler telemetry (all-zero when the run
+    /// decoded claim-at-a-time)
+    pub gen_stream: StreamGenReport,
 }
 
 impl PipelineReport {
@@ -388,6 +494,18 @@ impl PipelineReport {
         } else {
             format!(" scaling[{}]", self.scaling.summary())
         };
+        let stream = if !self.gen_stream.active() {
+            String::new()
+        } else {
+            format!(
+                " stream[occ={:.0}% ttft={:.1}st admit={:.1}st retire/st={:.1} kv-defer={}]",
+                self.gen_stream.occupancy() * 100.0,
+                self.gen_stream.mean_ttft_steps(),
+                self.gen_stream.mean_admit_wait_steps(),
+                self.gen_stream.mean_retired_per_retire_step(),
+                self.gen_stream.kv_deferrals
+            )
+        };
         let rec = if !self.recovery.any_recovery() {
             String::new()
         } else {
@@ -402,13 +520,14 @@ impl PipelineReport {
             )
         };
         format!(
-            "[{}] wall={} overlap={}{}{}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
             lag,
             bus,
             scaling,
+            stream,
             rec,
             stages
         )
@@ -627,6 +746,59 @@ mod tests {
         let s = StageScale { idle_obs: 3, obs: 4, ..Default::default() };
         assert!((s.idle_ratio() - 0.75).abs() < 1e-12);
         assert_eq!(StageScale::default().idle_ratio(), 0.0);
+    }
+
+    #[test]
+    fn stream_report_merges_slot_step_weighted() {
+        use crate::generation::StreamStats;
+        let mut r = StreamGenReport::default();
+        assert!(!r.active());
+        assert_eq!(r.occupancy(), 0.0);
+        assert_eq!(r.mean_ttft_steps(), 0.0);
+        // a big busy session and a small idle one: the merged occupancy
+        // must weight by slot-steps, not average the two ratios
+        r.absorb(&StreamStats {
+            steps: 100,
+            decode_calls: 120,
+            busy_slot_steps: 900,
+            total_slot_steps: 1000,
+            tokens_generated: 900,
+            retired: 30,
+            retire_steps: 25,
+            max_retired_in_step: 3,
+            admitted: 30,
+            admit_wait_steps: 15,
+            first_token_steps: 60,
+            first_token_seqs: 30,
+            kv_deferrals: 2,
+            ..Default::default()
+        });
+        r.absorb(&StreamStats {
+            steps: 10,
+            busy_slot_steps: 10,
+            total_slot_steps: 100,
+            ..Default::default()
+        });
+        assert!(r.active());
+        assert_eq!(r.sessions, 2);
+        // 910 / 1100, NOT (0.9 + 0.1) / 2
+        assert!((r.occupancy() - 910.0 / 1100.0).abs() < 1e-12, "{}", r.occupancy());
+        assert!((r.mean_ttft_steps() - 2.0).abs() < 1e-12);
+        assert!((r.mean_admit_wait_steps() - 0.5).abs() < 1e-12);
+        assert!((r.mean_retired_per_retire_step() - 30.0 / 25.0).abs() < 1e-12);
+        assert_eq!(r.max_retired_in_step, 3);
+        assert_eq!(r.kv_deferrals, 2);
+
+        // summary clause appears only for streaming runs
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("stream["));
+        let loud = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            gen_stream: r,
+            ..Default::default()
+        };
+        assert!(loud.summary().contains("stream[occ=83%"), "{}", loud.summary());
     }
 
     #[test]

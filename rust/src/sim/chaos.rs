@@ -59,6 +59,11 @@ pub struct ChaosConfig {
     /// backlog-driven elastic autoscaling of the stage workers, driven
     /// by the harness driver on its lease ticks
     pub autoscale: Option<AutoscaleConfig>,
+    /// generation replicas run the streaming (continuous-batching)
+    /// worker: a persistent slot set that admits claims between decode
+    /// steps and retires finished sequences individually — the harness
+    /// twin of the executor's `--gen-streaming` stage
+    pub gen_streaming: bool,
     /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
     pub deadline: Duration,
 }
@@ -77,6 +82,7 @@ impl Default for ChaosConfig {
             workers_per_stage: 1,
             stage_replicas: None,
             autoscale: None,
+            gen_streaming: false,
             deadline: Duration::from_secs(60),
         }
     }
@@ -135,11 +141,16 @@ impl ChaosOutcome {
 /// which is exactly what makes the elastic differential meaningful: if
 /// replicas or the autoscaler could lose, duplicate, or re-stamp a
 /// sample, the retired `(set, stamps)` comparison would catch it.
-fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize, u64) {
+fn synth_hash(s: &Sample) -> u32 {
     let mut h = 0x9E37_79B9u32;
     for b in s.prompt_text.bytes() {
         h = h.wrapping_mul(31).wrapping_add(b as u32);
     }
+    h
+}
+
+fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize, u64) {
+    let h = synth_hash(s);
     let tokens: Vec<i32> = (0..8).map(|i| ((h >> (i * 4)) & 0xF) as i32 + 1).collect();
     let fields = vec![
         (FieldKind::Tokens, Tensor::i32(&[8], tokens).unwrap()),
@@ -219,6 +230,100 @@ fn synthetic_stage(
     }
 }
 
+/// Streaming twin of the generation arm of [`synthetic_stage`]: a
+/// persistent slot set (continuous batching in miniature). Between
+/// decode steps it claims newly ready samples *incrementally*
+/// ([`SampleFlow::try_claim`]), each held sequence gets a long-tail
+/// step budget derived from its prompt hash, leases are renewed every
+/// step for exactly the held indices, and each sequence writes back and
+/// leaves **individually** the step its budget drains — no batch
+/// barrier. The writeback is byte-identical to the batch worker's
+/// ([`synth_generation`]), so the retired `(set, stamps)` must match
+/// batch mode under any admission interleaving, replica count, or fault
+/// schedule — the harness form of the ISSUE's streaming differential.
+fn synthetic_streaming_gen(
+    flow: &dyn SampleFlow,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
+    faults: Option<&FaultInjector>,
+    shutdown: &AtomicBool,
+) -> Result<StageExit> {
+    const SLOTS: usize = 4;
+    // (sample index, decode steps left, the sample)
+    let mut held: Vec<(u64, u64, Sample)> = Vec::new();
+    loop {
+        let metas = if held.is_empty() {
+            // drained: safe points for retirement and shutdown
+            if retire.load(Ordering::Relaxed) {
+                return Ok(StageExit::Retired);
+            }
+            let m = flow.wait_ready(Stage::Generation, SLOTS, Duration::from_millis(5))?;
+            if m.is_empty() {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(StageExit::Completed);
+                }
+                continue;
+            }
+            m
+        } else if held.len() < SLOTS {
+            // mid-flight: non-blocking admission between decode steps
+            flow.try_claim(Stage::Generation, SLOTS - held.len())?
+        } else {
+            Vec::new()
+        };
+        if !metas.is_empty() {
+            if let Some(inj) = faults {
+                match inj.decide(Stage::Generation) {
+                    Some(FaultKind::Kill) => {
+                        // abandon the fresh claims AND every held slot:
+                        // no writeback, no release — only the lease can
+                        // bring them back
+                        return Ok(StageExit::Killed);
+                    }
+                    Some(FaultKind::Stall) => inj.stall(flow, shutdown),
+                    None => {}
+                }
+            }
+            let samples = flow.fetch_resident(0, &metas)?;
+            for s in samples {
+                if held.iter().any(|(i, _, _)| *i == s.index) {
+                    continue;
+                }
+                // long-tail per-sequence decode budget (1..=7 steps),
+                // a pure function of the prompt — admission order and
+                // slot assignment cannot change when a sample finishes
+                // relative to its own admission
+                let steps = 1 + (synth_hash(&s) % 7) as u64;
+                held.push((s.index, steps, s));
+            }
+        }
+        // one decode step over the live slot set
+        busy_slots.fetch_add(1, Ordering::Relaxed);
+        let step = (|| -> Result<()> {
+            let indices: Vec<u64> = held.iter().map(|(i, _, _)| *i).collect();
+            flow.renew(Stage::Generation, &indices);
+            for (_, steps_left, _) in held.iter_mut() {
+                *steps_left -= 1;
+            }
+            // per-sequence retirement: finished sequences write back and
+            // leave the slot set individually, mid-step
+            let mut i = 0;
+            while i < held.len() {
+                if held[i].1 == 0 {
+                    let (_, _, s) = held.swap_remove(i);
+                    let (fields, completion, resp_len, stamp) = synth_generation(&s);
+                    flow.store_generation(0, s.index, fields, completion, resp_len, stamp)?;
+                } else {
+                    i += 1;
+                }
+            }
+            Ok(())
+        })();
+        busy_slots.fetch_sub(1, Ordering::Relaxed);
+        step?;
+    }
+}
+
 fn admit_iteration(
     flow: &dyn SampleFlow,
     task_gen: &mut TaskGenerator,
@@ -280,16 +385,28 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
             let flow = Arc::clone(&flow);
             let shutdown = Arc::clone(&shutdown);
             let faults = injector.clone();
+            let streaming = cfg.gen_streaming && stage == Stage::Generation;
             scope.spawn(move || {
                 loop {
-                    match synthetic_stage(
-                        flow.as_ref(),
-                        stage,
-                        &retire,
-                        &busy_slots,
-                        faults.as_deref(),
-                        &shutdown,
-                    ) {
+                    let exit = if streaming {
+                        synthetic_streaming_gen(
+                            flow.as_ref(),
+                            &retire,
+                            &busy_slots,
+                            faults.as_deref(),
+                            &shutdown,
+                        )
+                    } else {
+                        synthetic_stage(
+                            flow.as_ref(),
+                            stage,
+                            &retire,
+                            &busy_slots,
+                            faults.as_deref(),
+                            &shutdown,
+                        )
+                    };
+                    match exit {
                         Ok(StageExit::Completed) | Ok(StageExit::Retired) => break,
                         Ok(StageExit::Killed) => {
                             if let Some(inj) = faults.as_deref() {
@@ -494,6 +611,20 @@ mod tests {
         assert_eq!(a.recovery.reclaimed, 0, "fault-free replicas must never reclaim");
         assert_eq!(a.scaling.stages["generation"].initial, 4);
         assert_eq!(a.scaling.stages["old_logprob"].initial, 2);
+    }
+
+    #[test]
+    fn streaming_generation_matches_baseline() {
+        // fault-free streaming drain: per-sequence retirement and
+        // step-granularity admission must not change the retired set,
+        // the stamps, or the conservation ledger
+        let cfg =
+            ChaosConfig { lease_ticks: 256, gen_streaming: true, ..Default::default() };
+        let a = run_chaos(&cfg).unwrap();
+        let b = run_baseline(&cfg).unwrap();
+        assert!(a.lossless(&cfg));
+        assert_eq!(a.retired, b.retired, "streaming changed the retired set or stamps");
+        assert_eq!(a.recovery.reclaimed, 0, "fault-free streaming must not reclaim");
     }
 
     #[test]

@@ -218,6 +218,190 @@ impl<'a> Roofline<'a> {
     }
 }
 
+// ------------------------------------------------ token-level decode
+//
+// The wave model above ([`Roofline::generation_secs`]) prices generation
+// as SL identical full-batch steps — the right granularity for Fig. 7/9,
+// where every response runs to the SL cap. It cannot see what continuous
+// batching changes: with a *distribution* of response lengths, a batch
+// engine's wave runs until its longest member finishes while freed slots
+// sit idle, yet every step still streams the full weights. The
+// step-by-step model below prices each decode step from its actual live
+// lane count and KV context, so batch-decode and streaming admission
+// policies become comparable on the same workload.
+
+/// Decode workload of one sequence for the token-level model.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqSpec {
+    pub prompt: u64,
+    pub resp: u64,
+}
+
+/// Deterministic long-tail (exponential) response lengths in `[1, cap]`
+/// — the CoT rollout regime where a few stragglers dominate each wave.
+pub fn long_tail_lengths(n: usize, mean: f64, cap: u64, seed: u64) -> Vec<u64> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.f64().max(1e-12);
+            ((-u.ln() * mean) as u64).clamp(1, cap)
+        })
+        .collect()
+}
+
+/// Outcome of one token-level decode simulation. Occupancy is carried as
+/// raw slot-step counters, the same contract as the real scheduler's
+/// `StreamStats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenSim {
+    pub secs: f64,
+    pub steps: u64,
+    pub busy_slot_steps: u64,
+    pub total_slot_steps: u64,
+    pub tokens: u64,
+}
+
+impl GenSim {
+    pub fn occupancy(&self) -> f64 {
+        if self.total_slot_steps == 0 {
+            0.0
+        } else {
+            self.busy_slot_steps as f64 / self.total_slot_steps as f64
+        }
+    }
+
+    /// Generated tokens per second of modeled generation time.
+    pub fn tps(&self) -> f64 {
+        self.tokens as f64 / self.secs.max(1e-12)
+    }
+}
+
+/// Token-level decode cost model: prices every decode step individually
+/// from its live lane count and summed KV context, then runs a whole
+/// workload under either admission policy.
+pub struct TokenGenModel {
+    pub model: PaperModel,
+    pub device: DeviceSpec,
+    /// concurrent decode lanes (the engine's batch dimension)
+    pub slots: usize,
+    /// achieved fraction of peak FLOP/s during decode
+    pub gen_eff: f64,
+    /// achieved fraction of HBM bandwidth (paged-KV kernel quality)
+    pub hbm_eff: f64,
+}
+
+impl TokenGenModel {
+    /// The paper's device with the calibration constants the wave model
+    /// uses (DESIGN.md §Calibration).
+    pub fn paper_decode(slots: usize) -> Self {
+        Self {
+            model: PaperModel::Qwen25Dense7B,
+            device: DeviceSpec::ascend_128gb(),
+            slots,
+            gen_eff: 0.5,
+            hbm_eff: 0.8,
+        }
+    }
+
+    /// One decode step with `active` live lanes whose contexts sum to
+    /// `ctx_tokens`: max(compute, HBM), with the full weight stream paid
+    /// once per step no matter how few lanes are live — the cost idle
+    /// slots waste and full slots amortize.
+    fn step_secs(&self, active: usize, ctx_tokens: u64) -> f64 {
+        if active == 0 {
+            return 0.0;
+        }
+        let t_compute = 2.0 * self.model.active_params() * active as f64
+            / (self.device.peak_flops * self.gen_eff);
+        let kv_read = self.model.kv_bytes_per_token() * ctx_tokens as f64;
+        let t_memory =
+            (self.model.weight_bytes() + kv_read) / (self.device.hbm_bps * self.hbm_eff);
+        t_compute.max(t_memory)
+    }
+
+    /// Prefill: one compute-bound pass over every prompt token. The same
+    /// total under either admission policy, so the policies differ purely
+    /// in decode occupancy.
+    fn prefill_secs(&self, seqs: &[SeqSpec]) -> f64 {
+        let toks: u64 = seqs.iter().map(|s| s.prompt).sum();
+        2.0 * self.model.active_params() * toks as f64
+            / (self.device.peak_flops * self.gen_eff)
+    }
+
+    /// Batch-decode baseline: sequences run in admission-order waves of
+    /// `slots`; a wave ends only when its longest member finishes, so the
+    /// long tail holds every freed slot idle until the next wave.
+    pub fn batch_decode(&self, seqs: &[SeqSpec]) -> GenSim {
+        let mut sim = GenSim::default();
+        for wave in seqs.chunks(self.slots) {
+            let wave_len = wave.iter().map(|s| s.resp).max().unwrap_or(0);
+            for t in 0..wave_len {
+                let mut active = 0usize;
+                let mut ctx = 0u64;
+                for s in wave {
+                    if s.resp > t {
+                        active += 1;
+                        ctx += s.prompt + t;
+                    }
+                }
+                sim.secs += self.step_secs(active, ctx);
+                sim.steps += 1;
+                sim.busy_slot_steps += active as u64;
+                sim.total_slot_steps += self.slots as u64;
+            }
+        }
+        sim.tokens = seqs.iter().map(|s| s.resp).sum();
+        sim.secs += self.prefill_secs(seqs);
+        sim
+    }
+
+    /// Continuous batching: a lane that retires its sequence admits the
+    /// next queued one on the following step (the [`GenSession`] policy:
+    /// per-sequence retirement + step-granularity admission).
+    ///
+    /// [`GenSession`]: crate::generation::GenSession
+    pub fn continuous(&self, seqs: &[SeqSpec]) -> GenSim {
+        let mut sim = GenSim::default();
+        let mut queue: std::collections::VecDeque<SeqSpec> =
+            seqs.iter().copied().collect();
+        // (prompt, generated, resp) per lane
+        let mut lanes: Vec<Option<(u64, u64, u64)>> = vec![None; self.slots];
+        loop {
+            for lane in lanes.iter_mut() {
+                if lane.is_none() {
+                    if let Some(s) = queue.pop_front() {
+                        *lane = Some((s.prompt, 0, s.resp));
+                    }
+                }
+            }
+            let active = lanes.iter().flatten().count();
+            if active == 0 {
+                break;
+            }
+            let ctx: u64 = lanes.iter().flatten().map(|&(p, g, _)| p + g).sum();
+            sim.secs += self.step_secs(active, ctx);
+            sim.steps += 1;
+            sim.busy_slot_steps += active as u64;
+            sim.total_slot_steps += self.slots as u64;
+            for lane in lanes.iter_mut() {
+                let done = match lane.as_mut() {
+                    Some((_, g, r)) => {
+                        *g += 1;
+                        *g >= *r
+                    }
+                    None => false,
+                };
+                if done {
+                    *lane = None;
+                }
+            }
+        }
+        sim.tokens = seqs.iter().map(|s| s.resp).sum();
+        sim.secs += self.prefill_secs(seqs);
+        sim
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +432,54 @@ mod tests {
         // 3× forward cost ratio
         let ratio = r.update_secs(0.35) / r.inference_secs(0.35, 1.0);
         assert!((ratio - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_model_conserves_work_across_policies() {
+        let lengths = long_tail_lengths(128, 256.0, 4096, 7);
+        let seqs: Vec<SeqSpec> =
+            lengths.iter().map(|&l| SeqSpec { prompt: 256, resp: l }).collect();
+        let m = TokenGenModel::paper_decode(32);
+        let b = m.batch_decode(&seqs);
+        let s = m.continuous(&seqs);
+        // both policies decode exactly the workload's tokens
+        let total: u64 = lengths.iter().sum();
+        assert_eq!(b.tokens, total);
+        assert_eq!(s.tokens, total);
+        assert_eq!(b.busy_slot_steps, total, "every busy slot-step emits one token");
+        assert_eq!(s.busy_slot_steps, total);
+        assert!(b.busy_slot_steps <= b.total_slot_steps);
+        assert!(s.busy_slot_steps <= s.total_slot_steps);
+    }
+
+    #[test]
+    fn continuous_batching_beats_batch_decode_on_long_tail() {
+        let lengths = long_tail_lengths(256, 512.0, 8192, 0);
+        let seqs: Vec<SeqSpec> =
+            lengths.iter().map(|&l| SeqSpec { prompt: 512, resp: l }).collect();
+        let m = TokenGenModel::paper_decode(32);
+        let b = m.batch_decode(&seqs);
+        let s = m.continuous(&seqs);
+        // immediate refill needs strictly fewer steps than waves, which
+        // is strictly less weight-streaming time
+        assert!(s.steps < b.steps, "steps {} !< {}", s.steps, b.steps);
+        assert!(s.secs < b.secs, "secs {} !< {}", s.secs, b.secs);
+        assert!(s.tps() > b.tps());
+        assert!(s.occupancy() > b.occupancy());
+        assert!(s.occupancy() > 0.9, "streaming occupancy {}", s.occupancy());
+    }
+
+    #[test]
+    fn uniform_lengths_erase_the_streaming_advantage() {
+        // with no tail there is nothing to reclaim: both policies run the
+        // same full waves (up to the final partial one)
+        let seqs: Vec<SeqSpec> =
+            (0..64).map(|_| SeqSpec { prompt: 128, resp: 100 }).collect();
+        let m = TokenGenModel::paper_decode(32);
+        let b = m.batch_decode(&seqs);
+        let s = m.continuous(&seqs);
+        assert_eq!(s.steps, b.steps);
+        assert!((s.secs - b.secs).abs() < 1e-9);
     }
 
     #[test]

@@ -25,10 +25,13 @@ mod experiments;
 mod systems;
 
 pub use chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
-pub use costmodel::{ClusterSpec, DeviceSpec, PaperModel, RlWorkload, StageTimes};
+pub use costmodel::{
+    long_tail_lengths, ClusterSpec, DeviceSpec, GenSim, PaperModel, RlWorkload, SeqSpec,
+    StageTimes, TokenGenModel,
+};
 pub use experiments::{
     chaos_rows, fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
-    scaling_rows, table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow, ScalingRow,
-    Table1Row,
+    scaling_rows, streaming_rows, table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow,
+    ScalingRow, StreamingRow, Table1Row,
 };
 pub use systems::{SystemKind, SystemModel};

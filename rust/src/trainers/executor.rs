@@ -34,9 +34,11 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
-use crate::generation::{GenEngine, SamplingParams};
+use crate::generation::{GenEngine, GenSession, KvBlockAllocator, SamplingParams, StreamConfig};
 use crate::memory::MemoryPool;
-use crate::metrics::{throughput_tps, PipelineReport, StageScaling, StageTimers, VersionLag};
+use crate::metrics::{
+    throughput_tps, PipelineReport, StageScaling, StageTimers, StreamGenReport, VersionLag,
+};
 use crate::rewards::group_advantages;
 use crate::runtime::{Engine, Policy, TrainStats};
 use crate::tokenizer::Tokenizer;
@@ -317,6 +319,8 @@ fn run_sync(
         recovery: flow.lease_stats(),
         // one thread runs every stage: no replica accounting
         scaling: StageScaling::default(),
+        // sync generation is the batch-decode baseline by definition
+        gen_stream: StreamGenReport::default(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -441,7 +445,14 @@ fn generation_stage(
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
+    stream_acc: &Mutex<StreamGenReport>,
 ) -> Result<StageExit> {
+    if cfg.gen_streaming {
+        return streaming_generation_stage(
+            engine, cfg, placement, flow, bus, replica_pool, replica_id, retire, busy_slots,
+            faults, shutdown, busy, stream_acc,
+        );
+    }
     let gen_engine = GenEngine::from_manifest(
         engine,
         SamplingParams { temperature: cfg.temperature, top_k: 0 },
@@ -491,6 +502,200 @@ fn generation_stage(
         busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
         busy_slots.fetch_sub(1, Ordering::Relaxed);
         out?;
+    }
+}
+
+/// Flips the autoscaler's busy-slot counter as the replica moves between
+/// idle and in-flight, and guarantees the decrement on every exit path
+/// (including errors unwinding through `?`).
+struct BusySlotGuard<'a> {
+    slots: &'a AtomicUsize,
+    on: bool,
+}
+
+impl<'a> BusySlotGuard<'a> {
+    fn new(slots: &'a AtomicUsize) -> Self {
+        Self { slots, on: false }
+    }
+
+    fn set(&mut self, on: bool) {
+        if on == self.on {
+            return;
+        }
+        if on {
+            self.slots.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.slots.fetch_sub(1, Ordering::Relaxed);
+        }
+        self.on = on;
+    }
+}
+
+impl Drop for BusySlotGuard<'_> {
+    fn drop(&mut self) {
+        self.set(false);
+    }
+}
+
+/// The streaming alternative to [`generation_stage`]: one persistent
+/// [`GenSession`] per replica owns the decode slots and paged KV across
+/// claims. The worker blocks on `wait_ready` only while the session is
+/// empty; with sequences in flight it polls `try_claim` *between decode
+/// steps* for however many slots are open ([`GenSession::room`], zero
+/// under KV backpressure — admission deferral propagates to the dock as
+/// simply not claiming), renews its claim leases every step, and writes
+/// each sequence back the step it finishes instead of holding the batch
+/// open for the long tail.
+///
+/// Versioning: each claim batch refreshes the head-tracking replica and
+/// its sequences are stamped with the refreshed version — so unlike the
+/// batch stage, sequences *within one session* may carry different
+/// behavior stamps, which is exactly the stamp-then-score-under-stamp
+/// contract the old-logprob stage already honors. The per-sequence
+/// sampling streams come from the workload seed alone (no replica tag):
+/// a sequence's tokens are invariant under which replica decodes it.
+#[allow(clippy::too_many_arguments)]
+fn streaming_generation_stage(
+    engine: &Engine,
+    cfg: &GrpoConfig,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    bus: &WeightBus,
+    replica_pool: &Arc<MemoryPool>,
+    replica_id: usize,
+    retire: &AtomicBool,
+    busy_slots: &AtomicUsize,
+    faults: Option<&FaultInjector>,
+    shutdown: &AtomicBool,
+    busy: &Mutex<StageTimers>,
+    stream_acc: &Mutex<StreamGenReport>,
+) -> Result<StageExit> {
+    let gen_engine = GenEngine::from_manifest(
+        engine,
+        SamplingParams { temperature: cfg.temperature, top_k: 0 },
+    )?;
+    let actor = ActorWorker::new(
+        engine,
+        placement.actor,
+        gen_engine,
+        cfg.max_new_tokens,
+        cfg.gen_logprobs,
+    );
+    let mut replica = WeightReplica::new_with_pool(
+        bus,
+        Arc::clone(replica_pool),
+        &format!("gen{replica_id}"),
+    )
+    .map_err(|e| anyhow!(e))?;
+
+    let scfg = StreamConfig::from_manifest(
+        engine,
+        SamplingParams { temperature: cfg.temperature, top_k: 0 },
+        cfg.prefill_chunk,
+        cfg.seed ^ 0x6765_6e65_7261_7465,
+    )?;
+    // size the KV pool off the real decode KV tensor: bytes per (slot ×
+    // position), rounded up to whole blocks per slot, so a full slot set
+    // always admits — production backpressure defers, never deadlocks
+    let kv_probe = replica.policy.init_kv(engine)?;
+    let bytes_per_token =
+        (kv_probe.size_bytes() as u64 / (scfg.batch * scfg.max_seq) as u64).max(1);
+    drop(kv_probe);
+    let kv_pool = Arc::new(MemoryPool::new(
+        format!("kv-gen{replica_id}"),
+        KvBlockAllocator::capacity_bytes_for(
+            scfg.batch,
+            scfg.max_seq,
+            cfg.kv_block_tokens,
+            bytes_per_token,
+        ),
+    ));
+    let mut session = GenSession::new(
+        scfg,
+        KvBlockAllocator::new(Arc::clone(&kv_pool), cfg.kv_block_tokens, bytes_per_token),
+    );
+    // per-sequence context a writeback needs: encoded prompt + the weight
+    // version the sequence was admitted (stamped) under
+    let mut prompts: std::collections::HashMap<u64, Vec<i32>> =
+        std::collections::HashMap::new();
+    let mut stamps: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    let mut slot_guard = BusySlotGuard::new(busy_slots);
+    let flush = |session: &GenSession| {
+        stream_acc.lock().unwrap().absorb(&session.stats());
+    };
+
+    loop {
+        // claim: block only when empty; at decode-step granularity
+        // otherwise, and not at all while KV backpressure holds room at 0
+        let metas = if session.is_idle() {
+            slot_guard.set(false);
+            // the paging invariant at every drain: all blocks released by
+            // per-sequence retirement, pool back to baseline
+            debug_assert!(session.kv_invariant_holds());
+            debug_assert_eq!(kv_pool.live_bytes(), 0, "drained session must free all KV");
+            if retire.load(Ordering::Relaxed) {
+                flush(&session);
+                return Ok(StageExit::Retired);
+            }
+            let m = flow.wait_ready(Stage::Generation, GEN_MAX_BATCH, STAGE_WAIT)?;
+            if m.is_empty() {
+                if shutdown.load(Ordering::Relaxed) {
+                    flush(&session);
+                    return Ok(StageExit::Completed);
+                }
+                continue;
+            }
+            m
+        } else {
+            let room = session.room().min(GEN_MAX_BATCH);
+            if room > 0 {
+                flow.try_claim(Stage::Generation, room)?
+            } else {
+                Vec::new()
+            }
+        };
+
+        if !metas.is_empty() {
+            if let Some(exit) = inject_fault(faults, Stage::Generation, flow, shutdown) {
+                // abandon every claim the session holds (no writeback, no
+                // release): the leases reclaim them, exactly as a killed
+                // batch worker's claims are recovered
+                flush(&session);
+                return Ok(exit);
+            }
+            // one refresh per claim batch; the sequences admitted from it
+            // are stamped with the refreshed version, even though older
+            // sequences still decoding carry earlier stamps
+            replica.refresh(bus).map_err(|e| anyhow!(e))?;
+            let v = replica.version.as_u64();
+            let samples = flow.fetch_resident(placement.actor, &metas)?;
+            let (requests, prompt_map) = actor.prepare_requests(&samples)?;
+            prompts.extend(prompt_map);
+            for r in requests {
+                stamps.insert(r.id, v);
+                session.submit(r);
+            }
+        }
+
+        slot_guard.set(true);
+        // renew every held claim once per decode tick: leases measure
+        // writeback silence, and a long sequence is silent by design
+        let held = session.held_ids();
+        if !held.is_empty() {
+            flow.renew(Stage::Generation, &held);
+        }
+        let t0 = Instant::now();
+        let done = session.step(engine, &replica.policy)?;
+        busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
+        // per-sequence retirement: each finished sequence is written back
+        // (completing its claim) the step it finishes
+        for r in &done {
+            let prompt = prompts.remove(&r.id).ok_or_else(|| {
+                anyhow!("finished sequence {} has no recorded prompt", r.id)
+            })?;
+            let v = stamps.remove(&r.id).unwrap_or_else(|| replica.version.as_u64());
+            actor.store_result(engine, flow, r, &prompt, v)?;
+        }
     }
 }
 
@@ -779,6 +984,10 @@ fn run_pipelined(
     // keeps the shared `logprobs` executable single-flight across the
     // old-logprob and reference stages (see EngineShare's safety note)
     let lp_serial: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
+    // streaming generation accounting: every session incarnation folds
+    // its raw slot-step counters in here when it exits
+    let stream_acc: Arc<Mutex<StreamGenReport>> =
+        Arc::new(Mutex::new(StreamGenReport::default()));
 
     // elastic replicas: every materialized per-replica weight view
     // (generation head-trackers, old-logprob pinned caches) is charged
@@ -844,6 +1053,7 @@ fn run_pipelined(
             let bus = Arc::clone(&bus);
             let lp_serial = Arc::clone(&lp_serial);
             let replica_pool = Arc::clone(&replica_pool);
+            let stream_acc = Arc::clone(&stream_acc);
             let faults = injector.clone();
             let shutdown = Arc::clone(&shutdown);
             let fail = Arc::clone(&fail);
@@ -868,6 +1078,7 @@ fn run_pipelined(
                         faults.as_deref(),
                         &shutdown,
                         &busy,
+                        &stream_acc,
                     )
                 ),
                 Stage::OldLogprob => supervise!(
@@ -1214,6 +1425,7 @@ fn run_pipelined(
         bus: bus.retention_stats(),
         recovery,
         scaling: scaling_out,
+        gen_stream: *stream_acc.lock().unwrap(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -96,6 +96,19 @@ pub struct GrpoConfig {
     pub autoscale_up_ticks: u32,
     /// consecutive idle ticks before drain-then-retiring one replica
     pub autoscale_down_ticks: u32,
+    /// pipelined mode only: run the generation stage as a persistent
+    /// streaming scheduler ([`crate::generation::GenSession`]) instead of
+    /// the claim-a-batch-and-drain loop — newly claimed samples join at
+    /// decode-step granularity, finished sequences retire immediately,
+    /// and KV is charged through a paged block allocator
+    pub gen_streaming: bool,
+    /// streaming only: max prompt tokens consumed per scheduler step per
+    /// prefilling sequence (chunked prefill; decode lanes pause while a
+    /// chunk runs)
+    pub prefill_chunk: usize,
+    /// streaming only: KV page size in tokens for the block allocator
+    /// (admission reserves worst-case blocks up front)
+    pub kv_block_tokens: usize,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -139,6 +152,13 @@ impl GrpoConfig {
             "--stage-replicas / --autoscale require --pipeline pipelined (sync \
              runs every stage on one thread by definition)"
         );
+        anyhow::ensure!(
+            !self.gen_streaming || self.pipeline == PipelineMode::Pipelined,
+            "--gen-streaming requires --pipeline pipelined (sync mode's \
+             barrier semantics are the batch-decode baseline by definition)"
+        );
+        anyhow::ensure!(self.prefill_chunk >= 1, "prefill_chunk must be >= 1");
+        anyhow::ensure!(self.kv_block_tokens >= 1, "kv_block_tokens must be >= 1");
         if let Some(ac) = self.autoscale_config() {
             ac.validate()?;
             anyhow::ensure!(
@@ -214,6 +234,9 @@ impl Default for GrpoConfig {
             autoscale_backlog_lo: 0,
             autoscale_up_ticks: 3,
             autoscale_down_ticks: 6,
+            gen_streaming: false,
+            prefill_chunk: 4,
+            kv_block_tokens: 16,
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -434,6 +457,44 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn streaming_config_gating() {
+        // streaming requires the pipelined executor
+        let bad = GrpoConfig { gen_streaming: true, ..Default::default() };
+        assert!(bad.validate().is_err(), "streaming in sync mode must be rejected");
+        let ok = GrpoConfig {
+            gen_streaming: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        // degenerate knobs are rejected
+        let bad = GrpoConfig {
+            gen_streaming: true,
+            prefill_chunk: 0,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GrpoConfig {
+            gen_streaming: true,
+            kv_block_tokens: 0,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // streaming composes with chaos + replicas at the config layer
+        let ok = GrpoConfig {
+            gen_streaming: true,
+            chaos_kill_rate: 0.2,
+            stage_replicas: super::super::autoscale::StageReplicas::parse("gen=2")
+                .unwrap(),
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

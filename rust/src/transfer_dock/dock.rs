@@ -305,6 +305,23 @@ impl SampleFlow for TransferDock {
         Ok(metas)
     }
 
+    fn try_claim(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+        let c = self
+            .controllers
+            .get(&stage)
+            .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
+        let metas = c.request(max_n);
+        // same charging rule as `wait_ready`: the streaming scheduler
+        // polls between decode steps, and an empty poll moves no
+        // metadata — only a successful handout is a dispatch event
+        if !metas.is_empty() {
+            self.ledger
+                .record(LinkClass::Local, (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
+            self.ledger.note_requests_on(LinkClass::Local, 1);
+        }
+        Ok(metas)
+    }
+
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
         let mut out = Vec::with_capacity(metas.len());
         // one RPC per distinct warehouse touched (batched fetch)

@@ -58,6 +58,17 @@ pub trait SampleFlow: Send + Sync {
         max_n: usize,
         timeout: std::time::Duration,
     ) -> Result<Vec<SampleMeta>>;
+    /// Non-blocking incremental claim for streaming stage workers polling
+    /// *between decode steps*: returns whatever is ready right now, up to
+    /// `max_n`, never waiting. Implementations with a comm ledger charge
+    /// the metadata round-trip only when the claim is non-empty —
+    /// step-granularity polling must not inflate dispatch accounting,
+    /// which is a function of data movement, not of how often a scheduler
+    /// looks (the default forwards to [`Self::request_ready`], which
+    /// charges every poll; ledgered flows override).
+    fn try_claim(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+        self.request_ready(stage, max_n)
+    }
     /// Return claimed-but-unprocessed samples to the ready pool (e.g. the
     /// update state handing back groups that are not yet complete).
     /// Cooperative: the caller asserts it still holds the claim — a worker

@@ -361,6 +361,19 @@ impl SampleFlow for ReplayBuffer {
         Ok(out)
     }
 
+    fn try_claim(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
+        // same charging rule as `wait_ready`: a streaming scheduler polls
+        // between decode steps, and only a successful handout (scan that
+        // found work) is a dispatch event
+        let (out, scanned) = self.scan_ready(stage, max_n);
+        if !out.is_empty() {
+            self.ledger
+                .record(LinkClass::InterNode, (scanned + 1) * SampleMeta::WIRE_BYTES);
+            self.ledger.note_requests_on(LinkClass::InterNode, 1);
+        }
+        Ok(out)
+    }
+
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
         self.ledger.note_requests_on(self.link(requester_node), 1);
         let mut g = self.inner.lock().unwrap();

@@ -5,19 +5,44 @@
 use anyhow::Result;
 use std::collections::HashMap;
 
-use crate::generation::{GenEngine, GenRequest};
+use crate::generation::{GenEngine, GenRequest, GenResult};
 use crate::runtime::{Engine, Policy, Tensor};
 use crate::tokenizer::Tokenizer;
-use crate::transfer_dock::{FieldKind, SampleFlow, SampleMeta, Stage};
+use crate::transfer_dock::{FieldKind, Sample, SampleFlow, SampleMeta, Stage};
 use crate::util::rng::Rng;
 
-/// Outcome statistics for one generation pass.
+/// Outcome statistics for one generation pass. Occupancy travels as raw
+/// slot-step counters so outcomes from differently-sized claims and
+/// replicas merge slot-step-weighted, not claim-weighted.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GenerationOutcome {
     pub sequences: usize,
     pub tokens: u64,
-    pub occupancy: f64,
+    /// slot-steps that carried a live sequence
+    pub busy_slot_steps: u64,
+    /// total slot-steps (busy + idle)
+    pub total_slot_steps: u64,
     pub wall_secs: f64,
+}
+
+impl GenerationOutcome {
+    /// Fraction of slot-steps that carried a live sequence.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_slot_steps == 0 {
+            0.0
+        } else {
+            self.busy_slot_steps as f64 / self.total_slot_steps as f64
+        }
+    }
+
+    /// Merge another pass's counters in (slot-step-weighted by construction).
+    pub fn absorb(&mut self, other: &GenerationOutcome) {
+        self.sequences += other.sequences;
+        self.tokens += other.tokens;
+        self.busy_slot_steps += other.busy_slot_steps;
+        self.total_slot_steps += other.total_slot_steps;
+        self.wall_secs += other.wall_secs;
+    }
 }
 
 /// The actor worker, bound to a node of the (simulated) cluster.
@@ -89,12 +114,36 @@ impl ActorWorker {
         if samples.is_empty() {
             return Ok(GenerationOutcome::default());
         }
+        let (requests, prompt_ids_by_id) = self.prepare_requests(&samples)?;
+        let (results, stats) = self.gen_engine.generate(engine, policy, requests, rng)?;
+
+        for r in &results {
+            let prompt_ids = prompt_ids_by_id
+                .get(&r.id)
+                .ok_or_else(|| anyhow::anyhow!("generation result for unknown request {}", r.id))?;
+            self.store_result(engine, dock, r, prompt_ids, behavior_version)?;
+        }
+        Ok(GenerationOutcome {
+            sequences: results.len(),
+            tokens: stats.tokens_generated,
+            busy_slot_steps: stats.busy_slot_steps,
+            total_slot_steps: stats.total_slot_steps,
+            wall_secs: stats.wall_secs,
+        })
+    }
+
+    /// Encode fetched samples into generation requests. Returns the
+    /// requests plus each encoded prompt keyed by request id — the
+    /// writeback path reuses the ids instead of re-tokenizing and
+    /// linearly re-finding each sample.
+    pub fn prepare_requests(
+        &self,
+        samples: &[Sample],
+    ) -> Result<(Vec<GenRequest>, HashMap<u64, Vec<i32>>)> {
         let mut requests = Vec::with_capacity(samples.len());
-        // encode once; the writeback loop reuses the ids by request id
-        // instead of re-tokenizing and linearly re-finding each sample
         let mut prompt_ids_by_id: HashMap<u64, Vec<i32>> =
             HashMap::with_capacity(samples.len());
-        for s in &samples {
+        for s in samples {
             let prompt_ids = self.tokenizer.encode(&s.prompt_text)?;
             requests.push(GenRequest {
                 id: s.index,
@@ -103,38 +152,34 @@ impl ActorWorker {
             });
             prompt_ids_by_id.insert(s.index, prompt_ids);
         }
-        let (results, stats) = self.gen_engine.generate(engine, policy, requests, rng)?;
+        Ok((requests, prompt_ids_by_id))
+    }
 
+    /// Pack one finished sequence and write it back stamped with
+    /// `behavior_version`. The batch path loops this over a claim's
+    /// results; the streaming scheduler calls it the moment each
+    /// sequence retires — the writeback completes the claim, so
+    /// retirement is per-sequence, never held for claim-mates.
+    pub fn store_result(
+        &self,
+        engine: &Engine,
+        dock: &dyn SampleFlow,
+        r: &GenResult,
+        prompt_ids: &[i32],
+        behavior_version: u64,
+    ) -> Result<()> {
         let seq = engine.manifest.artifact("logprobs")?.seq;
-        for r in &results {
-            let prompt_ids = prompt_ids_by_id
-                .get(&r.id)
-                .ok_or_else(|| anyhow::anyhow!("generation result for unknown request {}", r.id))?;
-            let (tokens, mask, resp_len) =
-                pack_sequence(prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
-            let completion = self.tokenizer.decode(&r.response_ids);
-            let mut fields = vec![(FieldKind::Tokens, tokens), (FieldKind::RespMask, mask)];
-            if self.emit_logprobs {
-                fields.push((
-                    FieldKind::OldLp,
-                    behavior_logprob_row(&r.response_logprobs, prompt_ids.len(), seq)?,
-                ));
-            }
-            dock.store_generation(
-                self.node,
-                r.id,
-                fields,
-                completion,
-                resp_len,
-                behavior_version,
-            )?;
+        let (tokens, mask, resp_len) =
+            pack_sequence(prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
+        let completion = self.tokenizer.decode(&r.response_ids);
+        let mut fields = vec![(FieldKind::Tokens, tokens), (FieldKind::RespMask, mask)];
+        if self.emit_logprobs {
+            fields.push((
+                FieldKind::OldLp,
+                behavior_logprob_row(&r.response_logprobs, prompt_ids.len(), seq)?,
+            ));
         }
-        Ok(GenerationOutcome {
-            sequences: results.len(),
-            tokens: stats.tokens_generated,
-            occupancy: stats.occupancy,
-            wall_secs: stats.wall_secs,
-        })
+        dock.store_generation(self.node, r.id, fields, completion, resp_len, behavior_version)
     }
 
     /// Old-logprob inference state: fill `old_lp` for every sample still

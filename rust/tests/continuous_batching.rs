@@ -1,0 +1,256 @@
+//! Streaming generation (continuous batching): the differential suite.
+//!
+//! The headline invariant, in the style of `tests/elastic_scaling.rs`:
+//! for ANY admission interleaving the streaming scheduler produces —
+//! per-sequence retirement, step-granularity claims, long-tail per-
+//! sequence decode budgets — the run retires the **identical sample set
+//! with identical behavior-version stamps** as the batch-decode run at
+//! the same seed. The harness's synthetic generation makes tokens and
+//! stamps pure functions of the prompt, so a scheduler that loses,
+//! duplicates, or re-generates a sequence under a different identity
+//! shows up as a set or stamp mismatch here.
+//!
+//! Also pinned: streaming composes with the chaos machinery (kills
+//! abandon the whole slot set and the lease brings every sequence
+//! back), with elastic gen replicas, and with the autoscaler.
+
+use mindspeed_rl::sim::chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
+use mindspeed_rl::trainers::faults::FaultPlan;
+use mindspeed_rl::trainers::{AutoscaleConfig, StageReplicas};
+
+fn base_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig {
+        iterations: 4,
+        prompts_per_iter: 4,
+        group_size: 2,
+        // generous lease: fault-free runs must not reclaim even when the
+        // CI scheduler deschedules a worker briefly
+        lease_ticks: 256,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn streaming_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig { gen_streaming: true, ..base_cfg(seed) }
+}
+
+fn assert_equivalent(name: &str, cfg: &ChaosConfig, out: &ChaosOutcome, reference: &ChaosOutcome) {
+    assert!(
+        out.lossless(cfg),
+        "{name}: loss — retired {}/{} resident {} recovery {:?}",
+        out.retired.len(),
+        cfg.total_samples(),
+        out.resident_after,
+        out.recovery
+    );
+    assert_eq!(
+        out.retired, reference.retired,
+        "{name}: retired set or behavior-version stamps diverged from batch mode"
+    );
+    for c in &out.conservation {
+        assert!(c.holds(), "{name}: byte conservation violated: {c:?}");
+    }
+    assert!(out.recovery.consistent(), "{name}: {:?}", out.recovery);
+}
+
+// ----------------------------------------------- streaming vs batch
+
+/// Acceptance criterion: the streaming drain retires the identical
+/// `(set, stamps)` as the batch-decode drain AND the centralized
+/// replay-buffer baseline at the same seed — admission timing and
+/// per-sequence retirement are invisible to the dataflow.
+#[test]
+fn streaming_is_stamp_identical_to_batch_decode() {
+    for seed in [0u64, 7, 42] {
+        let batch = run_chaos(&base_cfg(seed)).unwrap();
+        assert!(batch.lossless(&base_cfg(seed)));
+        let cfg = streaming_cfg(seed);
+        let out = run_chaos(&cfg).unwrap();
+        assert_equivalent(&format!("streaming seed={seed}"), &cfg, &out, &batch);
+        assert_eq!(
+            out.recovery.reclaimed, 0,
+            "seed={seed}: fault-free streaming must never trip a lease \
+             (renewal every decode step)"
+        );
+        // and the centralized baseline agrees with both
+        let rb = run_baseline(&base_cfg(seed)).unwrap();
+        assert_eq!(batch.retired, rb.retired);
+    }
+}
+
+// ------------------------------------------------- chaos composition
+
+/// Streaming composes with fault injection: a kill abandons the whole
+/// slot set mid-decode (held sequences included), a stall parks the
+/// worker past its lease — either way every sequence comes back through
+/// the lease and the retired `(set, stamps)` still equals batch mode's.
+#[test]
+fn streaming_and_chaos_compose_losslessly() {
+    for seed in [0u64, 7, 42] {
+        let reference = run_chaos(&base_cfg(seed)).unwrap();
+        let cfg = ChaosConfig {
+            lease_ticks: 4,
+            plan: FaultPlan {
+                seed: seed ^ 0xe1a5,
+                kill_rate: 0.25,
+                stall_rate: 0.15,
+                stall_ticks: 8,
+                ..Default::default()
+            },
+            ..streaming_cfg(seed)
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert_equivalent(&format!("streaming+chaos seed={seed}"), &cfg, &out, &reference);
+    }
+    // and at an aggressive kill rate the plan actually fires
+    let seed = 42u64;
+    let cfg = ChaosConfig {
+        iterations: 5,
+        lease_ticks: 4,
+        plan: FaultPlan { seed: seed ^ 0xbeef, kill_rate: 0.35, ..Default::default() },
+        ..streaming_cfg(seed)
+    };
+    let reference = run_chaos(&ChaosConfig { iterations: 5, ..base_cfg(seed) }).unwrap();
+    let out = run_chaos(&cfg).unwrap();
+    assert_equivalent("streaming+kills", &cfg, &out, &reference);
+    assert!(
+        out.recovery.kills > 0,
+        "plan must fire at this rate: {:?}",
+        out.recovery
+    );
+}
+
+// --------------------------------------------- elastic composition
+
+/// Streaming composes with elastic gen replicas and with the
+/// autoscaler: N concurrent streaming sessions pulling from the same
+/// dock partition the workload arbitrarily, yet the retired
+/// `(set, stamps)` is unchanged.
+#[test]
+fn streaming_replicas_and_autoscale_are_stamp_identical() {
+    for seed in [0u64, 7] {
+        let single = run_chaos(&base_cfg(seed)).unwrap();
+        for spec in ["gen=2", "gen=4,logprob=2"] {
+            let cfg = ChaosConfig {
+                stage_replicas: Some(StageReplicas::parse(spec).unwrap()),
+                ..streaming_cfg(seed)
+            };
+            let out = run_chaos(&cfg).unwrap();
+            assert_equivalent(&format!("streaming {spec} seed={seed}"), &cfg, &out, &single);
+            assert_eq!(
+                out.recovery.reclaimed, 0,
+                "{spec}: fault-free streaming replicas must never trip a lease"
+            );
+        }
+        let cfg = ChaosConfig {
+            iterations: 6,
+            autoscale: Some(AutoscaleConfig {
+                min_replicas: 1,
+                max_replicas: 4,
+                backlog_hi: 2,
+                backlog_lo: 0,
+                up_ticks: 1,
+                down_ticks: 2,
+            }),
+            ..streaming_cfg(seed)
+        };
+        let reference = run_chaos(&ChaosConfig { iterations: 6, ..base_cfg(seed) }).unwrap();
+        let out = run_chaos(&cfg).unwrap();
+        assert_equivalent(&format!("streaming+autoscale seed={seed}"), &cfg, &out, &reference);
+    }
+}
+
+/// Everything at once: streaming + replicas + chaos. The lease
+/// machinery, the replica machinery, and the streaming scheduler are
+/// the same dataflow — composition must stay lossless.
+#[test]
+fn streaming_replicas_and_chaos_compose_losslessly() {
+    let seed = 11u64;
+    let reference = run_chaos(&ChaosConfig {
+        iterations: 5,
+        stage_replicas: Some(StageReplicas::uniform(2)),
+        ..base_cfg(seed)
+    })
+    .unwrap();
+    let cfg = ChaosConfig {
+        iterations: 5,
+        stage_replicas: Some(StageReplicas::uniform(2)),
+        lease_ticks: 4,
+        plan: FaultPlan {
+            seed: seed ^ 0xe1a5,
+            kill_rate: 0.25,
+            stall_rate: 0.15,
+            stall_ticks: 8,
+            ..Default::default()
+        },
+        ..streaming_cfg(seed)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    assert_equivalent("streaming+replicas+chaos", &cfg, &out, &reference);
+    assert!(
+        out.recovery.kills + out.recovery.stalls > 0,
+        "plan must fire at these rates: {:?}",
+        out.recovery
+    );
+}
+
+// ------------------------------------------------- executor (gated)
+
+/// Executor-level acceptance: `run_grpo` in pipelined mode with
+/// `--gen-streaming` completes every iteration with finite losses, the
+/// stream report records occupancy/TTFT/retirement, and the paged KV
+/// accounting never deferred (the pool is sized for the full slot set's
+/// worst case) and drained back to baseline (the report absorbs each
+/// session only after its idle-point invariant checks passed). Needs
+/// HLO artifacts; skips with a message otherwise.
+#[test]
+fn pipelined_executor_runs_streaming_generation() {
+    use mindspeed_rl::runtime::{artifact_dir, Engine};
+    use mindspeed_rl::trainers::{run_grpo, GrpoConfig, PipelineMode};
+
+    let Ok(engine) = Engine::load(artifact_dir("tiny")) else {
+        eprintln!("[streaming] skipping executor test: run `make artifacts` first");
+        return;
+    };
+    let cfg = GrpoConfig {
+        iterations: 3,
+        prompts_per_iter: 4,
+        group_size: 2,
+        max_new_tokens: 4,
+        pipeline: PipelineMode::Pipelined,
+        max_inflight_iters: 2,
+        log_every: 0,
+        gen_streaming: true,
+        prefill_chunk: 2,
+        kv_block_tokens: 8,
+        ..Default::default()
+    };
+    let report = run_grpo(&engine, &cfg).unwrap();
+    assert_eq!(report.iterations.len(), 3, "every iteration must finalize");
+    for m in &report.iterations {
+        assert!(m.loss.is_finite());
+        assert!(m.reward_mean >= 0.0 && m.reward_mean <= 1.0);
+    }
+    let gs = &report.pipeline.gen_stream;
+    assert!(gs.active(), "streaming run must record a stream report: {gs:?}");
+    assert_eq!(
+        gs.retired as usize,
+        cfg.iterations * cfg.prompts_per_iter * cfg.group_size,
+        "every admitted sequence retires through the streaming session: {gs:?}"
+    );
+    assert_eq!(gs.admitted, gs.retired, "admission/retirement must balance: {gs:?}");
+    let occ = gs.occupancy();
+    assert!((0.0..=1.0).contains(&occ), "occupancy {occ} outside [0,1]");
+    assert!(gs.decode_calls >= gs.steps, "chunked prefill: micro-calls >= steps: {gs:?}");
+    assert_eq!(
+        gs.kv_deferrals, 0,
+        "pool sized for the full slot set must never defer: {gs:?}"
+    );
+    assert!(report.pipeline.recovery.consistent());
+
+    // and the batch-decode pipelined run still works next to it
+    let batch = run_grpo(&engine, &GrpoConfig { gen_streaming: false, ..cfg }).unwrap();
+    assert_eq!(batch.iterations.len(), 3);
+    assert!(!batch.pipeline.gen_stream.active(), "batch mode must not record stream stats");
+}

@@ -113,6 +113,35 @@ fn no_double_dispatch_and_release() {
     }
 }
 
+/// The streaming scheduler's incremental claim: non-blocking, claims like
+/// `request_ready`, and — the accounting contract — an *empty* poll moves
+/// no ledger bytes. The scheduler polls between decode steps, so a
+/// charged empty poll would make dispatch time a function of decode step
+/// count instead of data movement.
+#[test]
+fn try_claim_charges_only_nonempty_polls() {
+    for (name, flow) in flows() {
+        let idx = flow.put_samples(prompts(2)).unwrap();
+        let before = flow.ledger().total_bytes();
+        let got = flow.try_claim(Stage::Generation, 10).unwrap();
+        assert_eq!(got.len(), 2, "{name}");
+        let after_hit = flow.ledger().total_bytes();
+        assert!(after_hit > before, "{name}: a successful claim is a dispatch event");
+        // claimed work is not re-dispatched, and the empty poll is free
+        for _ in 0..50 {
+            assert!(flow.try_claim(Stage::Generation, 10).unwrap().is_empty(), "{name}");
+        }
+        assert_eq!(
+            flow.ledger().total_bytes(),
+            after_hit,
+            "{name}: empty try_claim polls must not move ledger bytes"
+        );
+        // and the claims behave like any other claim: release restores them
+        flow.release(Stage::Generation, &idx);
+        assert_eq!(flow.try_claim(Stage::Generation, 10).unwrap().len(), 2, "{name}");
+    }
+}
+
 #[test]
 fn wait_ready_returns_immediately_when_ready() {
     for (name, flow) in flows() {

@@ -100,7 +100,12 @@ fn main() {
                     assert!(gs.active(), "streaming run must record a stream report");
                     assert_eq!(gs.kv_deferrals, 0, "sized pool must never defer");
                     json.info("real_stream_occupancy", gs.occupancy());
-                    json.info("real_stream_ttft_steps", gs.mean_ttft_steps());
+                    // a mean over zero sequences is n/a, not a number —
+                    // emit the metric only when it exists so the gate
+                    // baseline never records a NaN placeholder
+                    if let Some(ttft) = gs.mean_ttft_steps() {
+                        json.info("real_stream_ttft_steps", ttft);
+                    }
                 }
                 if !json_mode {
                     println!("\n{name:<28} wall={}", fmt_secs(wall));

@@ -1,0 +1,173 @@
+//! Bench: partial rollouts — what resuming from persisted prefixes
+//! saves over regenerating abandoned sequences from scratch.
+//!
+//! Part 1 (always runs, deterministic, the CI perf gate's input): a
+//! closed-form recompute model over the long-tail response-length
+//! workload (`sim::long_tail_lengths`, the CoT rollout regime). For a
+//! sequence of length `L` abandoned after `t` decoded tokens, a
+//! non-resumable pipeline regenerates all `t` tokens; a resumable one
+//! replays only the tokens decoded since the last persisted segment,
+//! `t mod cadence`. Averaging the abandonment point uniformly over the
+//! sequence gives the exact expected recompute of both policies — no
+//! randomness, no scheduler — and the saved fraction is gated at
+//! several checkpoint cadences.
+//!
+//! Part 2 (always runs, informational): the real chaos harness under a
+//! seeded kill plan with `partial_rollouts` on — actual persists,
+//! resumes, saved/recomputed decode steps from the dock machinery. The
+//! loss and recompute-bound invariants are asserted here so the bench
+//! fails loudly if resumability ever regresses; the counters land in
+//! the ungated "info" bucket (they depend on thread interleaving).
+//!
+//! Part 3 (artifact-gated): a real-executor run with `--gen-streaming
+//! --partial-rollouts` under chaos kills, printing the partial-rollout
+//! ledger. Wall-clock numbers are informational (CPU testbed, no gate).
+//!
+//! `--json` emits the single-line summary for `ci/bench_gate.py`.
+
+use mindspeed_rl::runtime::{artifact_dir, Engine};
+use mindspeed_rl::sim::chaos::{run_chaos, ChaosConfig, SYNTH_CKPT_STEPS};
+use mindspeed_rl::sim::long_tail_lengths;
+use mindspeed_rl::trainers::faults::FaultPlan;
+use mindspeed_rl::trainers::{run_grpo, GrpoConfig, PipelineMode};
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
+use mindspeed_rl::util::fmt_secs;
+
+/// Σ over t in 1..=len of (t mod cadence): the exact total recompute of
+/// a resumable pipeline when the abandonment point sweeps the sequence.
+fn resumable_recompute(len: u64, cadence: u64) -> u64 {
+    let (c, l) = (cadence, len);
+    let full_cycles = l / c;
+    let rem = l % c;
+    full_cycles * (c * (c - 1) / 2) + rem * (rem + 1) / 2
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let json_mode = args.has("json");
+    let mut json = BenchJson::new("partial_rollouts");
+
+    // ---- part 1: closed-form recompute model (the gated metrics)
+    let lengths = long_tail_lengths(512, 512.0, 8192, 0);
+    let total_tokens: u64 = lengths.iter().sum();
+    // one abandonment per sequence, point uniform over the sequence:
+    // a non-resumable pipeline regenerates every decoded token
+    let scratch_recompute: f64 =
+        lengths.iter().map(|&l| (l + 1) as f64 / 2.0).sum();
+    let mut t = Table::new(
+        "Partial rollouts — expected recompute per abandonment \
+         (long-tail workload: exp(512) capped 8K, 512 seqs)",
+        &["ckpt cadence", "scratch tok", "resume tok", "saved"],
+    );
+    for cadence in [4u64, 8, 16] {
+        let resume_recompute: f64 = lengths
+            .iter()
+            .map(|&l| resumable_recompute(l, cadence) as f64 / l as f64)
+            .sum();
+        let saved_frac = 1.0 - resume_recompute / scratch_recompute;
+        t.row(vec![
+            cadence.to_string(),
+            format!("{:.0}", scratch_recompute),
+            format!("{:.0}", resume_recompute),
+            format!("{:.1}%", saved_frac * 100.0),
+        ]);
+        // the acceptance criterion, asserted here so the bench itself
+        // fails loudly if resuming ever stops paying for itself
+        assert!(
+            saved_frac > 0.9,
+            "resume must eliminate >90% of abandonment recompute at cadence {cadence}: \
+             {saved_frac:.3}"
+        );
+        json.higher(&format!("resume_saved_frac_c{cadence}"), saved_frac);
+        json.lower(&format!("resume_recompute_tokens_c{cadence}"), resume_recompute);
+    }
+    json.lower("scratch_recompute_tokens", scratch_recompute);
+    json.info("workload_tokens", total_tokens as f64);
+    if !json_mode {
+        t.print();
+    }
+
+    // ---- part 2: real dock machinery under seeded kills (info)
+    let cfg = ChaosConfig {
+        iterations: 5,
+        prompts_per_iter: 4,
+        group_size: 2,
+        gen_streaming: true,
+        partial_rollouts: true,
+        seed: 42,
+        plan: FaultPlan { seed: 7, kill_rate: 0.4, ..Default::default() },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_chaos(&cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(out.lossless(&cfg), "chaos run lost samples: {:?}", out.recovery);
+    assert!(
+        out.work.recomputed_steps() <= out.recovery.reclaimed * SYNTH_CKPT_STEPS,
+        "recompute {} exceeds the checkpoint bound: {:?} {:?}",
+        out.work.recomputed_steps(),
+        out.work,
+        out.recovery
+    );
+    json.info("chaos_wall_secs", wall);
+    json.info("chaos_kills", out.recovery.kills as f64);
+    json.info("chaos_persists", out.work.persists as f64);
+    json.info("chaos_resumes", out.work.resumes as f64);
+    json.info("chaos_saved_steps", out.work.saved_steps as f64);
+    json.info("chaos_recomputed_steps", out.work.recomputed_steps() as f64);
+    if !json_mode {
+        println!(
+            "\nchaos (kill=40%): kills={} persists={} resumes={} saved={} recomputed={} \
+             wall={}",
+            out.recovery.kills,
+            out.work.persists,
+            out.work.resumes,
+            out.work.saved_steps,
+            out.work.recomputed_steps(),
+            fmt_secs(wall)
+        );
+    }
+
+    // ---- part 3: real-executor run (informational; needs artifacts)
+    match Engine::load(artifact_dir("tiny")) {
+        Ok(engine) => {
+            let cfg = GrpoConfig {
+                iterations: 3,
+                prompts_per_iter: 4,
+                group_size: 2,
+                max_new_tokens: 6,
+                pipeline: PipelineMode::Pipelined,
+                max_inflight_iters: 2,
+                lease_ticks: 4,
+                gen_streaming: true,
+                partial_rollouts: true,
+                chaos_kill_rate: 0.3,
+                chaos_seed: 5,
+                log_every: 0,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let report = run_grpo(&engine, &cfg).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            let pr = &report.pipeline.partial;
+            json.info("real_wall_secs", wall);
+            json.info("real_persisted", pr.persisted as f64);
+            json.info("real_resumed", pr.resumed as f64);
+            json.info("real_saved_tokens", pr.saved_tokens as f64);
+            if !json_mode {
+                println!("\nreal executor wall={}", fmt_secs(wall));
+                println!("  {}", report.pipeline.summary());
+            }
+        }
+        Err(e) => {
+            if !json_mode {
+                eprintln!("skipping real-executor run (run `make artifacts`): {e}");
+            }
+        }
+    }
+
+    if json_mode {
+        json.emit().unwrap();
+    }
+}

@@ -132,6 +132,12 @@ impl Config {
             if let Some(v) = g.opt("kv_block_tokens") {
                 d.kv_block_tokens = v.usize()?;
             }
+            if let Some(v) = g.opt("partial_rollouts") {
+                d.partial_rollouts = v.bool()?;
+            }
+            if let Some(v) = g.opt("preempt_on_publish") {
+                d.preempt_on_publish = v.bool()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -194,6 +200,12 @@ impl Config {
             args.usize_or("autoscale-down-ticks", g.autoscale_down_ticks as usize)? as u32;
         if args.has("gen-streaming") {
             g.gen_streaming = true;
+        }
+        if args.has("partial-rollouts") {
+            g.partial_rollouts = true;
+        }
+        if args.has("preempt-on-publish") {
+            g.preempt_on_publish = true;
         }
         g.prefill_chunk = args.usize_or("prefill-chunk", g.prefill_chunk)?;
         g.kv_block_tokens = args.usize_or("kv-block-tokens", g.kv_block_tokens)?;
@@ -443,6 +455,58 @@ mod tests {
         assert!(cfg.grpo.gen_streaming);
         assert_eq!(cfg.grpo.prefill_chunk, 2);
         assert_eq!(cfg.grpo.kv_block_tokens, 64);
+    }
+
+    #[test]
+    fn partial_rollout_flags_parse_and_validate() {
+        let args = Args::parse(
+            [
+                "--pipeline",
+                "pipelined",
+                "--gen-streaming",
+                "--partial-rollouts",
+                "--preempt-on-publish", // boolean flags last (see Args::parse note)
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert!(cfg.grpo.partial_rollouts);
+        assert!(cfg.grpo.preempt_on_publish);
+
+        // partial rollouts without the streaming scheduler are rejected
+        let bad = Args::parse(
+            ["--pipeline", "pipelined", "--partial-rollouts"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // preemption without persistence is rejected
+        let bad = Args::parse(
+            ["--pipeline", "pipelined", "--gen-streaming", "--preempt-on-publish"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // both stay opt-in
+        let dflt = Config::from_args(&Args::parse(std::iter::empty()).unwrap()).unwrap();
+        assert!(!dflt.grpo.partial_rollouts);
+        assert!(!dflt.grpo.preempt_on_publish);
+        // file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_partial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"pipeline": "pipelined", "gen_streaming": true,
+                "partial_rollouts": true, "preempt_on_publish": true}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert!(cfg.grpo.partial_rollouts);
+        assert!(cfg.grpo.preempt_on_publish);
+        assert!(cfg.grpo.validate().is_ok());
     }
 
     #[test]

@@ -23,4 +23,4 @@ mod scheduler;
 pub use batcher::{GenEngine, GenRequest, GenResult, GenStats};
 pub use kv_cache::KvBlockAllocator;
 pub use sampler::{token_logprob, SamplingParams};
-pub use scheduler::{GenSession, StreamConfig, StreamStats};
+pub use scheduler::{GenSession, SeqExport, StreamConfig, StreamStats};

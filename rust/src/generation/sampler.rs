@@ -34,6 +34,17 @@ impl SamplingParams {
         Self { temperature: 0.0, top_k: 0 }
     }
 
+    /// RNG draws consumed per sampled token under these parameters.
+    /// Stochastic sampling makes exactly one draw per token (`categorical`
+    /// draws once in every branch, including its degenerate fallback; the
+    /// top-k mask changes the weights, not the draw count); greedy argmax
+    /// makes none. Resuming a sequence from a persisted prefix of `n`
+    /// tokens therefore means `Rng::skip(n * draws_per_token())` — the
+    /// continuation is then bit-identical to an uninterrupted run.
+    pub fn draws_per_token(&self) -> usize {
+        if self.temperature > 1e-6 { 1 } else { 0 }
+    }
+
     /// Sample a token id from one slot's logits row.
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
         if self.top_k == 0 || self.top_k >= logits.len() {
@@ -92,6 +103,28 @@ mod tests {
         let lp = token_logprob(&logits, 0);
         assert!(lp.is_finite() && lp < 0.0);
         assert!((lp - (-(1.0 + (-1.0f64).exp()).ln()) as f32).abs() < 1e-5);
+    }
+
+    #[test]
+    fn skipped_rng_resumes_bit_identical_token_stream() {
+        // the resume invariant in miniature: sample k tokens, throw the
+        // session away, then fast-forward a fresh RNG by k draws — the
+        // continuation must match the uninterrupted stream exactly
+        for p in [
+            SamplingParams { temperature: 1.0, top_k: 0 },
+            SamplingParams { temperature: 0.7, top_k: 3 },
+            SamplingParams::greedy(),
+        ] {
+            let logits: Vec<Vec<f32>> =
+                (0..40).map(|i| (0..8).map(|j| ((i * 7 + j * 3) % 11) as f32 * 0.3).collect()).collect();
+            let mut uninterrupted = Rng::new(99);
+            let full: Vec<usize> = logits.iter().map(|l| p.sample(l, &mut uninterrupted)).collect();
+            let k = 13;
+            let mut resumed = Rng::new(99);
+            resumed.skip(k * p.draws_per_token());
+            let tail: Vec<usize> = logits[k..].iter().map(|l| p.sample(l, &mut resumed)).collect();
+            assert_eq!(tail, full[k..], "resume diverged at top_k={} temp={}", p.top_k, p.temperature);
+        }
     }
 
     #[test]

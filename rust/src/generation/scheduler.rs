@@ -112,6 +112,10 @@ pub struct StreamStats {
     pub first_token_seqs: u64,
     /// admissions deferred on KV-pool backpressure
     pub kv_deferrals: u64,
+    /// sequences admitted from a persisted partial prefix
+    pub resumed: u64,
+    /// prefix tokens handed back at resume — decode work *not* redone
+    pub resumed_tokens: u64,
 }
 
 impl StreamStats {
@@ -123,22 +127,21 @@ impl StreamStats {
         }
     }
 
-    /// Mean scheduler steps from admission to first sampled token.
-    pub fn mean_ttft_steps(&self) -> f64 {
-        if self.first_token_seqs == 0 {
-            0.0
-        } else {
-            self.first_token_steps as f64 / self.first_token_seqs as f64
-        }
+    /// Mean scheduler steps from admission to first sampled token, or
+    /// `None` before any sequence has produced one — a mean over zero
+    /// sequences has no value, and the raw `0/0` quotient is NaN, which
+    /// must never reach gated bench JSON (callers print `n/a` or omit
+    /// the metric, mirroring the `MIN_WALL_SECS` convention for rates).
+    pub fn mean_ttft_steps(&self) -> Option<f64> {
+        (self.first_token_seqs > 0)
+            .then(|| self.first_token_steps as f64 / self.first_token_seqs as f64)
     }
 
-    /// Mean scheduler steps a request waited before getting a slot.
-    pub fn mean_admit_wait_steps(&self) -> f64 {
-        if self.admitted == 0 {
-            0.0
-        } else {
-            self.admit_wait_steps as f64 / self.admitted as f64
-        }
+    /// Mean scheduler steps a request waited before getting a slot, or
+    /// `None` before any admission (same no-data convention as
+    /// [`Self::mean_ttft_steps`]).
+    pub fn mean_admit_wait_steps(&self) -> Option<f64> {
+        (self.admitted > 0).then(|| self.admit_wait_steps as f64 / self.admitted as f64)
     }
 }
 
@@ -161,16 +164,38 @@ pub(crate) fn seq_finished(
 
 struct ActiveSeq {
     req: GenRequest,
-    /// prompt tokens consumed so far
+    /// feed tokens consumed so far (feed = prompt ++ resumed prefix)
     fed: usize,
     pos: i32,
+    /// response tokens; indices `0..prefix_len` came from a resumed
+    /// prefix (re-prefilled, never re-sampled)
     response: Vec<i32>,
     logprobs: Vec<f32>,
     rng: Rng,
     /// token/pos fed on this slot's last advancing decode call — what a
     /// frozen slot re-feeds (identical KV rewrite)
     frozen: (i32, i32),
+    /// resumed-prefix length (0 for a fresh sequence)
+    prefix_len: usize,
     admitted_at: u64,
+}
+
+impl ActiveSeq {
+    /// Total tokens the engine must consume before sampling starts.
+    fn feed_len(&self) -> usize {
+        self.req.prompt_ids.len() + self.prefix_len
+    }
+
+    /// The `i`-th feed token: prompt first, then the resumed prefix
+    /// (which lives at the front of `response`).
+    fn feed_token(&self, i: usize) -> i32 {
+        let np = self.req.prompt_ids.len();
+        if i < np {
+            self.req.prompt_ids[i]
+        } else {
+            self.response[i - np]
+        }
+    }
 }
 
 enum Slot {
@@ -180,7 +205,34 @@ enum Slot {
 
 struct Pending {
     req: GenRequest,
+    /// resumed prefix (empty for fresh submissions): already-decoded
+    /// response tokens to re-prefill instead of re-sample
+    prefix_ids: Vec<i32>,
+    prefix_lps: Vec<f32>,
     submitted_at: u64,
+}
+
+/// A live sequence's decoded state, exported when the session abandons
+/// it (kill, cooperative drain, weight-publish preemption) so the caller
+/// can persist it through the transfer dock and a redispatch can resume
+/// from the prefix instead of the prompt.
+#[derive(Debug, Clone)]
+pub struct SeqExport {
+    pub id: u64,
+    /// full decoded response so far, including any resumed prefix
+    pub response_ids: Vec<i32>,
+    pub response_logprobs: Vec<f32>,
+    /// how many leading response tokens were themselves resumed (decoded
+    /// by an *earlier* session incarnation) — tokens `resumed_from..` are
+    /// the ones this session actually sampled
+    pub resumed_from: usize,
+}
+
+impl SeqExport {
+    /// Tokens this session decoded beyond the resumed prefix.
+    pub fn fresh_tokens(&self) -> usize {
+        self.response_ids.len() - self.resumed_from
+    }
 }
 
 /// A persistent streaming decode session (one per generation replica).
@@ -194,6 +246,10 @@ pub struct GenSession {
     immediate: Vec<GenResult>,
     kv_alloc: KvBlockAllocator,
     stats: StreamStats,
+    /// bumped whenever the held-claim set changes (admission to the
+    /// pending queue, retirement, export) — lets the worker skip lease
+    /// renewal entirely on steps where nothing joined or left
+    held_rev: u64,
 }
 
 impl GenSession {
@@ -207,6 +263,7 @@ impl GenSession {
             immediate: Vec::new(),
             kv_alloc,
             stats: StreamStats::default(),
+            held_rev: 0,
         }
     }
 
@@ -220,16 +277,36 @@ impl GenSession {
     /// they never occupy a slot or KV blocks. Everything else queues for
     /// admission on the next step.
     pub fn submit(&mut self, req: GenRequest) {
-        if req.max_new_tokens == 0 || req.prompt_ids.len() + 1 > self.cfg.max_seq {
+        self.submit_resume(req, Vec::new(), Vec::new());
+    }
+
+    /// Submit a request that resumes from a persisted partial prefix: the
+    /// prefix tokens are re-prefilled (KV only, no sampling) and the
+    /// per-sequence RNG is fast-forwarded by the prefix's draw count, so
+    /// the continued token stream is bit-identical to an uninterrupted
+    /// run under the same weights. A prefix that already exhausts the
+    /// budget (or the sequence window) completes immediately *as* the
+    /// response — no slot, no KV.
+    pub fn submit_resume(&mut self, req: GenRequest, prefix_ids: Vec<i32>, prefix_lps: Vec<f32>) {
+        debug_assert_eq!(prefix_ids.len(), prefix_lps.len(), "one logprob per prefix token");
+        let done_by_budget = req.max_new_tokens <= prefix_ids.len();
+        let done_by_window = req.prompt_ids.len() + prefix_ids.len() + 1 > self.cfg.max_seq;
+        if done_by_budget || done_by_window {
             self.immediate.push(GenResult {
                 id: req.id,
-                response_ids: Vec::new(),
-                response_logprobs: Vec::new(),
-                finished_by_eos: false,
+                finished_by_eos: prefix_ids.last() == Some(&self.cfg.eos_id),
+                response_ids: prefix_ids,
+                response_logprobs: prefix_lps,
             });
             return;
         }
-        self.pending.push_back(Pending { req, submitted_at: self.stats.steps });
+        self.held_rev += 1;
+        self.pending.push_back(Pending {
+            req,
+            prefix_ids,
+            prefix_lps,
+            submitted_at: self.stats.steps,
+        });
         self.place();
     }
 
@@ -252,14 +329,23 @@ impl GenSession {
             self.stats.admitted += 1;
             self.stats.admit_wait_steps += self.stats.steps - p.submitted_at;
             self.stats.prompt_tokens += p.req.prompt_ids.len() as u64;
-            let rng = self.seq_rng(p.req.id);
+            let mut rng = self.seq_rng(p.req.id);
+            if !p.prefix_ids.is_empty() {
+                // fast-forward past the draws the prefix consumed: the
+                // resumed stream continues exactly where an uninterrupted
+                // run would be
+                rng.skip(p.prefix_ids.len() * self.cfg.params.draws_per_token());
+                self.stats.resumed += 1;
+                self.stats.resumed_tokens += p.prefix_ids.len() as u64;
+            }
             *slot = Slot::Busy(Box::new(ActiveSeq {
                 rng,
                 frozen: (self.cfg.pad_id, 0),
                 fed: 0,
                 pos: 0,
-                response: Vec::new(),
-                logprobs: Vec::new(),
+                prefix_len: p.prefix_ids.len(),
+                response: p.prefix_ids,
+                logprobs: p.prefix_lps,
                 admitted_at: self.stats.steps,
                 req: p.req,
             }));
@@ -281,16 +367,83 @@ impl GenSession {
     /// Claim indices the session currently holds — what the worker
     /// renews its leases for on decode ticks.
     pub fn held_ids(&self) -> Vec<u64> {
-        let mut ids: Vec<u64> = self
-            .slots
+        let mut ids = Vec::new();
+        self.held_ids_into(&mut ids);
+        ids
+    }
+
+    /// [`Self::held_ids`] into a caller-owned scratch buffer: the worker
+    /// calls this every decode tick, and a fresh `Vec` per tick is pure
+    /// allocator churn for a set that rarely changes. Clears `buf` first.
+    pub fn held_ids_into(&self, buf: &mut Vec<u64>) {
+        buf.clear();
+        buf.extend(self.slots.iter().filter_map(|s| match s {
+            Slot::Busy(a) => Some(a.req.id),
+            Slot::Idle => None,
+        }));
+        buf.extend(self.pending.iter().map(|p| p.req.id));
+    }
+
+    /// Monotone revision of the held-claim set. Unchanged revision ⇒
+    /// identical held set ⇒ the caller may skip refilling its scratch
+    /// buffer (and, if the lease clock also hasn't advanced, skip the
+    /// renewal round-trip entirely).
+    pub fn held_revision(&self) -> u64 {
+        self.held_rev
+    }
+
+    /// Abandon every in-flight sequence and hand back its decoded state:
+    /// busy slots are exported with their full response-so-far (resumed
+    /// prefix included), queued requests with just their prefix; KV
+    /// blocks and slots are freed. The caller persists each export as a
+    /// partial rollout and releases/abandons the claims — this is the
+    /// kill / drain / preempt path made lossless.
+    pub fn export_partials(&mut self) -> Vec<SeqExport> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Slot::Busy(a) = slot {
+                self.kv_alloc.release(a.req.id);
+                out.push(SeqExport {
+                    id: a.req.id,
+                    response_ids: std::mem::take(&mut a.response),
+                    response_logprobs: std::mem::take(&mut a.logprobs),
+                    resumed_from: a.prefix_len,
+                });
+                *slot = Slot::Idle;
+            }
+        }
+        for p in self.pending.drain(..) {
+            out.push(SeqExport {
+                id: p.req.id,
+                resumed_from: p.prefix_ids.len(),
+                response_ids: p.prefix_ids,
+                response_logprobs: p.prefix_lps,
+            });
+        }
+        if !out.is_empty() {
+            self.held_rev += 1;
+        }
+        out
+    }
+
+    /// Non-destructive snapshot of every busy sequence that has decoded
+    /// at least one token beyond its resumed prefix — the periodic
+    /// checkpoint feed that bounds recompute after an *unclean* death
+    /// (a stalled worker cannot export at stall time; its last snapshot
+    /// is what survives).
+    pub fn partial_snapshots(&self) -> Vec<SeqExport> {
+        self.slots
             .iter()
             .filter_map(|s| match s {
-                Slot::Busy(a) => Some(a.req.id),
-                Slot::Idle => None,
+                Slot::Busy(a) if a.response.len() > a.prefix_len => Some(SeqExport {
+                    id: a.req.id,
+                    response_ids: a.response.clone(),
+                    response_logprobs: a.logprobs.clone(),
+                    resumed_from: a.prefix_len,
+                }),
+                _ => None,
             })
-            .collect();
-        ids.extend(self.pending.iter().map(|p| p.req.id));
-        ids
+            .collect()
     }
 
     fn busy_count(&self) -> usize {
@@ -344,7 +497,7 @@ impl GenSession {
             // a micro-call runs iff it is the step's first call, or some
             // slot still has prefill budget to spend
             let any_prefill = self.slots.iter().any(|s| match s {
-                Slot::Busy(a) => a.fed < a.req.prompt_ids.len(),
+                Slot::Busy(a) => a.fed < a.feed_len(),
                 Slot::Idle => false,
             });
             if micro > 0 && !any_prefill {
@@ -360,11 +513,14 @@ impl GenSession {
                         pos_v[i] = 0;
                     }
                     Slot::Busy(a) => {
-                        let prefilling = a.fed < a.req.prompt_ids.len();
+                        // the feed is prompt ++ resumed prefix: a resumed
+                        // sequence prefills its own earlier tokens (KV
+                        // rebuild) before sampling continues
+                        let prefilling = a.fed < a.feed_len();
                         let advance = prefilling || micro == 0;
                         if advance {
                             let next = if prefilling {
-                                a.req.prompt_ids[a.fed]
+                                a.feed_token(a.fed)
                             } else {
                                 *a.response.last().expect("decode phase has a last token")
                             };
@@ -399,16 +555,18 @@ impl GenSession {
                 let mut done: Option<GenResult> = None;
                 if let Slot::Busy(a) = slot {
                     a.pos += 1;
-                    if a.fed < a.req.prompt_ids.len() {
+                    if a.fed < a.feed_len() {
                         a.fed += 1;
-                        // sample only once the full prompt is in
-                        if a.fed < a.req.prompt_ids.len() {
+                        // sample only once the full feed (prompt plus any
+                        // resumed prefix) is in
+                        if a.fed < a.feed_len() {
                             continue;
                         }
                     }
                     let row = &lraw[i * v..(i + 1) * v];
                     let tok = self.cfg.params.sample(row, &mut a.rng) as i32;
-                    if a.response.is_empty() {
+                    if a.response.len() == a.prefix_len {
+                        // first token sampled by *this* session incarnation
                         self.stats.first_token_seqs += 1;
                         self.stats.first_token_steps += self.stats.steps - a.admitted_at;
                     }
@@ -439,6 +597,7 @@ impl GenSession {
                     self.kv_alloc.release(r.id);
                     finished.push(r);
                     *slot = Slot::Idle;
+                    self.held_rev += 1;
                 }
             }
             // freed slots admit pending work between micro-calls too
@@ -596,5 +755,94 @@ mod tests {
         s.submit(req(2, 2, 2)); // 1 block would fit, but queues behind 1
         assert_eq!(s.kv_live_blocks(), 2, "only request 0 admitted");
         assert_eq!(s.held_ids(), vec![0, 1, 2]);
+    }
+
+    // ------------------------------------------------ resume + export
+
+    #[test]
+    fn resume_with_exhausted_budget_completes_immediately() {
+        let mut s = session(2, 64, 16);
+        // prefix already hits max_new: the "resume" IS the response
+        s.submit_resume(req(7, 4, 3), vec![5, 6, 9], vec![-0.1, -0.2, -0.3]);
+        let out = s.poll_finished();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].response_ids, vec![5, 6, 9]);
+        assert_eq!(out[0].response_logprobs.len(), 3);
+        assert!(!out[0].finished_by_eos);
+        assert_eq!(s.kv_live_blocks(), 0, "degenerate resume must not charge KV");
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn resume_over_sequence_window_completes_immediately() {
+        let mut s = session(2, 16, 16);
+        // prompt 12 + prefix 4 + 1 > 16: nowhere left to sample
+        s.submit_resume(req(3, 12, 8), vec![1, 1, 1, 1], vec![0.0; 4]);
+        let out = s.poll_finished();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].response_ids.len(), 4);
+    }
+
+    #[test]
+    fn resumed_admission_counts_saved_tokens_and_skips_rng() {
+        let mut s = session(2, 64, 64);
+        s.submit_resume(req(0, 4, 10), vec![5, 6], vec![-0.5, -0.6]);
+        assert_eq!(s.stats().resumed, 1);
+        assert_eq!(s.stats().resumed_tokens, 2);
+        assert_eq!(s.in_flight(), 1, "resume occupies a slot like any admission");
+        // the slot's RNG must equal a fresh per-seq RNG fast-forwarded by
+        // prefix × draws-per-token — observe it via export + fields
+        let ex = s.export_partials();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].response_ids, vec![5, 6]);
+        assert_eq!(ex[0].resumed_from, 2, "prefix tokens are not fresh work");
+        assert_eq!(ex[0].fresh_tokens(), 0);
+    }
+
+    #[test]
+    fn export_partials_frees_slots_kv_and_queue() {
+        let mut s = session(2, 64, 3);
+        s.submit(req(0, 4, 8)); // admitted: 2 blocks
+        s.submit(req(1, 4, 8)); // deferred on KV, queues
+        assert_eq!(s.kv_live_blocks(), 2);
+        let ex = s.export_partials();
+        assert_eq!(ex.len(), 2, "busy slot and queued request both export");
+        assert_eq!(ex[0].id, 0);
+        assert!(ex[0].response_ids.is_empty(), "nothing decoded yet");
+        assert_eq!(ex[1].id, 1);
+        assert_eq!(s.kv_live_blocks(), 0, "export releases KV reservations");
+        assert!(s.kv_invariant_holds());
+        assert!(s.is_idle());
+        assert!(s.held_ids().is_empty());
+        // a fresh resume of the exported work is admissible again
+        s.submit_resume(req(0, 4, 8), Vec::new(), Vec::new());
+        assert_eq!(s.in_flight(), 1);
+    }
+
+    #[test]
+    fn held_revision_tracks_set_changes_only() {
+        let mut s = session(2, 64, 64);
+        let r0 = s.held_revision();
+        s.submit(req(0, 2, 4));
+        let r1 = s.held_revision();
+        assert_ne!(r0, r1, "admission changes the held set");
+        let mut buf = vec![99; 8];
+        s.held_ids_into(&mut buf);
+        assert_eq!(buf, vec![0], "scratch buffer is cleared then refilled");
+        assert_eq!(s.held_revision(), r1, "introspection does not bump the revision");
+        s.submit(req(1, 2, 0)); // degenerate: never held
+        assert_eq!(s.held_revision(), r1, "immediate completions never join the set");
+        s.export_partials();
+        assert_ne!(s.held_revision(), r1, "export empties the held set");
+    }
+
+    #[test]
+    fn partial_snapshots_skip_sequences_with_no_fresh_tokens() {
+        let mut s = session(2, 64, 64);
+        s.submit_resume(req(0, 4, 10), vec![5, 6], vec![-0.5, -0.6]);
+        assert!(
+            s.partial_snapshots().is_empty(),
+            "a resumed prefix alone is already persisted — nothing new to checkpoint"
+        );
     }
 }

@@ -10,6 +10,7 @@
 //!                       [--autoscale-up-ticks K] [--autoscale-down-ticks K]
 //!                       [--gen-streaming] [--prefill-chunk K]
 //!                       [--kv-block-tokens B]
+//!                       [--partial-rollouts] [--preempt-on-publish]
 //!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
 //!                       [--lease-ticks T] [--chaos-kill-rate P]
 //!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
@@ -34,7 +35,16 @@
 //! write back) individually, prefill is chunked (`--prefill-chunk`), and
 //! KV is charged through a paged block allocator (`--kv-block-tokens`)
 //! whose exhaustion defers admission instead of failing. See
-//! rust/DESIGN.md "Streaming generation".
+//! rust/DESIGN.md "Streaming generation". `--partial-rollouts` makes
+//! streaming generation resumable: an abandoned sequence (kill, lease
+//! reclaim, scale-down drain) persists its decoded prefix through the
+//! sample flow as version-stamped segments and redispatch resumes from
+//! the prefix — bit-identical to an uninterrupted run — while
+//! old-logprob scores each segment under the version it was decoded
+//! under. `--preempt-on-publish` additionally preempts in-flight
+//! sequences whenever a new weight version lands, so resumed tails are
+//! decoded under the freshest policy. See rust/DESIGN.md
+//! "Partial rollouts".
 //! Weights flow over a versioned bus: every sample is stamped
 //! with the weight version that generated it and its old-logprob is
 //! scored under that exact version. `--gen-logprobs` emits the behavior

@@ -323,6 +323,10 @@ pub struct StreamGenReport {
     pub first_token_seqs: u64,
     /// admissions deferred on KV-pool backpressure
     pub kv_deferrals: u64,
+    /// sequences admitted from a persisted partial prefix
+    pub resumed: u64,
+    /// prefix tokens handed back at resume — decode work *not* redone
+    pub resumed_tokens: u64,
 }
 
 impl StreamGenReport {
@@ -342,6 +346,8 @@ impl StreamGenReport {
         self.first_token_steps += s.first_token_steps;
         self.first_token_seqs += s.first_token_seqs;
         self.kv_deferrals += s.kv_deferrals;
+        self.resumed += s.resumed;
+        self.resumed_tokens += s.resumed_tokens;
     }
 
     /// Fraction of slot-calls that advanced a live sequence.
@@ -353,22 +359,21 @@ impl StreamGenReport {
         }
     }
 
-    /// Mean scheduler steps from admission to first sampled token.
-    pub fn mean_ttft_steps(&self) -> f64 {
-        if self.first_token_seqs == 0 {
-            0.0
-        } else {
-            self.first_token_steps as f64 / self.first_token_seqs as f64
-        }
+    /// Mean scheduler steps from admission to first sampled token —
+    /// `None` when no sequence produced a token (the mean does not
+    /// exist; the raw `0/0` is NaN and must never reach gated bench
+    /// JSON — callers print `n/a` or omit the metric, the same
+    /// convention [`MIN_WALL_SECS`] imposes on degenerate rates).
+    pub fn mean_ttft_steps(&self) -> Option<f64> {
+        (self.first_token_seqs > 0)
+            .then(|| self.first_token_steps as f64 / self.first_token_seqs as f64)
     }
 
-    /// Mean scheduler steps a request waited before getting a slot.
-    pub fn mean_admit_wait_steps(&self) -> f64 {
-        if self.admitted == 0 {
-            0.0
-        } else {
-            self.admit_wait_steps as f64 / self.admitted as f64
-        }
+    /// Mean scheduler steps a request waited before getting a slot —
+    /// `None` before any admission (same no-data convention as
+    /// [`Self::mean_ttft_steps`]).
+    pub fn mean_admit_wait_steps(&self) -> Option<f64> {
+        (self.admitted > 0).then(|| self.admit_wait_steps as f64 / self.admitted as f64)
     }
 
     /// Mean sequences retired per retiring step (per-sequence retirement
@@ -385,6 +390,46 @@ impl StreamGenReport {
     /// Did the run stream at all? (quiet-summary gate)
     pub fn active(&self) -> bool {
         self.sessions > 0 && self.total_slot_steps > 0
+    }
+}
+
+/// Partial-rollout (resumable generation) accounting for one run: how
+/// much interrupted decode work was persisted, how much a later
+/// redispatch got back for free, and how much had to be recomputed. All
+/// raw counters so replica reports merge additively.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PartialRolloutReport {
+    /// partial prefixes persisted through the flow (kills, drains,
+    /// publish preemptions, periodic checkpoints)
+    pub persisted: u64,
+    /// tokens carried by those persists
+    pub persisted_tokens: u64,
+    /// sequences admitted from a persisted prefix
+    pub resumed: u64,
+    /// prefix tokens handed back at resume — decode steps *not* redone
+    /// (the prefix is re-prefilled, never re-sampled)
+    pub saved_tokens: u64,
+    /// sequences exported + persisted + released because a weight
+    /// publish landed (`--preempt-on-publish`)
+    pub publish_preemptions: u64,
+    /// finished responses whose segment list spans ≥ 2 behavior
+    /// versions (each segment scored under its own stamped version)
+    pub multi_segment_responses: u64,
+}
+
+impl PartialRolloutReport {
+    pub fn merge(&mut self, other: &Self) {
+        self.persisted += other.persisted;
+        self.persisted_tokens += other.persisted_tokens;
+        self.resumed += other.resumed;
+        self.saved_tokens += other.saved_tokens;
+        self.publish_preemptions += other.publish_preemptions;
+        self.multi_segment_responses += other.multi_segment_responses;
+    }
+
+    /// Did partial rollouts do anything this run? (quiet-summary gate)
+    pub fn active(&self) -> bool {
+        self.persisted > 0 || self.resumed > 0
     }
 }
 
@@ -417,6 +462,9 @@ pub struct PipelineReport {
     /// streaming-generation scheduler telemetry (all-zero when the run
     /// decoded claim-at-a-time)
     pub gen_stream: StreamGenReport,
+    /// partial-rollout persistence/resume accounting (all-zero unless
+    /// `--partial-rollouts` interrupted and resumed something)
+    pub partial: PartialRolloutReport,
 }
 
 impl PipelineReport {
@@ -494,16 +542,31 @@ impl PipelineReport {
         } else {
             format!(" scaling[{}]", self.scaling.summary())
         };
+        // a mean over zero sequences has no value: print `n/a`, never a
+        // raw 0/0 (which is NaN)
+        let fmt_mean = |m: Option<f64>| m.map_or_else(|| "n/a".to_string(), |v| format!("{v:.1}"));
         let stream = if !self.gen_stream.active() {
             String::new()
         } else {
             format!(
-                " stream[occ={:.0}% ttft={:.1}st admit={:.1}st retire/st={:.1} kv-defer={}]",
+                " stream[occ={:.0}% ttft={}st admit={}st retire/st={:.1} kv-defer={}]",
                 self.gen_stream.occupancy() * 100.0,
-                self.gen_stream.mean_ttft_steps(),
-                self.gen_stream.mean_admit_wait_steps(),
+                fmt_mean(self.gen_stream.mean_ttft_steps()),
+                fmt_mean(self.gen_stream.mean_admit_wait_steps()),
                 self.gen_stream.mean_retired_per_retire_step(),
                 self.gen_stream.kv_deferrals
+            )
+        };
+        let partial = if !self.partial.active() {
+            String::new()
+        } else {
+            format!(
+                " partial[persist={} resume={} saved={}tok preempt={} multiseg={}]",
+                self.partial.persisted,
+                self.partial.resumed,
+                self.partial.saved_tokens,
+                self.partial.publish_preemptions,
+                self.partial.multi_segment_responses
             )
         };
         let rec = if !self.recovery.any_recovery() {
@@ -520,7 +583,7 @@ impl PipelineReport {
             )
         };
         format!(
-            "[{}] wall={} overlap={}{}{}{}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
@@ -528,6 +591,7 @@ impl PipelineReport {
             bus,
             scaling,
             stream,
+            partial,
             rec,
             stages
         )
@@ -754,7 +818,7 @@ mod tests {
         let mut r = StreamGenReport::default();
         assert!(!r.active());
         assert_eq!(r.occupancy(), 0.0);
-        assert_eq!(r.mean_ttft_steps(), 0.0);
+        assert_eq!(r.mean_ttft_steps(), None, "no sequences → no mean, not 0/0");
         // a big busy session and a small idle one: the merged occupancy
         // must weight by slot-steps, not average the two ratios
         r.absorb(&StreamStats {
@@ -783,8 +847,8 @@ mod tests {
         assert_eq!(r.sessions, 2);
         // 910 / 1100, NOT (0.9 + 0.1) / 2
         assert!((r.occupancy() - 910.0 / 1100.0).abs() < 1e-12, "{}", r.occupancy());
-        assert!((r.mean_ttft_steps() - 2.0).abs() < 1e-12);
-        assert!((r.mean_admit_wait_steps() - 0.5).abs() < 1e-12);
+        assert!((r.mean_ttft_steps().unwrap() - 2.0).abs() < 1e-12);
+        assert!((r.mean_admit_wait_steps().unwrap() - 0.5).abs() < 1e-12);
         assert!((r.mean_retired_per_retire_step() - 30.0 / 25.0).abs() < 1e-12);
         assert_eq!(r.max_retired_in_step, 3);
         assert_eq!(r.kv_deferrals, 2);
@@ -799,6 +863,58 @@ mod tests {
             ..Default::default()
         };
         assert!(loud.summary().contains("stream[occ=83%"), "{}", loud.summary());
+    }
+
+    #[test]
+    fn degenerate_stream_means_are_na_never_nan() {
+        // a session that admitted work but retired / started nothing yet:
+        // the means do not exist, and the summary must say so instead of
+        // interpolating a NaN (which would poison gated bench JSON)
+        let mut r = StreamGenReport::default();
+        r.absorb(&crate::generation::StreamStats {
+            steps: 5,
+            total_slot_steps: 20,
+            busy_slot_steps: 4,
+            ..Default::default()
+        });
+        assert_eq!(r.mean_ttft_steps(), None);
+        assert_eq!(r.mean_admit_wait_steps(), None);
+        let rep = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            gen_stream: r,
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(s.contains("ttft=n/ast"), "{s}");
+        assert!(s.contains("admit=n/ast"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn partial_report_merges_and_gates_summary() {
+        let mut a = PartialRolloutReport {
+            persisted: 3,
+            persisted_tokens: 30,
+            resumed: 2,
+            saved_tokens: 20,
+            publish_preemptions: 1,
+            multi_segment_responses: 2,
+        };
+        a.merge(&PartialRolloutReport { resumed: 1, saved_tokens: 5, ..Default::default() });
+        assert_eq!(a.resumed, 3);
+        assert_eq!(a.saved_tokens, 25);
+        assert!(a.active());
+        let rep = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            partial: a,
+            ..Default::default()
+        };
+        assert!(rep.summary().contains("partial[persist=3 resume=3 saved=25tok"), "{}", rep.summary());
+        // fault-free, never-interrupted runs stay silent
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("partial["));
     }
 
     #[test]

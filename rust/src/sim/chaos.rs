@@ -16,7 +16,7 @@
 
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -29,8 +29,8 @@ use crate::trainers::autoscale::{
 };
 use crate::trainers::faults::{FaultInjector, FaultKind, FaultPlan, StageExit};
 use crate::transfer_dock::{
-    Conservation, DockTopology, FieldKind, ReplayBuffer, Sample, SampleFlow, Stage,
-    TransferDock,
+    push_segment, Conservation, DockTopology, FieldKind, PartialRollout, ReplayBuffer, Sample,
+    SampleFlow, Stage, TransferDock,
 };
 
 /// One chaos run's shape.
@@ -64,6 +64,14 @@ pub struct ChaosConfig {
     /// steps and retires finished sequences individually — the harness
     /// twin of the executor's `--gen-streaming` stage
     pub gen_streaming: bool,
+    /// streaming generation workers persist each held sequence's decoded
+    /// prefix through the flow (every [`SYNTH_CKPT_STEPS`] decode steps
+    /// and once more when a fault kill takes the worker down), and a
+    /// claim that arrives carrying a persisted prefix resumes from it
+    /// instead of decoding from scratch — the harness twin of the
+    /// executor's `--partial-rollouts`. Only meaningful with
+    /// `gen_streaming` (the batch worker has no mid-sequence state).
+    pub partial_rollouts: bool,
     /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
     pub deadline: Duration,
 }
@@ -83,6 +91,7 @@ impl Default for ChaosConfig {
             stage_replicas: None,
             autoscale: None,
             gen_streaming: false,
+            partial_rollouts: false,
             deadline: Duration::from_secs(60),
         }
     }
@@ -99,6 +108,53 @@ impl ChaosConfig {
         self.stage_replicas
             .unwrap_or_else(|| StageReplicas::uniform(self.workers_per_stage.max(1)))
     }
+}
+
+/// Synthetic checkpoint cadence: a streaming generation worker under
+/// `partial_rollouts` persists each held sequence's decoded prefix
+/// through the flow every this-many decode steps — the harness twin of
+/// the executor's `PARTIAL_CKPT_STEPS`, shrunk so short synthetic
+/// budgets (1..=7 steps) still cross a checkpoint boundary.
+pub const SYNTH_CKPT_STEPS: u64 = 2;
+
+/// Streaming decode-work accounting: decode steps actually executed vs
+/// the workload's intrinsic budget — the bounded-recompute half of the
+/// partial-rollout differential. All zeros for batch-mode runs and the
+/// baseline (whose decode work is by construction exactly the budget).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeWork {
+    /// decode steps executed across every streaming generation worker
+    /// incarnation — a stalled zombie's post-reclaim steps count too:
+    /// duplicated work must be visible, never hidden
+    pub decoded_steps: u64,
+    /// Σ per-sequence step budgets over every admitted sample: what an
+    /// uninterrupted fault-free run decodes
+    pub budget_steps: u64,
+    /// partial prefixes persisted through the flow (periodic
+    /// checkpoints + kill-path persists)
+    pub persists: u64,
+    /// claims that arrived carrying a persisted prefix and resumed
+    /// from it instead of decoding from scratch
+    pub resumes: u64,
+    /// decode steps the resumes skipped — the work the dock saved
+    pub saved_steps: u64,
+}
+
+impl DecodeWork {
+    /// Steps decoded beyond the intrinsic budget: replayed
+    /// (post-abandonment) or zombie (post-reclaim duplicate) work.
+    pub fn recomputed_steps(&self) -> u64 {
+        self.decoded_steps.saturating_sub(self.budget_steps)
+    }
+}
+
+/// Shared decode-work counters the streaming workers bump as they run.
+#[derive(Default)]
+struct StreamCounters {
+    decoded: AtomicU64,
+    persists: AtomicU64,
+    resumes: AtomicU64,
+    saved: AtomicU64,
 }
 
 /// What a chaos run produced.
@@ -122,6 +178,9 @@ pub struct ChaosOutcome {
     /// report, which stays empty for unreplicated runs); the baseline
     /// drain leaves it default
     pub scaling: StageScaling,
+    /// streaming decode-work accounting (default for batch-mode runs
+    /// and the baseline)
+    pub work: DecodeWork,
 }
 
 impl ChaosOutcome {
@@ -160,6 +219,14 @@ fn synth_generation(s: &Sample) -> (Vec<(FieldKind, Tensor)>, String, usize, u64
     // redispatches and replica configurations
     let stamp = 1 + (h % 4) as u64;
     (fields, format!("{}", s.answer), 2, stamp)
+}
+
+/// Long-tail per-sequence decode budget (1..=7 steps) of the streaming
+/// worker — a pure function of the prompt, so admission order, slot
+/// assignment, kills, and resumes cannot change how much decode work a
+/// sequence intrinsically needs.
+fn synth_budget(s: &Sample) -> u64 {
+    1 + (synth_hash(s) % 7) as u64
 }
 
 /// One synthetic pull-driven stage worker (runs until shutdown; a
@@ -247,10 +314,44 @@ fn synthetic_streaming_gen(
     busy_slots: &AtomicUsize,
     faults: Option<&FaultInjector>,
     shutdown: &AtomicBool,
+    partial_rollouts: bool,
+    counters: &StreamCounters,
 ) -> Result<StageExit> {
     const SLOTS: usize = 4;
-    // (sample index, decode steps left, the sample)
-    let mut held: Vec<(u64, u64, Sample)> = Vec::new();
+    struct HeldSeq {
+        index: u64,
+        budget: u64,
+        /// decode steps finished (resumes start above zero)
+        done: u64,
+        /// prefix length already persisted through the flow
+        persisted: u64,
+        sample: Sample,
+    }
+    /// Persist a held sequence's decoded prefix as a first-class
+    /// partial rollout: `done` synthetic progress tokens (pure
+    /// functions of the prompt, so a replay regenerates the identical
+    /// prefix), one zero logprob per token, a single segment spanning
+    /// the prefix at the sample's deterministic behavior stamp.
+    fn persist_prefix(
+        flow: &dyn SampleFlow,
+        h: &mut HeldSeq,
+        counters: &StreamCounters,
+    ) -> Result<()> {
+        let hash = synth_hash(&h.sample);
+        let n = h.done as usize;
+        let mut segments = Vec::new();
+        push_segment(&mut segments, 0, n, 1 + (hash % 4) as u64);
+        let partial = PartialRollout {
+            response_ids: (0..n).map(|j| ((hash >> (j % 8)) & 0x7) as i32 + 1).collect(),
+            response_logprobs: vec![0.0; n],
+            segments,
+        };
+        flow.store_partial_generation(0, h.index, partial)?;
+        h.persisted = h.done;
+        counters.persists.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+    let mut held: Vec<HeldSeq> = Vec::new();
     loop {
         let metas = if held.is_empty() {
             // drained: safe points for retirement and shutdown
@@ -277,7 +378,20 @@ fn synthetic_streaming_gen(
                     Some(FaultKind::Kill) => {
                         // abandon the fresh claims AND every held slot:
                         // no writeback, no release — only the lease can
-                        // bring them back
+                        // bring them back. Under partial rollouts the
+                        // dying worker's last act is to persist each
+                        // held prefix (the executor's kill path does
+                        // the same), so the resumer replays at most
+                        // nothing; the periodic checkpoint covers
+                        // deaths that get no last act (stall zombies
+                        // losing a reclaim race)
+                        if partial_rollouts {
+                            for h in held.iter_mut() {
+                                if h.done > h.persisted {
+                                    persist_prefix(flow, h, counters)?;
+                                }
+                            }
+                        }
                         return Ok(StageExit::Killed);
                     }
                     Some(FaultKind::Stall) => inj.stall(flow, shutdown),
@@ -285,36 +399,54 @@ fn synthetic_streaming_gen(
                 }
             }
             let samples = flow.fetch_resident(0, &metas)?;
-            for s in samples {
-                if held.iter().any(|(i, _, _)| *i == s.index) {
+            for mut s in samples {
+                if held.iter().any(|h| h.index == s.index) {
                     continue;
                 }
-                // long-tail per-sequence decode budget (1..=7 steps),
-                // a pure function of the prompt — admission order and
-                // slot assignment cannot change when a sample finishes
-                // relative to its own admission
-                let steps = 1 + (synth_hash(&s) % 7) as u64;
-                held.push((s.index, steps, s));
+                let budget = synth_budget(&s);
+                let mut done = 0u64;
+                if partial_rollouts {
+                    if let Some(p) = s.partial.take() {
+                        // resume from the persisted prefix instead of
+                        // decoding from scratch
+                        done = (p.token_len() as u64).min(budget);
+                        counters.resumes.fetch_add(1, Ordering::Relaxed);
+                        counters.saved.fetch_add(done, Ordering::Relaxed);
+                    }
+                }
+                held.push(HeldSeq { index: s.index, budget, done, persisted: done, sample: s });
             }
         }
         // one decode step over the live slot set
         busy_slots.fetch_add(1, Ordering::Relaxed);
         let step = (|| -> Result<()> {
-            let indices: Vec<u64> = held.iter().map(|(i, _, _)| *i).collect();
+            let indices: Vec<u64> = held.iter().map(|h| h.index).collect();
             flow.renew(Stage::Generation, &indices);
-            for (_, steps_left, _) in held.iter_mut() {
-                *steps_left -= 1;
+            for h in held.iter_mut() {
+                if h.done < h.budget {
+                    h.done += 1;
+                    counters.decoded.fetch_add(1, Ordering::Relaxed);
+                }
             }
             // per-sequence retirement: finished sequences write back and
             // leave the slot set individually, mid-step
             let mut i = 0;
             while i < held.len() {
-                if held[i].1 == 0 {
-                    let (_, _, s) = held.swap_remove(i);
-                    let (fields, completion, resp_len, stamp) = synth_generation(&s);
-                    flow.store_generation(0, s.index, fields, completion, resp_len, stamp)?;
+                if held[i].done >= held[i].budget {
+                    let h = held.swap_remove(i);
+                    let (fields, completion, resp_len, stamp) = synth_generation(&h.sample);
+                    flow.store_generation(0, h.index, fields, completion, resp_len, stamp)?;
                 } else {
                     i += 1;
+                }
+            }
+            // periodic checkpoint over the surviving slots: bounds what
+            // an unclean death can force a resumer to replay
+            if partial_rollouts {
+                for h in held.iter_mut() {
+                    if h.done - h.persisted >= SYNTH_CKPT_STEPS {
+                        persist_prefix(flow, h, counters)?;
+                    }
                 }
             }
             Ok(())
@@ -324,12 +456,15 @@ fn synthetic_streaming_gen(
     }
 }
 
+/// Admit one iteration's sample groups; returns the decode-step budget
+/// the admission added (Σ [`synth_budget`] — the uninterrupted decode
+/// work, the yardstick of the bounded-recompute differential).
 fn admit_iteration(
     flow: &dyn SampleFlow,
     task_gen: &mut TaskGenerator,
     cfg: &ChaosConfig,
     iter: usize,
-) -> Result<()> {
+) -> Result<u64> {
     let tasks = task_gen.batch(cfg.prompts_per_iter);
     let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
     for (gi, t) in tasks.iter().enumerate() {
@@ -338,8 +473,9 @@ fn admit_iteration(
             samples.push(Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer));
         }
     }
+    let budget = samples.iter().map(synth_budget).sum();
     flow.put_samples(samples)?;
-    Ok(())
+    Ok(budget)
 }
 
 /// Pipelined chaos run over the real transfer dock: elastic replica sets
@@ -361,11 +497,14 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     let window = cfg.max_inflight_iters.max(1);
     let replicas0 = cfg.initial_replicas();
 
+    let stream_counters = Arc::new(StreamCounters::default());
+
     let mut retired: BTreeMap<u64, (u64, String, u64)> = BTreeMap::new();
     let mut remaining: BTreeMap<usize, usize> = BTreeMap::new();
     let mut admitted = 0usize;
     let mut completed = 0usize;
     let mut ticks = 0u64;
+    let mut budget_steps = 0u64;
     // replica sets + autoscaler outlive the scope so their slot-time
     // accounting closes only after every worker thread has joined
     let mut sets: Vec<ReplicaSet> =
@@ -386,6 +525,8 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
             let shutdown = Arc::clone(&shutdown);
             let faults = injector.clone();
             let streaming = cfg.gen_streaming && stage == Stage::Generation;
+            let partial = cfg.partial_rollouts;
+            let counters = Arc::clone(&stream_counters);
             scope.spawn(move || {
                 loop {
                     let exit = if streaming {
@@ -395,6 +536,8 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                             &busy_slots,
                             faults.as_deref(),
                             &shutdown,
+                            partial,
+                            &counters,
                         )
                     } else {
                         synthetic_stage(
@@ -436,6 +579,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                      admitted: &mut usize,
                      completed: &mut usize,
                      ticks: &mut u64,
+                     budget_steps: &mut u64,
                      sets: &mut Vec<ReplicaSet>,
                      scaler: &mut Option<Autoscaler>|
          -> Result<()> {
@@ -448,7 +592,8 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                     flow.lease_stats()
                 );
                 while *admitted < cfg.iterations && *admitted < *completed + window {
-                    admit_iteration(flow.as_ref(), &mut task_gen, cfg, *admitted)?;
+                    *budget_steps +=
+                        admit_iteration(flow.as_ref(), &mut task_gen, cfg, *admitted)?;
                     remaining.insert(*admitted, per_iter);
                     *admitted += 1;
                 }
@@ -490,6 +635,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
             &mut admitted,
             &mut completed,
             &mut ticks,
+            &mut budget_steps,
             &mut sets,
             &mut scaler,
         );
@@ -515,6 +661,13 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         resident_after: flow.len(),
         ticks,
         scaling,
+        work: DecodeWork {
+            decoded_steps: stream_counters.decoded.load(Ordering::Relaxed),
+            budget_steps,
+            persists: stream_counters.persists.load(Ordering::Relaxed),
+            resumes: stream_counters.resumes.load(Ordering::Relaxed),
+            saved_steps: stream_counters.saved.load(Ordering::Relaxed),
+        },
     })
 }
 
@@ -526,7 +679,7 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     let mut task_gen = TaskGenerator::train(cfg.seed);
     let mut retired: BTreeMap<u64, (u64, String, u64)> = BTreeMap::new();
     for iter in 0..cfg.iterations {
-        admit_iteration(&flow, &mut task_gen, cfg, iter)?;
+        let _budget = admit_iteration(&flow, &mut task_gen, cfg, iter)?;
         // barrier per stage, like the sync executor
         for stage in [Stage::Generation, Stage::OldLogprob, Stage::RefLogprob, Stage::Reward] {
             loop {
@@ -575,6 +728,7 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         resident_after: flow.len(),
         ticks: 0,
         scaling: StageScaling::default(),
+        work: DecodeWork::default(),
     })
 }
 
@@ -642,5 +796,108 @@ mod tests {
         assert!(out.recovery.reclaimed > 0, "kills must surface as reclaims");
         assert!(out.recovery.redispatched > 0);
         assert_eq!(out.recovery.restarts, out.recovery.kills);
+    }
+
+    #[test]
+    fn fault_free_partial_rollouts_decode_exactly_the_budget() {
+        // no faults: checkpoints are written but never consumed — the
+        // retired set, the stamps, and the decode-work ledger must all
+        // be indistinguishable from an uninterrupted run
+        let cfg = ChaosConfig {
+            lease_ticks: 256,
+            gen_streaming: true,
+            partial_rollouts: true,
+            ..Default::default()
+        };
+        let a = run_chaos(&cfg).unwrap();
+        let b = run_baseline(&cfg).unwrap();
+        assert!(a.lossless(&cfg));
+        assert_eq!(a.retired, b.retired, "partial rollouts changed the retired set or stamps");
+        assert_eq!(a.recovery.reclaimed, 0, "fault-free run must not reclaim");
+        assert_eq!(
+            a.work.decoded_steps, a.work.budget_steps,
+            "no abandonment means no recompute: {:?}",
+            a.work
+        );
+        assert!(a.work.persists > 0, "checkpoint cadence must fire: {:?}", a.work);
+        assert_eq!(a.work.resumes, 0, "nothing was abandoned, nothing may resume");
+    }
+
+    #[test]
+    fn partial_rollout_kills_bound_the_recompute() {
+        // the upgraded differential: zero-loss AND bounded-recompute. A
+        // kill-only plan models clean abandonment — the dying worker's
+        // kill path persists every held prefix, so a resumer replays at
+        // most the steps decoded since that sequence's last persisted
+        // segment (< SYNTH_CKPT_STEPS each). Stall zombies are excluded
+        // here on purpose: a zombie keeps decoding sequences its twin
+        // already resumed, which duplicates work outside any checkpoint
+        // bound (that path is covered by the zero-loss stall test).
+        let cfg = ChaosConfig {
+            iterations: 5,
+            gen_streaming: true,
+            partial_rollouts: true,
+            plan: FaultPlan { seed: 7, kill_rate: 0.4, ..Default::default() },
+            ..Default::default()
+        };
+        let out = run_chaos(&cfg).unwrap();
+        let base = run_baseline(&cfg).unwrap();
+        assert!(out.lossless(&cfg), "{:?}", out.recovery);
+        assert_eq!(out.retired, base.retired, "resumes changed the retired set or stamps");
+        assert!(out.recovery.kills > 0, "plan must actually fire: {:?}", out.recovery);
+        assert!(out.work.persists > 0, "kills must persist prefixes: {:?}", out.work);
+        assert!(out.work.resumes > 0, "reclaimed prefixes must resume: {:?}", out.work);
+        assert!(out.work.saved_steps > 0, "resumes must skip persisted work: {:?}", out.work);
+        assert!(
+            out.work.recomputed_steps() <= out.recovery.reclaimed * SYNTH_CKPT_STEPS,
+            "recompute {} exceeds the checkpoint bound (reclaimed={}, cadence={}): {:?}",
+            out.work.recomputed_steps(),
+            out.recovery.reclaimed,
+            SYNTH_CKPT_STEPS,
+            out.work
+        );
+    }
+
+    #[test]
+    fn streaming_stalls_surface_superseded_not_loss() {
+        // the FlowRecovery contract under streaming chaos: a stalled
+        // worker outlives its lease, its held sequences are reclaimed
+        // and resumed by the twin replica, and the zombie's late
+        // writebacks land as superseded duplicates — every reclaim
+        // bumps the attempt counter exactly once, redispatches never
+        // exceed reclaims, and the retired set is still byte-identical
+        // to the baseline's
+        let cfg = ChaosConfig {
+            iterations: 4,
+            gen_streaming: true,
+            partial_rollouts: true,
+            workers_per_stage: 2,
+            lease_ticks: 2,
+            plan: FaultPlan {
+                seed: 11,
+                stall_rate: 0.3,
+                stall_ticks: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let out = run_chaos(&cfg).unwrap();
+        let base = run_baseline(&cfg).unwrap();
+        assert!(out.lossless(&cfg), "{:?}", out.recovery);
+        assert_eq!(out.retired, base.retired, "stall recovery changed the retired set");
+        assert!(out.recovery.stalls > 0, "plan must actually fire: {:?}", out.recovery);
+        assert!(out.recovery.reclaimed > 0, "stalls past the lease must reclaim");
+        assert_eq!(
+            out.recovery.reclaimed, out.recovery.attempt_bumps,
+            "every reclaim must bump the attempt counter exactly once: {:?}",
+            out.recovery
+        );
+        assert!(out.recovery.redispatched <= out.recovery.reclaimed);
+        assert!(
+            out.recovery.superseded_writebacks > 0,
+            "the zombie's late writebacks must surface as superseded, not as loss \
+             or duplication: {:?}",
+            out.recovery
+        );
     }
 }

@@ -267,6 +267,8 @@ pub fn streaming_rows(seed: u64) -> Vec<StreamingRow> {
 pub struct ChaosRow {
     pub kill_rate: f64,
     pub stall_rate: f64,
+    /// streaming generation with partial rollouts (resumable prefixes)
+    pub partial: bool,
     pub samples: usize,
     pub reclaimed: u64,
     pub redispatched: u64,
@@ -274,6 +276,10 @@ pub struct ChaosRow {
     pub stalls: u64,
     pub restarts: u64,
     pub superseded: u64,
+    /// decode steps a resume skipped (partial-rollout rows only)
+    pub saved_steps: u64,
+    /// decode steps replayed beyond the workload's intrinsic budget
+    pub recomputed_steps: u64,
     pub lossless: bool,
 }
 
@@ -285,7 +291,17 @@ pub fn chaos_rows(seed: u64) -> Result<Vec<ChaosRow>> {
     use super::chaos::{run_chaos, ChaosConfig};
     use crate::trainers::faults::FaultPlan;
     let mut rows = Vec::new();
-    for (kill, stall) in [(0.0, 0.0), (0.1, 0.0), (0.0, 0.1), (0.3, 0.2)] {
+    // the final rows run the streaming generation worker with partial
+    // rollouts: kills persist decoded prefixes and redispatch resumes
+    // them, so the saved/recomputed columns show what resumability buys
+    for (kill, stall, partial) in [
+        (0.0, 0.0, false),
+        (0.1, 0.0, false),
+        (0.0, 0.1, false),
+        (0.3, 0.2, false),
+        (0.3, 0.0, true),
+        (0.3, 0.2, true),
+    ] {
         let cfg = ChaosConfig {
             iterations: 4,
             prompts_per_iter: 4,
@@ -300,12 +316,16 @@ pub fn chaos_rows(seed: u64) -> Result<Vec<ChaosRow>> {
                 ..Default::default()
             },
             seed,
+            gen_streaming: partial,
+            partial_rollouts: partial,
+            workers_per_stage: if partial && stall > 0.0 { 2 } else { 1 },
             ..Default::default()
         };
         let out = run_chaos(&cfg)?;
         rows.push(ChaosRow {
             kill_rate: kill,
             stall_rate: stall,
+            partial,
             samples: out.retired.len(),
             reclaimed: out.recovery.reclaimed,
             redispatched: out.recovery.redispatched,
@@ -313,6 +333,8 @@ pub fn chaos_rows(seed: u64) -> Result<Vec<ChaosRow>> {
             stalls: out.recovery.stalls,
             restarts: out.recovery.restarts,
             superseded: out.recovery.superseded_writebacks,
+            saved_steps: out.work.saved_steps,
+            recomputed_steps: out.work.recomputed_steps(),
             lossless: out.lossless(&cfg),
         });
     }
@@ -450,14 +472,15 @@ pub fn run_named_experiment(name: &str) -> Result<()> {
             let mut t = Table::new(
                 "Chaos — lease-based recovery under seeded worker faults (transfer dock)",
                 &[
-                    "kill", "stall", "retired", "reclaim", "redisp", "kills", "stalls",
-                    "restarts", "stale-wb", "lossless",
+                    "kill", "stall", "partial", "retired", "reclaim", "redisp", "kills",
+                    "stalls", "restarts", "stale-wb", "saved", "recomp", "lossless",
                 ],
             );
             for r in chaos_rows(0)? {
                 t.row(vec![
                     format!("{:.0}%", r.kill_rate * 100.0),
                     format!("{:.0}%", r.stall_rate * 100.0),
+                    if r.partial { "yes".into() } else { "-".into() },
                     r.samples.to_string(),
                     r.reclaimed.to_string(),
                     r.redispatched.to_string(),
@@ -465,13 +488,17 @@ pub fn run_named_experiment(name: &str) -> Result<()> {
                     r.stalls.to_string(),
                     r.restarts.to_string(),
                     r.superseded.to_string(),
+                    r.saved_steps.to_string(),
+                    r.recomputed_steps.to_string(),
                     if r.lossless { "yes".into() } else { "NO".into() },
                 ]);
             }
             t.print();
             println!(
                 "every row retires the identical sample set; faulted rows recover it \
-                 through lease reclaim + redispatch (tests/chaos.rs pins the invariants)"
+                 through lease reclaim + redispatch, and partial rows resume killed \
+                 sequences from persisted prefixes instead of regenerating them \
+                 (tests/chaos.rs + tests/partial_rollouts.rs pin the invariants)"
             );
         }
         other => {
@@ -523,7 +550,7 @@ mod tests {
     #[test]
     fn chaos_sweep_is_lossless_at_every_rate() {
         let rows = chaos_rows(3).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 6);
         for r in &rows {
             assert!(r.lossless, "loss at kill={} stall={}: {r:?}", r.kill_rate, r.stall_rate);
             assert_eq!(r.samples, 4 * 4 * 2, "retired-set size must match the workload");
@@ -534,6 +561,10 @@ mod tests {
         assert_eq!(rows[0].reclaimed, 0);
         assert!(rows[3].kills + rows[3].stalls > 0, "{:?}", rows[3]);
         assert!(rows[3].reclaimed > 0, "{:?}", rows[3]);
+        // the partial-rollout kill row resumes instead of regenerating
+        assert!(rows[4].partial);
+        assert!(rows[4].kills > 0, "{:?}", rows[4]);
+        assert!(rows[4].saved_steps > 0, "kill row must bank resumed work: {:?}", rows[4]);
     }
 
     #[test]

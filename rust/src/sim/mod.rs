@@ -24,7 +24,9 @@ mod costmodel;
 mod experiments;
 mod systems;
 
-pub use chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
+pub use chaos::{
+    run_baseline, run_chaos, ChaosConfig, ChaosOutcome, DecodeWork, SYNTH_CKPT_STEPS,
+};
 pub use costmodel::{
     long_tail_lengths, ClusterSpec, DeviceSpec, GenSim, PaperModel, RlWorkload, SeqSpec,
     StageTimes, TokenGenModel,

@@ -28,22 +28,26 @@
 //! policy even while generation runs ahead of the update. See DESIGN.md.
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
-use crate::generation::{GenEngine, GenSession, KvBlockAllocator, SamplingParams, StreamConfig};
+use crate::generation::{
+    GenEngine, GenSession, KvBlockAllocator, SamplingParams, SeqExport, StreamConfig,
+};
 use crate::memory::MemoryPool;
 use crate::metrics::{
-    throughput_tps, PipelineReport, StageScaling, StageTimers, StreamGenReport, VersionLag,
+    throughput_tps, PartialRolloutReport, PipelineReport, StageScaling, StageTimers,
+    StreamGenReport, VersionLag,
 };
 use crate::rewards::group_advantages;
-use crate::runtime::{Engine, Policy, TrainStats};
+use crate::runtime::{Engine, Policy, Tensor, TrainStats};
 use crate::tokenizer::Tokenizer;
 use crate::transfer_dock::{
-    FieldKind, NetworkModel, Sample, SampleFlow, SampleMeta, Stage,
+    push_segment, FieldKind, NetworkModel, PartialRollout, Sample, SampleFlow, SampleMeta,
+    Segment, Stage,
 };
 use crate::util::rng::Rng;
 use crate::weights::{ReplicaCache, WeightBus, WeightReplica, WeightVersion};
@@ -321,6 +325,8 @@ fn run_sync(
         scaling: StageScaling::default(),
         // sync generation is the batch-decode baseline by definition
         gen_stream: StreamGenReport::default(),
+        // sync never abandons a sequence mid-decode: nothing to persist
+        partial: PartialRolloutReport::default(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -446,11 +452,12 @@ fn generation_stage(
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
     stream_acc: &Mutex<StreamGenReport>,
+    partial_acc: &Mutex<PartialRolloutReport>,
 ) -> Result<StageExit> {
     if cfg.gen_streaming {
         return streaming_generation_stage(
             engine, cfg, placement, flow, bus, replica_pool, replica_id, retire, busy_slots,
-            faults, shutdown, busy, stream_acc,
+            faults, shutdown, busy, stream_acc, partial_acc,
         );
     }
     let gen_engine = GenEngine::from_manifest(
@@ -569,6 +576,7 @@ fn streaming_generation_stage(
     shutdown: &AtomicBool,
     busy: &Mutex<StageTimers>,
     stream_acc: &Mutex<StreamGenReport>,
+    partial_acc: &Mutex<PartialRolloutReport>,
 ) -> Result<StageExit> {
     let gen_engine = GenEngine::from_manifest(
         engine,
@@ -616,12 +624,24 @@ fn streaming_generation_stage(
     );
     // per-sequence context a writeback needs: encoded prompt + the weight
     // version the sequence was admitted (stamped) under
-    let mut prompts: std::collections::HashMap<u64, Vec<i32>> =
-        std::collections::HashMap::new();
-    let mut stamps: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    let mut prompts: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut stamps: HashMap<u64, u64> = HashMap::new();
+    // partial rollouts: segments closed by *previous* incarnations (from
+    // the fetched partial), and the longest prefix already persisted per
+    // sequence — the dedup that makes checkpoints idempotent
+    let mut closed_segs: HashMap<u64, Vec<Segment>> = HashMap::new();
+    let mut persisted_len: HashMap<u64, usize> = HashMap::new();
+    let mut pr = PartialRolloutReport::default();
+    let mut steps_since_ckpt = 0usize;
+    // satellite: lease renewal bookkeeping — scratch buffer + the
+    // (held-set revision, lease clock) pair the last renewal ran under
+    let mut held_buf: Vec<u64> = Vec::new();
+    let mut renewed_at: Option<(u64, u64)> = None;
+    let mut last_version = replica.version.as_u64();
     let mut slot_guard = BusySlotGuard::new(busy_slots);
-    let flush = |session: &GenSession| {
+    let flush = |session: &GenSession, pr: &PartialRolloutReport| {
         stream_acc.lock().unwrap().absorb(&session.stats());
+        partial_acc.lock().unwrap().merge(pr);
     };
 
     loop {
@@ -634,18 +654,31 @@ fn streaming_generation_stage(
             debug_assert!(session.kv_invariant_holds());
             debug_assert_eq!(kv_pool.live_bytes(), 0, "drained session must free all KV");
             if retire.load(Ordering::Relaxed) {
-                flush(&session);
+                flush(&session, &pr);
                 return Ok(StageExit::Retired);
             }
             let m = flow.wait_ready(Stage::Generation, GEN_MAX_BATCH, STAGE_WAIT)?;
             if m.is_empty() {
                 if shutdown.load(Ordering::Relaxed) {
-                    flush(&session);
+                    flush(&session, &pr);
                     return Ok(StageExit::Completed);
                 }
                 continue;
             }
             m
+        } else if retire.load(Ordering::Relaxed) {
+            // drain-then-retire with work in flight: stop claiming. With
+            // partial rollouts the drain is cooperative — persist every
+            // live prefix and hand the claims back for another replica to
+            // resume, instead of decoding the long tail out here.
+            if cfg.partial_rollouts {
+                persist_and_release(
+                    flow, placement.actor, &mut session, &mut prompts, &mut stamps,
+                    &mut closed_segs, &mut persisted_len, &mut pr,
+                )?;
+                continue; // next pass sees an idle session and retires
+            }
+            Vec::new()
         } else {
             let room = session.room().min(GEN_MAX_BATCH);
             if room > 0 {
@@ -659,8 +692,18 @@ fn streaming_generation_stage(
             if let Some(exit) = inject_fault(faults, Stage::Generation, flow, shutdown) {
                 // abandon every claim the session holds (no writeback, no
                 // release): the leases reclaim them, exactly as a killed
-                // batch worker's claims are recovered
-                flush(&session);
+                // batch worker's claims are recovered. With partial
+                // rollouts the decoded prefixes are persisted first —
+                // the reclaimed samples redispatch as resumes, so the
+                // kill costs at most the tokens since the last persist.
+                if cfg.partial_rollouts {
+                    let exports = session.export_partials();
+                    persist_exports(
+                        flow, placement.actor, exports, &stamps,
+                        &mut closed_segs, &mut persisted_len, &mut pr,
+                    )?;
+                }
+                flush(&session, &pr);
                 return Ok(exit);
             }
             // one refresh per claim batch; the sequences admitted from it
@@ -668,25 +711,77 @@ fn streaming_generation_stage(
             // sequences still decoding carry earlier stamps
             replica.refresh(bus).map_err(|e| anyhow!(e))?;
             let v = replica.version.as_u64();
+            if cfg.preempt_on_publish && v != last_version && session.in_flight() > 0 {
+                // a weight publish landed since the last claim: preempt
+                // every in-flight sequence (all stamped with older
+                // versions), persist the prefixes, and hand the claims
+                // back — they redispatch immediately and resume under the
+                // new head, closing a segment at the old version
+                let n = persist_and_release(
+                    flow, placement.actor, &mut session, &mut prompts, &mut stamps,
+                    &mut closed_segs, &mut persisted_len, &mut pr,
+                )?;
+                pr.publish_preemptions += n as u64;
+            }
+            last_version = v;
             let samples = flow.fetch_resident(placement.actor, &metas)?;
             let (requests, prompt_map) = actor.prepare_requests(&samples)?;
             prompts.extend(prompt_map);
+            // resumable sequences carry their persisted prefix with them
+            let mut partials: HashMap<u64, PartialRollout> = HashMap::new();
+            if cfg.partial_rollouts {
+                for mut smp in samples {
+                    if let Some(p) = smp.partial.take() {
+                        partials.insert(smp.index, p);
+                    }
+                }
+            }
             for r in requests {
                 stamps.insert(r.id, v);
-                session.submit(r);
+                match partials.remove(&r.id) {
+                    Some(p) if !p.response_ids.is_empty() => {
+                        pr.resumed += 1;
+                        pr.saved_tokens += p.token_len() as u64;
+                        // the fetched prefix is by definition persisted
+                        persisted_len.insert(r.id, p.token_len());
+                        closed_segs.insert(r.id, p.segments.clone());
+                        session.submit_resume(r, p.response_ids, p.response_logprobs);
+                    }
+                    _ => session.submit(r),
+                }
             }
         }
 
         slot_guard.set(true);
-        // renew every held claim once per decode tick: leases measure
-        // writeback silence, and a long sequence is silent by design
-        let held = session.held_ids();
-        if !held.is_empty() {
-            flow.renew(Stage::Generation, &held);
+        // renew held claims: leases measure writeback silence, and a long
+        // sequence is silent by design. A renewal only matters when the
+        // lease clock has advanced or the held set changed since the last
+        // one (same set + same clock ⇒ identical expiries), so both are
+        // checked before refilling the scratch buffer — no fresh Vec and
+        // no renew round-trip on the steady-state decode tick.
+        let tick = (session.held_revision(), flow.lease_now());
+        if renewed_at != Some(tick) {
+            renewed_at = Some(tick);
+            session.held_ids_into(&mut held_buf);
+            if !held_buf.is_empty() {
+                flow.renew(Stage::Generation, &held_buf);
+            }
         }
         let t0 = Instant::now();
         let done = session.step(engine, &replica.policy)?;
         busy.lock().unwrap().add("generation", t0.elapsed().as_secs_f64());
+        // periodic checkpoint: persist grown prefixes so an *unclean*
+        // death (stall-expiry reclaim — no exit hook runs) loses at most
+        // PARTIAL_CKPT_STEPS decode steps of work per slot
+        steps_since_ckpt += 1;
+        if cfg.partial_rollouts && steps_since_ckpt >= PARTIAL_CKPT_STEPS {
+            steps_since_ckpt = 0;
+            let snaps = session.partial_snapshots();
+            persist_exports(
+                flow, placement.actor, snaps, &stamps,
+                &mut closed_segs, &mut persisted_len, &mut pr,
+            )?;
+        }
         // per-sequence retirement: each finished sequence is written back
         // (completing its claim) the step it finishes
         for r in &done {
@@ -694,9 +789,102 @@ fn streaming_generation_stage(
                 anyhow!("finished sequence {} has no recorded prompt", r.id)
             })?;
             let v = stamps.remove(&r.id).unwrap_or_else(|| replica.version.as_u64());
-            actor.store_result(engine, flow, r, &prompt, v)?;
+            persisted_len.remove(&r.id);
+            // final authoritative segment list: spans closed by earlier
+            // incarnations, plus this incarnation's tail at its stamp
+            let mut segments = closed_segs.remove(&r.id).unwrap_or_default();
+            let start = segments.last().map(|g| g.end()).unwrap_or(0);
+            if r.response_ids.len() > start {
+                push_segment(&mut segments, start, r.response_ids.len() - start, v);
+            }
+            if segments.len() > 1 {
+                pr.multi_segment_responses += 1;
+            }
+            actor.store_result_with_segments(engine, flow, r, &prompt, v, segments)?;
         }
     }
+}
+
+/// Persist cadence for `--partial-rollouts` periodic checkpoints, in
+/// decode steps. Bounds the recompute after an unclean death to at most
+/// this many steps of fresh tokens per slot; the clean paths (kill hook,
+/// drain, preempt) persist exactly at the abandonment point.
+const PARTIAL_CKPT_STEPS: usize = 8;
+
+/// Persist a batch of exported decode prefixes as partial rollouts.
+/// Each export with tokens beyond its last persisted length is written
+/// through the flow: the segments closed by earlier incarnations, plus
+/// one fresh span at the version this incarnation stamped the sequence
+/// with. Returns every exported claim index (the cooperative paths
+/// release them afterwards; the kill path leaves them to the lease).
+#[allow(clippy::too_many_arguments)]
+fn persist_exports(
+    flow: &dyn SampleFlow,
+    node: usize,
+    exports: Vec<SeqExport>,
+    stamps: &HashMap<u64, u64>,
+    closed_segs: &mut HashMap<u64, Vec<Segment>>,
+    persisted_len: &mut HashMap<u64, usize>,
+    pr: &mut PartialRolloutReport,
+) -> Result<Vec<u64>> {
+    let mut ids = Vec::with_capacity(exports.len());
+    for e in exports {
+        ids.push(e.id);
+        let total = e.response_ids.len();
+        if total == 0 || persisted_len.get(&e.id).copied().unwrap_or(0) >= total {
+            continue; // nothing decoded beyond the last persisted prefix
+        }
+        let mut segments = closed_segs.get(&e.id).cloned().unwrap_or_default();
+        if total > e.resumed_from {
+            let v = stamps
+                .get(&e.id)
+                .copied()
+                .ok_or_else(|| anyhow!("no stamp for in-flight sequence {}", e.id))?;
+            push_segment(&mut segments, e.resumed_from, total - e.resumed_from, v);
+        }
+        let partial = PartialRollout {
+            response_ids: e.response_ids,
+            response_logprobs: e.response_logprobs,
+            segments,
+        };
+        pr.persisted += 1;
+        pr.persisted_tokens += total as u64;
+        persisted_len.insert(e.id, total);
+        flow.store_partial_generation(node, e.id, partial)?;
+    }
+    Ok(ids)
+}
+
+/// Cooperative abandonment (scale-down drain, publish preemption):
+/// persist every in-flight prefix, then *release* the claims — unlike a
+/// kill, the worker is alive and hands the samples straight back instead
+/// of waiting out its own lease. Per-sequence side state is dropped; a
+/// re-claim (this replica or any other) rebuilds it from the fetched
+/// partial. Returns how many sequences were handed back.
+#[allow(clippy::too_many_arguments)]
+fn persist_and_release(
+    flow: &dyn SampleFlow,
+    node: usize,
+    session: &mut GenSession,
+    prompts: &mut HashMap<u64, Vec<i32>>,
+    stamps: &mut HashMap<u64, u64>,
+    closed_segs: &mut HashMap<u64, Vec<Segment>>,
+    persisted_len: &mut HashMap<u64, usize>,
+    pr: &mut PartialRolloutReport,
+) -> Result<usize> {
+    let exports = session.export_partials();
+    if exports.is_empty() {
+        return Ok(0);
+    }
+    let ids = persist_exports(flow, node, exports, stamps, closed_segs, persisted_len, pr)?;
+    flow.release(Stage::Generation, &ids);
+    for id in &ids {
+        prompts.remove(id);
+        stamps.remove(id);
+        closed_segs.remove(id);
+        persisted_len.remove(id);
+    }
+    Ok(ids.len())
 }
 
 /// Long-lived actor old-logprob inference state. Runs the logprob path
@@ -786,38 +974,114 @@ fn score_by_version(
             version != 0,
             "old-logprob claim for unstamped sample (generation must stamp)"
         );
-        let policy = match replicas.get_or_build(bus, WeightVersion(version)) {
+        // One fetch per version group; samples whose segment list spans
+        // more than one behavior version (partial rollouts resumed across
+        // a weight publish) are split out for per-segment scoring — the
+        // scalar stamp names only the *final* segment's version.
+        let samples = flow.fetch_resident(placement.actor, &group)?;
+        if samples.is_empty() {
+            continue;
+        }
+        let mut plain: Vec<&Sample> = Vec::new();
+        let mut multi: Vec<&Sample> = Vec::new();
+        for smp in &samples {
+            if smp.segments.windows(2).any(|w| w[0].version != w[1].version) {
+                multi.push(smp);
+            } else {
+                plain.push(smp);
+            }
+        }
+        if !plain.is_empty() {
+            match replicas.get_or_build(bus, WeightVersion(version)) {
+                Ok(policy) => {
+                    let rows = crate::workers::logprob_rows_fetched(
+                        engine, policy, tokenizer, &plain, a.batch, a.seq,
+                    )?;
+                    for (smp, row) in plain.iter().zip(rows) {
+                        flow.store_fields(
+                            placement.actor,
+                            smp.index,
+                            vec![(FieldKind::OldLp, Tensor::f32(&[a.seq - 1], row)?)],
+                        )?;
+                    }
+                }
+                Err(e) => {
+                    // The ring retains every version a resident *unscored*
+                    // sample is stamped with (the sample blocks its
+                    // iteration, bounding publishes — see bus_capacity).
+                    // An evicted version can therefore only be named by
+                    // stale claims: samples already re-processed by a
+                    // redispatched peer (old_lp present) or retired. Those
+                    // claims are residue of a reclaimed lease — drop them.
+                    // Anything else is a real invariant violation.
+                    anyhow::ensure!(
+                        plain.iter().all(|s| s.has(FieldKind::OldLp)),
+                        "behavior version {version} evicted while an unscored \
+                         sample still needs it: {e}"
+                    );
+                }
+            }
+        }
+        for smp in multi {
+            score_segments(engine, placement, flow, bus, tokenizer, a, replicas, smp)?;
+        }
+    }
+    Ok(())
+}
+
+/// Assemble one multi-version response's `old_lp` row per-segment: the
+/// token row is scored once under each distinct behavior version in the
+/// segment list, and every segment's span is spliced from the row
+/// computed under the version that span was decoded under. The GRPO
+/// importance ratio (token-wise by construction) then divides each token
+/// by its *own* behavior policy — behavior-policy-exact across the
+/// version boundaries a resumed rollout crossed.
+#[allow(clippy::too_many_arguments)]
+fn score_segments(
+    engine: &Engine,
+    placement: StagePlacement,
+    flow: &dyn SampleFlow,
+    bus: &WeightBus,
+    tokenizer: &Tokenizer,
+    a: &crate::runtime::ArtifactInfo,
+    replicas: &mut ReplicaCache,
+    smp: &Sample,
+) -> Result<()> {
+    let s = a.seq;
+    // response token j lives at row index resp_start - 1 + j (the
+    // `logprobs` artifact's shifted layout; see behavior_logprob_row)
+    let resp_start = tokenizer.encode(&smp.prompt_text)?.len();
+    let mut row = vec![0f32; s - 1];
+    // segments are span-ordered with non-decreasing versions, so dedup
+    // yields each distinct version once
+    let mut versions: Vec<u64> = smp.segments.iter().map(|g| g.version).collect();
+    versions.dedup();
+    for dv in versions {
+        anyhow::ensure!(dv != 0, "segment stamped with version 0 (generation must stamp)");
+        let policy = match replicas.get_or_build(bus, WeightVersion(dv)) {
             Ok(p) => p,
             Err(e) => {
-                // The ring retains every version a resident *unscored*
-                // sample is stamped with (the sample blocks its
-                // iteration, bounding publishes — see bus_capacity).
-                // An evicted version can therefore only be named by
-                // stale claims: samples already re-processed by a
-                // redispatched peer (old_lp present) or retired. Those
-                // claims are residue of a reclaimed lease — drop them.
-                // Anything else is a real invariant violation.
-                let samples = flow.fetch_resident(placement.actor, &group)?;
+                // same stale-claim residue rule as the plain path
                 anyhow::ensure!(
-                    samples.iter().all(|s| s.has(FieldKind::OldLp)),
-                    "behavior version {version} evicted while an unscored \
+                    smp.has(FieldKind::OldLp),
+                    "segment behavior version {dv} evicted while an unscored \
                      sample still needs it: {e}"
                 );
-                continue;
+                return Ok(());
             }
         };
-        crate::workers::logprob_claimed(
-            engine,
-            policy,
-            flow,
-            tokenizer,
-            placement.actor,
-            FieldKind::OldLp,
-            &group,
-            a.batch,
-            a.seq,
-        )?;
+        let vrow =
+            &crate::workers::logprob_rows_fetched(engine, policy, tokenizer, &[smp], a.batch, s)?[0];
+        for seg in smp.segments.iter().filter(|g| g.version == dv) {
+            let lo = resp_start - 1 + seg.start;
+            row[lo..lo + seg.len].copy_from_slice(&vrow[lo..lo + seg.len]);
+        }
     }
+    flow.store_fields(
+        placement.actor,
+        smp.index,
+        vec![(FieldKind::OldLp, Tensor::f32(&[s - 1], row)?)],
+    )?;
     Ok(())
 }
 
@@ -988,6 +1252,9 @@ fn run_pipelined(
     // its raw slot-step counters in here when it exits
     let stream_acc: Arc<Mutex<StreamGenReport>> =
         Arc::new(Mutex::new(StreamGenReport::default()));
+    // partial-rollout accounting, folded in the same way
+    let partial_acc: Arc<Mutex<PartialRolloutReport>> =
+        Arc::new(Mutex::new(PartialRolloutReport::default()));
 
     // elastic replicas: every materialized per-replica weight view
     // (generation head-trackers, old-logprob pinned caches) is charged
@@ -1054,6 +1321,7 @@ fn run_pipelined(
             let lp_serial = Arc::clone(&lp_serial);
             let replica_pool = Arc::clone(&replica_pool);
             let stream_acc = Arc::clone(&stream_acc);
+            let partial_acc = Arc::clone(&partial_acc);
             let faults = injector.clone();
             let shutdown = Arc::clone(&shutdown);
             let fail = Arc::clone(&fail);
@@ -1079,6 +1347,7 @@ fn run_pipelined(
                         &shutdown,
                         &busy,
                         &stream_acc,
+                        &partial_acc,
                     )
                 ),
                 Stage::OldLogprob => supervise!(
@@ -1426,6 +1695,7 @@ fn run_pipelined(
         recovery,
         scaling: scaling_out,
         gen_stream: *stream_acc.lock().unwrap(),
+        partial: *partial_acc.lock().unwrap(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -109,6 +109,21 @@ pub struct GrpoConfig {
     /// streaming only: KV page size in tokens for the block allocator
     /// (admission reserves worst-case blocks up front)
     pub kv_block_tokens: usize,
+    /// streaming only: make generation resumable. Abandoned sequences
+    /// (kill, stall-expiry reclaim, cooperative scale-down drain) persist
+    /// their decoded prefix through the sample flow as a partial rollout
+    /// — a segment list stamping every token span with the behavior
+    /// version it was decoded under — and a redispatch resumes from the
+    /// prefix with the per-sequence RNG fast-forwarded, bit-identical to
+    /// an uninterrupted run at the same versions. Old-logprob scores each
+    /// segment under its own version, so the GRPO ratio stays
+    /// behavior-policy-exact across version boundaries.
+    pub partial_rollouts: bool,
+    /// partial rollouts only: when a weight publish lands, preempt every
+    /// in-flight sequence (persist + release) so it resumes under the new
+    /// head instead of finishing its long tail under stale weights —
+    /// trades a resume round-trip for fresher behavior policy
+    pub preempt_on_publish: bool,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -159,6 +174,16 @@ impl GrpoConfig {
         );
         anyhow::ensure!(self.prefill_chunk >= 1, "prefill_chunk must be >= 1");
         anyhow::ensure!(self.kv_block_tokens >= 1, "kv_block_tokens must be >= 1");
+        anyhow::ensure!(
+            !self.partial_rollouts || self.gen_streaming,
+            "--partial-rollouts requires --gen-streaming (only the streaming \
+             session holds per-sequence decode state worth persisting)"
+        );
+        anyhow::ensure!(
+            !self.preempt_on_publish || self.partial_rollouts,
+            "--preempt-on-publish requires --partial-rollouts (preemption \
+             without persistence would discard decoded prefixes)"
+        );
         if let Some(ac) = self.autoscale_config() {
             ac.validate()?;
             anyhow::ensure!(
@@ -237,6 +262,8 @@ impl Default for GrpoConfig {
             gen_streaming: false,
             prefill_chunk: 4,
             kv_block_tokens: 16,
+            partial_rollouts: false,
+            preempt_on_publish: false,
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -491,6 +518,50 @@ mod tests {
             chaos_kill_rate: 0.2,
             stage_replicas: super::super::autoscale::StageReplicas::parse("gen=2")
                 .unwrap(),
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn partial_rollout_config_gating() {
+        // partial rollouts require the streaming scheduler (which itself
+        // requires the pipelined executor)
+        let bad = GrpoConfig {
+            partial_rollouts: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err(), "partial rollouts need --gen-streaming");
+        let ok = GrpoConfig {
+            partial_rollouts: true,
+            gen_streaming: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        // publish preemption needs persistence to be lossless
+        let bad = GrpoConfig {
+            preempt_on_publish: true,
+            gen_streaming: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err(), "preemption needs --partial-rollouts");
+        let ok = GrpoConfig {
+            partial_rollouts: true,
+            preempt_on_publish: true,
+            gen_streaming: true,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        // and the whole stack composes with chaos at the config layer
+        let ok = GrpoConfig {
+            partial_rollouts: true,
+            gen_streaming: true,
+            chaos_kill_rate: 0.2,
             pipeline: PipelineMode::Pipelined,
             ..Default::default()
         };

@@ -9,7 +9,7 @@ use super::controller::{Controller, SampleMeta};
 use super::lease::{LeaseClock, DEFAULT_LEASE_TICKS};
 use super::network::{CommLedger, LinkClass, SharedLedger};
 use super::notify::{wait_ready_impl, Notifier};
-use super::sample::{FieldKind, Sample, Stage};
+use super::sample::{FieldKind, PartialRollout, Sample, Segment, Stage};
 use super::warehouse::{Conservation, StoreOutcome, Warehouse};
 use super::SampleFlow;
 use crate::metrics::FlowRecovery;
@@ -371,7 +371,7 @@ impl SampleFlow for TransferDock {
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
     ) -> Result<()> {
-        self.writeback(requester_node, index, fields, None)
+        self.writeback(requester_node, index, fields, None, Vec::new())
     }
 
     fn store_generation(
@@ -384,7 +384,42 @@ impl SampleFlow for TransferDock {
         behavior_version: u64,
     ) -> Result<()> {
         let gen = Some((completion, resp_len, behavior_version));
-        self.writeback(requester_node, index, fields, gen)
+        self.writeback(requester_node, index, fields, gen, Vec::new())
+    }
+
+    fn store_generation_with_segments(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+        behavior_version: u64,
+        segments: Vec<Segment>,
+    ) -> Result<()> {
+        let gen = Some((completion, resp_len, behavior_version));
+        self.writeback(requester_node, index, fields, gen, segments)
+    }
+
+    /// Persist an interrupted generation's decoded prefix into the
+    /// sample's warehouse. No metadata broadcast: the sample's presence
+    /// mask is unchanged (it stays generation-ready, claimed or not), so
+    /// controllers have nothing to learn — and crucially a partial from a
+    /// *dead* worker must not renew that worker's lease and delay the
+    /// reclaim that hands the prefix to a live one.
+    fn store_partial_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        partial: PartialRollout,
+    ) -> Result<()> {
+        let w = self.warehouse_for(index).clone();
+        let bytes = partial.payload_bytes() as u64;
+        self.ledger.record(self.link(requester_node, w.node), bytes);
+        self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
+        w.store_partial(index, partial)?;
+        self.ledger.note_store_bytes(w.traffic_bytes());
+        Ok(())
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
@@ -416,15 +451,17 @@ impl TransferDock {
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
         completion: Option<(String, usize, u64)>,
+        segments: Vec<Segment>,
     ) -> Result<()> {
         let w = self.warehouse_for(index).clone();
         let mut bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        bytes += (segments.len() * Segment::WIRE_BYTES) as u64;
         if let Some((text, ..)) = &completion {
             bytes += text.len() as u64;
         }
         self.ledger.record(self.link(requester_node, w.node), bytes);
         self.ledger.note_requests_on(self.link(requester_node, w.node), 1);
-        let outcome = w.store_fields(index, fields, completion)?;
+        let outcome = w.store_fields_with_segments(index, fields, completion, segments)?;
         self.ledger.note_store_bytes(w.traffic_bytes());
         if matches!(outcome, StoreOutcome::Superseded) {
             // a stale writeback (late worker after reclaim/retire)
@@ -636,6 +673,52 @@ mod tests {
         let (total, _) = d.residency();
         let resident_sum: u64 = d.conservation().iter().map(|c| c.resident_bytes).sum();
         assert_eq!(total, resident_sum);
+    }
+
+    #[test]
+    fn partial_prefix_survives_reclaim_and_redispatch() {
+        let d = TransferDock::with_lease(DockTopology::spread(2), 2);
+        let idx = d.put_samples(prompts(1)).unwrap()[0];
+        assert_eq!(d.request_ready(Stage::Generation, 1).unwrap().len(), 1);
+        // the claiming worker checkpoints its decoded prefix, then dies
+        let p = PartialRollout {
+            response_ids: vec![4, 5, 6],
+            response_logprobs: vec![-0.1; 3],
+            segments: vec![Segment { start: 0, len: 3, version: 1 }],
+        };
+        d.store_partial_generation(0, idx, p.clone()).unwrap();
+        // lease expires; the sample is redispatched WITH the prefix
+        d.tick_lease_clock();
+        assert_eq!(d.tick_lease_clock(), 1);
+        let again = d.request_ready(Stage::Generation, 1).unwrap();
+        assert_eq!(again.len(), 1);
+        let fetched = d.fetch_resident(1, &again).unwrap();
+        assert_eq!(fetched[0].partial.as_ref(), Some(&p), "reclaim must hand the prefix back");
+        // the resumed worker finishes across the version boundary
+        let segs = vec![
+            Segment { start: 0, len: 3, version: 1 },
+            Segment { start: 3, len: 2, version: 2 },
+        ];
+        d.store_generation_with_segments(
+            1,
+            idx,
+            vec![(FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap())],
+            "done".into(),
+            5,
+            2,
+            segs.clone(),
+        )
+        .unwrap();
+        let ready = d.request_ready(Stage::OldLogprob, 1).unwrap();
+        let s = d.fetch(0, &ready).unwrap().remove(0);
+        assert!(s.partial.is_none(), "completion clears the persisted prefix");
+        assert_eq!(s.segments, segs);
+        // a late partial from the dead worker is dropped, counted once
+        d.store_partial_generation(0, idx, p).unwrap();
+        assert_eq!(d.superseded_writebacks(), 1);
+        for c in d.conservation() {
+            assert!(c.holds(), "{c:?}");
+        }
     }
 
     #[test]

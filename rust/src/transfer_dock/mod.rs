@@ -34,7 +34,7 @@ pub use dock::{DockTopology, TransferDock};
 pub use lease::{LeaseClock, DEFAULT_LEASE_TICKS};
 pub use network::{CommLedger, LinkClass, NetworkModel};
 pub use replay_buffer::ReplayBuffer;
-pub use sample::{FieldKind, Sample, Stage, FIELD_ORDER};
+pub use sample::{push_segment, FieldKind, PartialRollout, Sample, Segment, Stage, FIELD_ORDER};
 pub use volume::{td_tcv_gb, tcv_gb, cv_update_gb, VolumeParams};
 pub use warehouse::{Conservation, StoreOutcome, Warehouse};
 
@@ -140,6 +140,42 @@ pub trait SampleFlow: Send + Sync {
         resp_len: usize,
         behavior_version: u64,
     ) -> Result<()>;
+    /// [`Self::store_generation`] with an explicit per-version segment
+    /// list for a response assembled across interruptions (partial
+    /// rollouts). Flows that store segments override this; the default
+    /// drops the list and stores the completion plainly, which is correct
+    /// for single-segment responses (the store synthesizes the full-span
+    /// segment) and merely loses per-span stamps otherwise.
+    fn store_generation_with_segments(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, crate::runtime::Tensor)>,
+        completion: String,
+        resp_len: usize,
+        behavior_version: u64,
+        segments: Vec<Segment>,
+    ) -> Result<()> {
+        let _ = segments;
+        self.store_generation(requester_node, index, fields, completion, resp_len, behavior_version)
+    }
+    /// Persist the decoded prefix of an *interrupted* generation as
+    /// first-class partial state, so a redispatch of the same sample can
+    /// resume from the prefix instead of regenerating from the prompt.
+    /// Does not change stage readiness (the sample stays
+    /// generation-ready) and never overwrites a finished response —
+    /// stale/duplicate persists are dropped as superseded writebacks.
+    /// Flows without partial-rollout support ignore it (the prefix is
+    /// simply lost and the redispatch regenerates from scratch, the
+    /// pre-partial behavior).
+    fn store_partial_generation(
+        &self,
+        _requester_node: usize,
+        _index: u64,
+        _partial: PartialRollout,
+    ) -> Result<()> {
+        Ok(())
+    }
     /// Consume a finished sample after the update stage.
     fn retire(&self, index: u64) -> Option<Sample>;
     /// Snapshot of accumulated communication accounting.

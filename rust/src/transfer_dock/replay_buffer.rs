@@ -17,7 +17,7 @@ use super::controller::SampleMeta;
 use super::lease::{LeaseClock, LeaseTable, DEFAULT_LEASE_TICKS};
 use super::network::{CommLedger, LinkClass, SharedLedger};
 use super::notify::{wait_ready_impl, Notifier};
-use super::sample::{FieldKind, Sample, Stage};
+use super::sample::{FieldKind, PartialRollout, Sample, Segment, Stage};
 use super::warehouse::Conservation;
 use super::SampleFlow;
 use crate::metrics::FlowRecovery;
@@ -177,13 +177,15 @@ impl ReplayBuffer {
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
         completion: Option<(String, usize, u64)>,
+        segments: Vec<Segment>,
     ) -> Result<()> {
         let now = self.clock.now();
         let mut g = self.inner.lock().unwrap();
-        let bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
-        self.ledger.record(self.link(requester_node), bytes);
+        let field_bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        let wire_bytes = field_bytes + (segments.len() * Segment::WIRE_BYTES) as u64;
+        self.ledger.record(self.link(requester_node), wire_bytes);
         self.ledger.note_requests_on(self.link(requester_node), 1);
-        g.traffic_bytes += bytes;
+        g.traffic_bytes += wire_bytes;
         let stale = match g.samples.get(&index) {
             None => true,
             Some(s) => completion.is_some() && s.has(FieldKind::Tokens),
@@ -201,6 +203,10 @@ impl ReplayBuffer {
             g.superseded += 1;
             return Ok(());
         }
+        // residency deltas can differ from wire bytes: a completing
+        // writeback with no explicit segments stores a synthesized
+        // full-span segment (see the warehouse's store for the rationale)
+        let mut added: u64 = field_bytes;
         let mut overwritten: u64 = 0;
         let s = g.samples.get_mut(&index).expect("residency checked above");
         for (k, t) in fields {
@@ -213,11 +219,22 @@ impl ReplayBuffer {
             s.completion_text = text;
             s.resp_len = resp_len;
             s.behavior_version = behavior_version;
+            let segs = if segments.is_empty() && resp_len > 0 {
+                vec![Segment { start: 0, len: resp_len, version: behavior_version }]
+            } else {
+                segments
+            };
+            added += (segs.len() * Segment::WIRE_BYTES) as u64;
+            overwritten += (s.segments.len() * Segment::WIRE_BYTES) as u64;
+            s.segments = segs;
+            if let Some(p) = s.partial.take() {
+                overwritten += p.payload_bytes() as u64;
+            }
         }
         let meta = Self::meta_of(s);
-        g.resident_bytes += bytes;
+        g.resident_bytes += added;
         g.resident_bytes -= overwritten;
-        g.admitted_bytes += bytes;
+        g.admitted_bytes += added;
         g.retired_bytes += overwritten;
         // clear leases only for stages this write completed; a cross-stage
         // write must not re-dispatch an outstanding claim, but it renews
@@ -413,7 +430,7 @@ impl SampleFlow for ReplayBuffer {
         index: u64,
         fields: Vec<(FieldKind, Tensor)>,
     ) -> Result<()> {
-        self.writeback(requester_node, index, fields, None)
+        self.writeback(requester_node, index, fields, None, Vec::new())
     }
 
     fn store_generation(
@@ -430,7 +447,66 @@ impl SampleFlow for ReplayBuffer {
             index,
             fields,
             Some((completion, resp_len, behavior_version)),
+            Vec::new(),
         )
+    }
+
+    fn store_generation_with_segments(
+        &self,
+        requester_node: usize,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: String,
+        resp_len: usize,
+        behavior_version: u64,
+        segments: Vec<Segment>,
+    ) -> Result<()> {
+        self.writeback(
+            requester_node,
+            index,
+            fields,
+            Some((completion, resp_len, behavior_version)),
+            segments,
+        )
+    }
+
+    /// Persist an interrupted generation's prefix (mirrors the dock:
+    /// longest-prefix-wins, never after the final response, no lease
+    /// changes — a dead worker's checkpoint must not delay its reclaim).
+    fn store_partial_generation(
+        &self,
+        requester_node: usize,
+        index: u64,
+        partial: PartialRollout,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            partial.well_formed(),
+            "replay buffer: malformed partial rollout for sample {index}"
+        );
+        let mut g = self.inner.lock().unwrap();
+        let new_bytes = partial.payload_bytes() as u64;
+        self.ledger.record(self.link(requester_node), new_bytes);
+        self.ledger.note_requests_on(self.link(requester_node), 1);
+        g.traffic_bytes += new_bytes;
+        let stale = match g.samples.get(&index) {
+            None => true,
+            Some(s) => {
+                s.has(FieldKind::Tokens)
+                    || s.partial.as_ref().is_some_and(|p| p.token_len() >= partial.token_len())
+            }
+        };
+        if stale {
+            g.superseded += 1;
+            return Ok(());
+        }
+        let s = g.samples.get_mut(&index).expect("residency checked above");
+        let old_bytes = s.partial.replace(partial).map_or(0, |p| p.payload_bytes() as u64);
+        g.resident_bytes += new_bytes;
+        g.resident_bytes -= old_bytes;
+        g.admitted_bytes += new_bytes;
+        g.retired_bytes += old_bytes;
+        self.ledger.note_store_bytes(g.traffic_bytes);
+        Ok(())
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {

@@ -84,6 +84,90 @@ impl FieldKind {
     }
 }
 
+/// One contiguous span of response tokens decoded under a single weight
+/// version. A sample generated without interruption has exactly one
+/// segment covering the whole response; a partial rollout that was
+/// preempted/reclaimed and resumed under a newer publish accumulates one
+/// segment per behavior version it was decoded under. Spans are in
+/// response-token coordinates (`start`/`len` index into the response,
+/// not the padded sequence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub start: usize,
+    pub len: usize,
+    /// weight version the tokens of this span were sampled under
+    pub version: u64,
+}
+
+impl Segment {
+    /// Nominal wire size of one segment record: 3 scalars × 4 bytes
+    /// (same convention as [`Sample::scalar_bytes`]).
+    pub const WIRE_BYTES: usize = 12;
+
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// Append a span to a segment list, merging into the last segment when
+/// it is contiguous and decoded under the same version (checkpoint
+/// persists within one lease would otherwise fragment the list).
+pub fn push_segment(segments: &mut Vec<Segment>, start: usize, len: usize, version: u64) {
+    if len == 0 {
+        return;
+    }
+    if let Some(last) = segments.last_mut() {
+        if last.version == version && last.end() == start {
+            last.len += len;
+            return;
+        }
+    }
+    segments.push(Segment { start, len, version });
+}
+
+/// The decoded prefix of an interrupted generation, persisted through the
+/// dock as first-class partial state so a redispatch resumes from here
+/// instead of regenerating from the prompt. `segments` always covers
+/// `[0, response_ids.len())` exactly, each span stamped with the weight
+/// version it was decoded under.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PartialRollout {
+    pub response_ids: Vec<i32>,
+    /// behavior log-prob captured at sampling time, one per token
+    pub response_logprobs: Vec<f32>,
+    pub segments: Vec<Segment>,
+}
+
+impl PartialRollout {
+    pub fn token_len(&self) -> usize {
+        self.response_ids.len()
+    }
+
+    /// Payload bytes this prefix occupies in a warehouse (tokens i32 +
+    /// logprobs f32 + segment records).
+    pub fn payload_bytes(&self) -> usize {
+        self.response_ids.len() * 4
+            + self.response_logprobs.len() * 4
+            + self.segments.len() * Segment::WIRE_BYTES
+    }
+
+    /// Internal consistency: segments tile the prefix exactly and the
+    /// logprob stream is token-aligned.
+    pub fn well_formed(&self) -> bool {
+        if self.response_logprobs.len() != self.response_ids.len() {
+            return false;
+        }
+        let mut at = 0usize;
+        for s in &self.segments {
+            if s.start != at || s.len == 0 {
+                return false;
+            }
+            at = s.end();
+        }
+        at == self.response_ids.len()
+    }
+}
+
 /// One RL sample (a prompt with one generated response and its transient
 /// data). The paper implements this as a Ray TensorDict; here it is a
 /// plain map of named host tensors plus scalar metadata.
@@ -98,11 +182,22 @@ pub struct Sample {
     /// (the behavior policy's identity; 0 = not yet generated/stamped).
     /// Stamped by the generation writeback and carried on every metadata
     /// broadcast so the old-logprob stage can score under the true
-    /// behavior policy instead of the weight-bus head.
+    /// behavior policy instead of the weight-bus head. For a
+    /// multi-segment sample this is the version of the *final* segment;
+    /// `segments` carries the full per-span history.
     pub behavior_version: u64,
     pub prompt_text: String,
     pub answer: i64,
     pub completion_text: String,
+    /// decoded prefix of an interrupted generation (present only between
+    /// an interruption and the final generation writeback, which clears
+    /// it); travels with every fetch so a redispatched claim can resume
+    pub partial: Option<PartialRollout>,
+    /// per-version spans of the finished response, stamped at the final
+    /// generation writeback (single full-span segment for uninterrupted
+    /// samples); the old-logprob stage scores each span under its own
+    /// version
+    pub segments: Vec<Segment>,
     pub fields: BTreeMap<FieldKind, Tensor>,
 }
 
@@ -117,6 +212,8 @@ impl Sample {
             prompt_text,
             answer,
             completion_text: String::new(),
+            partial: None,
+            segments: Vec::new(),
             fields: BTreeMap::new(),
         }
     }
@@ -138,10 +235,15 @@ impl Sample {
         self.fields.keys().fold(0u8, |m, k| m | k.bit())
     }
 
-    /// Payload bytes (the `CV` term of Eq. 1: tokens + n·SL items + scalars).
+    /// Payload bytes (the `CV` term of Eq. 1: tokens + n·SL items +
+    /// scalars, plus any persisted partial prefix and segment records —
+    /// partial state is first-class payload, so warehouse byte
+    /// conservation covers it too).
     pub fn payload_bytes(&self) -> usize {
         let tensor_bytes: usize = self.fields.values().map(|t| t.size_bytes()).sum();
-        tensor_bytes + self.scalar_bytes()
+        let partial_bytes = self.partial.as_ref().map_or(0, |p| p.payload_bytes());
+        let segment_bytes = self.segments.len() * Segment::WIRE_BYTES;
+        tensor_bytes + partial_bytes + segment_bytes + self.scalar_bytes()
     }
 
     /// Scalar metadata bytes (the `M` term of Eq. 1): index, group,
@@ -211,6 +313,62 @@ mod tests {
         assert_eq!(s.payload_bytes(), s.scalar_bytes());
         s.put(FieldKind::Tokens, Tensor::i32(&[16], vec![0; 16]).unwrap());
         assert_eq!(s.payload_bytes(), 16 * 4 + s.scalar_bytes());
+    }
+
+    #[test]
+    fn partial_rollout_payload_is_first_class() {
+        let mut s = sample();
+        let base = s.payload_bytes();
+        let p = PartialRollout {
+            response_ids: vec![1, 2, 3],
+            response_logprobs: vec![-0.1, -0.2, -0.3],
+            segments: vec![Segment { start: 0, len: 3, version: 2 }],
+        };
+        assert!(p.well_formed());
+        let pb = p.payload_bytes();
+        assert_eq!(pb, 3 * 4 + 3 * 4 + Segment::WIRE_BYTES);
+        s.partial = Some(p);
+        assert_eq!(s.payload_bytes(), base + pb);
+        // clearing the partial returns the bytes
+        s.partial = None;
+        assert_eq!(s.payload_bytes(), base);
+        // final segment stamps are counted too
+        s.segments = vec![
+            Segment { start: 0, len: 3, version: 2 },
+            Segment { start: 3, len: 2, version: 4 },
+        ];
+        assert_eq!(s.payload_bytes(), base + 2 * Segment::WIRE_BYTES);
+    }
+
+    #[test]
+    fn segment_push_merges_contiguous_same_version() {
+        let mut segs = Vec::new();
+        push_segment(&mut segs, 0, 0, 1); // empty spans are dropped
+        assert!(segs.is_empty());
+        push_segment(&mut segs, 0, 4, 1);
+        push_segment(&mut segs, 4, 2, 1); // contiguous, same version → merge
+        assert_eq!(segs, vec![Segment { start: 0, len: 6, version: 1 }]);
+        push_segment(&mut segs, 6, 3, 2); // version boundary → new segment
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[1], Segment { start: 6, len: 3, version: 2 });
+    }
+
+    #[test]
+    fn partial_well_formed_rejects_gaps_and_misalignment() {
+        let mut p = PartialRollout {
+            response_ids: vec![1, 2, 3, 4],
+            response_logprobs: vec![0.0; 4],
+            segments: vec![
+                Segment { start: 0, len: 2, version: 1 },
+                Segment { start: 2, len: 2, version: 2 },
+            ],
+        };
+        assert!(p.well_formed());
+        p.segments[1].start = 3; // gap
+        assert!(!p.well_formed());
+        p.segments[1].start = 2;
+        p.response_logprobs.pop(); // logprob stream misaligned
+        assert!(!p.well_formed());
     }
 
     #[test]

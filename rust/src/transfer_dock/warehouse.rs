@@ -1,10 +1,10 @@
 //! TD warehouse: one shard of the sample payload store, living on a node.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use super::sample::{FieldKind, Sample};
+use super::sample::{FieldKind, PartialRollout, Sample, Segment};
 use crate::runtime::Tensor;
 
 /// Byte-conservation snapshot of one payload store: everything that ever
@@ -124,11 +124,28 @@ impl Warehouse {
         fields: Vec<(FieldKind, Tensor)>,
         completion: Option<(String, usize, u64)>,
     ) -> Result<StoreOutcome> {
+        self.store_fields_with_segments(index, fields, completion, Vec::new())
+    }
+
+    /// [`Self::store_fields`] with an explicit per-version segment list
+    /// for the completed response. An empty list on a completing
+    /// writeback synthesizes the single full-span segment (the
+    /// uninterrupted case), so every finished sample carries authoritative
+    /// segment stamps. Completion also clears any persisted partial
+    /// prefix — the finished response supersedes it — retiring its bytes.
+    pub fn store_fields_with_segments(
+        &self,
+        index: u64,
+        fields: Vec<(FieldKind, Tensor)>,
+        completion: Option<(String, usize, u64)>,
+        segments: Vec<Segment>,
+    ) -> Result<StoreOutcome> {
         let mut g = self.inner.lock().unwrap();
-        let added: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        let field_bytes: u64 = fields.iter().map(|(_, t)| t.size_bytes() as u64).sum();
+        let wire_seg_bytes = (segments.len() * Segment::WIRE_BYTES) as u64;
         // the bytes arrived at the store either way (congestion is real
         // even for a writeback that loses the race)
-        g.traffic_bytes += added;
+        g.traffic_bytes += field_bytes + wire_seg_bytes;
         let stale = match g.samples.get(&index) {
             None => true,
             Some(s) => completion.is_some() && s.has(FieldKind::Tokens),
@@ -137,6 +154,11 @@ impl Warehouse {
             g.superseded += 1;
             return Ok(StoreOutcome::Superseded);
         }
+        // `added`/`overwritten` track residency deltas (what the sample
+        // now holds vs what it released), which can differ from the wire
+        // bytes: a completing writeback with no explicit segments stores
+        // a synthesized full-span segment that never crossed the wire
+        let mut added: u64 = field_bytes;
         let mut overwritten: u64 = 0;
         let s = g.samples.get_mut(&index).expect("residency checked above");
         for (k, t) in fields {
@@ -149,12 +171,62 @@ impl Warehouse {
             s.completion_text = text;
             s.resp_len = resp_len;
             s.behavior_version = behavior_version;
+            let segs = if segments.is_empty() && resp_len > 0 {
+                vec![Segment { start: 0, len: resp_len, version: behavior_version }]
+            } else {
+                segments
+            };
+            added += (segs.len() * Segment::WIRE_BYTES) as u64;
+            overwritten += (s.segments.len() * Segment::WIRE_BYTES) as u64;
+            s.segments = segs;
+            // the completed response supersedes the persisted prefix
+            if let Some(p) = s.partial.take() {
+                overwritten += p.payload_bytes() as u64;
+            }
         }
         let mask = s.present_mask();
         g.resident_bytes += added;
         g.resident_bytes -= overwritten;
         g.admitted_bytes += added;
         g.retired_bytes += overwritten;
+        Ok(StoreOutcome::Merged(mask))
+    }
+
+    /// Persist the decoded prefix of an interrupted generation. Stale
+    /// cases are dropped as [`StoreOutcome::Superseded`]: the sample is
+    /// gone (retired), its final response already landed (partials never
+    /// overwrite a finished generation), or the persisted prefix is
+    /// already at least as long (longest-prefix-wins keeps a late short
+    /// writer from shrinking a newer checkpoint).
+    pub fn store_partial(&self, index: u64, partial: PartialRollout) -> Result<StoreOutcome> {
+        ensure!(
+            partial.well_formed(),
+            "warehouse {}: malformed partial rollout for sample {index} \
+             (segments must tile the prefix, one logprob per token)",
+            self.id
+        );
+        let mut g = self.inner.lock().unwrap();
+        let new_bytes = partial.payload_bytes() as u64;
+        g.traffic_bytes += new_bytes;
+        let stale = match g.samples.get(&index) {
+            None => true,
+            Some(s) => {
+                s.has(FieldKind::Tokens)
+                    || s.partial.as_ref().is_some_and(|p| p.token_len() >= partial.token_len())
+            }
+        };
+        if stale {
+            g.superseded += 1;
+            return Ok(StoreOutcome::Superseded);
+        }
+        let s = g.samples.get_mut(&index).expect("residency checked above");
+        let old_bytes =
+            s.partial.replace(partial).map_or(0, |p| p.payload_bytes() as u64);
+        let mask = s.present_mask();
+        g.resident_bytes += new_bytes;
+        g.resident_bytes -= old_bytes;
+        g.admitted_bytes += new_bytes;
+        g.retired_bytes += old_bytes;
         Ok(StoreOutcome::Merged(mask))
     }
 
@@ -339,5 +411,103 @@ mod tests {
         assert_eq!(out, StoreOutcome::Superseded);
         assert_eq!(w.superseded_writebacks(), 1);
         assert!(w.conservation().holds());
+    }
+
+    fn partial(n: usize, version: u64) -> PartialRollout {
+        PartialRollout {
+            response_ids: (0..n as i32).collect(),
+            response_logprobs: vec![-0.5; n],
+            segments: vec![Segment { start: 0, len: n, version }],
+        }
+    }
+
+    #[test]
+    fn partial_persist_resume_and_final_writeback_conserve_bytes() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(5)).unwrap();
+        let base = w.resident_bytes();
+        // first checkpoint lands
+        let out = w.store_partial(5, partial(3, 1)).unwrap();
+        assert!(matches!(out, StoreOutcome::Merged(_)));
+        assert_eq!(w.resident_bytes(), base + partial(3, 1).payload_bytes() as u64);
+        assert!(w.conservation().holds());
+        // a redispatched claim fetches the prefix back
+        let s = w.fetch(5).unwrap();
+        assert_eq!(s.partial.as_ref().unwrap().token_len(), 3);
+        // a longer checkpoint replaces it; the old prefix's bytes retire
+        w.store_partial(5, partial(5, 1)).unwrap();
+        assert_eq!(w.resident_bytes(), base + partial(5, 1).payload_bytes() as u64);
+        assert!(w.conservation().holds());
+        // the final generation writeback clears the partial and stamps
+        // the explicit segment list
+        let segs = vec![
+            Segment { start: 0, len: 5, version: 1 },
+            Segment { start: 5, len: 2, version: 2 },
+        ];
+        w.store_fields_with_segments(
+            5,
+            vec![(FieldKind::Tokens, Tensor::i32(&[8], vec![1; 8]).unwrap())],
+            Some(("done".into(), 7, 2)),
+            segs.clone(),
+        )
+        .unwrap();
+        let s = w.fetch(5).unwrap();
+        assert!(s.partial.is_none(), "completion must clear the persisted prefix");
+        assert_eq!(s.segments, segs);
+        assert_eq!(s.behavior_version, 2);
+        assert!(w.conservation().holds());
+        w.remove(5).unwrap();
+        assert_eq!(w.resident_bytes(), 0);
+        assert!(w.conservation().holds());
+    }
+
+    #[test]
+    fn stale_partials_are_superseded_once_each() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(6)).unwrap();
+        w.store_partial(6, partial(4, 1)).unwrap();
+        // a late shorter prefix (stalled writer) must not shrink it
+        assert_eq!(w.store_partial(6, partial(2, 1)).unwrap(), StoreOutcome::Superseded);
+        // same length is not an extension either
+        assert_eq!(w.store_partial(6, partial(4, 1)).unwrap(), StoreOutcome::Superseded);
+        // once the final response lands, partials never overwrite it
+        w.store_fields(
+            6,
+            vec![(FieldKind::Tokens, Tensor::i32(&[6], vec![1; 6]).unwrap())],
+            Some(("x".into(), 5, 3)),
+        )
+        .unwrap();
+        assert_eq!(w.store_partial(6, partial(6, 3)).unwrap(), StoreOutcome::Superseded);
+        // and after retire the sample is simply gone
+        w.remove(6).unwrap();
+        assert_eq!(w.store_partial(6, partial(7, 3)).unwrap(), StoreOutcome::Superseded);
+        assert_eq!(w.superseded_writebacks(), 4, "each stale partial counts exactly once");
+        assert!(w.conservation().holds());
+    }
+
+    #[test]
+    fn uninterrupted_completion_synthesizes_full_span_segment() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(7)).unwrap();
+        w.store_fields(
+            7,
+            vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+            Some(("y".into(), 3, 9)),
+        )
+        .unwrap();
+        let s = w.fetch(7).unwrap();
+        assert_eq!(s.segments, vec![Segment { start: 0, len: 3, version: 9 }]);
+        assert!(w.conservation().holds());
+        // residency counter still matches the scan (segments counted)
+        w.resident_bytes();
+    }
+
+    #[test]
+    fn malformed_partial_rejected_loudly() {
+        let w = Warehouse::new(0, 0);
+        w.put(sample(8)).unwrap();
+        let mut p = partial(3, 1);
+        p.response_logprobs.pop();
+        assert!(w.store_partial(8, p).is_err());
     }
 }

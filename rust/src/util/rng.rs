@@ -28,6 +28,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Fast-forward the stream by `n` draws. Resuming an interrupted
+    /// per-sequence token stream from a persisted prefix requires the RNG
+    /// to sit exactly where an uninterrupted run would have left it —
+    /// skip `prefix_tokens × draws_per_token` and the continuation is
+    /// bit-identical.
+    pub fn skip(&mut self, n: usize) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -123,6 +134,19 @@ mod tests {
     fn deterministic() {
         let mut a = Rng::new(42);
         let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn skip_matches_discarded_draws() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        b.skip(17);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use crate::generation::{GenEngine, GenRequest, GenResult};
 use crate::runtime::{Engine, Policy, Tensor};
 use crate::tokenizer::Tokenizer;
-use crate::transfer_dock::{FieldKind, Sample, SampleFlow, SampleMeta, Stage};
+use crate::transfer_dock::{FieldKind, Sample, SampleFlow, SampleMeta, Segment, Stage};
 use crate::util::rng::Rng;
 
 /// Outcome statistics for one generation pass. Occupancy travels as raw
@@ -168,6 +168,24 @@ impl ActorWorker {
         prompt_ids: &[i32],
         behavior_version: u64,
     ) -> Result<()> {
+        self.store_result_with_segments(engine, dock, r, prompt_ids, behavior_version, Vec::new())
+    }
+
+    /// [`Self::store_result`] carrying an explicit behavior-version segment
+    /// list — the partial-rollout path's writeback, where a response that
+    /// survived preemptions was decoded under more than one weight version
+    /// and each span must be scored under its own. An empty list means the
+    /// whole response was decoded under `behavior_version` (the store
+    /// synthesizes the full-span segment).
+    pub fn store_result_with_segments(
+        &self,
+        engine: &Engine,
+        dock: &dyn SampleFlow,
+        r: &GenResult,
+        prompt_ids: &[i32],
+        behavior_version: u64,
+        segments: Vec<Segment>,
+    ) -> Result<()> {
         let seq = engine.manifest.artifact("logprobs")?.seq;
         let (tokens, mask, resp_len) =
             pack_sequence(prompt_ids, &r.response_ids, seq, self.tokenizer.pad_id)?;
@@ -179,7 +197,15 @@ impl ActorWorker {
                 behavior_logprob_row(&r.response_logprobs, prompt_ids.len(), seq)?,
             ));
         }
-        dock.store_generation(self.node, r.id, fields, completion, resp_len, behavior_version)
+        dock.store_generation_with_segments(
+            self.node,
+            r.id,
+            fields,
+            completion,
+            resp_len,
+            behavior_version,
+            segments,
+        )
     }
 
     /// Old-logprob inference state: fill `old_lp` for every sample still
@@ -290,6 +316,31 @@ pub(crate) fn logprob_claimed(
         }
     }
     Ok(done)
+}
+
+/// Compute the `[S-1]` logprob row for each already-fetched sample under
+/// one policy, without writing anything back. The per-segment scoring
+/// path uses this to evaluate the same token row under several
+/// version-pinned policies and splice each segment's span from the row
+/// computed under the version that span was decoded under.
+pub(crate) fn logprob_rows_fetched(
+    engine: &Engine,
+    policy: &Policy,
+    tokenizer: &Tokenizer,
+    samples: &[&Sample],
+    b: usize,
+    s: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut rows = Vec::with_capacity(samples.len());
+    for chunk in samples.chunks(b) {
+        let tokens = super::stack_tokens(tokenizer, chunk, b, s)?;
+        let lp = policy.logprobs(engine, &tokens)?;
+        let lpv = lp.as_f32()?;
+        for i in 0..chunk.len() {
+            rows.push(lpv[i * (s - 1)..(i + 1) * (s - 1)].to_vec());
+        }
+    }
+    Ok(rows)
 }
 
 /// Lay the generation-time behavior logprobs into the `[S-1]` layout the

@@ -11,7 +11,7 @@ mod reference;
 mod reward;
 
 pub use actor::{ActorWorker, GenerationOutcome};
-pub(crate) use actor::logprob_claimed;
+pub(crate) use actor::logprob_rows_fetched;
 pub use reference::ReferenceWorker;
 pub use reward::{RewardOutcome, RewardWorker, ScoredSample};
 

@@ -1,0 +1,249 @@
+//! Partial rollouts: resumable streaming generation through the sample
+//! flow.
+//!
+//! The headline invariants, per the issue's acceptance criteria:
+//!
+//! 1. **Oracle equivalence** — a streaming run with kills and resumes
+//!    retires the *same sample set with the same behavior stamps* as the
+//!    batch-mode replay-buffer oracle: resuming from a persisted prefix
+//!    is observationally identical to regenerating from scratch.
+//! 2. **Bounded recompute** — decode steps beyond the workload's
+//!    intrinsic budget are bounded by the persist cadence: a resumer
+//!    replays at most the steps decoded since the abandoned sequence's
+//!    last persisted segment.
+//! 3. **Prefix fidelity** — a reclaimed sample carries its persisted
+//!    prefix to the next claimant; the final writeback supersedes the
+//!    prefix and stamps the authoritative segment list.
+//!
+//! Everything but the one executor-level test is artifact-free (the
+//! `sim::chaos` harness drives the real dock machinery with synthetic
+//! workers). Fixed seeds by default; `CHAOS_RANDOM_SEEDS=1` (the
+//! scheduled CI job) appends time-derived seeds for a fuzzing pass.
+
+use mindspeed_rl::sim::chaos::{
+    run_baseline, run_chaos, ChaosConfig, SYNTH_CKPT_STEPS,
+};
+use mindspeed_rl::trainers::faults::FaultPlan;
+
+fn partial_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig {
+        iterations: 5,
+        prompts_per_iter: 4,
+        group_size: 2,
+        gen_streaming: true,
+        partial_rollouts: true,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn chaos_seeds() -> Vec<u64> {
+    let mut seeds = vec![3, 42, 1337];
+    if std::env::var("CHAOS_RANDOM_SEEDS").as_deref() == Ok("1") {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64;
+        for i in 0..3u64 {
+            seeds.push(t ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        eprintln!("[partial-rollouts] randomized-seed mode: {seeds:?}");
+    }
+    seeds
+}
+
+// ----------------------------------------------- oracle equivalence
+
+/// Fixed seed, aggressive kills: the streaming run persists prefixes,
+/// resumes them after lease reclaim, and still retires the identical
+/// `(set, stamps)` the batch-mode oracle produces — with real resume
+/// traffic (not a degenerate no-kill schedule) and a recompute total
+/// within the checkpoint bound.
+#[test]
+fn resumed_streaming_run_matches_the_batch_oracle() {
+    let cfg = ChaosConfig {
+        plan: FaultPlan { seed: 7, kill_rate: 0.4, ..Default::default() },
+        ..partial_cfg(42)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    let oracle = run_baseline(&cfg).unwrap();
+    assert!(out.lossless(&cfg), "{:?}", out.recovery);
+    assert_eq!(
+        out.retired, oracle.retired,
+        "resuming from persisted prefixes changed the retired set or the stamps"
+    );
+    assert!(out.recovery.kills > 0, "plan must actually fire: {:?}", out.recovery);
+    assert!(out.work.persists > 0, "kills must persist prefixes: {:?}", out.work);
+    assert!(out.work.resumes > 0, "reclaimed prefixes must resume: {:?}", out.work);
+    assert!(out.work.saved_steps > 0, "resumes must skip persisted work: {:?}", out.work);
+    assert!(
+        out.work.recomputed_steps() <= out.recovery.reclaimed * SYNTH_CKPT_STEPS,
+        "recompute {} exceeds the checkpoint bound (reclaimed={}, cadence={}): {:?}",
+        out.work.recomputed_steps(),
+        out.recovery.reclaimed,
+        SYNTH_CKPT_STEPS,
+        out.work
+    );
+}
+
+/// The same differential across several seeds (plus env-gated random
+/// seeds for the scheduled fuzz job): zero loss, identical stamps, and
+/// the recompute bound at every schedule.
+#[test]
+fn partial_rollout_sweep_across_seeds() {
+    for seed in chaos_seeds() {
+        let cfg = ChaosConfig {
+            plan: FaultPlan {
+                seed: seed ^ 0x9a17_1a1,
+                kill_rate: 0.3,
+                ..Default::default()
+            },
+            ..partial_cfg(seed)
+        };
+        let out = run_chaos(&cfg).unwrap();
+        let oracle = run_baseline(&cfg).unwrap();
+        assert!(out.lossless(&cfg), "seed {seed}: {:?}", out.recovery);
+        assert_eq!(out.retired, oracle.retired, "seed {seed}: differential diverged");
+        assert!(
+            out.work.recomputed_steps() <= out.recovery.reclaimed * SYNTH_CKPT_STEPS,
+            "seed {seed}: recompute {} vs reclaimed {} (work {:?})",
+            out.work.recomputed_steps(),
+            out.recovery.reclaimed,
+            out.work
+        );
+    }
+}
+
+// ------------------------------------------------- prefix fidelity
+
+/// Single-threaded, fully deterministic claim → persist → lease expiry →
+/// redispatch interleaving against the real dock: the next claimant
+/// fetches the persisted prefix verbatim, a late shorter checkpoint is
+/// dropped (longest-prefix-wins), and the final writeback supersedes the
+/// prefix while stamping the authoritative segment list.
+#[test]
+fn reclaimed_sample_carries_its_persisted_prefix() {
+    use mindspeed_rl::runtime::Tensor;
+    use mindspeed_rl::transfer_dock::{
+        push_segment, DockTopology, FieldKind, PartialRollout, Sample, SampleFlow, Stage,
+        TransferDock,
+    };
+
+    let d = TransferDock::with_lease(DockTopology::spread(2), 2);
+    let idx = d
+        .put_samples(vec![Sample::new_prompt(u64::MAX, 0, "1+1=".into(), 2)])
+        .unwrap()[0];
+    // worker A claims, decodes three tokens, persists the prefix, dies
+    let claim_a = d.request_ready(Stage::Generation, 1).unwrap();
+    assert_eq!(claim_a.len(), 1);
+    let mut segments = Vec::new();
+    push_segment(&mut segments, 0, 3, 7);
+    d.store_partial_generation(
+        0,
+        idx,
+        PartialRollout {
+            response_ids: vec![5, 6, 7],
+            response_logprobs: vec![-0.1, -0.2, -0.3],
+            segments,
+        },
+    )
+    .unwrap();
+    // a late, shorter checkpoint (a slower duplicate writer) must not
+    // shrink the persisted prefix
+    let mut short = Vec::new();
+    push_segment(&mut short, 0, 1, 7);
+    d.store_partial_generation(
+        0,
+        idx,
+        PartialRollout {
+            response_ids: vec![5],
+            response_logprobs: vec![-0.1],
+            segments: short,
+        },
+    )
+    .unwrap();
+    // two idle ticks: A's lease expires, the sample is reclaimed
+    d.tick_lease_clock();
+    assert_eq!(d.tick_lease_clock(), 1);
+    // worker B redispatches and sees the three-token prefix verbatim
+    let claim_b = d.request_ready(Stage::Generation, 1).unwrap();
+    assert_eq!(claim_b.len(), 1, "expired claim must redispatch");
+    let s = d.fetch_resident(0, &claim_b).unwrap();
+    let p = s[0].partial.as_ref().expect("the prefix must survive the reclaim");
+    assert_eq!(p.response_ids, vec![5, 6, 7]);
+    assert_eq!(p.response_logprobs, vec![-0.1, -0.2, -0.3]);
+    assert_eq!(p.segments.len(), 1);
+    assert_eq!((p.segments[0].start, p.segments[0].len, p.segments[0].version), (0, 3, 7));
+    assert_eq!(
+        d.lease_stats().superseded_writebacks,
+        1,
+        "the shorter late checkpoint must be dropped and counted"
+    );
+    // B finishes: the completed response supersedes the prefix and
+    // stamps the full-span segment
+    d.store_generation(
+        0,
+        idx,
+        vec![(FieldKind::Tokens, Tensor::i32(&[4], vec![1; 4]).unwrap())],
+        "done".into(),
+        2,
+        9,
+    )
+    .unwrap();
+    let fin = d.fetch(0, &d.request_ready(Stage::Reward, 1).unwrap()).unwrap();
+    assert!(fin[0].partial.is_none(), "completion must clear the persisted prefix");
+    assert_eq!(fin[0].segments.len(), 1);
+    assert_eq!(
+        (fin[0].segments[0].start, fin[0].segments[0].len, fin[0].segments[0].version),
+        (0, 2, 9)
+    );
+    for c in d.conservation() {
+        assert!(c.holds(), "{c:?}");
+    }
+}
+
+// ------------------------------------------------- executor (gated)
+
+/// Executor-level acceptance: `run_grpo` with `--gen-streaming
+/// --partial-rollouts --preempt-on-publish` under a seeded kill plan
+/// completes every iteration with finite losses and consistent recovery
+/// accounting. Needs HLO artifacts; skips with a message otherwise.
+#[test]
+fn pipelined_executor_with_partial_rollouts_survives_chaos() {
+    use mindspeed_rl::runtime::{artifact_dir, Engine};
+    use mindspeed_rl::trainers::{run_grpo, GrpoConfig, PipelineMode};
+
+    let Ok(engine) = Engine::load(artifact_dir("tiny")) else {
+        eprintln!("[partial-rollouts] skipping executor test: run `make artifacts` first");
+        return;
+    };
+    let cfg = GrpoConfig {
+        iterations: 3,
+        prompts_per_iter: 4,
+        group_size: 2,
+        max_new_tokens: 4,
+        pipeline: PipelineMode::Pipelined,
+        max_inflight_iters: 2,
+        lease_ticks: 4,
+        gen_streaming: true,
+        partial_rollouts: true,
+        preempt_on_publish: true,
+        chaos_kill_rate: 0.3,
+        chaos_seed: 5,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = run_grpo(&engine, &cfg).unwrap();
+    assert_eq!(report.iterations.len(), 3, "every iteration must complete under faults");
+    for m in &report.iterations {
+        assert!(m.loss.is_finite());
+    }
+    let rec = &report.pipeline.recovery;
+    assert!(rec.consistent(), "{rec:?}");
+    // the persisted/resumed ledger only shows up once something was
+    // actually abandoned; when it does, the summary must advertise it
+    let pr = &report.pipeline.partial;
+    if pr.active() {
+        assert!(report.summary().contains("partial["), "{}", report.summary());
+    }
+}

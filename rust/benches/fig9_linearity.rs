@@ -1,9 +1,11 @@
 //! Bench: Fig. 9 — weak-scaling linearity of VeRL / MSRLB / MSRL
 //! (64 prompts per node, 2 → 24 nodes), plus a measured scaling sweep of
-//! the real transfer dock vs replay buffer under growing offered load.
+//! the real transfer dock vs replay buffer under growing offered load,
+//! and the sharded-controller dispatch sweep into the hundreds of nodes
+//! (`--dock-shards`, simulate --experiment dispatch).
 
 use mindspeed_rl::runtime::Tensor;
-use mindspeed_rl::sim::{fig9_rows, SystemKind};
+use mindspeed_rl::sim::{dispatch_rows, dispatch_rows_for, fig9_rows, SystemKind};
 use mindspeed_rl::transfer_dock::{
     DockTopology, FieldKind, NetworkModel, ReplayBuffer, Sample, SampleFlow, Stage,
     TransferDock,
@@ -60,6 +62,16 @@ fn main() {
         let r = implied_dispatch(&rb, 8);
         json.lower("dock_dispatch_secs_8n", d);
         json.higher("rb_over_dock_dispatch_8n", r / d);
+        // sharded controllers at the far end of the weak-scaling sweep:
+        // dispatch must stay near-flat from 8 to 384 nodes (flatness is
+        // a ratio ≥ 1; 1.0 would be perfectly linear scaling) while the
+        // centralized buffer's gap keeps widening
+        let sweep = dispatch_rows_for(&[8, 384]).unwrap();
+        let (base, top) = (&sweep[0], &sweep[1]);
+        json.lower("sharded_dispatch_secs_384n", top.sharded_secs);
+        json.lower("sharded_flatness_384n_over_8n", top.sharded_secs / base.sharded_secs);
+        json.higher("central_over_sharded_384n", top.central_secs / top.sharded_secs);
+        json.higher("sharded_linearity_384n", top.sharded_linearity);
         json.emit().unwrap();
         return;
     }
@@ -106,6 +118,24 @@ fn main() {
         "\n(dock per-prompt dispatch stays ~flat; the centralized buffer's grows\n\
          with cluster size — the mechanism behind the Fig. 9 linearity gap)"
     );
+
+    // sharded controllers into the hundreds of nodes: the full
+    // central-vs-sharded sweep behind `simulate --experiment dispatch`
+    let mut t = Table::new(
+        "sharded dock controllers — dispatch weak scaling to 384 nodes (K = nodes)",
+        &["nodes", "central (s)", "dock K=1 (s)", "dock K=n (s)", "central lin", "sharded lin"],
+    );
+    for r in dispatch_rows().unwrap() {
+        t.row(vec![
+            r.nodes.to_string(),
+            format!("{:.2}", r.central_secs),
+            format!("{:.3}", r.dock_secs),
+            format!("{:.3}", r.sharded_secs),
+            format!("{:.1}%", r.central_linearity * 100.0),
+            format!("{:.1}%", r.sharded_linearity * 100.0),
+        ]);
+    }
+    t.print();
 
     // sanity: ordering must match the paper
     let rows = fig9_rows();

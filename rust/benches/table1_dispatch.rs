@@ -91,6 +91,11 @@ fn main() {
         let net = mindspeed_rl::transfer_dock::NetworkModel::paper();
         json.lower("dock_dispatch_secs_256", dock.dispatch_secs(&net));
         json.higher("rb_over_dock_dispatch_256", rb.dispatch_secs(&net) / dock.dispatch_secs(&net));
+        // the same load through K=8 controller shards (--dock-shards 8):
+        // controller sharding must not cost dispatch at fixed scale
+        let sharded = TransferDock::with_shards(DockTopology::spread(8), 64, 8, 0);
+        drive_flow(&sharded, 256, 1024);
+        json.lower("dock_sharded_dispatch_secs_256", sharded.dispatch_secs(&net));
         json.emit().unwrap();
         return;
     }
@@ -126,10 +131,13 @@ fn main() {
     drive_flow(&dock, 1024, 2048);
     let rb = ReplayBuffer::new(0);
     drive_flow(&rb, 1024, 2048);
+    let sharded = TransferDock::with_shards(DockTopology::spread(8), 64, 8, 0);
+    drive_flow(&sharded, 1024, 2048);
     let net = mindspeed_rl::transfer_dock::NetworkModel::paper();
     println!(
-        "\nimplied dispatch @paper bandwidths (1024 samples): dock={} replay_buffer={}",
+        "\nimplied dispatch @paper bandwidths (1024 samples): dock={} dock(K=8)={} replay_buffer={}",
         mindspeed_rl::util::fmt_secs(dock.dispatch_secs(&net)),
+        mindspeed_rl::util::fmt_secs(sharded.dispatch_secs(&net)),
         mindspeed_rl::util::fmt_secs(rb.dispatch_secs(&net)),
     );
 }

@@ -84,6 +84,12 @@ impl Config {
             if let Some(v) = g.opt("lease_ticks") {
                 d.lease_ticks = v.u64()?;
             }
+            if let Some(v) = g.opt("dock_shards") {
+                d.dock_shards = v.usize()?;
+            }
+            if let Some(v) = g.opt("steal_threshold") {
+                d.steal_threshold = v.usize()?;
+            }
             if let Some(v) = g.opt("chaos_kill_rate") {
                 d.chaos_kill_rate = v.num()?;
             }
@@ -179,6 +185,8 @@ impl Config {
             g.gen_logprobs = true;
         }
         g.lease_ticks = args.u64_or("lease-ticks", g.lease_ticks)?;
+        g.dock_shards = args.usize_or("dock-shards", g.dock_shards)?;
+        g.steal_threshold = args.usize_or("steal-threshold", g.steal_threshold)?;
         g.chaos_kill_rate = args.f64_or("chaos-kill-rate", g.chaos_kill_rate)?;
         g.chaos_stall_rate = args.f64_or("chaos-stall-rate", g.chaos_stall_rate)?;
         g.chaos_stall_ticks = args.u64_or("chaos-stall-ticks", g.chaos_stall_ticks)?;
@@ -506,6 +514,48 @@ mod tests {
         let cfg = Config::from_file(&p).unwrap();
         assert!(cfg.grpo.partial_rollouts);
         assert!(cfg.grpo.preempt_on_publish);
+        assert!(cfg.grpo.validate().is_ok());
+    }
+
+    #[test]
+    fn sharded_dock_flags_parse_and_validate() {
+        let args = Args::parse(
+            ["--dock-shards", "4", "--steal-threshold", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.grpo.dock_shards, 4);
+        assert_eq!(cfg.grpo.steal_threshold, 2);
+
+        // K=0 is rejected at load time
+        let bad = Args::parse(["--dock-shards", "0"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // a steal threshold without siblings is rejected
+        let bad =
+            Args::parse(["--steal-threshold", "2"].iter().map(|s| s.to_string())).unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // the replay-buffer baseline cannot shard (boolean flag last)
+        let bad = Args::parse(
+            ["--dock-shards", "4", "--replay-buffer"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // defaults: the single-controller dock, no stealing
+        let dflt = Config::from_args(&Args::parse(std::iter::empty()).unwrap()).unwrap();
+        assert_eq!(dflt.grpo.dock_shards, 1);
+        assert_eq!(dflt.grpo.steal_threshold, 0);
+        // file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_sharded_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"dock_shards": 8, "steal_threshold": 1}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.grpo.dock_shards, 8);
+        assert_eq!(cfg.grpo.steal_threshold, 1);
         assert!(cfg.grpo.validate().is_ok());
     }
 

@@ -12,11 +12,12 @@
 //!                       [--kv-block-tokens B]
 //!                       [--partial-rollouts] [--preempt-on-publish]
 //!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
-//!                       [--lease-ticks T] [--chaos-kill-rate P]
+//!                       [--lease-ticks T] [--dock-shards K]
+//!                       [--steal-threshold D] [--chaos-kill-rate P]
 //!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
 //!                       [--chaos-seed S] [--chaos-max-faults N] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming|dispatch
 //! ```
 //!
 //! `--pipeline pipelined` runs every worker state (generation,
@@ -59,6 +60,15 @@
 //! kills/stalls into the pipelined executor to exercise exactly that
 //! recovery path; `simulate --experiment chaos` runs the artifact-free
 //! harness sweep. See rust/DESIGN.md "Fault model & leases".
+//!
+//! `--dock-shards K` partitions each stage's dock controller into K
+//! shards (samples hash to a home shard; warehouse placement follows the
+//! shard's node), and `--steal-threshold D` lets a drained shard steal
+//! claims from siblings once its ready pool is ≤ D — every steal is an
+//! extra cross-node RPC charged to the ledger. K=1 (default) is
+//! bit-identical to the unsharded dock. `simulate --experiment dispatch`
+//! sweeps central-vs-sharded dispatch cost into the hundreds of nodes.
+//! See rust/DESIGN.md "Sharded dock".
 
 use anyhow::Result;
 

@@ -433,6 +433,76 @@ impl PartialRolloutReport {
     }
 }
 
+/// One controller shard's dispatch counters over a run. All raw counts —
+/// steal fractions and balance ratios are derived on read, so per-shard
+/// records from replica reports merge additively (the PR 6 occupancy
+/// convention: never mean-of-ratios).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DockShard {
+    /// samples this shard handed to a claimant whose home it was
+    pub claims: u64,
+    /// samples stolen *from* this shard by a sibling's claimant
+    pub stolen: u64,
+    /// leases this shard's tables reclaimed after expiry
+    pub reclaimed: u64,
+}
+
+/// Per-controller-shard dispatch report for a sharded transfer dock
+/// (`--dock-shards K`). Empty / shards ≤ 1 for unsharded flows.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DockShardReport {
+    /// controller shards per worker state (K); 0 when no dock reported
+    pub shards: usize,
+    /// one record per shard, indexed by shard id
+    pub per_shard: Vec<DockShard>,
+}
+
+impl DockShardReport {
+    /// Merge another report in: raw counters add elementwise per shard
+    /// (reports from different runs of the same dock share shard ids).
+    pub fn merge(&mut self, other: &Self) {
+        self.shards = self.shards.max(other.shards);
+        if self.per_shard.len() < other.per_shard.len() {
+            self.per_shard.resize(other.per_shard.len(), DockShard::default());
+        }
+        for (mine, theirs) in self.per_shard.iter_mut().zip(&other.per_shard) {
+            mine.claims += theirs.claims;
+            mine.stolen += theirs.stolen;
+            mine.reclaimed += theirs.reclaimed;
+        }
+    }
+
+    /// Σ over shards (the additive totals ratios are derived from).
+    pub fn totals(&self) -> DockShard {
+        let mut t = DockShard::default();
+        for s in &self.per_shard {
+            t.claims += s.claims;
+            t.stolen += s.stolen;
+            t.reclaimed += s.reclaimed;
+        }
+        t
+    }
+
+    /// Fraction of all handouts that crossed shards (total stolen over
+    /// total handed out) — derived on read from the raw totals, never
+    /// averaged per shard.
+    pub fn steal_fraction(&self) -> f64 {
+        let t = self.totals();
+        let handed = t.claims + t.stolen;
+        if handed == 0 {
+            0.0
+        } else {
+            t.stolen as f64 / handed as f64
+        }
+    }
+
+    /// Anything to report? Single-shard docks stay out of summaries —
+    /// their numbers duplicate the recovery clause and stage counters.
+    pub fn active(&self) -> bool {
+        self.shards > 1
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -465,6 +535,9 @@ pub struct PipelineReport {
     /// partial-rollout persistence/resume accounting (all-zero unless
     /// `--partial-rollouts` interrupted and resumed something)
     pub partial: PartialRolloutReport,
+    /// per-controller-shard dispatch counters (empty unless the run drove
+    /// a sharded dock, `--dock-shards > 1`)
+    pub dock: DockShardReport,
 }
 
 impl PipelineReport {
@@ -582,8 +655,21 @@ impl PipelineReport {
                 self.recovery.restarts
             )
         };
+        let dock = if !self.dock.active() {
+            String::new()
+        } else {
+            let t = self.dock.totals();
+            format!(
+                " dock[shards={} claims={} stolen={} ({:.0}%) reclaim={}]",
+                self.dock.shards,
+                t.claims,
+                t.stolen,
+                self.dock.steal_fraction() * 100.0,
+                t.reclaimed
+            )
+        };
         format!(
-            "[{}] wall={} overlap={}{}{}{}{}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{}{}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
@@ -593,6 +679,7 @@ impl PipelineReport {
             stream,
             partial,
             rec,
+            dock,
             stages
         )
     }
@@ -915,6 +1002,69 @@ mod tests {
         // fault-free, never-interrupted runs stay silent
         let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
         assert!(!quiet.summary().contains("partial["));
+    }
+
+    #[test]
+    fn dock_shard_report_merges_raw_counters_not_ratios() {
+        // two reports from the same 2-shard dock: one heavily stolen-from,
+        // one barely — the merged steal fraction must come from the raw
+        // totals (30 / 130), never the mean of the two per-run ratios
+        let mut a = DockShardReport {
+            shards: 2,
+            per_shard: vec![
+                DockShard { claims: 10, stolen: 20, reclaimed: 1 },
+                DockShard { claims: 40, stolen: 5, reclaimed: 0 },
+            ],
+        };
+        let b = DockShardReport {
+            shards: 2,
+            per_shard: vec![
+                DockShard { claims: 50, stolen: 5, reclaimed: 2 },
+                DockShard { claims: 0, stolen: 0, reclaimed: 0 },
+            ],
+        };
+        a.merge(&b);
+        let t = a.totals();
+        assert_eq!(t.claims, 100);
+        assert_eq!(t.stolen, 30);
+        assert_eq!(t.reclaimed, 3);
+        assert!((a.steal_fraction() - 30.0 / 130.0).abs() < 1e-12, "{}", a.steal_fraction());
+        // merging a wider report grows the shard list
+        let wide = DockShardReport {
+            shards: 4,
+            per_shard: vec![DockShard::default(); 4],
+        };
+        a.merge(&wide);
+        assert_eq!(a.shards, 4);
+        assert_eq!(a.per_shard.len(), 4);
+        assert_eq!(a.totals().claims, 100, "zero-extend must not lose counts");
+        // empty report: no handouts → fraction 0, never 0/0
+        assert_eq!(DockShardReport::default().steal_fraction(), 0.0);
+
+        // summary clause appears only for sharded runs
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("dock["));
+        let single = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            dock: DockShardReport {
+                shards: 1,
+                per_shard: vec![DockShard { claims: 9, stolen: 0, reclaimed: 0 }],
+            },
+            ..Default::default()
+        };
+        assert!(!single.summary().contains("dock["), "K=1 duplicates recovery: stay silent");
+        let loud = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            dock: a,
+            ..Default::default()
+        };
+        assert!(
+            loud.summary().contains("dock[shards=4 claims=100 stolen=30 (23%)"),
+            "{}",
+            loud.summary()
+        );
     }
 
     #[test]

@@ -72,6 +72,14 @@ pub struct ChaosConfig {
     /// executor's `--partial-rollouts`. Only meaningful with
     /// `gen_streaming` (the batch worker has no mid-sequence state).
     pub partial_rollouts: bool,
+    /// controller shards per worker state (K) for the dock under test —
+    /// the harness twin of `--dock-shards`. 1 = the single-controller
+    /// dock; any K must retire the identical `(set, stamps)` (the
+    /// sharding differential oracle, pinned by `tests/sharded_dock.rs`)
+    pub dock_shards: usize,
+    /// cross-shard steal threshold — the harness twin of
+    /// `--steal-threshold` (only meaningful with `dock_shards > 1`)
+    pub steal_threshold: usize,
     /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
     pub deadline: Duration,
 }
@@ -92,6 +100,8 @@ impl Default for ChaosConfig {
             autoscale: None,
             gen_streaming: false,
             partial_rollouts: false,
+            dock_shards: 1,
+            steal_threshold: 0,
             deadline: Duration::from_secs(60),
         }
     }
@@ -487,8 +497,12 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
     if let Some(ac) = &cfg.autoscale {
         ac.validate()?;
     }
-    let flow: Arc<TransferDock> =
-        Arc::new(TransferDock::with_lease(DockTopology::spread(cfg.nodes), cfg.lease_ticks));
+    let flow: Arc<TransferDock> = Arc::new(TransferDock::with_shards(
+        DockTopology::spread(cfg.nodes),
+        cfg.lease_ticks,
+        cfg.dock_shards,
+        cfg.steal_threshold,
+    ));
     let injector: Option<Arc<FaultInjector>> =
         cfg.plan.enabled().then(|| Arc::new(FaultInjector::new(cfg.plan)));
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -779,6 +793,26 @@ mod tests {
         assert!(a.lossless(&cfg));
         assert_eq!(a.retired, b.retired, "streaming changed the retired set or stamps");
         assert_eq!(a.recovery.reclaimed, 0, "fault-free streaming must not reclaim");
+    }
+
+    #[test]
+    fn sharded_dock_matches_baseline() {
+        // fault-free K=4 with aggressive stealing: hash partitioning and
+        // cross-shard steals must not change the retired set or stamps
+        // (the heavyweight K × faults × streaming sweep lives in
+        // tests/sharded_dock.rs)
+        let cfg = ChaosConfig {
+            lease_ticks: 256,
+            dock_shards: 4,
+            steal_threshold: 1,
+            workers_per_stage: 2,
+            ..Default::default()
+        };
+        let a = run_chaos(&cfg).unwrap();
+        let b = run_baseline(&cfg).unwrap();
+        assert!(a.lossless(&cfg), "{:?}", a.recovery);
+        assert_eq!(a.retired, b.retired, "sharding changed the retired set or stamps");
+        assert_eq!(a.recovery.reclaimed, 0, "fault-free sharded run must not reclaim");
     }
 
     #[test]

@@ -4,7 +4,11 @@
 use anyhow::Result;
 
 use crate::parallel::ParallelLayout;
+use crate::runtime::Tensor;
 use crate::transfer_dock::volume::{self, VolumeParams};
+use crate::transfer_dock::{
+    DockTopology, FieldKind, NetworkModel, ReplayBuffer, Sample, SampleFlow, Stage, TransferDock,
+};
 use crate::util::bench::Table;
 
 use super::costmodel::{
@@ -341,6 +345,112 @@ pub fn chaos_rows(seed: u64) -> Result<Vec<ChaosRow>> {
     Ok(rows)
 }
 
+// ----------------------------------------------------------- dispatch
+#[derive(Debug, Clone)]
+pub struct DispatchRow {
+    pub nodes: usize,
+    /// controller shards per stage in the sharded configuration (K = nodes)
+    pub shards: usize,
+    /// centralized replay buffer: every claim/writeback converges on one store
+    pub central_secs: f64,
+    /// warehouse-sharded dock, single controller per stage (`--dock-shards 1`)
+    pub dock_secs: f64,
+    /// warehouse-sharded dock with K = nodes controller shards
+    pub sharded_secs: f64,
+    /// weak-scaling linearity vs the smallest swept cluster at a nominal
+    /// flat per-iteration compute time (dispatch is the only varying term)
+    pub central_linearity: f64,
+    pub sharded_linearity: f64,
+}
+
+/// Drain `64·nodes` samples (Fig. 9's per-node load, Table 1 row-2
+/// payload shape) through generation + old-logprob writebacks with one
+/// claim batch per node per pass; the accumulated ledger then implies
+/// the flow's dispatch seconds under the paper's network model.
+fn drive_dispatch(flow: &dyn SampleFlow, nodes: usize) -> Result<()> {
+    const PER_NODE: usize = 64;
+    const ELEMS: usize = 1024;
+    let n = PER_NODE * nodes;
+    let samples: Vec<Sample> = (0..n)
+        .map(|i| Sample::new_prompt(u64::MAX, i as u64 / 8, format!("{i}+1="), i as i64 + 1))
+        .collect();
+    flow.put_samples(samples)?;
+    let mut retired = 0usize;
+    while retired < n {
+        for node in 0..nodes {
+            let metas = flow.request_ready(Stage::Generation, 8)?;
+            if !metas.is_empty() {
+                flow.fetch(node, &metas)?;
+                for m in &metas {
+                    flow.store_generation(
+                        node,
+                        m.index,
+                        vec![(FieldKind::Tokens, Tensor::i32(&[ELEMS], vec![1; ELEMS])?)],
+                        "42".into(),
+                        3,
+                        1,
+                    )?;
+                }
+            }
+            let ready = flow.request_ready(Stage::OldLogprob, 8)?;
+            if ready.is_empty() {
+                continue;
+            }
+            flow.fetch(node, &ready)?;
+            for m in &ready {
+                flow.store_fields(node, m.index, vec![(FieldKind::OldLp, Tensor::zeros(&[ELEMS]))])?;
+                flow.retire(m.index);
+                retired += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Weak-scaling sweep of sample-dispatch cost: the same per-node
+/// workload drained through the centralized replay buffer, the
+/// warehouse-sharded dock with one controller per stage, and the dock
+/// with K = nodes controller shards. The centralized store pays a
+/// cross-node RPC per claim/writeback at one endpoint, so its dispatch
+/// grows with the cluster; the sharded dock spreads both payload and
+/// controller RPCs, staying near-flat into the hundreds of nodes.
+pub fn dispatch_rows_for(node_sweep: &[usize]) -> Result<Vec<DispatchRow>> {
+    // nominal per-iteration compute at Fig. 9's per-node load — flat
+    // under weak scaling, so linearity is purely a dispatch story
+    const COMPUTE_SECS: f64 = 60.0;
+    let net = NetworkModel::paper();
+    let mut rows = Vec::new();
+    let mut base: Option<(f64, f64)> = None;
+    for &nodes in node_sweep {
+        let rb = ReplayBuffer::new(0);
+        drive_dispatch(&rb, nodes)?;
+        let central = rb.dispatch_secs(&net);
+        let dock = TransferDock::with_shards(DockTopology::spread(nodes), 64, 1, 0);
+        drive_dispatch(&dock, nodes)?;
+        let dock_secs = dock.dispatch_secs(&net);
+        let sharded_dock =
+            TransferDock::with_shards(DockTopology::spread(nodes), 64, nodes, 0);
+        drive_dispatch(&sharded_dock, nodes)?;
+        let sharded = sharded_dock.dispatch_secs(&net);
+        let (cb, sb) = *base.get_or_insert((central, sharded));
+        rows.push(DispatchRow {
+            nodes,
+            shards: nodes,
+            central_secs: central,
+            dock_secs,
+            sharded_secs: sharded,
+            central_linearity: (COMPUTE_SECS + cb) / (COMPUTE_SECS + central),
+            sharded_linearity: (COMPUTE_SECS + sb) / (COMPUTE_SECS + sharded),
+        });
+    }
+    Ok(rows)
+}
+
+/// The printed experiment's sweep: 2 → 384 nodes.
+pub fn dispatch_rows() -> Result<Vec<DispatchRow>> {
+    dispatch_rows_for(&[2, 4, 8, 16, 32, 64, 128, 256, 384])
+}
+
 // ------------------------------------------------------------- runner
 pub fn run_named_experiment(name: &str) -> Result<()> {
     match name {
@@ -501,10 +611,39 @@ pub fn run_named_experiment(name: &str) -> Result<()> {
                  (tests/chaos.rs + tests/partial_rollouts.rs pin the invariants)"
             );
         }
+        "dispatch" => {
+            let mut t = Table::new(
+                "Dispatch scaling — central buffer vs sharded dock controllers \
+                 (64 samples/node, Table-1 row-2 payloads)",
+                &[
+                    "nodes", "K", "central (s)", "dock K=1 (s)", "dock K=n (s)",
+                    "central lin", "sharded lin",
+                ],
+            );
+            for r in dispatch_rows()? {
+                t.row(vec![
+                    r.nodes.to_string(),
+                    r.shards.to_string(),
+                    format!("{:.2}", r.central_secs),
+                    format!("{:.3}", r.dock_secs),
+                    format!("{:.3}", r.sharded_secs),
+                    format!("{:.1}%", r.central_linearity * 100.0),
+                    format!("{:.1}%", r.sharded_linearity * 100.0),
+                ]);
+            }
+            t.print();
+            println!(
+                "every claim and writeback converges on the centralized buffer, so \
+                 its dispatch grows with the cluster; K controller shards per stage \
+                 (--dock-shards) spread the controller RPCs like the warehouses \
+                 spread payloads, holding dispatch near-flat into the hundreds of \
+                 nodes — the gated counterpart is benches/fig9_linearity.rs"
+            );
+        }
         other => {
             anyhow::bail!(
                 "unknown experiment {other:?} \
-                 (table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming)"
+                 (table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming|dispatch)"
             )
         }
     }
@@ -617,6 +756,28 @@ mod tests {
                 assert!(r.streaming_occupancy > 0.9);
             }
         }
+    }
+
+    #[test]
+    fn sharded_dispatch_stays_near_linear_into_hundreds_of_nodes() {
+        // a two-point weak-scaling probe (the full 2→384 sweep is the
+        // printed experiment and the release-mode bench gate)
+        let rows = dispatch_rows_for(&[8, 192]).unwrap();
+        let (base, top) = (&rows[0], &rows[1]);
+        assert_eq!(top.nodes, 192);
+        // the centralized buffer's dispatch grows roughly with the node
+        // count (24x more samples, every RPC at one endpoint)...
+        assert!(top.central_secs > 10.0 * base.central_secs, "{rows:?}");
+        // ...while the sharded dock's stays near-flat under weak scaling
+        assert!(top.sharded_secs < 5.0 * base.sharded_secs, "{rows:?}");
+        // controller sharding must not regress the K=1 dock
+        assert!(top.sharded_secs < top.dock_secs * 1.25, "{rows:?}");
+        assert!(top.central_linearity < 0.95, "{rows:?}");
+        assert!(top.sharded_linearity > 0.99, "{rows:?}");
+        // and the central-over-sharded gap widens with scale
+        let at_base = base.central_secs / base.sharded_secs;
+        let at_top = top.central_secs / top.sharded_secs;
+        assert!(at_top > 2.0 * at_base, "gap must widen: {at_base} -> {at_top}");
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //! * chaos  — lease-based recovery under seeded worker kills/stalls
 //!   (drives the *real* dock machinery with synthetic stage workers —
 //!   see [`chaos`])
+//! * dispatch — central buffer vs K-sharded dock controllers: dispatch
+//!   seconds and weak-scaling linearity to hundreds of nodes (drives the
+//!   real flows and reads their ledgers)
 
 pub mod chaos;
 mod costmodel;
@@ -32,8 +35,8 @@ pub use costmodel::{
     StageTimes, TokenGenModel,
 };
 pub use experiments::{
-    chaos_rows, fig11_series, fig7_rows, fig9_rows, overlap_rows, run_named_experiment,
-    scaling_rows, streaming_rows, table1_rows_out, ChaosRow, Fig7Row, Fig9Row, OverlapRow,
-    ScalingRow, StreamingRow, Table1Row,
+    chaos_rows, dispatch_rows, dispatch_rows_for, fig11_series, fig7_rows, fig9_rows,
+    overlap_rows, run_named_experiment, scaling_rows, streaming_rows, table1_rows_out,
+    ChaosRow, DispatchRow, Fig7Row, Fig9Row, OverlapRow, ScalingRow, StreamingRow, Table1Row,
 };
 pub use systems::{SystemKind, SystemModel};

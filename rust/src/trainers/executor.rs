@@ -327,6 +327,7 @@ fn run_sync(
         gen_stream: StreamGenReport::default(),
         // sync never abandons a sequence mid-decode: nothing to persist
         partial: PartialRolloutReport::default(),
+        dock: flow.dock_report(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -1696,6 +1697,7 @@ fn run_pipelined(
         scaling: scaling_out,
         gen_stream: *stream_acc.lock().unwrap(),
         partial: *partial_acc.lock().unwrap(),
+        dock: flow.dock_report(),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

@@ -63,6 +63,17 @@ pub struct GrpoConfig {
     /// and then shows no writeback activity for this many ticks loses the
     /// claim — the samples return to the ready pool for redispatch
     pub lease_ticks: u64,
+    /// controller shards per worker state (K): the dock partitions the
+    /// sample space across K controller shards per stage — each owning
+    /// its own ready pool, lease table, and metadata-broadcast lock —
+    /// with cross-shard work stealing when a shard's pool drains. 1 (the
+    /// default) is the single-controller dock, bit-identical to the
+    /// pre-sharding behavior
+    pub dock_shards: usize,
+    /// work stealing fires when the home shard's ready pool has drained
+    /// to at most this depth after a short claim (0 = steal only when
+    /// the home pool is empty); requires `dock_shards > 1`
+    pub steal_threshold: usize,
     /// chaos: probability each stage claim's worker is killed (pipelined
     /// mode only; 0 disables)
     pub chaos_kill_rate: f64,
@@ -150,6 +161,17 @@ impl GrpoConfig {
             "lease_ticks must be >= 2: a lease of T ticks expires on the T-th \
              tick after grant/renewal, so T=1 would reclaim held claims on the \
              very pass that renewed them"
+        );
+        anyhow::ensure!(self.dock_shards >= 1, "--dock-shards must be >= 1");
+        anyhow::ensure!(
+            self.steal_threshold == 0 || self.dock_shards > 1,
+            "--steal-threshold requires --dock-shards > 1 (a single shard has \
+             no sibling to steal from)"
+        );
+        anyhow::ensure!(
+            !self.use_replay_buffer || self.dock_shards == 1,
+            "--dock-shards > 1 requires the transfer dock (the replay-buffer \
+             baseline is the centralized K=1 design by definition)"
         );
         self.fault_plan().map(|p| p.validate()).unwrap_or(Ok(()))?;
         anyhow::ensure!(
@@ -246,6 +268,8 @@ impl Default for GrpoConfig {
             gen_logprobs: false,
             keep_weight_history: false,
             lease_ticks: crate::transfer_dock::DEFAULT_LEASE_TICKS,
+            dock_shards: 1,
+            steal_threshold: 0,
             chaos_kill_rate: 0.0,
             chaos_stall_rate: 0.0,
             chaos_stall_ticks: 12,
@@ -344,7 +368,12 @@ pub fn run_grpo(engine: &Engine, cfg: &GrpoConfig) -> Result<TrainReport> {
     let flow: Arc<dyn SampleFlow> = if cfg.use_replay_buffer {
         Arc::new(ReplayBuffer::with_lease(0, cfg.lease_ticks))
     } else {
-        Arc::new(TransferDock::with_lease(DockTopology::spread(cfg.nodes), cfg.lease_ticks))
+        Arc::new(TransferDock::with_shards(
+            DockTopology::spread(cfg.nodes),
+            cfg.lease_ticks,
+            cfg.dock_shards,
+            cfg.steal_threshold,
+        ))
     };
     run_grpo_on_flow(engine, cfg, flow)
 }
@@ -561,6 +590,43 @@ mod tests {
         let ok = GrpoConfig {
             partial_rollouts: true,
             gen_streaming: true,
+            chaos_kill_rate: 0.2,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn sharded_dock_config_gating() {
+        // K=1 (the default) validates everywhere
+        assert!(GrpoConfig::default().validate().is_ok());
+        // K>1 validates in both executors — sharding is a dock property,
+        // not an executor property
+        let ok = GrpoConfig { dock_shards: 4, ..Default::default() };
+        assert!(ok.validate().is_ok());
+        let ok = GrpoConfig {
+            dock_shards: 4,
+            steal_threshold: 2,
+            pipeline: PipelineMode::Pipelined,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        // degenerate K is rejected
+        let bad = GrpoConfig { dock_shards: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        // a steal threshold without siblings is meaningless
+        let bad = GrpoConfig { steal_threshold: 2, ..Default::default() };
+        assert!(bad.validate().is_err(), "steal threshold needs K > 1");
+        // the replay-buffer baseline is centralized by definition
+        let bad = GrpoConfig { dock_shards: 4, use_replay_buffer: true, ..Default::default() };
+        assert!(bad.validate().is_err(), "replay buffer cannot shard");
+        // the full stack composes at the config layer
+        let ok = GrpoConfig {
+            dock_shards: 4,
+            steal_threshold: 1,
+            gen_streaming: true,
+            partial_rollouts: true,
             chaos_kill_rate: 0.2,
             pipeline: PipelineMode::Pipelined,
             ..Default::default()

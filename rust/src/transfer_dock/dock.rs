@@ -1,18 +1,30 @@
-//! The distributed transfer dock proper: S warehouses + C controllers.
+//! The distributed transfer dock proper: S warehouses + C×K controllers.
+//!
+//! Controllers are **sharded**: each worker state runs K controller
+//! shards, and every sample is owned by exactly one shard per stage
+//! ([`Placement::shard_of`], a pure function of the sample index). A
+//! shard owns its slice of the ready pool, its lease table, its claim
+//! latches, its notify channel, and its own `meta_order` broadcast lock —
+//! metadata snapshots serialize per shard, never dock-wide. A shard whose
+//! ready pool drains steals work from sibling shards; the stolen claim is
+//! granted by the *victim* shard's lease table, so expiry / reclaim /
+//! redispatch semantics are unchanged by stealing. K = 1 reproduces the
+//! pre-sharding dock bit-for-bit.
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::controller::{Controller, SampleMeta};
 use super::lease::{LeaseClock, DEFAULT_LEASE_TICKS};
 use super::network::{CommLedger, LinkClass, SharedLedger};
 use super::notify::{wait_ready_impl, Notifier};
+use super::placement::Placement;
 use super::sample::{FieldKind, PartialRollout, Sample, Segment, Stage};
 use super::warehouse::{Conservation, StoreOutcome, Warehouse};
 use super::SampleFlow;
-use crate::metrics::FlowRecovery;
+use crate::metrics::{DockShard, DockShardReport, FlowRecovery};
 use crate::runtime::Tensor;
 
 /// Placement of the dock across the cluster: which node hosts each
@@ -21,7 +33,9 @@ use crate::runtime::Tensor;
 pub struct DockTopology {
     /// node id per warehouse (paper: one warehouse per node, S = nodes)
     pub warehouse_nodes: Vec<usize>,
-    /// node id per worker state's controller (co-located with its worker)
+    /// node id per worker state's controller (co-located with its worker);
+    /// with K > 1 controller shards, shard k of a stage lives on
+    /// `(node + k) % n_nodes`
     pub controller_nodes: BTreeMap<Stage, usize>,
 }
 
@@ -39,24 +53,44 @@ impl DockTopology {
     }
 }
 
-/// The distributed transfer dock (paper Fig. 4).
+/// The distributed transfer dock (paper Fig. 4), with K controller shards
+/// per worker state.
 pub struct TransferDock {
     warehouses: Vec<Arc<Warehouse>>,
-    controllers: BTreeMap<Stage, Controller>,
+    /// per worker state: K controller shards; shard k owns the samples
+    /// [`Placement::shard_of`] maps to k
+    controllers: BTreeMap<Stage, Vec<Controller>>,
+    /// the single shared sample → (shard, warehouse) routing policy
+    placement: Placement,
+    /// steal from siblings once the home shard's ready pool has drained
+    /// to at most this depth (0 = steal only when empty)
+    steal_threshold: usize,
     ledger: SharedLedger,
     next_index: AtomicU64,
-    /// wakes blocked stage workers on every state change (wait_ready)
-    notify: Notifier,
-    /// serializes the snapshot→broadcast section so controllers always
-    /// observe presence masks in monotone order. Without it, two stage
-    /// threads writing different fields of the same sample could
-    /// broadcast their snapshots out of order, and the older mask would
-    /// un-ready (or re-ready) the sample at a controller forever. A
-    /// snapshot taken under this lock reflects every store that preceded
-    /// any earlier-broadcast snapshot, so payload stores themselves (and
-    /// all fetches / readiness requests) stay outside the lock and run
-    /// concurrently across stage threads.
-    meta_order: Mutex<()>,
+    /// per-shard wakeup channel: a claim waits on its home shard and is
+    /// woken by that shard's broadcasts / releases / reclaims (wait_ready)
+    notify: Vec<Notifier>,
+    /// per-shard broadcast lock, indexed by [`Placement::shard_of`].
+    /// Serializes the snapshot→broadcast section so the shard's
+    /// controllers always observe presence masks in monotone order.
+    /// Without it, two stage threads writing different fields of the same
+    /// sample could broadcast their snapshots out of order, and the older
+    /// mask would un-ready (or re-ready) the sample at a controller
+    /// forever. A snapshot taken under this lock reflects every store
+    /// that preceded any earlier-broadcast snapshot, so payload stores
+    /// themselves (and all fetches / readiness requests) stay outside the
+    /// lock and run concurrently across stage threads — and since a
+    /// sample's broadcasts only ever touch its owning shard's
+    /// controllers, writebacks to *different* shards never contend.
+    meta_order: Vec<Mutex<()>>,
+    /// round-robin cursor per stage: spreads pullers' home shards so K
+    /// shards serve K claimants in parallel instead of all hammering
+    /// shard 0 and stealing the rest
+    cursor: BTreeMap<Stage, AtomicUsize>,
+    /// per-shard dispatch counters (samples handed out by the shard to a
+    /// home claimant / stolen from it by a sibling's claimant)
+    shard_claims: Vec<AtomicU64>,
+    shard_steals: Vec<AtomicU64>,
     /// flow-wide logical clock the claim leases are measured against;
     /// advanced only via [`SampleFlow::tick_lease_clock`]
     clock: Arc<LeaseClock>,
@@ -71,27 +105,76 @@ impl TransferDock {
     /// clock nobody ticks never expires anything, so flows driven by the
     /// sync executor behave exactly as before.
     pub fn with_lease(topology: DockTopology, lease_ticks: u64) -> Self {
+        Self::with_shards(topology, lease_ticks, 1, 0)
+    }
+
+    /// Build with K controller shards per worker state. `steal_threshold`
+    /// is the home-shard ready depth at or below which a short claim
+    /// steals from siblings. K = 1 is the degenerate single-controller
+    /// dock (bit-identical retired sets and stamps to the pre-sharding
+    /// dock — the refactor's differential oracle).
+    pub fn with_shards(
+        topology: DockTopology,
+        lease_ticks: u64,
+        shards: usize,
+        steal_threshold: usize,
+    ) -> Self {
+        let shards = shards.max(1);
         let clock = Arc::new(LeaseClock::default());
-        let warehouses = topology
+        let warehouses: Vec<Arc<Warehouse>> = topology
             .warehouse_nodes
             .iter()
             .enumerate()
             .map(|(id, &node)| Arc::new(Warehouse::new(id, node)))
             .collect();
-        let controllers = topology
+        let n_nodes = topology.warehouse_nodes.len().max(1);
+        let controllers: BTreeMap<Stage, Vec<Controller>> = topology
             .controller_nodes
             .iter()
             .map(|(&stage, &node)| {
-                (stage, Controller::with_lease(stage, node, Arc::clone(&clock), lease_ticks))
+                let cs = (0..shards)
+                    .map(|k| {
+                        // shard 0 keeps the declared node (K=1 identity);
+                        // siblings spread round-robin from it
+                        let cnode = if k == 0 { node } else { (node + k) % n_nodes };
+                        Controller::with_lease(stage, cnode, Arc::clone(&clock), lease_ticks)
+                    })
+                    .collect();
+                (stage, cs)
             })
             .collect();
+        let placement = if shards == 1 {
+            Placement::modulo(warehouses.len())
+        } else {
+            // a shard's home node is its Generation controller's node
+            // (the payload producer); the co-located warehouse — when one
+            // exists — stores the shard's samples
+            let gen_base = topology
+                .controller_nodes
+                .get(&Stage::Generation)
+                .copied()
+                .unwrap_or(0);
+            let affinity = (0..shards)
+                .map(|k| {
+                    let home = if k == 0 { gen_base } else { (gen_base + k) % n_nodes };
+                    topology.warehouse_nodes.iter().position(|&n| n == home)
+                })
+                .collect();
+            Placement::sharded(warehouses.len(), affinity)
+        };
+        let cursor = controllers.keys().map(|&s| (s, AtomicUsize::new(0))).collect();
         Self {
             warehouses,
             controllers,
+            placement,
+            steal_threshold,
             ledger: SharedLedger::default(),
             next_index: AtomicU64::new(0),
-            notify: Notifier::default(),
-            meta_order: Mutex::new(()),
+            notify: (0..shards).map(|_| Notifier::default()).collect(),
+            meta_order: (0..shards).map(|_| Mutex::new(())).collect(),
+            cursor,
+            shard_claims: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_steals: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             clock,
         }
     }
@@ -100,12 +183,24 @@ impl TransferDock {
         self.warehouses.len()
     }
 
+    /// Number of worker states (the paper's C), not controller instances.
     pub fn n_controllers(&self) -> usize {
         self.controllers.len()
     }
 
+    /// Controller shards per worker state (K).
+    pub fn controller_shards(&self) -> usize {
+        self.placement.shards()
+    }
+
+    /// The dock's sample → (shard, warehouse) routing policy, exposed so
+    /// tests and tools can recompute ownership deterministically.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
     fn warehouse_for(&self, index: u64) -> &Arc<Warehouse> {
-        &self.warehouses[(index % self.warehouses.len() as u64) as usize]
+        &self.warehouses[self.placement.warehouse_of(index)]
     }
 
     fn link(&self, a: usize, b: usize) -> LinkClass {
@@ -116,12 +211,15 @@ impl TransferDock {
         }
     }
 
-    /// Broadcast a metadata record from a warehouse to every controller
-    /// (Eq. 4's `(C+1)·M` metadata cost: C controller copies + the
-    /// warehouse's own bookkeeping write).
+    /// Broadcast a metadata record from a warehouse to the owning shard's
+    /// controller of every worker state (Eq. 4's `(C+1)·M` metadata cost:
+    /// C controller copies + the warehouse's own bookkeeping write).
+    /// Callers must hold the owning shard's `meta_order` lock.
     fn broadcast(&self, from_node: usize, meta: SampleMeta) {
+        let shard = self.placement.shard_of(meta.index);
         self.ledger.record(LinkClass::Local, SampleMeta::WIRE_BYTES); // warehouse bookkeeping
-        for c in self.controllers.values() {
+        for cs in self.controllers.values() {
+            let c = &cs[shard];
             self.ledger.record(self.link(from_node, c.node), SampleMeta::WIRE_BYTES);
             c.on_broadcast(meta);
         }
@@ -139,13 +237,85 @@ impl TransferDock {
         }
     }
 
+    /// Home shard for one claim: round-robin over shards so concurrent
+    /// pullers spread instead of all draining shard 0.
+    fn home_shard(&self, stage: Stage) -> usize {
+        let k = self.placement.shards();
+        if k <= 1 {
+            return 0;
+        }
+        self.cursor
+            .get(&stage)
+            .map(|c| c.fetch_add(1, Ordering::Relaxed) % k)
+            .unwrap_or(0)
+    }
+
+    /// The claim path: ask the home shard's controller, then — if the
+    /// handout came up short and the home pool has drained to the steal
+    /// threshold — steal from sibling shards. A stolen claim is granted
+    /// by the *victim's* lease table (it owns the sample), so lease
+    /// expiry / reclaim / redispatch behave exactly as for a home claim;
+    /// the steal itself is a cross-node controller→controller RPC charged
+    /// to the ledger as `InterNode` per the `NetworkModel`. `charge_empty`
+    /// preserves the per-entry-point accounting convention: a blocking or
+    /// streaming poll is free when it returns nothing, a one-shot
+    /// `request_ready` always pays its round-trip.
+    fn claim_at(
+        &self,
+        stage: Stage,
+        home: usize,
+        max_n: usize,
+        charge_empty: bool,
+    ) -> Result<Vec<SampleMeta>> {
+        let cs = self
+            .controllers
+            .get(&stage)
+            .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
+        let k = cs.len();
+        let mut metas = cs[home].request(max_n);
+        if !metas.is_empty() {
+            self.shard_claims[home].fetch_add(metas.len() as u64, Ordering::Relaxed);
+        }
+        if k > 1 && metas.len() < max_n && cs[home].ready_count() <= self.steal_threshold {
+            for off in 1..k {
+                if metas.len() >= max_n {
+                    break;
+                }
+                let victim = (home + off) % k;
+                let got = cs[victim].request(max_n - metas.len());
+                if got.is_empty() {
+                    continue;
+                }
+                // exactly one InterNode RPC per cross-shard steal, metas
+                // on the wire; the victim's fair-share cap and lease
+                // grant applied above in `request`
+                self.ledger
+                    .record(LinkClass::InterNode, (got.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
+                self.ledger.note_requests_on(LinkClass::InterNode, 1);
+                self.shard_steals[victim].fetch_add(got.len() as u64, Ordering::Relaxed);
+                metas.extend(got);
+            }
+        }
+        if !metas.is_empty() || charge_empty {
+            // the worker→home-controller request itself: node-local by
+            // construction (controller co-located), metadata-sized
+            self.ledger
+                .record(LinkClass::Local, (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
+            self.ledger.note_requests_on(LinkClass::Local, 1);
+        }
+        Ok(metas)
+    }
+
     /// Consume a finished sample after the update stage: remove the
-    /// payload from its warehouse and retire the metadata everywhere.
+    /// payload from its warehouse and retire the metadata at its owning
+    /// shard everywhere.
     fn retire_inner(&self, index: u64) -> Option<Sample> {
-        let _order = self.meta_order.lock().unwrap();
+        let shard = self.placement.shard_of(index);
+        let _order = self.meta_order[shard].lock().unwrap();
         let w = self.warehouse_for(index).clone();
         let s = w.remove(index)?;
-        for c in self.controllers.values() {
+        for cs in self.controllers.values() {
+            let c = &cs[shard];
             self.ledger.record(self.link(w.node, c.node), SampleMeta::WIRE_BYTES);
             c.on_retire(index);
         }
@@ -170,20 +340,26 @@ impl TransferDock {
         self.warehouses.iter().map(|w| w.superseded_writebacks()).sum()
     }
 
-    pub fn controller(&self, stage: Stage) -> Option<&Controller> {
-        self.controllers.get(&stage)
+    /// Shard k's controller for `stage` (shard 0 is the only shard of an
+    /// unsharded dock).
+    pub fn controller(&self, stage: Stage, shard: usize) -> Option<&Controller> {
+        self.controllers.get(&stage).and_then(|cs| cs.get(shard))
     }
 }
 
 impl SampleFlow for TransferDock {
     /// Batched admission: payloads land in their shards first, then the
-    /// metadata for the whole batch is broadcast under **one**
-    /// `meta_order` acquisition and waiters are woken **once** — an
-    /// admission RPC per distinct warehouse touched, not per sample (the
-    /// same batching `fetch` already does).
+    /// metadata is broadcast per owning controller shard — each shard's
+    /// slice of the batch under **one** acquisition of *that shard's*
+    /// `meta_order`, with that shard's waiters woken **once**. Round
+    /// trips: one admission RPC per distinct warehouse touched plus one
+    /// metadata RPC per distinct (warehouse, controller) pair — the
+    /// batch's metas travel to each controller together, never one RPC
+    /// per sample (Eq. 4's per-sample byte volume is still recorded).
     fn put_samples(&self, samples: Vec<Sample>) -> Result<Vec<u64>> {
+        let k = self.placement.shards();
         let mut indices = Vec::with_capacity(samples.len());
-        let mut metas: Vec<(usize, SampleMeta)> = Vec::with_capacity(samples.len());
+        let mut by_shard: Vec<Vec<(usize, SampleMeta)>> = vec![Vec::new(); k];
         let mut touched: Vec<usize> = Vec::new();
         let ingest_node = self.warehouses[0].node;
         for mut s in samples {
@@ -194,7 +370,7 @@ impl SampleFlow for TransferDock {
             // warehouse 0, where the data loader runs) to the shard
             self.ledger
                 .record(self.link(ingest_node, w.node), s.payload_bytes() as u64);
-            metas.push((w.node, self.meta_of(&s, w.id)));
+            by_shard[self.placement.shard_of(index)].push((w.id, self.meta_of(&s, w.id)));
             touched.push(w.id);
             w.put(s)?;
             indices.push(index);
@@ -206,12 +382,28 @@ impl SampleFlow for TransferDock {
             self.ledger.note_requests_on(self.link(ingest_node, w.node), 1);
             self.ledger.note_store_bytes(w.traffic_bytes());
         }
-        let _order = self.meta_order.lock().unwrap();
-        for (wnode, meta) in metas {
-            self.broadcast(wnode, meta);
+        for (shard, metas) in by_shard.iter().enumerate() {
+            if metas.is_empty() {
+                continue;
+            }
+            // one batched metadata RPC per distinct (warehouse,
+            // controller) pair feeding this shard
+            let mut wids: Vec<usize> = metas.iter().map(|&(wid, _)| wid).collect();
+            wids.sort_unstable();
+            wids.dedup();
+            for &wid in &wids {
+                let wnode = self.warehouses[wid].node;
+                for cs in self.controllers.values() {
+                    self.ledger.note_requests_on(self.link(wnode, cs[shard].node), 1);
+                }
+            }
+            let _order = self.meta_order[shard].lock().unwrap();
+            for &(wid, meta) in metas {
+                self.broadcast(self.warehouses[wid].node, meta);
+            }
+            drop(_order);
+            self.notify[shard].notify();
         }
-        drop(_order);
-        self.notify.notify();
         Ok(indices)
     }
 
@@ -221,44 +413,58 @@ impl SampleFlow for TransferDock {
         max_n: usize,
         timeout: std::time::Duration,
     ) -> Result<Vec<SampleMeta>> {
-        // a blocking worker sits on its co-located controller and is woken
-        // by the (already-accounted) metadata broadcasts — empty re-polls
-        // are free, only a successful handout is charged. Charging every
-        // wakeup would make dispatch accounting scale with wall-clock
-        // time instead of data movement.
-        wait_ready_impl(&self.notify, timeout, || {
-            let c = self
-                .controllers
-                .get(&stage)
-                .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
-            let metas = c.request(max_n);
-            if !metas.is_empty() {
-                self.ledger.record(
-                    LinkClass::Local,
-                    (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES,
-                );
-                self.ledger.note_requests_on(LinkClass::Local, 1);
-            }
-            Ok(metas)
+        // a blocking worker sits on its home shard's controller and is
+        // woken by that shard's (already-accounted) metadata broadcasts —
+        // empty re-polls are free, only a successful handout is charged.
+        // Charging every wakeup would make dispatch accounting scale with
+        // wall-clock time instead of data movement. A sample turning
+        // ready on a *sibling* shard doesn't wake this waiter; the steal
+        // path picks it up on the next poll (workers loop with bounded
+        // timeouts), so cross-shard work costs at most one timeout of
+        // latency, never a lost sample.
+        let home = self.home_shard(stage);
+        wait_ready_impl(&self.notify[home], timeout, || {
+            self.claim_at(stage, home, max_n, false)
         })
     }
 
     fn release(&self, stage: Stage, indices: &[u64]) {
-        if let Some(c) = self.controllers.get(&stage) {
-            c.release(indices);
-            self.notify.notify();
+        if let Some(cs) = self.controllers.get(&stage) {
+            if cs.len() == 1 {
+                cs[0].release(indices);
+                self.notify[0].notify();
+                return;
+            }
+            let mut woke = vec![false; cs.len()];
+            for &i in indices {
+                let shard = self.placement.shard_of(i);
+                cs[shard].release(&[i]);
+                woke[shard] = true;
+            }
+            for (shard, w) in woke.into_iter().enumerate() {
+                self.notify[shard].notify_if(w);
+            }
         }
     }
 
     fn tick_lease_clock(&self) -> usize {
         let now = self.clock.advance();
         let mut reclaimed = 0;
-        for c in self.controllers.values() {
-            // reclaim is controller-local bookkeeping (no wire traffic:
-            // the metadata never left the controller's table)
-            reclaimed += c.expire(now);
+        let mut woke = vec![false; self.placement.shards()];
+        for cs in self.controllers.values() {
+            for (shard, c) in cs.iter().enumerate() {
+                // reclaim is controller-local bookkeeping (no wire
+                // traffic: the metadata never left the shard's table)
+                let n = c.expire(now);
+                reclaimed += n;
+                if n > 0 {
+                    woke[shard] = true;
+                }
+            }
         }
-        self.notify.notify_if(reclaimed > 0);
+        for (shard, w) in woke.into_iter().enumerate() {
+            self.notify[shard].notify_if(w);
+        }
         reclaimed
     }
 
@@ -267,59 +473,59 @@ impl SampleFlow for TransferDock {
     }
 
     fn renew(&self, stage: Stage, indices: &[u64]) {
-        if let Some(c) = self.controllers.get(&stage) {
-            c.renew(indices);
+        if let Some(cs) = self.controllers.get(&stage) {
+            if cs.len() == 1 {
+                cs[0].renew(indices);
+                return;
+            }
+            for &i in indices {
+                cs[self.placement.shard_of(i)].renew(&[i]);
+            }
         }
     }
 
     fn lease_stats(&self) -> FlowRecovery {
         let mut out = FlowRecovery::default();
-        for c in self.controllers.values() {
-            out.merge(&c.lease_stats());
+        for cs in self.controllers.values() {
+            for c in cs {
+                out.merge(&c.lease_stats());
+            }
         }
         out.superseded_writebacks = self.superseded_writebacks();
         out
     }
 
     fn ready_depth(&self, stage: Stage) -> usize {
-        self.controllers.get(&stage).map(|c| c.ready_count()).unwrap_or(0)
+        self.controllers
+            .get(&stage)
+            .map(|cs| cs.iter().map(|c| c.ready_count()).sum())
+            .unwrap_or(0)
     }
 
+    /// Register pullers **per shard**: n pullers spread round-robin over
+    /// the K shards, so each shard's fair-share cap reflects the pullers
+    /// whose home it is (a shard with 2 of 8 pullers caps handouts at
+    /// ⌈its ready/2⌉, not ⌈its ready/8⌉).
     fn note_pullers(&self, stage: Stage, n: usize) {
-        if let Some(c) = self.controllers.get(&stage) {
-            c.set_pullers(n);
+        if let Some(cs) = self.controllers.get(&stage) {
+            let k = cs.len();
+            for (shard, c) in cs.iter().enumerate() {
+                c.set_pullers(n / k + usize::from(shard < n % k));
+            }
         }
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
-        let c = self
-            .controllers
-            .get(&stage)
-            .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
-        let metas = c.request(max_n);
-        // the request itself is worker→controller, node-local by
-        // construction (controller co-located), metadata-sized
-        self.ledger
-            .record(LinkClass::Local, (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
-        self.ledger.note_requests_on(LinkClass::Local, 1);
-        Ok(metas)
+        let home = self.home_shard(stage);
+        self.claim_at(stage, home, max_n, true)
     }
 
     fn try_claim(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
-        let c = self
-            .controllers
-            .get(&stage)
-            .ok_or_else(|| anyhow!("no controller for stage {stage:?}"))?;
-        let metas = c.request(max_n);
         // same charging rule as `wait_ready`: the streaming scheduler
         // polls between decode steps, and an empty poll moves no
         // metadata — only a successful handout is a dispatch event
-        if !metas.is_empty() {
-            self.ledger
-                .record(LinkClass::Local, (metas.len() as u64 + 1) * SampleMeta::WIRE_BYTES);
-            self.ledger.note_requests_on(LinkClass::Local, 1);
-        }
-        Ok(metas)
+        let home = self.home_shard(stage);
+        self.claim_at(stage, home, max_n, false)
     }
 
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>> {
@@ -423,8 +629,9 @@ impl SampleFlow for TransferDock {
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
+        let shard = self.placement.shard_of(index);
         let out = self.retire_inner(index);
-        self.notify.notify();
+        self.notify[shard].notify();
         out
     }
 
@@ -436,6 +643,23 @@ impl SampleFlow for TransferDock {
         self.warehouses.len()
     }
 
+    fn dock_report(&self) -> DockShardReport {
+        let k = self.placement.shards();
+        let mut per_shard = Vec::with_capacity(k);
+        for shard in 0..k {
+            let mut reclaimed = 0;
+            for cs in self.controllers.values() {
+                reclaimed += cs[shard].lease_stats().reclaimed;
+            }
+            per_shard.push(DockShard {
+                claims: self.shard_claims[shard].load(Ordering::Relaxed),
+                stolen: self.shard_steals[shard].load(Ordering::Relaxed),
+                reclaimed,
+            });
+        }
+        DockShardReport { shards: k, per_shard }
+    }
+
     fn len(&self) -> usize {
         self.warehouses.iter().map(|w| w.len()).sum()
     }
@@ -444,7 +668,8 @@ impl SampleFlow for TransferDock {
 impl TransferDock {
     /// The single writeback path for every producing stage: record the
     /// payload movement, merge fields (plus the decoded completion when
-    /// the generation state writes), re-broadcast metadata, wake waiters.
+    /// the generation state writes), re-broadcast metadata to the owning
+    /// shard, wake that shard's waiters.
     fn writeback(
         &self,
         requester_node: usize,
@@ -477,15 +702,17 @@ impl TransferDock {
             );
             return Ok(());
         }
-        // snapshot + broadcast under meta_order: whichever writeback
-        // snapshots later necessarily sees a superset mask, so broadcast
-        // order is monotone per sample while payload stores (above) run
-        // concurrently across stage threads
-        let _order = self.meta_order.lock().unwrap();
+        // snapshot + broadcast under the owning shard's meta_order:
+        // whichever writeback snapshots later necessarily sees a superset
+        // mask, so broadcast order is monotone per sample while payload
+        // stores (above) run concurrently across stage threads — and
+        // across shards, broadcasts never serialize at all
+        let shard = self.placement.shard_of(index);
+        let _order = self.meta_order[shard].lock().unwrap();
         let meta = w.fetch_meta_snapshot(index)?;
         self.broadcast(w.node, meta);
         drop(_order);
-        self.notify.notify();
+        self.notify[shard].notify();
         Ok(())
     }
 }
@@ -496,6 +723,10 @@ mod tests {
 
     fn dock(nodes: usize) -> TransferDock {
         TransferDock::new(DockTopology::spread(nodes))
+    }
+
+    fn sharded(nodes: usize, shards: usize, steal_threshold: usize) -> TransferDock {
+        TransferDock::with_shards(DockTopology::spread(nodes), DEFAULT_LEASE_TICKS, shards, steal_threshold)
     }
 
     fn prompts(n: usize) -> Vec<Sample> {
@@ -586,8 +817,10 @@ mod tests {
         // * payload bytes: Σ payload per sample (link by shard placement)
         // * metadata: per sample, (C+1) broadcast records + 1 warehouse
         //   bookkeeping record — identical to per-sample admission
-        // * round-trips: ONE per distinct warehouse touched, not one per
-        //   sample (the batching this pin protects)
+        // * round-trips: ONE admission RPC per distinct warehouse touched
+        //   plus ONE metadata RPC per distinct (warehouse, controller)
+        //   pair — the batch's metas reach each controller together,
+        //   never one RPC per sample (the batching this pin protects)
         let d = dock(4);
         let batch = prompts(8);
         let payload: u64 = batch.iter().map(|s| s.payload_bytes() as u64).sum();
@@ -601,9 +834,20 @@ mod tests {
             payload + meta_bytes,
             "admission bytes must be payload + (C+1) metadata records per sample"
         );
+        // 4 warehouses each feed all 5 stage controllers: 20 broadcast
+        // RPCs; plus 4 admission RPCs. Controllers sit on nodes
+        // [0, 1, 2, 3, 0] (spread(4)), warehouses on [0, 1, 2, 3]: the
+        // node-local pairs are w0→{gen, update} and wi→ci for i in 1..3,
+        // plus the node-local admission into warehouse 0.
         let trips =
             (after.requests + after.local_requests) - (before.requests + before.local_requests);
-        assert_eq!(trips, 4, "one admission round-trip per distinct warehouse, not per sample");
+        assert_eq!(
+            trips,
+            4 + 4 * c,
+            "one admission RPC per warehouse + one broadcast RPC per (warehouse, controller) pair"
+        );
+        assert_eq!(after.local_requests - before.local_requests, 6);
+        assert_eq!(after.requests - before.requests, 18);
     }
 
     #[test]
@@ -731,5 +975,111 @@ mod tests {
         assert_eq!(b.len(), 2);
         let ai: Vec<u64> = a.iter().map(|m| m.index).collect();
         assert!(b.iter().all(|m| !ai.contains(&m.index)));
+    }
+
+    // ------------------------------------------------- sharded dock
+
+    #[test]
+    fn sharded_dock_claims_every_sample_exactly_once() {
+        let d = sharded(4, 4, 0);
+        let idx = d.put_samples(prompts(32)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        loop {
+            let metas = d.request_ready(Stage::Generation, 4).unwrap();
+            if metas.is_empty() {
+                break;
+            }
+            for m in &metas {
+                assert!(seen.insert(m.index), "sample {} dispatched twice across shards", m.index);
+            }
+        }
+        assert_eq!(seen.len(), idx.len(), "every sample claimed exactly once over 4 shards");
+        let rep = d.dock_report();
+        assert_eq!(rep.shards, 4);
+        let handed: u64 = rep.per_shard.iter().map(|s| s.claims + s.stolen).sum();
+        assert_eq!(handed as usize, idx.len(), "per-shard counters must cover every handout");
+    }
+
+    #[test]
+    fn affinity_places_payloads_with_the_owning_shard() {
+        let d = sharded(4, 4, 0);
+        let idx = d.put_samples(prompts(32)).unwrap();
+        let p = d.placement();
+        for &i in &idx {
+            let expect = p.warehouse_of(i);
+            assert!(d.warehouses[expect].fetch(i).is_ok(), "sample {i} missing from its shard warehouse");
+        }
+        // spread(4) co-locates a warehouse with every shard node, so the
+        // modulo fallback must never fire: each sample sits exactly where
+        // its owning shard lives
+        for &i in &idx {
+            assert_eq!(p.warehouse_of(i), (d.placement().shard_of(i) + 0) % 4);
+        }
+    }
+
+    #[test]
+    fn drained_shard_steals_from_siblings_with_one_internode_rpc_each() {
+        let d = sharded(4, 2, 0);
+        let idx = d.put_samples(prompts(8)).unwrap();
+        let p = d.placement().clone();
+        let owned: Vec<usize> = (0..2)
+            .map(|k| idx.iter().filter(|&&i| p.shard_of(i) == k).count())
+            .collect();
+        assert!(owned.iter().all(|&n| n > 0), "mix must populate both shards: {owned:?}");
+        let before = d.ledger();
+        // one greedy claim: the home shard (cursor starts at 0) drains its
+        // own pool, then steals the sibling's entire pool
+        let metas = d.request_ready(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(metas.len(), 8, "steal must surface the sibling's work");
+        let after = d.ledger();
+        assert_eq!(
+            after.requests - before.requests,
+            1,
+            "exactly one InterNode RPC per cross-shard steal"
+        );
+        let rep = d.dock_report();
+        assert_eq!(rep.per_shard[0].claims as usize, owned[0]);
+        assert_eq!(rep.per_shard[1].stolen as usize, owned[1]);
+        // stolen claims are leases in the victim's table: releasing them
+        // hands the work back to the owning shard, not the thief
+        let stolen: Vec<u64> =
+            metas.iter().map(|m| m.index).filter(|&i| p.shard_of(i) == 1).collect();
+        d.release(Stage::Generation, &stolen);
+        assert_eq!(d.ready_depth(Stage::Generation), stolen.len());
+    }
+
+    #[test]
+    fn steal_threshold_holds_work_back() {
+        // threshold 0 and a bounded claim that leaves the home pool
+        // non-empty: the claimant must NOT steal
+        let d = sharded(4, 2, 0);
+        d.put_samples(prompts(16)).unwrap();
+        let before = d.ledger();
+        let metas = d.request_ready(Stage::Generation, 1).unwrap();
+        assert_eq!(metas.len(), 1);
+        let after = d.ledger();
+        assert_eq!(after.requests, before.requests, "home pool not drained: no steal RPC");
+        let rep = d.dock_report();
+        assert_eq!(rep.per_shard.iter().map(|s| s.stolen).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn sharded_lease_expiry_reclaims_stolen_claims_at_the_owner() {
+        let d = TransferDock::with_shards(DockTopology::spread(4), 2, 2, 0);
+        let idx = d.put_samples(prompts(6)).unwrap();
+        // claim everything (home + steals), then go silent
+        let claimed = d.request_ready(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(claimed.len(), 6);
+        assert!(d.request_ready(Stage::Generation, usize::MAX).unwrap().is_empty());
+        d.tick_lease_clock();
+        assert_eq!(d.tick_lease_clock(), 6, "stolen leases expire in their owners' tables");
+        let again = d.request_ready(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(again.len(), 6, "reclaimed samples redispatch across shards");
+        let s = d.lease_stats();
+        assert_eq!(s.reclaimed, 6);
+        assert!(s.consistent(), "{s:?}");
+        let rep = d.dock_report();
+        assert_eq!(rep.per_shard.iter().map(|s| s.reclaimed).sum::<u64>(), 6);
+        drop(idx);
     }
 }

@@ -24,6 +24,7 @@ mod dock;
 pub mod lease;
 mod network;
 mod notify;
+mod placement;
 mod replay_buffer;
 mod sample;
 pub mod volume;
@@ -33,6 +34,7 @@ pub use controller::{Controller, SampleMeta};
 pub use dock::{DockTopology, TransferDock};
 pub use lease::{LeaseClock, DEFAULT_LEASE_TICKS};
 pub use network::{CommLedger, LinkClass, NetworkModel};
+pub use placement::Placement;
 pub use replay_buffer::ReplayBuffer;
 pub use sample::{push_segment, FieldKind, PartialRollout, Sample, Segment, Stage, FIELD_ORDER};
 pub use volume::{td_tcv_gb, tcv_gb, cv_update_gb, VolumeParams};
@@ -98,7 +100,9 @@ pub trait SampleFlow: Send + Sync {
     /// the elastic autoscaler samples on lease ticks. Control-plane
     /// introspection by the driving executor: costs no ledger bytes
     /// (the driver reads its co-located controller's counter, it does
-    /// not move metadata).
+    /// not move metadata). Sharded flows report the **sum** across
+    /// controller shards — with work stealing any shard's pool is
+    /// reachable from any puller, so the backlog signal is global.
     fn ready_depth(&self, _stage: Stage) -> usize {
         0
     }
@@ -107,7 +111,9 @@ pub trait SampleFlow: Send + Sync {
     /// single request is capped near `⌈ready/n⌉` instead of draining the
     /// whole queue into one replica's batch. Called by the executor
     /// whenever a stage's replica count changes; flows without fairness
-    /// support ignore it.
+    /// support ignore it. Sharded flows distribute the `n` pullers over
+    /// their controller shards (the fair-share cap is **per shard**: a
+    /// shard serving 2 of 8 pullers caps at ⌈its ready/2⌉).
     fn note_pullers(&self, _stage: Stage, _n: usize) {}
     /// Fetch full payloads for the given metadata (records comm bytes).
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
@@ -183,6 +189,12 @@ pub trait SampleFlow: Send + Sync {
     /// Number of parallel payload stores (warehouses). Dispatch time
     /// divides by this: warehouses serve concurrently (Eq. 4's /S).
     fn shards(&self) -> usize;
+    /// Per-controller-shard dispatch counters (claims handed out at the
+    /// home shard, samples stolen *from* each shard by siblings, leases
+    /// reclaimed per shard). Unsharded flows report the empty default.
+    fn dock_report(&self) -> crate::metrics::DockShardReport {
+        crate::metrics::DockShardReport::default()
+    }
     /// Dispatch seconds implied by the accumulated ledger under `net`,
     /// honouring store parallelism.
     fn dispatch_secs(&self, net: &NetworkModel) -> f64 {

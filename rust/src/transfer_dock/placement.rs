@@ -1,0 +1,154 @@
+//! The single shared placement policy: which controller shard owns a
+//! sample, and which warehouse stores its payload.
+//!
+//! Both routing decisions used to live apart — `TransferDock` hardcoded
+//! `index % n_warehouses` while controller sharding didn't exist — so the
+//! policy is now defined exactly once and used by both. The invariants the
+//! rest of the dock builds on:
+//!
+//! * **Determinism** — shard and warehouse are pure functions of the
+//!   sample index. Any worker (or test) can recompute ownership without
+//!   asking the dock, and reclaim/redispatch/steal never move a sample's
+//!   home.
+//! * **K = 1 degeneracy** — with one shard the warehouse rule is exactly
+//!   the historical `index % n_warehouses` round-robin, so a single-shard
+//!   dock is bit-identical to the pre-sharding dock (the refactor's
+//!   differential oracle).
+//! * **Affinity** — with K > 1 shards a sample's payload lands on the
+//!   warehouse co-located with its owning shard's node when one exists,
+//!   falling back to the modulo policy otherwise, so a shard's claims
+//!   fetch node-locally in the common case.
+
+/// Sample → (controller shard, warehouse) routing policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    shards: usize,
+    n_warehouses: usize,
+    /// per shard: the warehouse co-located with the shard's home node,
+    /// `None` when no warehouse lives there (modulo fallback)
+    affinity: Vec<Option<usize>>,
+}
+
+impl Placement {
+    /// The historical single-shard policy: warehouse = `index % n`.
+    pub fn modulo(n_warehouses: usize) -> Self {
+        Self { shards: 1, n_warehouses: n_warehouses.max(1), affinity: vec![None] }
+    }
+
+    /// K controller shards with explicit per-shard warehouse affinity
+    /// (`affinity.len()` defines K; entries are `None` where the shard's
+    /// node hosts no warehouse).
+    pub fn sharded(n_warehouses: usize, affinity: Vec<Option<usize>>) -> Self {
+        let n_warehouses = n_warehouses.max(1);
+        assert!(!affinity.is_empty(), "placement needs at least one shard");
+        for w in affinity.iter().flatten() {
+            assert!(*w < n_warehouses, "affinity points past the warehouse list");
+        }
+        Self { shards: affinity.len(), n_warehouses, affinity }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn n_warehouses(&self) -> usize {
+        self.n_warehouses
+    }
+
+    /// 64-bit finalizer (splitmix64): sample indices are sequential, so a
+    /// plain `index % K` would stripe whole admission batches shard by
+    /// shard in lockstep with the warehouse modulo; the mix decorrelates
+    /// the two while staying a pure function of the index.
+    fn mix(mut x: u64) -> u64 {
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+        x ^ (x >> 33)
+    }
+
+    /// Which controller shard owns this sample. Stable for the sample's
+    /// whole lifetime; 0 for every index when K = 1.
+    pub fn shard_of(&self, index: u64) -> usize {
+        if self.shards <= 1 {
+            0
+        } else {
+            (Self::mix(index) % self.shards as u64) as usize
+        }
+    }
+
+    /// Which warehouse stores this sample's payload: the owning shard's
+    /// co-located warehouse when K > 1 and one exists, else the modulo
+    /// policy (and always the modulo policy at K = 1).
+    pub fn warehouse_of(&self, index: u64) -> usize {
+        if self.shards > 1 {
+            if let Some(w) = self.affinity[self.shard_of(index)] {
+                return w;
+            }
+        }
+        (index % self.n_warehouses as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_is_the_modulo_policy() {
+        let p = Placement::modulo(4);
+        assert_eq!(p.shards(), 1);
+        for i in 0..64u64 {
+            assert_eq!(p.shard_of(i), 0, "K=1 owns everything on shard 0");
+            assert_eq!(
+                p.warehouse_of(i),
+                (i % 4) as usize,
+                "K=1 must reproduce the historical round-robin exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_and_in_range() {
+        let p = Placement::sharded(4, vec![Some(0), Some(1), Some(2), None]);
+        for i in 0..256u64 {
+            let s = p.shard_of(i);
+            assert!(s < 4);
+            assert_eq!(s, p.shard_of(i), "ownership must be a pure function of the index");
+        }
+    }
+
+    #[test]
+    fn shards_all_receive_samples() {
+        // the mix must spread sequential indices over every shard — a
+        // biased hash would turn "K shards" into one hot shard plus
+        // permanent steal traffic
+        for k in [2usize, 3, 4, 7] {
+            let p = Placement::sharded(k, vec![None; k]);
+            let mut counts = vec![0usize; k];
+            for i in 0..(k as u64 * 64) {
+                counts[p.shard_of(i)] += 1;
+            }
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(c > 16, "shard {s}/{k} starved: {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_routes_to_the_shard_warehouse() {
+        let p = Placement::sharded(4, vec![Some(3), Some(1), Some(0), Some(2)]);
+        for i in 0..128u64 {
+            let expect = [3usize, 1, 0, 2][p.shard_of(i)];
+            assert_eq!(p.warehouse_of(i), expect, "payload must follow the owning shard");
+        }
+    }
+
+    #[test]
+    fn missing_affinity_falls_back_to_modulo() {
+        let p = Placement::sharded(4, vec![None, None, None]);
+        for i in 0..64u64 {
+            assert_eq!(p.warehouse_of(i), (i % 4) as usize);
+        }
+    }
+}

@@ -24,7 +24,26 @@ use mindspeed_rl::sim::chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcom
 use mindspeed_rl::trainers::faults::FaultPlan;
 
 fn base_cfg(seed: u64) -> ChaosConfig {
-    ChaosConfig { iterations: 4, prompts_per_iter: 4, group_size: 2, seed, ..Default::default() }
+    // the CI chaos jobs run a DOCK_SHARDS ∈ {1, 4} matrix: every test in
+    // this suite must hold unchanged at any controller-shard count (the
+    // K-vs-K=1 retired-map oracle itself lives in tests/sharded_dock.rs)
+    let dock_shards: usize = std::env::var("DOCK_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let steal_threshold: usize = std::env::var("STEAL_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    ChaosConfig {
+        iterations: 4,
+        prompts_per_iter: 4,
+        group_size: 2,
+        seed,
+        dock_shards: dock_shards.max(1),
+        steal_threshold: if dock_shards > 1 { steal_threshold } else { 0 },
+        ..Default::default()
+    }
 }
 
 /// Every invariant a finished run must satisfy, against its fault-free

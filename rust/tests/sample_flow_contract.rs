@@ -611,3 +611,130 @@ fn release_store_retire_interleavings_leave_nothing_stranded() {
         assert!(s.consistent(), "{name}: {s:?}");
     }
 }
+
+// --------------------------------------------------------------------
+// Sharded dock (--dock-shards K): the SampleFlow contract must hold
+// when each stage's controller is partitioned into K shards with
+// work stealing between them (tests/sharded_dock.rs pins the full
+// differential oracle; these pin the contract-level invariants).
+
+fn sharded(shards: usize, lease_ticks: u64, steal_threshold: usize) -> Arc<TransferDock> {
+    Arc::new(TransferDock::with_shards(
+        DockTopology::spread(4),
+        lease_ticks,
+        shards,
+        steal_threshold,
+    ))
+}
+
+/// Samples hash across K shards, claims round-robin across home shards,
+/// and drained shards steal — yet no sample may ever be dispatched to
+/// two claimants, and none may be lost.
+#[test]
+fn sharded_dock_no_double_dispatch_across_shards() {
+    const N: usize = 32;
+    for k in [2usize, 3, 4] {
+        let flow = sharded(k, 64, 0);
+        let idx = flow.put_samples(prompts(N)).unwrap();
+        let mut seen: HashSet<u64> = HashSet::new();
+        loop {
+            // small batches force the claim cursor over every shard and
+            // the tail through the steal path
+            let metas = flow.request_ready(Stage::Generation, 5).unwrap();
+            if metas.is_empty() {
+                break;
+            }
+            for m in &metas {
+                assert!(seen.insert(m.index), "K={k}: double dispatch of {}", m.index);
+            }
+        }
+        assert_eq!(seen.len(), idx.len(), "K={k}: every sample claimed exactly once");
+        assert_eq!(flow.ready_depth(Stage::Generation), 0, "K={k}");
+    }
+}
+
+/// A stolen claim lives under the victim shard's lease table: it expires
+/// on the same clock, redispatches claimably, and the merged recovery
+/// accounting stays self-consistent — stealing must not create a second
+/// lease authority.
+#[test]
+fn steal_preserves_lease_invariants() {
+    let flow = sharded(2, 3, 0);
+    flow.put_samples(prompts(6)).unwrap();
+    // one greedy claim drains the home shard and steals the sibling dry;
+    // then the claimant goes silent
+    let claimed = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+    assert_eq!(claimed.len(), 6, "steal must fill the greedy claim");
+    assert!(flow.request_ready(Stage::Generation, usize::MAX).unwrap().is_empty());
+    // held until exactly the lease tick, across both shards at once
+    assert_eq!(flow.tick_lease_clock(), 0);
+    assert_eq!(flow.tick_lease_clock(), 0);
+    assert_eq!(flow.tick_lease_clock(), 6, "stolen claims expire with the rest");
+    let again = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+    assert_eq!(again.len(), 6, "reclaimed stolen claims must redispatch");
+    let s = flow.lease_stats();
+    assert_eq!(s.reclaimed, 6);
+    assert_eq!(s.redispatched, 6);
+    assert!(s.consistent(), "{s:?}");
+}
+
+/// Eq. 4 accounting for steals: a cross-shard steal is one extra
+/// InterNode RPC per victim shard that hands work over — not per sample,
+/// and never for empty victims.
+#[test]
+fn cross_shard_steal_charges_exactly_one_internode_rpc() {
+    let flow = sharded(2, 64, 0);
+    flow.put_samples(prompts(8)).unwrap();
+    let before = flow.ledger();
+    // the greedy claim drains the home shard, then steals the single
+    // sibling's whole pool in one handout
+    let metas = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+    assert_eq!(metas.len(), 8);
+    let after = flow.ledger();
+    assert_eq!(
+        after.requests - before.requests,
+        1,
+        "one cross-shard steal must cost exactly one InterNode RPC"
+    );
+    assert_eq!(
+        after.local_requests - before.local_requests,
+        1,
+        "the home-shard claim itself stays a local round-trip"
+    );
+    // a second greedy claim finds both shards empty: no steal, no RPC
+    let before = flow.ledger();
+    assert!(flow.request_ready(Stage::Generation, usize::MAX).unwrap().is_empty());
+    let after = flow.ledger();
+    assert_eq!(after.requests, before.requests, "empty steals are free");
+}
+
+/// The fair-share claim cap is per shard: with P registered pullers
+/// spread over K shards, a greedy claim takes at most its home shard's
+/// fair share (plus nothing — a non-drained home never steals), so one
+/// fast replica cannot monopolize the queue.
+#[test]
+fn per_shard_fair_share_cap_holds() {
+    const N: usize = 16;
+    let flow = sharded(2, 64, 0);
+    let idx = flow.put_samples(prompts(N)).unwrap();
+    flow.note_pullers(Stage::Generation, 4); // 2 pullers per shard
+    let a = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+    assert!(!a.is_empty());
+    assert!(
+        a.len() <= N / 2,
+        "greedy claim must be capped at the home shard's fair share, got {}",
+        a.len()
+    );
+    // peers drain the rest; exactly-once dispatch holds throughout
+    let mut seen: HashSet<u64> = a.iter().map(|m| m.index).collect();
+    loop {
+        let more = flow.request_ready(Stage::Generation, usize::MAX).unwrap();
+        if more.is_empty() {
+            break;
+        }
+        for m in &more {
+            assert!(seen.insert(m.index), "double dispatch of {}", m.index);
+        }
+    }
+    assert_eq!(seen.len(), idx.len(), "every sample claimed exactly once");
+}

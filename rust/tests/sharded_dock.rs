@@ -1,0 +1,232 @@
+//! Sharded-dock differential oracle (`--dock-shards K`,
+//! `--steal-threshold D`).
+//!
+//! The tentpole invariant: for ANY shard count K and any steal
+//! schedule, a run retires the *identical* sample map — same indices,
+//! same groups, same behavior-version stamps — as the K=1
+//! single-controller dock over the same seeded workload. Sharding and
+//! stealing are dispatch-topology choices; they must never change what
+//! gets trained. The oracle is composed with every other dataflow
+//! feature: chaos kills/stalls, elastic stage replicas, autoscaling,
+//! streaming generation, and resumable partial rollouts.
+//!
+//! Fixed seeds by default; `CHAOS_RANDOM_SEEDS=1` (the scheduled CI
+//! job) appends time-derived seeds for a fuzzing pass, printing a
+//! `[sharded-dock]` marker line the workflow greps for.
+
+use mindspeed_rl::sim::chaos::{run_baseline, run_chaos, ChaosConfig, ChaosOutcome};
+use mindspeed_rl::trainers::autoscale::AutoscaleConfig;
+use mindspeed_rl::trainers::faults::FaultPlan;
+
+fn base_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig { iterations: 4, prompts_per_iter: 4, group_size: 2, seed, ..Default::default() }
+}
+
+fn with_shards(cfg: &ChaosConfig, k: usize, steal: usize) -> ChaosConfig {
+    ChaosConfig { dock_shards: k, steal_threshold: steal, ..cfg.clone() }
+}
+
+fn seeds() -> Vec<u64> {
+    let mut seeds = vec![5, 42];
+    if std::env::var("CHAOS_RANDOM_SEEDS").as_deref() == Ok("1") {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64;
+        for i in 0..2u64 {
+            seeds.push(t ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        eprintln!("[sharded-dock] randomized-seed mode: {seeds:?}");
+    }
+    seeds
+}
+
+/// The oracle proper: retired map identity (set AND stamps) against the
+/// K=1 reference, plus the standing chaos invariants (zero loss, byte
+/// conservation per warehouse, self-consistent recovery accounting).
+fn assert_oracle(name: &str, cfg: &ChaosConfig, out: &ChaosOutcome, reference: &ChaosOutcome) {
+    assert!(
+        out.lossless(cfg),
+        "{name}: loss — retired {}/{} resident {} recovery {:?}",
+        out.retired.len(),
+        cfg.total_samples(),
+        out.resident_after,
+        out.recovery
+    );
+    assert_eq!(
+        out.retired, reference.retired,
+        "{name}: retired map (set or stamps) diverged from the K=1 dock"
+    );
+    for (i, c) in out.conservation.iter().enumerate() {
+        assert!(c.holds(), "{name}: warehouse {i} violates byte conservation: {c:?}");
+    }
+    let r = &out.recovery;
+    assert!(r.consistent(), "{name}: recovery accounting inconsistent: {r:?}");
+    assert_eq!(r.reclaimed, r.attempt_bumps, "{name}: {r:?}");
+}
+
+// --------------------------------------------------- fault-free sweep
+
+/// Any K and any steal threshold, fault-free: bit-identical retired
+/// maps to the K=1 dock AND to the centralized replay-buffer baseline,
+/// with zero reclaims (sharding must not manufacture lease churn).
+#[test]
+fn any_shard_and_steal_schedule_matches_the_unsharded_dock() {
+    for seed in seeds() {
+        // generous lease: a fault-free run must not reclaim even if the
+        // CI scheduler deschedules a worker briefly
+        let cfg = ChaosConfig { lease_ticks: 256, workers_per_stage: 2, ..base_cfg(seed) };
+        let reference = run_chaos(&cfg).unwrap();
+        let rb = run_baseline(&cfg).unwrap();
+        assert_eq!(
+            reference.retired, rb.retired,
+            "seed={seed}: K=1 dock must already match the sync baseline"
+        );
+        for k in [2usize, 4, 7] {
+            for steal in [0usize, 2] {
+                let scfg = with_shards(&cfg, k, steal);
+                let out = run_chaos(&scfg).unwrap();
+                assert_oracle(&format!("K={k} steal={steal} seed={seed}"), &scfg, &out, &reference);
+                assert_eq!(
+                    out.recovery.reclaimed, 0,
+                    "K={k} steal={steal} seed={seed}: fault-free sharded run must not reclaim"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ chaos composed
+
+/// Worker kills on a sharded dock: stolen and home claims alike expire
+/// at the victim shard's lease table and redispatch — converging to the
+/// K=1 retired map with zero loss.
+#[test]
+fn sharded_dock_recovers_kills_to_the_k1_retired_map() {
+    let cfg = ChaosConfig {
+        iterations: 5,
+        lease_ticks: 4,
+        plan: FaultPlan { seed: 9, kill_rate: 0.4, ..Default::default() },
+        ..base_cfg(42)
+    };
+    let reference =
+        run_chaos(&ChaosConfig { iterations: 5, lease_ticks: 256, ..base_cfg(42) }).unwrap();
+    for (k, steal) in [(2usize, 0usize), (4, 1)] {
+        let scfg = with_shards(&cfg, k, steal);
+        let out = run_chaos(&scfg).unwrap();
+        assert_oracle(&format!("kills K={k} steal={steal}"), &scfg, &out, &reference);
+        assert!(out.recovery.kills > 0, "plan must fire: {:?}", out.recovery);
+        assert!(out.recovery.reclaimed > 0, "kills must surface as reclaims");
+    }
+}
+
+/// Stalls with two replicas per stage: a stalled worker's claims (some
+/// stolen cross-shard) are reclaimed and re-processed by its twin, the
+/// zombie's late writebacks drop as superseded — same retired map.
+#[test]
+fn sharded_dock_with_stalls_and_replicas_drops_late_writebacks() {
+    let cfg = ChaosConfig {
+        iterations: 5,
+        workers_per_stage: 2,
+        lease_ticks: 3,
+        plan: FaultPlan { seed: 21, stall_rate: 0.4, stall_ticks: 10, ..Default::default() },
+        ..base_cfg(11)
+    };
+    let reference = run_chaos(&ChaosConfig {
+        iterations: 5,
+        workers_per_stage: 2,
+        lease_ticks: 256,
+        ..base_cfg(11)
+    })
+    .unwrap();
+    let scfg = with_shards(&cfg, 4, 0);
+    let out = run_chaos(&scfg).unwrap();
+    assert_oracle("stalls K=4", &scfg, &out, &reference);
+    assert!(out.recovery.stalls > 0, "plan must fire: {:?}", out.recovery);
+    assert!(out.recovery.reclaimed > 0, "{:?}", out.recovery);
+}
+
+/// Streaming generation + partial rollouts + kills on a sharded dock:
+/// killed sequences persist their prefixes, redispatch resumes them
+/// (possibly claimed through a *different* shard than the original),
+/// and the retired map — stamps included — still matches K=1.
+#[test]
+fn sharded_streaming_partial_rollouts_survive_kills() {
+    let cfg = ChaosConfig {
+        lease_ticks: 4,
+        gen_streaming: true,
+        partial_rollouts: true,
+        plan: FaultPlan { seed: 0xc4a0_5, kill_rate: 0.3, ..Default::default() },
+        ..base_cfg(3)
+    };
+    let reference = run_chaos(&ChaosConfig {
+        lease_ticks: 256,
+        gen_streaming: true,
+        partial_rollouts: true,
+        ..base_cfg(3)
+    })
+    .unwrap();
+    for k in [2usize, 4] {
+        let scfg = with_shards(&cfg, k, 1);
+        let out = run_chaos(&scfg).unwrap();
+        assert_oracle(&format!("streaming+partial K={k}"), &scfg, &out, &reference);
+    }
+}
+
+/// Backlog-driven autoscaling over a sharded dock: replica counts
+/// breathe, per-shard puller registration follows, and the retired map
+/// is unchanged.
+#[test]
+fn sharded_dock_composes_with_autoscale() {
+    let auto = AutoscaleConfig {
+        min_replicas: 1,
+        max_replicas: 3,
+        backlog_hi: 2,
+        backlog_lo: 0,
+        up_ticks: 1,
+        down_ticks: 2,
+    };
+    let cfg = ChaosConfig {
+        lease_ticks: 256,
+        autoscale: Some(auto),
+        ..base_cfg(7)
+    };
+    let reference = run_chaos(&cfg).unwrap();
+    for (k, steal) in [(2usize, 0usize), (4, 2)] {
+        let scfg = with_shards(&cfg, k, steal);
+        let out = run_chaos(&scfg).unwrap();
+        assert_oracle(&format!("autoscale K={k} steal={steal}"), &scfg, &out, &reference);
+    }
+}
+
+// -------------------------------------------------- randomized matrix
+
+/// The fuzz hook the scheduled CI job leans on: mixed kills + stalls
+/// across the seed list (fixed, plus time-derived under
+/// `CHAOS_RANDOM_SEEDS=1`) on a K=4 stealing dock — every schedule must
+/// satisfy the oracle against its own K=1 twin.
+#[test]
+fn mixed_fault_sweep_holds_the_oracle_across_seeds() {
+    for seed in seeds() {
+        let cfg = ChaosConfig {
+            workers_per_stage: 2,
+            plan: FaultPlan {
+                seed: seed ^ 0xdead_beef,
+                kill_rate: 0.2,
+                stall_rate: 0.2,
+                stall_ticks: 8,
+                ..Default::default()
+            },
+            ..base_cfg(seed)
+        };
+        let reference = run_chaos(&ChaosConfig {
+            workers_per_stage: 2,
+            lease_ticks: 256,
+            ..base_cfg(seed)
+        })
+        .unwrap();
+        let scfg = with_shards(&cfg, 4, 1);
+        let out = run_chaos(&scfg).unwrap();
+        assert_oracle(&format!("mixed seed={seed}"), &scfg, &out, &reference);
+    }
+}

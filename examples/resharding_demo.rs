@@ -2,7 +2,13 @@
 //! allgather–swap reshard over real weight payloads on the tracked memory
 //! substrate, verify bit-exactness, and print the memory timeline.
 //!
-//!     cargo run --release --example resharding_demo -- [--scale 32b]
+//!     cargo run --release --example resharding_demo -- [--scale 32b] [--ep N] [--gen-ep M]
+//!
+//! `--ep`/`--gen-ep` pick the expert-parallel degree of the update and
+//! generation layouts at the small scale (default 2 → 4, i.e. the
+//! paper's Fig. 3 MoE case). Asymmetric pairs exercise the EP
+//! allgather–swap path; `--ep` must divide the 4-way non-PP grid and be
+//! compatible with the 4 experts (one of the two must divide the other).
 
 use anyhow::Result;
 
@@ -15,6 +21,8 @@ use mindspeed_rl::util::fmt_bytes;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let scale = args.str_or("scale", "small");
+    let ep = args.usize_or("ep", 2)?;
+    let gen_ep = args.usize_or("gen-ep", 4)?;
 
     // Two configurations:
     //  * small — real payloads, verified bit-exact (the correctness story)
@@ -35,11 +43,13 @@ fn main() -> Result<()> {
         let w = ModelWeights::moe_like(4, 256, 512, 4).with_test_data(7);
         (
             w,
-            ParallelLayout::new(2, 1, 2, 2),
-            ParallelLayout::new(1, 1, 4, 4),
+            ParallelLayout::new(2, 1, 2, ep),
+            ParallelLayout::new(1, 1, 4, gen_ep),
             1u64 << 30,
         )
     };
+    update.validate()?;
+    gen.validate()?;
 
     println!(
         "model: {} total weights ({} TP-sharded, {} expert, {} common)",

@@ -1,24 +1,121 @@
 //! Bench: Fig. 11 — DeepSeek-R1-MoE-671B RL training on 384 NPUs
-//! (simulated) plus a real MoE reward-curve proxy on the moe_tiny PJRT
-//! model (the paper's reward curve shape at laptop scale).
+//! (simulated), a real MoE reward-curve proxy on the moe_tiny PJRT
+//! model, and the expert-parallel resharding differential the ROADMAP
+//! asks for: memory (peak/post/host) and reshard bytes for
+//! dense-equivalent vs expert-sharded retention on the weight bus,
+//! over an *asymmetric* EP train→infer pair (EP8 update → EP4 gen).
+//!
+//! JSON mode gates the differential too (it is deterministic byte
+//! accounting over fixed-seed payloads) — the gate pins that
+//! expert-sharded retention stays strictly below the dense-equivalent
+//! full-copy retention.
 
+use std::sync::Arc;
+
+use mindspeed_rl::memory::MemoryPool;
+use mindspeed_rl::parallel::{ModelWeights, ParallelLayout};
+use mindspeed_rl::resharding::Resharder;
 use mindspeed_rl::runtime::{artifact_dir, Engine};
 use mindspeed_rl::sim::fig11_series;
 use mindspeed_rl::trainers::{run_grpo, GrpoConfig};
+use mindspeed_rl::transfer_dock::NetworkModel;
 use mindspeed_rl::util::bench::{BenchJson, Table};
 use mindspeed_rl::util::cli::Args;
+use mindspeed_rl::util::fmt_bytes;
+
+const GIB: u64 = 1 << 30;
+
+struct MoeDifferential {
+    swap_peak: u64,
+    swap_post: u64,
+    swap_host: u64,
+    naive_redundant: u64,
+    expert_stale: u64,
+    expert_moved: u64,
+    /// bytes the bus retained for the post-train publish (changed
+    /// experts' slices only — shard-level dedup)
+    expert_retained: u64,
+    /// what a full-copy (dense-equivalent) retention would have added
+    /// for the same publish: one more full generation layout
+    dense_equiv_retained: u64,
+}
+
+/// The differential: asymmetric EP across the train→infer boundary —
+/// EP8 update (fractional placement: each of 4 experts half-resident on
+/// two EP ranks) → EP4 gen (whole experts) on 8 devices. One "train
+/// step" touches 2 of 8 expert tensors; the reshard republishes into
+/// the bus and only those experts' slices may mint retention.
+fn moe_reshard_differential() -> MoeDifferential {
+    let update = ParallelLayout::new(2, 1, 4, 8);
+    let gen = ParallelLayout::new(1, 1, 8, 4);
+    let mk = || ModelWeights::moe_like(2, 64, 128, 4).with_test_data(11);
+    let mut rs =
+        Resharder::new(mk(), update, gen, GIB, 64 * GIB, 8, NetworkModel::paper()).unwrap();
+    rs.reshard_allgather_swap().unwrap();
+    rs.verify_gen_shards().unwrap();
+    let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+    let bus = rs.seed_weight_bus(4, Some(Arc::clone(&pool))).unwrap();
+    rs.swap_back_h2d().unwrap();
+
+    rs.perturb_weight("l0.expert1", 0.5).unwrap();
+    rs.perturb_weight("l1.expert2", 0.5).unwrap();
+    let before = bus.retained_bytes();
+    let (rep, _v) = rs.reshard_allgather_swap_into(&bus).unwrap();
+    rs.verify_gen_shards().unwrap();
+    let expert_retained = bus.retained_bytes() - before;
+    assert_eq!(pool.live_bytes(), bus.retained_bytes(), "bus pool accounting imbalance");
+    assert!(
+        expert_retained < rep.bus_version_bytes,
+        "expert-sharded retention ({expert_retained}) must stay strictly below the \
+         dense-equivalent full copy ({})",
+        rep.bus_version_bytes
+    );
+
+    // the naive flow over the same pair, for the redundancy columns
+    let mut naive =
+        Resharder::new(mk(), update, gen, GIB, 64 * GIB, 8, NetworkModel::paper()).unwrap();
+    let rep_n = naive.reshard_naive().unwrap();
+    naive.verify_gen_shards().unwrap();
+
+    MoeDifferential {
+        swap_peak: rep.peak_device_bytes,
+        swap_post: rep.post_device_bytes,
+        swap_host: rep.host_bytes,
+        naive_redundant: rep_n.redundant_bytes,
+        expert_stale: rep_n.expert_redundant_bytes,
+        expert_moved: rep.expert_bytes_moved,
+        expert_retained,
+        dense_equiv_retained: rep.bus_version_bytes,
+    }
+}
+
+fn mib(b: u64) -> f64 {
+    b as f64 / (1u64 << 20) as f64
+}
 
 fn main() {
     let json_mode = Args::from_env().unwrap().has("json");
-    // simulated throughput series
+    // simulated throughput series (fixed seed: deterministic end to end)
     let series = fig11_series(100, 0);
+    let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
+    let min = series.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
+    let diff = moe_reshard_differential();
     if json_mode {
-        // the fixed-seed simulated series is deterministic end to end
-        let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
-        let min = series.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
         let mut json = BenchJson::new("fig11_moe");
         json.higher("mean_tps_384npu", mean);
         json.higher("min_tps_384npu", min);
+        json.lower("swap_peak_mib", mib(diff.swap_peak));
+        json.lower("swap_post_mib", mib(diff.swap_post));
+        json.lower("swap_host_mib", mib(diff.swap_host));
+        json.lower("naive_redundant_mib", mib(diff.naive_redundant));
+        json.lower("expert_stale_mib", mib(diff.expert_stale));
+        json.lower("expert_retained_mib", mib(diff.expert_retained));
+        json.higher(
+            "retention_savings",
+            mib(diff.dense_equiv_retained) / mib(diff.expert_retained).max(1e-9),
+        );
+        json.info("dense_equiv_retained_mib", mib(diff.dense_equiv_retained));
+        json.info("expert_moved_mib", mib(diff.expert_moved));
         json.emit().unwrap();
         return;
     }
@@ -30,10 +127,32 @@ fn main() {
         t.row(vec![i.to_string(), format!("{tps:.0}")]);
     }
     t.print();
-    let mean = series.iter().map(|(_, t)| t).sum::<f64>() / series.len() as f64;
-    let min = series.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
     let max = series.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
     println!("TPS: min={min:.0} max={max:.0} mean={mean:.0}  (paper: fluctuates 200–250)");
+
+    let mut t = Table::new(
+        "expert-parallel reshard differential (EP8 update -> EP4 gen, 4 experts, 8 devices)",
+        &["metric", "bytes"],
+    );
+    t.row(vec!["swap peak/dev".into(), fmt_bytes(diff.swap_peak)]);
+    t.row(vec!["swap post/dev".into(), fmt_bytes(diff.swap_post)]);
+    t.row(vec!["swap host parked".into(), fmt_bytes(diff.swap_host)]);
+    t.row(vec!["naive redundant".into(), fmt_bytes(diff.naive_redundant)]);
+    t.row(vec!["  of which stale experts".into(), fmt_bytes(diff.expert_stale)]);
+    t.row(vec!["expert bytes allgathered".into(), fmt_bytes(diff.expert_moved)]);
+    t.row(vec![
+        "bus retention (expert-sharded)".into(),
+        fmt_bytes(diff.expert_retained),
+    ]);
+    t.row(vec![
+        "bus retention (dense-equivalent)".into(),
+        fmt_bytes(diff.dense_equiv_retained),
+    ]);
+    t.print();
+    println!(
+        "retention savings: {:.1}x (touched 2 of 8 expert tensors)",
+        diff.dense_equiv_retained as f64 / diff.expert_retained.max(1) as f64
+    );
 
     // real MoE training proxy: reward must rise on moe_tiny
     let engine = match Engine::load(artifact_dir("moe_tiny")) {

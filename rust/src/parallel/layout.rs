@@ -4,10 +4,19 @@ use anyhow::{bail, Result};
 
 /// A parallelization strategy, e.g. the paper's `TP4PP6EP16DP2` update
 /// layout for DeepSeek-671B. World size is `tp * pp * dp * cp`; EP
-/// partitions the expert dimension *within* the data-parallel replicas
-/// (ep must divide dp * tp in this grid — experts are spread over the
-/// non-pipeline ranks of each replica group, matching Megatron-style
-/// expert parallelism).
+/// partitions the expert dimension over the **non-pipeline grid** of each
+/// pipeline stage (`ep` must divide `tp * dp * cp`): EP groups tile that
+/// grid tp-fastest, so each expert slice has exactly
+/// `(tp * dp * cp) / ep` holders per owning stage
+/// ([`Self::expert_replication`]). Two regimes fall out of the fold:
+///
+/// * `ep ≤ tp * cp` (and divides it): every EP group sits inside one
+///   data-parallel replica, so **each DP replica holds a complete expert
+///   set** — Megatron-style expert parallelism.
+/// * `ep > tp * cp`: EP groups span DP replicas (a replica holds only
+///   the experts of its portion of the EP groups) — the vLLM
+///   data-parallel expert-group regime SNIPPETS.md's DeepSeek recipe
+///   uses, and the production norm for large inference EP.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ParallelLayout {
     pub tp: usize,
@@ -64,6 +73,22 @@ impl ParallelLayout {
         let non_pp_index = device % (self.tp * self.cp * self.dp);
         let ep_rank = if self.ep > 1 { non_pp_index % self.ep } else { 0 };
         Ok(DeviceAssignment { device, tp_rank, pp_stage, dp_rank, ep_rank, cp_rank })
+    }
+
+    /// Holders of each expert slice within one pipeline stage:
+    /// `(tp * dp * cp) / ep` — the expert-data-parallel degree. 1 means
+    /// every expert slice lives on exactly one rank of the stage.
+    pub fn expert_replication(&self) -> usize {
+        let non_pp = self.tp * self.dp * self.cp;
+        if self.ep > 1 { non_pp / self.ep } else { non_pp }
+    }
+
+    /// Whether every data-parallel replica holds a complete expert set
+    /// (the Megatron-style regime: each EP group fits inside one
+    /// replica's `tp * cp` ranks). When false, EP groups span DP
+    /// replicas (vLLM DP expert groups).
+    pub fn experts_replicated_per_dp(&self) -> bool {
+        self.ep <= self.tp * self.cp && (self.tp * self.cp) % self.ep == 0
     }
 
     pub fn describe(&self) -> String {
@@ -125,6 +150,38 @@ mod tests {
             assert!(a.tp_rank < 2 && a.pp_stage < 2 && a.dp_rank < 2);
             assert!(a.ep_rank < 2);
         }
+    }
+
+    #[test]
+    fn ep_fold_regimes() {
+        // Megatron regime: ep divides tp*cp, EP groups stay inside one DP
+        // replica, so every replica sees the full ep-rank range
+        let l = ParallelLayout::new(2, 1, 2, 2);
+        assert!(l.experts_replicated_per_dp());
+        assert_eq!(l.expert_replication(), 2);
+        for dp in 0..2 {
+            let ranks: std::collections::HashSet<usize> = (0..l.world())
+                .map(|d| l.assignment(d).unwrap())
+                .filter(|a| a.dp_rank == dp)
+                .map(|a| a.ep_rank)
+                .collect();
+            assert_eq!(ranks.len(), 2, "dp replica {dp} must span all ep ranks");
+        }
+        // vLLM DP-expert-group regime: ep spans DP replicas — each
+        // replica sees only its portion of the ep-rank range
+        let l = ParallelLayout::new(2, 1, 2, 4);
+        assert!(!l.experts_replicated_per_dp());
+        assert_eq!(l.expert_replication(), 1);
+        let replica0: std::collections::HashSet<usize> = (0..l.world())
+            .map(|d| l.assignment(d).unwrap())
+            .filter(|a| a.dp_rank == 0)
+            .map(|a| a.ep_rank)
+            .collect();
+        assert_eq!(replica0, [0usize, 1].into_iter().collect());
+        // the paper's adapted DeepSeek layouts sit in each regime
+        assert!(ParallelLayout::new(4, 6, 2, 8).expert_replication() == 1);
+        assert!(!ParallelLayout::new(4, 6, 2, 8).experts_replicated_per_dp());
+        assert!(ParallelLayout::new(2, 1, 6, 12).expert_replication() == 1);
     }
 
     #[test]

@@ -13,7 +13,12 @@ pub enum WeightKind {
     Common,
     /// split 1/TP per tensor-parallel rank (attention/ffn matmuls): "T_i"
     TpSharded,
-    /// one expert tensor, placed on the EP rank owning that expert: "E_j"
+    /// one expert tensor, placed on the EP rank(s) owning it: "E_j".
+    /// When `ep ≤ num_experts` each rank owns whole experts; when
+    /// `ep > num_experts` each expert is sliced across `ep / num_experts`
+    /// consecutive EP ranks (expert-TP). Either way each element of the
+    /// expert has exactly [`ParallelLayout::expert_replication`] holders
+    /// on its owning pipeline stage.
     Expert { expert: usize, num_experts: usize },
 }
 
@@ -190,19 +195,43 @@ impl ModelWeights {
                 Ok(Some(shard_range(w.numel, a.tp_rank, layout.tp)))
             }
             WeightKind::Expert { expert, num_experts } => {
-                if num_experts % layout.ep != 0 {
+                if num_experts % layout.ep == 0 {
+                    // whole experts per EP rank (num_experts / ep each)
+                    let per = num_experts / layout.ep;
+                    if expert / per == a.ep_rank {
+                        Ok(Some((0, w.numel)))
+                    } else {
+                        Ok(None)
+                    }
+                } else if layout.ep % num_experts == 0 {
+                    // more EP ranks than experts: each expert tensor is
+                    // sliced across `ep / num_experts` consecutive EP
+                    // ranks (expert-TP), so asymmetric train→infer pairs
+                    // like EP4 → EP8 over 4 experts produce *partial*
+                    // expert slices on the gen side — the holder shapes
+                    // that stress the gather's coverage logic
+                    let ways = layout.ep / num_experts;
+                    if w.numel % ways != 0 {
+                        bail!(
+                            "expert weight {} numel {} not divisible by its {}-way EP slicing",
+                            w.name,
+                            w.numel,
+                            ways
+                        );
+                    }
+                    let base = expert * ways;
+                    if a.ep_rank >= base && a.ep_rank < base + ways {
+                        Ok(Some(shard_range(w.numel, a.ep_rank - base, ways)))
+                    } else {
+                        Ok(None)
+                    }
+                } else {
                     bail!(
-                        "experts {} not divisible by ep {} for {}",
-                        num_experts,
+                        "ep {} incompatible with {} experts for {} (one must divide the other)",
                         layout.ep,
+                        num_experts,
                         w.name
                     );
-                }
-                let per = num_experts / layout.ep;
-                if expert / per == a.ep_rank {
-                    Ok(Some((0, w.numel)))
-                } else {
-                    Ok(None)
                 }
             }
         }
@@ -259,15 +288,95 @@ mod tests {
         }
     }
 
+    /// Elementwise holder count of every expert equals the layout's
+    /// expert replication degree `(tp*dp*cp)/ep`, across whole-expert,
+    /// ep-spans-DP, and fractional (expert-TP) placements.
     #[test]
-    fn expert_placement_unique_owner_per_replica() {
+    fn expert_coverage_matches_replication_degree() {
+        let m = ModelWeights::moe_like(2, 32, 64, 4);
+        for layout in [
+            ParallelLayout::new(2, 1, 2, 2), // Megatron regime: ep | tp*cp
+            ParallelLayout::new(2, 1, 2, 4), // ep spans DP replicas
+            ParallelLayout::new(2, 1, 4, 8), // fractional: 8 ranks, 4 experts
+            ParallelLayout::new(1, 2, 4, 2), // with pipeline stages
+        ] {
+            layout.validate().unwrap();
+            let rep = layout.expert_replication();
+            for w in m.weights.iter().filter(|w| matches!(w.kind, WeightKind::Expert { .. })) {
+                let mut count = vec![0usize; w.numel];
+                for d in 0..layout.world() {
+                    if let Some((s, e)) = m.placement(w, &layout, d).unwrap() {
+                        for c in &mut count[s..e] {
+                            *c += 1;
+                        }
+                    }
+                }
+                assert!(
+                    count.iter().all(|&c| c == rep),
+                    "{}: expert {} coverage != replication {rep}",
+                    layout.describe(),
+                    w.name
+                );
+            }
+        }
+    }
+
+    /// Megatron regime (`ep | tp*cp`): every DP replica holds the full
+    /// expert set, one holder per expert per replica.
+    #[test]
+    fn experts_replicated_per_dp_group_when_ep_fits_replica() {
+        let m = ModelWeights::moe_like(2, 32, 64, 4);
+        let layout = ParallelLayout::new(2, 1, 2, 2);
+        assert!(layout.experts_replicated_per_dp());
+        for w in m.weights.iter().filter(|w| matches!(w.kind, WeightKind::Expert { .. })) {
+            for dp in 0..layout.dp {
+                let holders: Vec<usize> = (0..layout.world())
+                    .filter(|&d| layout.assignment(d).unwrap().dp_rank == dp)
+                    .filter(|&d| m.placement(w, &layout, d).unwrap().is_some())
+                    .collect();
+                assert_eq!(
+                    holders.len(),
+                    1,
+                    "expert {} must have one holder inside dp replica {dp}",
+                    w.name
+                );
+            }
+        }
+    }
+
+    /// vLLM DP-expert-group regime (`ep > tp*cp`): EP spans DP replicas,
+    /// so each expert lives on exactly `(tp*dp*cp)/ep` ranks of the
+    /// whole stage and a single replica holds only its share.
+    #[test]
+    fn ep_spanning_dp_places_each_expert_once_in_the_world() {
         let m = ModelWeights::moe_like(2, 32, 64, 4);
         let layout = ParallelLayout::new(2, 1, 2, 4);
+        assert!(!layout.experts_replicated_per_dp());
+        assert_eq!(layout.expert_replication(), 1);
         for w in m.weights.iter().filter(|w| matches!(w.kind, WeightKind::Expert { .. })) {
             let holders: Vec<usize> = (0..layout.world())
                 .filter(|&d| m.placement(w, &layout, d).unwrap().is_some())
                 .collect();
-            assert_eq!(holders.len(), 1, "expert {} must live on exactly one ep rank", w.name);
+            assert_eq!(holders.len(), 1, "expert {} holders {holders:?}", w.name);
+        }
+    }
+
+    /// Fractional (expert-TP) placement: ep > num_experts slices each
+    /// expert across `ep/num_experts` consecutive EP ranks, and the
+    /// slices tile the tensor exactly.
+    #[test]
+    fn fractional_expert_slices_tile_the_tensor() {
+        let m = ModelWeights::moe_like(1, 32, 64, 4);
+        let layout = ParallelLayout::new(2, 1, 4, 8); // ways = 2
+        for w in m.weights.iter().filter(|w| matches!(w.kind, WeightKind::Expert { .. })) {
+            let mut ranges: Vec<(usize, usize)> = (0..layout.world())
+                .filter_map(|d| m.placement(w, &layout, d).unwrap())
+                .collect();
+            ranges.sort();
+            ranges.dedup();
+            assert_eq!(ranges.len(), 2, "expert {} must split 2 ways", w.name);
+            assert_eq!(ranges[0], (0, w.numel / 2));
+            assert_eq!(ranges[1], (w.numel / 2, w.numel));
         }
     }
 

@@ -192,11 +192,27 @@ impl Resharder {
                     .or_insert(d);
             }
         }
+        // Decide the gather shape up front. Equal-split shards make the
+        // distinct partial ranges disjoint-or-identical, so the partial
+        // set tiles the weight iff its lengths sum to numel. Use the
+        // partials when they tile (the allgather pattern — this is what
+        // asymmetric-EP holder sets look like); only fall back to the
+        // full copy when the partials do NOT complete coverage. A
+        // dest-resident full copy always wins: it moves zero bytes.
+        // (The old logic skipped the full copy whenever *any* partial
+        // coverage existed, so a full copy + non-tiling partials errored
+        // "not fully covered" despite a full copy being available.)
+        let full = (0usize, w.numel);
+        let full_holder = slices.get(&full).copied();
+        let partial_cover: usize =
+            slices.keys().filter(|&&k| k != full).map(|&(s, e)| e - s).sum();
+        let use_full = match full_holder {
+            Some(h) => rank(h) == 0 || partial_cover < w.numel,
+            None => false,
+        };
         let mut covered = 0usize;
         for (&(s, e), &holder) in &slices {
-            // ranges are either identical or disjoint (equal splits),
-            // except full-copy holders which subsume everything
-            if (s, e) == (0, w.numel) && slices.len() > 1 && covered > 0 {
+            if ((s, e) == full) != use_full {
                 continue;
             }
             covered += e - s;
@@ -211,9 +227,7 @@ impl Resharder {
                 1 => local += b,
                 _ => remote += b,
             }
-            if (s, e) == (0, w.numel) {
-                // one full copy covers the weight
-                covered = w.numel;
+            if (s, e) == full {
                 break;
             }
         }
@@ -243,6 +257,7 @@ impl Resharder {
         let mut t_ag_max = 0f64;
         let mut t_sel_max = 0f64;
         let mut t_d2h_max = 0f64;
+        let mut expert_moved = 0u64;
 
         for dev in 0..world {
             let needs = self.gen_needs(dev)?;
@@ -259,6 +274,9 @@ impl Resharder {
                 let (data, r, l) = self.gather_full(name, dev)?;
                 remote += r;
                 local += l;
+                if matches!(w.kind, WeightKind::Expert { .. }) {
+                    expert_moved += r + l;
+                }
                 let bytes = ((*e - *s) * 4) as u64;
                 sel_bytes += bytes;
                 let b = self.device_pools[dev].alloc(format!("gen.{name}"), bytes)?;
@@ -302,6 +320,9 @@ impl Resharder {
             t_h2d: 0.0,
             t_total: t_ag_max + t_sel_max + t_d2h_max,
             bus_published_bytes: 0,
+            bus_version_bytes: 0,
+            expert_bytes_moved: expert_moved,
+            expert_redundant_bytes: 0,
         })
     }
 
@@ -311,6 +332,7 @@ impl Resharder {
         self.begin_reshard()?;
         let world = self.update.world();
         let mut t_ag_max = 0f64;
+        let mut expert_moved = 0u64;
 
         for dev in 0..world {
             let needs = self.gen_needs(dev)?;
@@ -335,6 +357,9 @@ impl Resharder {
                 let (data, r, l) = self.gather_full(name, dev)?;
                 remote += r;
                 local += l;
+                if matches!(w.kind, WeightKind::Expert { .. }) {
+                    expert_moved += r + l;
+                }
                 let bytes = ((*e - *s) * 4) as u64;
                 let b = self.device_pools[dev].alloc(format!("gen.{name}"), bytes)?;
                 bufs.push(b);
@@ -356,6 +381,11 @@ impl Resharder {
             let needed = self.weights.device_bytes(&self.gen, dev)?;
             redundant += live.saturating_sub(needed);
         }
+        // the expert component of that redundancy, measured directly:
+        // update-resident expert slices generation does not serve (the
+        // stale experts of Fig. 3) — Eq. 3's `EW/GEP` term as an actual
+        // byte count over the inventory, not a planner constant
+        let expert_redundant = self.expert_redundant_bytes()?;
         let peak = self.device_pools.iter().map(|p| p.peak_bytes()).max().unwrap_or(0);
         let post = self.device_pools.iter().map(|p| p.live_bytes()).max().unwrap_or(0);
         Ok(ReshardReport {
@@ -371,7 +401,33 @@ impl Resharder {
             t_h2d: 0.0,
             t_total: t_ag_max,
             bus_published_bytes: 0,
+            bus_version_bytes: 0,
+            expert_bytes_moved: expert_moved,
+            expert_redundant_bytes: expert_redundant,
         })
+    }
+
+    /// Bytes of update-resident expert slices that generation does not
+    /// need, summed over devices — the measured counterpart of Eq. 3's
+    /// expert term (stale experts the naive flow leaves on-device).
+    fn expert_redundant_bytes(&self) -> Result<u64> {
+        let mut stale = 0u64;
+        for dev in 0..self.update.world() {
+            for w in &self.weights.weights {
+                if !matches!(w.kind, WeightKind::Expert { .. }) {
+                    continue;
+                }
+                let Some((rs, re, _)) = self.update_blocks[dev].slices.get(&w.name) else {
+                    continue;
+                };
+                let overlap = match self.weights.placement(w, &self.gen, dev)? {
+                    Some((gs, ge)) => ge.min(*re).saturating_sub(gs.max(*rs)),
+                    None => 0,
+                };
+                stale += (((re - rs) - overlap) * 4) as u64;
+            }
+        }
+        Ok(stale)
     }
 
     /// H2D swap-back before the next update stage (overlappable with
@@ -467,9 +523,10 @@ impl Resharder {
     /// bus head *in place* (a `&[f32]` compare, no allocation) and only
     /// the changed ones are materialized as tensors — so a reshard after
     /// a train step that touched a subset of weights hands over exactly
-    /// those weights' slices. Single-publisher per bus: the head read
-    /// and the delta publish are not atomic across concurrent callers.
-    pub fn publish_gen_layout(&self, bus: &WeightBus) -> Result<WeightVersion> {
+    /// those weights' slices. Returns the minted version and the bytes
+    /// `publish_delta` actually minted (the retention delta, computed
+    /// under the bus lock — not the full version size).
+    pub fn publish_gen_layout(&self, bus: &WeightBus) -> Result<(WeightVersion, u64)> {
         let names = self.gen_slice_names()?;
         let (_, head) = bus.head();
         anyhow::ensure!(
@@ -490,21 +547,26 @@ impl Resharder {
                 changed.push((i, Tensor::f32(&[data.len()], data.clone())?));
             }
         }
-        Ok(bus.publish_delta(&changed)?)
+        let (version, minted) = bus.publish_delta(&changed)?;
+        Ok((version, minted))
     }
 
     /// The allgather–swap reshard, publishing its generation layout
     /// directly into `bus` as one version — the paper's resharding flow
     /// feeding the sample flow's weight channel without an intermediate
-    /// full-model snapshot. Returns the reshard report (with
-    /// `bus_published_bytes` filled) and the minted version.
+    /// full-model snapshot. Returns the reshard report and the minted
+    /// version. `bus_published_bytes` is the **delta** actually handed
+    /// to `publish_delta` (what this reshard cost the bus);
+    /// `bus_version_bytes` is the full reconstructed size of the minted
+    /// version (what a full-copy publish would have cost).
     pub fn reshard_allgather_swap_into(
         &mut self,
         bus: &WeightBus,
     ) -> Result<(ReshardReport, WeightVersion)> {
         let mut report = self.reshard_allgather_swap()?;
-        let version = self.publish_gen_layout(bus)?;
-        report.bus_published_bytes = bus.get(version)?.total_bytes();
+        let (version, published) = self.publish_gen_layout(bus)?;
+        report.bus_published_bytes = published;
+        report.bus_version_bytes = bus.get(version)?.total_bytes();
         Ok((report, version))
     }
 
@@ -603,6 +665,143 @@ mod tests {
             net(),
         )
         .unwrap()
+    }
+
+    /// World-8 MoE resharder with 4 experts: EP degree 8 exercises the
+    /// fractional (expert-TP) placement where each expert splits across
+    /// two EP ranks — the asymmetric-EP holder shapes.
+    fn moe_resharder(uep: usize, gep: usize, seed: u64) -> Resharder {
+        let m = ModelWeights::moe_like(2, 32, 64, 4).with_test_data(seed);
+        Resharder::new(
+            m,
+            ParallelLayout::new(2, 1, 4, uep),
+            ParallelLayout::new(1, 1, 8, gep),
+            GIB,
+            64 * GIB,
+            8,
+            net(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn gather_full_uses_full_copy_when_partials_do_not_tile() {
+        // the bugfix regression: a holder set {full copy, partial slice}
+        // where the partials do NOT tile the weight used to error "not
+        // fully covered" — any partial coverage skipped the full copy
+        let mut r = dense_resharder(2, 2, 2, 2);
+        let w = r.weights.weights.iter().find(|w| w.name == "l0.attn").unwrap();
+        let (name, numel) = (w.name.clone(), w.numel);
+        let full: Vec<f32> = w.data.clone().unwrap();
+        r.update_blocks[0]
+            .slices
+            .insert(name.clone(), (0, numel / 2, Some(full[..numel / 2].to_vec())));
+        r.update_blocks[1].slices.insert(name.clone(), (0, numel, Some(full.clone())));
+        r.update_blocks[2].slices.remove(&name);
+        r.update_blocks[3].slices.remove(&name);
+        let (data, remote, local) = r.gather_full(&name, 3).unwrap();
+        assert_eq!(data.unwrap(), full);
+        // exactly the full copy is charged — not the overlapping partial
+        assert_eq!(remote + local, (numel * 4) as u64);
+
+        // partials that DO tile still win over a non-dest full copy
+        r.update_blocks[2]
+            .slices
+            .insert(name.clone(), (numel / 2, numel, Some(full[numel / 2..].to_vec())));
+        let (data, remote, local) = r.gather_full(&name, 3).unwrap();
+        assert_eq!(data.unwrap(), full);
+        assert_eq!(remote + local, (numel * 4) as u64);
+
+        // a dest-resident full copy moves zero bytes
+        let (data, remote, local) = r.gather_full(&name, 1).unwrap();
+        assert_eq!(data.unwrap(), full);
+        assert_eq!((remote, local), (0, 0));
+    }
+
+    #[test]
+    fn asymmetric_ep_allgather_swap_bit_exact() {
+        // EP degree changes across the train→infer boundary in both
+        // directions, including through the fractional EP8 placement
+        for (uep, gep) in [(8, 4), (4, 8), (2, 8), (8, 2), (4, 1), (1, 4)] {
+            let mut r = moe_resharder(uep, gep, 3);
+            let rep = r.reshard_allgather_swap().unwrap();
+            let n = r.verify_gen_shards().unwrap();
+            assert!(n > 0, "EP{uep}->EP{gep} verified nothing");
+            if uep > 1 {
+                assert!(
+                    rep.expert_bytes_moved > 0,
+                    "EP{uep}->EP{gep} must move expert bytes over the EP groups"
+                );
+            } else {
+                // EP1 replicates every expert on every update rank, so
+                // every gather is dest-resident and free
+                assert_eq!(rep.expert_bytes_moved, 0);
+            }
+            assert_eq!(rep.redundant_bytes, 0);
+            r.swap_back_h2d().unwrap();
+            // naive over the same asymmetric pair is also bit-exact and
+            // accounts its stale experts separately
+            let rep = r.reshard_naive().unwrap();
+            r.verify_gen_shards().unwrap();
+            assert!(rep.redundant_bytes >= rep.expert_redundant_bytes);
+        }
+    }
+
+    #[test]
+    fn naive_expert_redundancy_is_measured() {
+        // Fig. 3: TP2EP2DP2 → TP1EP4DP4. Stale experts by hand: devices
+        // keep (1, 2, 2, 1) non-serving experts per layer × 2 layers =
+        // 12 expert-tensor instances of the 8-tensor inventory → 3·EW/2.
+        let m = ModelWeights::moe_like(2, 32, 64, 4).with_test_data(2);
+        let update = ParallelLayout::new(2, 1, 2, 2);
+        let gen = ParallelLayout::new(1, 1, 4, 4);
+        let mut r = Resharder::new(m.clone(), update, gen, GIB, 16 * GIB, 8, net()).unwrap();
+        let rep = r.reshard_naive().unwrap();
+        assert_eq!(rep.expert_redundant_bytes, 3 * m.expert_bytes() / 2);
+        assert!(rep.expert_redundant_bytes <= rep.redundant_bytes);
+        // dense inventories have no expert component
+        let mut d = dense_resharder(4, 1, 2, 2);
+        assert_eq!(d.reshard_naive().unwrap().expert_redundant_bytes, 0);
+    }
+
+    #[test]
+    fn bus_published_bytes_is_the_delta_not_the_version() {
+        let mut r = dense_resharder(4, 1, 2, 2);
+        r.reshard_allgather_swap().unwrap();
+        let bus = r.seed_weight_bus(4, None).unwrap();
+        r.swap_back_h2d().unwrap();
+        // nothing trained between reshards: the republished layout is
+        // bit-identical, so the delta is zero even though the minted
+        // version still reconstructs the full generation layout
+        let (rep, v) = r.reshard_allgather_swap_into(&bus).unwrap();
+        assert_eq!(rep.bus_published_bytes, 0, "unchanged reshard must publish no bytes");
+        assert_eq!(rep.bus_version_bytes, bus.get(v).unwrap().total_bytes());
+        assert!(rep.bus_version_bytes > 0);
+    }
+
+    #[test]
+    fn moe_bus_publish_retains_only_touched_expert() {
+        let mut r = moe_resharder(2, 8, 5);
+        r.reshard_allgather_swap().unwrap();
+        let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+        let bus = r.seed_weight_bus(4, Some(Arc::clone(&pool))).unwrap();
+        let names = r.gen_slice_names().unwrap();
+        r.swap_back_h2d().unwrap();
+        r.perturb_weight("l0.expert2", 0.5).unwrap();
+        let before = bus.retained_bytes();
+        let (rep, v) = r.reshard_allgather_swap_into(&bus).unwrap();
+        r.verify_gen_shards().unwrap();
+        let grew = bus.retained_bytes() - before;
+        let touched: u64 = names
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, n))| n == "l0.expert2")
+            .map(|(i, _)| bus.get(v).unwrap().tensor(i).size_bytes() as u64)
+            .sum();
+        assert!(touched > 0, "the touched expert must appear in the gen universe");
+        assert_eq!(grew, touched, "only the touched expert's slices may mint shards");
+        assert_eq!(rep.bus_published_bytes, grew);
+        assert_eq!(pool.live_bytes(), bus.retained_bytes());
     }
 
     #[test]
@@ -761,6 +960,13 @@ mod tests {
             .map(|(i, _)| bus.get(v2).unwrap().tensor(i).size_bytes() as u64)
             .sum();
         assert_eq!(grew, attn_bytes, "only the perturbed weight's slices may mint shards");
+        // published bytes report the delta, not the full version
+        assert_eq!(rep.bus_published_bytes, grew);
+        assert_eq!(rep.bus_version_bytes, bus.get(v2).unwrap().total_bytes());
+        assert!(
+            rep.bus_published_bytes < rep.bus_version_bytes,
+            "a partial-update publish must cost less than the full version"
+        );
         assert_eq!(pool.live_bytes(), bus.retained_bytes());
         // both versions reconstruct bit-identically against the payloads
         let v2_view = bus.get(v2).unwrap();

@@ -90,21 +90,44 @@ pub struct ReshardReport {
     pub t_d2h: f64,
     pub t_h2d: f64,
     pub t_total: f64,
-    /// bytes of generation-layout slices published straight into the
-    /// weight bus by `reshard_allgather_swap_into` (0 when resharding
-    /// standalone)
+    /// bytes of generation-layout slices actually published (the delta
+    /// handed to `publish_delta`) by `reshard_allgather_swap_into` —
+    /// 0 when resharding standalone or when nothing changed since the
+    /// bus head
     pub bus_published_bytes: u64,
+    /// full reconstructed size of the bus version the reshard minted
+    /// (what a full-copy publish would have cost); 0 standalone
+    pub bus_version_bytes: u64,
+    /// allgather traffic attributable to expert weights (Eq. 3's `EW`
+    /// class measured on the wire; dense/common traffic is the rest)
+    pub expert_bytes_moved: u64,
+    /// naive flow only: update-resident expert slices generation does
+    /// not serve — the measured `EW/GEP` component of `redundant_bytes`
+    pub expert_redundant_bytes: u64,
 }
 
 impl ReshardReport {
     pub fn summary(&self) -> String {
-        let bus = if self.bus_published_bytes == 0 {
+        let bus = if self.bus_version_bytes == 0 && self.bus_published_bytes == 0 {
             String::new()
         } else {
-            format!(" bus_pub={}", crate::util::fmt_bytes(self.bus_published_bytes))
+            format!(
+                " bus_pub={}/{}",
+                crate::util::fmt_bytes(self.bus_published_bytes),
+                crate::util::fmt_bytes(self.bus_version_bytes)
+            )
+        };
+        let expert = if self.expert_bytes_moved == 0 && self.expert_redundant_bytes == 0 {
+            String::new()
+        } else {
+            format!(
+                " expert_moved={} expert_stale={}",
+                crate::util::fmt_bytes(self.expert_bytes_moved),
+                crate::util::fmt_bytes(self.expert_redundant_bytes)
+            )
         };
         format!(
-            "{}: redundant={} released={} peak={} post={} host={} t_ag={} t_d2h={} t_h2d={} total={}{bus}",
+            "{}: redundant={} released={} peak={} post={} host={} t_ag={} t_d2h={} t_h2d={} total={}{expert}{bus}",
             self.technique,
             crate::util::fmt_bytes(self.redundant_bytes),
             crate::util::fmt_bytes(self.released_bytes),

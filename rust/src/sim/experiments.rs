@@ -131,7 +131,9 @@ pub fn fig11_series(iters: usize, seed: u64) -> Vec<(usize, f64)> {
             work,
         );
         sys.update_layout = ParallelLayout { tp: 4, pp: 6, dp: 2, ep: 8, cp: 1 };
-        sys.gen_layout = ParallelLayout { tp: 2, pp: 1, dp: 6, ep: 32, cp: 1 };
+        // EP adapted to the grid rule (ep | tp*dp*cp): the paper's EP32
+        // doesn't divide the 12-way non-PP grid, EP12 is the adapted pick
+        sys.gen_layout = ParallelLayout { tp: 2, pp: 1, dp: 6, ep: 12, cp: 1 };
         // Eq. 5 reports against the nominal PL+SL budget
         let t = sys.iteration().total();
         let tps = crate::metrics::throughput_tps(384, 32, 1024, 2048, 384, t);

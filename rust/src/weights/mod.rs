@@ -461,15 +461,19 @@ impl WeightBus {
     /// compared, so passing an unchanged tensor costs no retention. This
     /// is the resharding flow's publish path: the allgather–swap reshard
     /// hands over its changed generation-layout slices without ever
-    /// materializing a full snapshot.
+    /// materializing a full snapshot. Returns the minted version and the
+    /// bytes of shards this publish actually minted (the retention
+    /// delta, computed under the lock — 0 when every passed tensor
+    /// matched the head).
     pub fn publish_delta(
         &self,
         changed: &[(usize, Tensor)],
-    ) -> Result<WeightVersion, WeightBusError> {
+    ) -> Result<(WeightVersion, u64), WeightBusError> {
         let mut g = self.inner.lock().unwrap();
         let head = g.ring.back().expect("bus ring is never empty");
         let next = head.0 + 1;
         let mut shards = head.1.clone();
+        let mut minted = 0u64;
         for (i, t) in changed {
             let Some(slot) = shards.get_mut(*i) else {
                 return Err(WeightBusError::TensorIndexOutOfRange {
@@ -478,11 +482,12 @@ impl WeightBus {
                 });
             };
             if slot.data != *t {
+                minted += t.size_bytes() as u64;
                 *slot = Arc::new(WeightShard { tensor_idx: *i, epoch: next, data: t.clone() });
             }
         }
         self.insert_version(&mut g, next, shards)?;
-        Ok(WeightVersion(next))
+        Ok((WeightVersion(next), minted))
     }
 
     /// Newest snapshot (as a view) and its version.
@@ -884,8 +889,12 @@ mod tests {
     fn publish_delta_inherits_head() {
         let bus = WeightBus::new(params2(1.0, 10.0), 8);
         let t1 = Tensor::f32(&[4], vec![20.0; 4]).unwrap();
-        let v = bus.publish_delta(&[(1, t1.clone())]).unwrap();
+        let (v, minted) = bus.publish_delta(&[(1, t1.clone())]).unwrap();
         assert_eq!(v, WeightVersion(2));
+        assert_eq!(minted, t1.size_bytes() as u64, "one changed tensor minted");
+        // re-publishing head content mints nothing
+        let (_, minted) = bus.publish_delta(&[(1, t1.clone())]).unwrap();
+        assert_eq!(minted, 0, "unchanged delta must mint zero bytes");
         let view = bus.get(v).unwrap();
         assert_eq!(view.tensor(0), &params2(1.0, 0.0)[0], "index 0 inherited from head");
         assert_eq!(view.tensor(1), &t1);
@@ -894,7 +903,7 @@ mod tests {
             Err(WeightBusError::TensorIndexOutOfRange { index: 7, n_tensors: 2 }) => {}
             other => panic!("expected out-of-range, got {other:?}"),
         }
-        assert_eq!(bus.head_version(), WeightVersion(2));
+        assert_eq!(bus.head_version(), WeightVersion(3));
     }
 
     #[test]

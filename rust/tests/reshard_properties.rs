@@ -22,8 +22,10 @@ fn random_layout_pair(rng: &mut Rng, world: usize, moe: bool) -> Option<(Paralle
     for _ in 0..50 {
         let (utp, gtp) = (pick(rng), pick(rng));
         let (udp, gdp) = (world / utp, world / gtp);
-        let uep = if moe { [1, 2, 4][rng.below(3)] } else { 1 };
-        let gep = if moe { [1, 2, 4][rng.below(3)] } else { 1 };
+        // EP 8 over 4 experts exercises the fractional (expert-TP)
+        // placement; invalid combos for small worlds are retried away
+        let uep = if moe { [1, 2, 4, 8][rng.below(4)] } else { 1 };
+        let gep = if moe { [1, 2, 4, 8][rng.below(4)] } else { 1 };
         let u = ParallelLayout { tp: utp, pp: 1, dp: udp, ep: uep, cp: 1 };
         let g = ParallelLayout { tp: gtp, pp: 1, dp: gdp, ep: gep, cp: 1 };
         if u.validate().is_ok() && g.validate().is_ok() {
@@ -174,6 +176,91 @@ fn alternating_flows_restore_baseline_for_random_layouts() {
         tested += 1;
     }
     assert!(tested >= 4, "too few valid random cases ({tested})");
+}
+
+/// Asymmetric-EP property suite: for random MoE inventories and layout
+/// pairs whose EP degree *changes* across the train→infer boundary
+/// (including the fractional EP8-over-4-experts placement), the
+/// allgather–swap reshard is bit-exact against direct sharding, a bus
+/// publish after perturbing a random subset of expert weights retains
+/// exactly the touched experts' slices, pool-charged bus bytes stay
+/// balanced, and alternating naive/swap runs restore the device pools
+/// to their construction baseline.
+#[test]
+fn asymmetric_ep_reshard_and_bus_retention_properties() {
+    let mut rng = Rng::new(77);
+    let mut tested = 0;
+    for case in 0..20 {
+        let num_experts = [2usize, 4][rng.below(2)];
+        let weights =
+            ModelWeights::moe_like(2, 32, 64, num_experts).with_test_data(700 + case);
+        // draw until the EP degree differs across the boundary
+        let Some((u, g)) = (0..50).find_map(|_| {
+            let pair = random_layout_pair(&mut rng, 8, true)?;
+            (pair.0.ep != pair.1.ep).then_some(pair)
+        }) else {
+            continue;
+        };
+        let mut rs =
+            Resharder::new(weights, u, g, GIB, 64 * GIB, 8, NetworkModel::paper())
+                .unwrap_or_else(|e| panic!("case {case} {u:?}->{g:?}: {e}"));
+        let baseline: Vec<u64> = rs.device_pools.iter().map(|p| p.live_bytes()).collect();
+
+        let rep = rs.reshard_allgather_swap().unwrap();
+        assert!(rs.verify_gen_shards().unwrap() > 0, "case {case} verified nothing");
+        assert_eq!(rep.redundant_bytes, 0, "case {case}");
+        let pool = Arc::new(MemoryPool::unbounded("weightbus"));
+        let bus = rs.seed_weight_bus(4, Some(Arc::clone(&pool))).unwrap();
+        let names = rs.gen_slice_names().unwrap();
+        rs.swap_back_h2d().unwrap();
+
+        // perturb a random subset of expert weights — the "train step"
+        let expert_names: Vec<String> = rs
+            .weights
+            .weights
+            .iter()
+            .filter(|w| matches!(w.kind, mindspeed_rl::parallel::WeightKind::Expert { .. }))
+            .map(|w| w.name.clone())
+            .collect();
+        let mut touched: Vec<String> = Vec::new();
+        for _ in 0..=rng.below(3) {
+            let n = expert_names[rng.below(expert_names.len())].clone();
+            if !touched.contains(&n) {
+                rs.perturb_weight(&n, 0.25).unwrap();
+                touched.push(n);
+            }
+        }
+        let before = bus.retained_bytes();
+        let (rep, v) = rs.reshard_allgather_swap_into(&bus).unwrap();
+        rs.verify_gen_shards().unwrap();
+        let grew = bus.retained_bytes() - before;
+        let expect: u64 = names
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, n))| touched.contains(n))
+            .map(|(i, _)| bus.get(v).unwrap().tensor(i).size_bytes() as u64)
+            .sum();
+        assert_eq!(
+            grew, expect,
+            "case {case} ({} -> {}): retention must grow by exactly the touched \
+             experts' slices ({touched:?})",
+            u.describe(),
+            g.describe()
+        );
+        assert_eq!(rep.bus_published_bytes, grew, "case {case}: published delta mismatch");
+        assert_eq!(pool.live_bytes(), bus.retained_bytes(), "case {case}: pool imbalance");
+
+        // pool balance across alternating naive / swap flows
+        rs.swap_back_h2d().unwrap();
+        rs.reshard_naive().unwrap();
+        rs.verify_gen_shards().unwrap();
+        rs.reshard_allgather_swap().unwrap();
+        rs.swap_back_h2d().unwrap();
+        let live: Vec<u64> = rs.device_pools.iter().map(|p| p.live_bytes()).collect();
+        assert_eq!(live, baseline, "case {case}: pools did not return to baseline");
+        tested += 1;
+    }
+    assert!(tested >= 10, "too few valid asymmetric-EP cases ({tested})");
 }
 
 #[test]

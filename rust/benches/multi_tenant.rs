@@ -1,0 +1,136 @@
+//! Bench: multi-tenant scheduling — weighted-fair claims and per-tenant
+//! quotas over one shared replica pool.
+//!
+//! Part 1 (always runs, deterministic, the CI perf gate's input): the
+//! backlogged handout probe from `sim::tenancy_claim_probe` — 64 samples
+//! striped across two tenants, 32 single-sample claims handed out by the
+//! real dock's deficit-weighted round robin. The gated metric is the
+//! worst Jain fairness index over weight-normalized claim shares across
+//! several weight ratios (1.0 = the handout tracks the weights exactly).
+//! Measuring over a *backlogged* dock is deliberate: a drain-to-
+//! completion run claims every sample exactly once, so its cumulative
+//! shares track the dataset split, not the weights.
+//!
+//! Part 2 (always runs, deterministic, gated): shared pool vs static
+//! slices through the cost model (`sim::tenancy_pool_summary`) — a
+//! short-prompt reward-model job and a long-CoT math job either carve
+//! the 16-NPU cluster into halves or time-share the whole pool. The
+//! gated `aggregate_tps_ratio` is the shared pool's speedup over the
+//! slices; work conservation (an idle tenant's share is donated) must
+//! keep it ≥ 1.
+//!
+//! Part 3 (always runs, informational): a full chaos drain with quotas —
+//! deferral counts and losslessness under real backpressure. Counters
+//! land in the ungated "info" bucket (thread interleaving varies them).
+//!
+//! `--json` emits the single-line summary for `ci/bench_gate.py`.
+
+use mindspeed_rl::sim::chaos::{run_chaos, ChaosConfig};
+use mindspeed_rl::sim::{tenancy_claim_probe, tenancy_pool_summary};
+use mindspeed_rl::util::bench::{BenchJson, Table};
+use mindspeed_rl::util::cli::Args;
+
+/// Jain fairness index over weight-normalized claim shares: 1.0 means
+/// every tenant's share/weight ratio is identical.
+fn jain(shares: &[(u64, u32)]) -> f64 {
+    let total: u64 = shares.iter().map(|(c, _)| c).sum();
+    if total == 0 || shares.len() < 2 {
+        return 1.0;
+    }
+    let x: Vec<f64> = shares
+        .iter()
+        .map(|&(c, w)| c as f64 / total as f64 / w as f64)
+        .collect();
+    let sum: f64 = x.iter().sum();
+    let sq: f64 = x.iter().map(|v| v * v).sum();
+    sum * sum / (x.len() as f64 * sq)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let json_mode = args.has("json");
+    let mut json = BenchJson::new("multi_tenant");
+
+    // ---- part 1: backlogged handout fairness (the gated metric)
+    let mut t = Table::new(
+        "Multi-tenant — DRR handout over a backlogged dock \
+         (64 samples striped over 2 tenants, 32 single-sample claims)",
+        &["weights", "claims t0/t1", "share t0", "fair t0", "Jain"],
+    );
+    let mut worst_jain = 1.0f64;
+    for (w0, w1) in [(1u32, 1u32), (2, 1), (3, 1), (7, 1)] {
+        let (c0, c1) = tenancy_claim_probe(w0, w1).unwrap();
+        let j = jain(&[(c0, w0), (c1, w1)]);
+        worst_jain = worst_jain.min(j);
+        t.row(vec![
+            format!("{w0}:{w1}"),
+            format!("{c0}/{c1}"),
+            format!("{:.0}%", c0 as f64 / (c0 + c1) as f64 * 100.0),
+            format!("{:.0}%", w0 as f64 / (w0 + w1) as f64 * 100.0),
+            format!("{j:.3}"),
+        ]);
+        json.info(&format!("claims_w{w0}_{w1}_t0"), c0 as f64);
+        json.info(&format!("claims_w{w0}_{w1}_t1"), c1 as f64);
+    }
+    // the acceptance criterion, asserted here so the bench itself fails
+    // loudly if the handout ever stops tracking the weights
+    assert!(
+        worst_jain >= 0.9,
+        "weighted-fair handout must keep Jain >= 0.9 at every ratio: {worst_jain:.3}"
+    );
+    json.higher("jain_fairness", worst_jain);
+    if !json_mode {
+        t.print();
+    }
+
+    // ---- part 2: shared pool vs static slices (gated)
+    let pool = tenancy_pool_summary();
+    assert!(
+        pool.speedup >= 1.0,
+        "a work-conserving shared pool cannot lose to static slices: {pool:?}"
+    );
+    json.higher("aggregate_tps_ratio", pool.speedup);
+    json.info("slice_wall_secs", pool.slice_wall_secs);
+    json.info("shared_wall_secs", pool.shared_wall_secs);
+    if !json_mode {
+        println!(
+            "\nshared pool vs static slices (short-prompt RM job + long-CoT math job, \
+             16 NPUs): {:.0}s -> {:.0}s per iteration pair ({:.2}x)",
+            pool.slice_wall_secs, pool.shared_wall_secs, pool.speedup
+        );
+    }
+
+    // ---- part 3: quota backpressure through a full chaos drain (info)
+    let cfg = ChaosConfig {
+        iterations: 8,
+        prompts_per_iter: 4,
+        group_size: 2,
+        max_inflight_iters: 8,
+        lease_ticks: 256,
+        seed: 42,
+        tenants: 2,
+        tenant_weights: vec![3, 1],
+        tenant_quota_mb: vec![1, 1],
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_chaos(&cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(out.lossless(&cfg), "quota backpressure lost samples: {:?}", out.recovery);
+    assert!(out.tenant_deferrals > 0, "the 1 MiB quotas must actually defer admissions");
+    json.info("quota_wall_secs", wall);
+    json.info("quota_deferrals", out.tenant_deferrals as f64);
+    json.info("quota_retired", out.retired.len() as f64);
+    if !json_mode {
+        println!(
+            "\nquota drain (2 tenants, 1 MiB each): retired={} deferrals={} \
+             wall={wall:.3}s — lossless under backpressure",
+            out.retired.len(),
+            out.tenant_deferrals
+        );
+    }
+
+    if json_mode {
+        json.emit().unwrap();
+    }
+}

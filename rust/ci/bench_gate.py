@@ -12,7 +12,14 @@ Subcommands:
 
   merge <dir> -o <out>      merge every *.json summary in <dir> into one
                             {"benches": {name: summary}} document
-                            (uploaded as the BENCH_PR.json artifact)
+                            (uploaded as the BENCH_PR.json artifact).
+                            With --expect <name,...> (names split on
+                            commas/whitespace — the workflow passes its
+                            bench list verbatim), a summary that is
+                            missing, or present but lacking a 'bench'
+                            key, FAILS the merge: a bench that silently
+                            stopped emitting must not slip past the gate
+                            as "no regression".
 
   gate <baseline> <pr>      compare the PR's merged document against the
                             committed baseline: any gated metric that
@@ -38,9 +45,16 @@ import sys
 EPS = 1e-9
 
 
+def parse_expect(spec: str) -> list:
+    """Bench names from --expect: commas and/or whitespace separate."""
+    return [n for n in spec.replace(",", " ").split() if n]
+
+
 def merge(args: argparse.Namespace) -> int:
     src = pathlib.Path(args.dir)
+    expected = parse_expect(args.expect) if args.expect else []
     benches = {}
+    errors = []
     for path in sorted(src.glob("*.json")):
         if path.name == "BENCH_PR.json":
             continue
@@ -48,9 +62,19 @@ def merge(args: argparse.Namespace) -> int:
             doc = json.load(f)
         name = doc.get("bench")
         if not name:
-            print(f"::warning::{path} has no 'bench' key; skipped")
+            if expected:
+                errors.append(f"{path} has no 'bench' key")
+            else:
+                print(f"::warning::{path} has no 'bench' key; skipped")
             continue
         benches[name] = doc
+    for name in expected:
+        if name not in benches:
+            errors.append(f"expected bench summary '{name}' is missing")
+    if errors:
+        for e in errors:
+            print(f"::error::merge: {e}")
+        return 1
     if not benches:
         print(f"::error::no bench summaries found under {src}")
         return 1
@@ -92,8 +116,9 @@ def gate(args: argparse.Namespace) -> int:
         base_metrics = gated_metrics(base_doc)
         pr_doc = pr.get("benches", {}).get(bench)
         if pr_doc is None:
-            if base_metrics:
-                failures.append(f"{bench}: bench missing from PR run")
+            # unconditional: even an all-info bench vanishing from the PR
+            # doc means a bench target silently stopped running
+            failures.append(f"{bench}: bench missing from PR run")
             continue
         pr_metrics = gated_metrics(pr_doc)
         for key, (old, direction) in sorted(base_metrics.items()):
@@ -135,6 +160,12 @@ def main() -> int:
     m = sub.add_parser("merge", help="merge per-bench JSON summaries")
     m.add_argument("dir", help="directory holding the per-bench *.json files")
     m.add_argument("-o", "--out", required=True, help="merged output path")
+    m.add_argument(
+        "--expect",
+        default="",
+        help="bench names (comma/whitespace separated) that MUST each "
+        "contribute a well-formed summary; any absence fails the merge",
+    )
     m.set_defaults(func=merge)
     g = sub.add_parser("gate", help="fail on >tolerance regressions vs baseline")
     g.add_argument("baseline", help="committed bench-baseline.json")

@@ -21,9 +21,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Keep in lockstep with BENCH_LIST in .github/workflows/ci.yml — the
+# merge below runs with --expect, so a missing or malformed summary
+# fails here exactly like it fails in CI.
 BENCHES=(
     table1_dispatch fig7_end_to_end fig9_linearity fig10_memory
-    fig11_moe hotpath pipeline_overlap stage_scaling continuous_batching
+    fig11_moe hotpath pipeline_overlap stage_scaling
+    continuous_batching partial_rollouts multi_tenant
 )
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -43,6 +47,7 @@ for b in "${BENCHES[@]}"; do
     cargo bench --bench "$b" -- --json
 done
 
-python3 ci/bench_gate.py merge target/bench -o target/bench/BENCH_PR.json
+python3 ci/bench_gate.py merge target/bench -o target/bench/BENCH_PR.json \
+    --expect "${BENCHES[*]}"
 cp target/bench/BENCH_PR.json bench-baseline.json
 echo "baseline installed at rust/bench-baseline.json — review and commit it"

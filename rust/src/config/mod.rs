@@ -144,6 +144,20 @@ impl Config {
             if let Some(v) = g.opt("preempt_on_publish") {
                 d.preempt_on_publish = v.bool()?;
             }
+            if let Some(v) = g.opt("tenants") {
+                d.tenants = v.usize()?;
+            }
+            if let Some(v) = g.opt("tenant_weights") {
+                d.tenant_weights = v
+                    .arr()?
+                    .iter()
+                    .map(|x| Ok(x.u64()? as u32))
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(v) = g.opt("tenant_quota_mb") {
+                d.tenant_quota_mb =
+                    v.arr()?.iter().map(|x| x.u64()).collect::<Result<_>>()?;
+            }
             if let Some(v) = g.opt("eval_every") {
                 d.eval_every = v.usize()?;
             }
@@ -217,6 +231,13 @@ impl Config {
         }
         g.prefill_chunk = args.usize_or("prefill-chunk", g.prefill_chunk)?;
         g.kv_block_tokens = args.usize_or("kv-block-tokens", g.kv_block_tokens)?;
+        g.tenants = args.usize_or("tenants", g.tenants)?;
+        if let Some(s) = args.get("tenant-weight") {
+            g.tenant_weights = parse_u32_list(s).context("--tenant-weight")?;
+        }
+        if let Some(s) = args.get("tenant-quota-mb") {
+            g.tenant_quota_mb = parse_u64_list(s).context("--tenant-quota-mb")?;
+        }
         g.eval_every = args.usize_or("eval-every", g.eval_every)?;
         g.eval_size = args.usize_or("eval-size", g.eval_size)?;
         g.log_every = args.usize_or("log-every", g.log_every)?;
@@ -235,6 +256,21 @@ impl Config {
         cfg.grpo.validate()?;
         Ok(cfg)
     }
+}
+
+/// Parse a comma-separated numeric flag value (`--tenant-weight 3,1`).
+fn parse_u64_list(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<u64>()
+                .with_context(|| format!("bad list item {p:?} (expected comma-separated numbers)"))
+        })
+        .collect()
+}
+
+fn parse_u32_list(s: &str) -> Result<Vec<u32>> {
+    Ok(parse_u64_list(s)?.into_iter().map(|v| v as u32).collect())
 }
 
 #[cfg(test)]
@@ -410,6 +446,48 @@ mod tests {
         assert!(cfg.grpo.autoscale);
         assert_eq!(cfg.grpo.autoscale_max, 8);
         assert_eq!(cfg.grpo.autoscale_backlog_hi, 32);
+    }
+
+    #[test]
+    fn tenancy_flags_parse_and_validate() {
+        let args = Args::parse(
+            ["--tenants", "2", "--tenant-weight", "3,1", "--tenant-quota-mb", "64,32"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.grpo.tenants, 2);
+        assert_eq!(cfg.grpo.tenant_weights, vec![3, 1]);
+        assert_eq!(cfg.grpo.tenant_quota_mb, vec![64, 32]);
+        let roster = cfg.grpo.tenant_set().unwrap();
+        assert_eq!(roster.weights(), vec![(0, 3), (1, 1)]);
+
+        // more weights than tenants is rejected at load time, not mid-run
+        let bad = Args::parse(
+            ["--tenants", "1", "--tenant-weight", "3,1"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // malformed list items are parse errors, not silent defaults
+        let bad = Args::parse(
+            ["--tenants", "2", "--tenant-weight", "3,x"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        // and file-config keys land too
+        let dir = std::env::temp_dir().join("msrl_cfg_tenancy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"grpo": {"tenants": 3, "tenant_weights": [2, 1, 1], "tenant_quota_mb": [16]}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.grpo.tenants, 3);
+        assert_eq!(cfg.grpo.tenant_weights, vec![2, 1, 1]);
+        assert_eq!(cfg.grpo.tenant_quota_mb, vec![16]);
     }
 
     #[test]

@@ -24,13 +24,15 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::memory::{BufferId, MemoryPool};
+use crate::memory::{BufferId, MemoryPool, TenantQuotas};
 
 /// A sequence's block reservation: the pool buffer ids backing it.
 #[derive(Debug)]
 struct SeqBlocks {
     blocks: Vec<BufferId>,
     tokens_reserved: usize,
+    /// tenant the reservation is charged to (0 = default tenant)
+    tenant: u32,
 }
 
 /// Block-granular KV accounting against a tracked [`MemoryPool`].
@@ -45,6 +47,12 @@ pub struct KvBlockAllocator {
     live_blocks: u64,
     /// admissions deferred because the pool was tight (backpressure events)
     deferrals: u64,
+    /// per-tenant quota registry: when set, every reservation is charged
+    /// to its sequence's tenant *before* touching the pool, so one
+    /// tenant's burst defers its own admissions instead of exhausting the
+    /// shared pool under its siblings (tenant-level backpressure in front
+    /// of the pool-level kind)
+    quotas: Option<Arc<TenantQuotas>>,
 }
 
 impl KvBlockAllocator {
@@ -60,7 +68,14 @@ impl KvBlockAllocator {
             seqs: HashMap::new(),
             live_blocks: 0,
             deferrals: 0,
+            quotas: None,
         }
+    }
+
+    /// Attach a per-tenant quota registry; subsequent admissions via
+    /// [`Self::try_admit_for`] charge their tenant before reserving.
+    pub fn set_tenant_quotas(&mut self, quotas: Arc<TenantQuotas>) {
+        self.quotas = Some(quotas);
     }
 
     /// Pool capacity (in blocks) that exactly covers a `batch × max_seq`
@@ -83,16 +98,35 @@ impl KvBlockAllocator {
     /// and never partially reserves: a failed admission rolls back every
     /// block it grabbed.
     pub fn try_admit(&mut self, seq_id: u64, worst_case_tokens: usize) -> Option<usize> {
+        self.try_admit_for(seq_id, 0, worst_case_tokens)
+    }
+
+    /// [`Self::try_admit`] with an explicit tenant: when a quota registry
+    /// is attached, the reservation's bytes are charged to the tenant
+    /// first and a tenant over quota is deferred *without touching the
+    /// pool* — other tenants' admissions see the same free pool they
+    /// would have seen had the over-quota tenant never asked.
+    pub fn try_admit_for(&mut self, seq_id: u64, tenant: u32, worst_case_tokens: usize) -> Option<usize> {
         debug_assert!(!self.seqs.contains_key(&seq_id), "sequence {seq_id} admitted twice");
         let n = self.blocks_for(worst_case_tokens);
+        let bytes = n as u64 * self.block_bytes;
+        if let Some(q) = &self.quotas {
+            if !q.try_charge(tenant, bytes) {
+                self.deferrals += 1;
+                return None;
+            }
+        }
         let mut blocks = Vec::with_capacity(n);
         for b in 0..n {
-            match self.pool.alloc(format!("kv.seq{seq_id}.b{b}"), self.block_bytes) {
+            match self.pool.alloc(format!("kv.t{tenant}.seq{seq_id}.b{b}"), self.block_bytes) {
                 Ok(id) => blocks.push(id),
                 Err(_) => {
                     // backpressure, not an error: roll back and defer
                     for id in blocks {
                         self.pool.free(id).expect("rollback frees blocks we just allocated");
+                    }
+                    if let Some(q) = &self.quotas {
+                        q.uncharge(tenant, bytes);
                     }
                     self.deferrals += 1;
                     return None;
@@ -100,7 +134,7 @@ impl KvBlockAllocator {
             }
         }
         self.live_blocks += n as u64;
-        self.seqs.insert(seq_id, SeqBlocks { blocks, tokens_reserved: n * self.block_tokens });
+        self.seqs.insert(seq_id, SeqBlocks { blocks, tokens_reserved: n * self.block_tokens, tenant });
         Some(n)
     }
 
@@ -110,10 +144,30 @@ impl KvBlockAllocator {
     pub fn release(&mut self, seq_id: u64) {
         if let Some(s) = self.seqs.remove(&seq_id) {
             self.live_blocks -= s.blocks.len() as u64;
+            if let Some(q) = &self.quotas {
+                q.uncharge(s.tenant, s.blocks.len() as u64 * self.block_bytes);
+            }
             for id in s.blocks {
                 self.pool.free(id).expect("kv blocks are pool-backed until release");
             }
         }
+    }
+
+    /// Tenant a live sequence's reservation is charged to.
+    pub fn tenant_of(&self, seq_id: u64) -> Option<u32> {
+        self.seqs.get(&seq_id).map(|s| s.tenant)
+    }
+
+    /// Would this tenant's quota alone reject a reservation of
+    /// `worst_case_tokens` right now? Pure check (nothing charged, no
+    /// deferral counted) — the scheduler uses it after a failed admission
+    /// to tell quota backpressure (skip just this request; siblings
+    /// behind it stay admissible) from pool backpressure (head-block,
+    /// FIFO). Always false without a quota registry.
+    pub fn quota_would_defer(&self, tenant: u32, worst_case_tokens: usize) -> bool {
+        let Some(q) = &self.quotas else { return false };
+        let n = self.blocks_for(worst_case_tokens);
+        !q.can_charge(tenant, n as u64 * self.block_bytes)
     }
 
     pub fn holds(&self, seq_id: u64) -> bool {
@@ -228,6 +282,46 @@ mod tests {
         // max_new_tokens = 0 with an empty prompt still occupies a slot
         assert_eq!(a.try_admit(0, 0), Some(1));
         assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn tenant_quota_defers_before_the_pool_is_touched() {
+        use crate::memory::TenantQuotas;
+        // pool has room for 8 blocks, but tenant 1 is capped at 2
+        let p = pool(8, 4, 1);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 4, 1);
+        let q = Arc::new(TenantQuotas::new());
+        q.set_quota(1, Some(2 * a.block_bytes()));
+        a.set_tenant_quotas(Arc::clone(&q));
+        assert_eq!(a.try_admit_for(0, 1, 8), Some(2));
+        // tenant 1 at quota: deferred with the pool untouched
+        let before = p.live_bytes();
+        assert_eq!(a.try_admit_for(1, 1, 4), None);
+        assert_eq!(p.live_bytes(), before, "quota deferral must not touch the pool");
+        assert_eq!(a.deferrals(), 1);
+        // tenant 2 (uncapped) still admits into the shared headroom
+        assert_eq!(a.try_admit_for(2, 2, 8), Some(2));
+        assert_eq!(a.tenant_of(2), Some(2));
+        assert!(a.invariant_holds());
+        // releasing tenant 1's reservation reopens its quota
+        a.release(0);
+        assert_eq!(q.charged(1), 0);
+        assert_eq!(a.try_admit_for(3, 1, 4), Some(1));
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn default_admission_charges_tenant_zero() {
+        use crate::memory::TenantQuotas;
+        let p = pool(4, 4, 1);
+        let mut a = KvBlockAllocator::new(Arc::clone(&p), 4, 1);
+        let q = Arc::new(TenantQuotas::new());
+        a.set_tenant_quotas(Arc::clone(&q));
+        assert_eq!(a.try_admit(9, 4), Some(1));
+        assert_eq!(a.tenant_of(9), Some(0));
+        assert_eq!(q.charged(0), a.block_bytes());
+        a.release(9);
+        assert_eq!(q.charged(0), 0, "release must uncharge the tenant");
     }
 
     #[test]

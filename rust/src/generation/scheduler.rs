@@ -38,11 +38,13 @@
 //! the differential suites.
 
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use super::batcher::{GenRequest, GenResult};
 use super::kv_cache::KvBlockAllocator;
 use super::sampler::{token_logprob, SamplingParams};
+use crate::memory::TenantQuotas;
 use crate::runtime::{Engine, Policy, Tensor};
 use crate::util::rng::Rng;
 
@@ -250,6 +252,10 @@ pub struct GenSession {
     /// pending queue, retirement, export) — lets the worker skip lease
     /// renewal entirely on steps where nothing joined or left
     held_rev: u64,
+    /// tenant per in-flight request id; default-tenant (0) requests are
+    /// never inserted, so single-tenant sessions keep an empty map and
+    /// the exact pre-tenancy admission path
+    tenant_by_id: HashMap<u64, u32>,
 }
 
 impl GenSession {
@@ -264,7 +270,15 @@ impl GenSession {
             kv_alloc,
             stats: StreamStats::default(),
             held_rev: 0,
+            tenant_by_id: HashMap::new(),
         }
+    }
+
+    /// Attach a per-tenant quota registry: subsequent admissions charge
+    /// their sequence's tenant, and quota-blocked requests are skipped
+    /// in [`Self::place`] instead of head-blocking siblings.
+    pub fn attach_tenant_quotas(&mut self, quotas: Arc<TenantQuotas>) {
+        self.kv_alloc.set_tenant_quotas(quotas);
     }
 
     fn seq_rng(&self, id: u64) -> Rng {
@@ -280,6 +294,27 @@ impl GenSession {
         self.submit_resume(req, Vec::new(), Vec::new());
     }
 
+    /// [`Self::submit`] with an explicit tenant: the sequence's KV
+    /// reservation is charged to `tenant` when a quota registry is
+    /// attached. Tenant 0 takes the plain path.
+    pub fn submit_for_tenant(&mut self, req: GenRequest, tenant: u32) {
+        self.submit_resume_for_tenant(req, Vec::new(), Vec::new(), tenant);
+    }
+
+    /// [`Self::submit_resume`] with an explicit tenant.
+    pub fn submit_resume_for_tenant(
+        &mut self,
+        req: GenRequest,
+        prefix_ids: Vec<i32>,
+        prefix_lps: Vec<f32>,
+        tenant: u32,
+    ) {
+        if tenant != 0 {
+            self.tenant_by_id.insert(req.id, tenant);
+        }
+        self.submit_resume(req, prefix_ids, prefix_lps);
+    }
+
     /// Submit a request that resumes from a persisted partial prefix: the
     /// prefix tokens are re-prefilled (KV only, no sampling) and the
     /// per-sequence RNG is fast-forwarded by the prefix's draw count, so
@@ -292,6 +327,8 @@ impl GenSession {
         let done_by_budget = req.max_new_tokens <= prefix_ids.len();
         let done_by_window = req.prompt_ids.len() + prefix_ids.len() + 1 > self.cfg.max_seq;
         if done_by_budget || done_by_window {
+            // degenerate completion: never occupied a slot, charges nothing
+            self.tenant_by_id.remove(&req.id);
             self.immediate.push(GenResult {
                 id: req.id,
                 finished_by_eos: prefix_ids.last() == Some(&self.cfg.eos_id),
@@ -311,21 +348,35 @@ impl GenSession {
     }
 
     /// Move pending requests into idle slots while KV admission allows.
-    /// FIFO and head-blocking: a deferred head is *not* overtaken by a
-    /// smaller later request, so KV backpressure cannot starve a long
-    /// prompt forever.
+    /// FIFO and head-blocking on *pool* pressure: a pool-deferred head is
+    /// not overtaken by a smaller later request, so KV backpressure
+    /// cannot starve a long prompt forever. *Quota*-deferred requests are
+    /// the exception: their backpressure belongs to one tenant, so they
+    /// are set aside (keeping their FIFO position) and the requests
+    /// behind them stay admissible — one tenant at its quota must not
+    /// stall its siblings' admission.
     fn place(&mut self) {
-        for slot in self.slots.iter_mut() {
+        let mut quota_skipped: Vec<Pending> = Vec::new();
+        'slots: for slot in self.slots.iter_mut() {
             if !matches!(slot, Slot::Idle) {
                 continue;
             }
-            let Some(head) = self.pending.front() else { break };
-            let worst = (head.req.prompt_ids.len() + head.req.max_new_tokens).min(self.cfg.max_seq);
-            if self.kv_alloc.try_admit(head.req.id, worst).is_none() {
+            let p = loop {
+                let Some(head) = self.pending.front() else { break 'slots };
+                let worst =
+                    (head.req.prompt_ids.len() + head.req.max_new_tokens).min(self.cfg.max_seq);
+                let tenant = self.tenant_by_id.get(&head.req.id).copied().unwrap_or(0);
+                if self.kv_alloc.try_admit_for(head.req.id, tenant, worst).is_some() {
+                    break self.pending.pop_front().unwrap();
+                }
                 self.stats.kv_deferrals = self.kv_alloc.deferrals();
-                break;
-            }
-            let p = self.pending.pop_front().unwrap();
+                if self.kv_alloc.quota_would_defer(tenant, worst) {
+                    // per-tenant backpressure: skip, don't block siblings
+                    quota_skipped.push(self.pending.pop_front().unwrap());
+                } else {
+                    break 'slots; // pool-tight: FIFO head-blocking stands
+                }
+            };
             self.stats.admitted += 1;
             self.stats.admit_wait_steps += self.stats.steps - p.submitted_at;
             self.stats.prompt_tokens += p.req.prompt_ids.len() as u64;
@@ -349,6 +400,11 @@ impl GenSession {
                 admitted_at: self.stats.steps,
                 req: p.req,
             }));
+        }
+        // quota-skipped requests resume their original FIFO position at
+        // the head, so they admit first once their tenant's quota reopens
+        for p in quota_skipped.into_iter().rev() {
+            self.pending.push_front(p);
         }
     }
 
@@ -399,10 +455,22 @@ impl GenSession {
     /// partial rollout and releases/abandons the claims — this is the
     /// kill / drain / preempt path made lossless.
     pub fn export_partials(&mut self) -> Vec<SeqExport> {
+        self.export_partials_for(|_| true)
+    }
+
+    /// [`Self::export_partials`] restricted to sequences whose tenant
+    /// satisfies `victim` — the per-tenant quota-preemption path: an
+    /// over-quota tenant's in-flight work is persisted and handed back
+    /// while every other tenant's sequences keep decoding untouched.
+    pub fn export_partials_for(&mut self, victim: impl Fn(u32) -> bool) -> Vec<SeqExport> {
         let mut out = Vec::new();
         for slot in self.slots.iter_mut() {
             if let Slot::Busy(a) = slot {
+                if !victim(self.tenant_by_id.get(&a.req.id).copied().unwrap_or(0)) {
+                    continue;
+                }
                 self.kv_alloc.release(a.req.id);
+                self.tenant_by_id.remove(&a.req.id);
                 out.push(SeqExport {
                     id: a.req.id,
                     response_ids: std::mem::take(&mut a.response),
@@ -412,7 +480,13 @@ impl GenSession {
                 *slot = Slot::Idle;
             }
         }
+        let mut kept = VecDeque::with_capacity(self.pending.len());
         for p in self.pending.drain(..) {
+            if !victim(self.tenant_by_id.get(&p.req.id).copied().unwrap_or(0)) {
+                kept.push_back(p);
+                continue;
+            }
+            self.tenant_by_id.remove(&p.req.id);
             out.push(SeqExport {
                 id: p.req.id,
                 resumed_from: p.prefix_ids.len(),
@@ -420,10 +494,22 @@ impl GenSession {
                 response_logprobs: p.prefix_lps,
             });
         }
+        self.pending = kept;
         if !out.is_empty() {
             self.held_rev += 1;
         }
         out
+    }
+
+    /// Tenants with at least one in-flight sequence (busy or pending),
+    /// deduplicated — the candidate set the executor checks for quota
+    /// preemption. Empty for single-tenant sessions (tenant 0 is never
+    /// tracked).
+    pub fn tenants_in_flight(&self) -> Vec<u32> {
+        let mut ts: Vec<u32> = self.tenant_by_id.values().copied().collect();
+        ts.sort_unstable();
+        ts.dedup();
+        ts
     }
 
     /// Non-destructive snapshot of every busy sequence that has decoded
@@ -595,6 +681,7 @@ impl GenSession {
                     // slot now; the caller writes the sample back as soon
                     // as this step returns
                     self.kv_alloc.release(r.id);
+                    self.tenant_by_id.remove(&r.id);
                     finished.push(r);
                     *slot = Slot::Idle;
                     self.held_rev += 1;
@@ -844,5 +931,51 @@ mod tests {
             s.partial_snapshots().is_empty(),
             "a resumed prefix alone is already persisted — nothing new to checkpoint"
         );
+    }
+
+    #[test]
+    fn quota_blocked_tenant_does_not_head_block_siblings() {
+        use crate::memory::TenantQuotas;
+        // pool has room for 16 blocks — only tenant 1's quota is tight
+        let mut s = session(2, 64, 16);
+        let q = Arc::new(TenantQuotas::new());
+        q.set_quota(1, Some(0));
+        s.attach_tenant_quotas(Arc::clone(&q));
+        s.submit_for_tenant(req(0, 4, 4), 1);
+        assert_eq!(s.kv_live_blocks(), 0, "quota-blocked request reserves nothing");
+        // a sibling tenant queued *behind* the blocked head still admits
+        s.submit_for_tenant(req(1, 4, 4), 2);
+        assert!(s.kv_live_blocks() > 0, "sibling must overtake a quota-blocked head");
+        assert_eq!(s.in_flight(), 2, "blocked request stays queued, not dropped");
+        assert!(s.kv_invariant_holds());
+        assert_eq!(s.tenants_in_flight(), vec![1, 2]);
+        // reopening the quota admits the parked request in FIFO order:
+        // it takes the last idle slot ahead of the newly submitted one
+        q.set_quota(1, Some(1 << 20));
+        s.submit_for_tenant(req(2, 4, 4), 2); // any submit re-runs placement
+        assert_eq!(s.kv_live_blocks(), 2, "parked request admitted after quota reopens");
+        assert_eq!(q.charged(1), s.kv_alloc.block_bytes(), "tenant 1 charged for its block");
+    }
+
+    #[test]
+    fn export_partials_for_preempts_one_tenant_only() {
+        use crate::memory::TenantQuotas;
+        let mut s = session(2, 64, 16);
+        let q = Arc::new(TenantQuotas::new());
+        s.attach_tenant_quotas(Arc::clone(&q));
+        s.submit_for_tenant(req(0, 4, 4), 1);
+        s.submit_for_tenant(req(1, 4, 4), 2);
+        s.submit_for_tenant(req(2, 4, 4), 1); // queued: both slots busy
+        assert_eq!(s.in_flight(), 3);
+        let charged_before = q.charged(2);
+        let ex = s.export_partials_for(|t| t == 1);
+        let mut ids: Vec<u64> = ex.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2], "busy and queued victims both export");
+        assert_eq!(s.in_flight(), 1, "the sibling keeps decoding");
+        assert_eq!(s.tenants_in_flight(), vec![2]);
+        assert_eq!(q.charged(1), 0, "victim's KV charges released");
+        assert_eq!(q.charged(2), charged_before, "sibling's charges untouched");
+        assert!(s.kv_invariant_holds());
     }
 }

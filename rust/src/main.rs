@@ -11,13 +11,15 @@
 //!                       [--gen-streaming] [--prefill-chunk K]
 //!                       [--kv-block-tokens B]
 //!                       [--partial-rollouts] [--preempt-on-publish]
+//!                       [--tenants N] [--tenant-weight W0,W1,...]
+//!                       [--tenant-quota-mb Q0,Q1,...]
 //!                       [--replay-buffer] [--gen-logprobs] [--eval-every K]
 //!                       [--lease-ticks T] [--dock-shards K]
 //!                       [--steal-threshold D] [--chaos-kill-rate P]
 //!                       [--chaos-stall-rate P] [--chaos-stall-ticks T]
 //!                       [--chaos-seed S] [--chaos-max-faults N] ...
 //! mindspeed-rl eval     [--preset small] [--k 4] [--n 64]    evaluate init policy
-//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming|dispatch
+//! mindspeed-rl simulate --experiment table1|fig7|fig9|fig11|overlap|chaos|scaling|streaming|dispatch|tenancy
 //! ```
 //!
 //! `--pipeline pipelined` runs every worker state (generation,
@@ -69,6 +71,19 @@
 //! bit-identical to the unsharded dock. `simulate --experiment dispatch`
 //! sweeps central-vs-sharded dispatch cost into the hundreds of nodes.
 //! See rust/DESIGN.md "Sharded dock".
+//!
+//! `--tenants N` multiplexes N tenant jobs over the shared stage pools:
+//! the prompt stream stripes round-robin by group, claim handouts are
+//! deficit-weighted round robin over backlogged tenants
+//! (`--tenant-weight 3,1` gives tenant 0 a 3:1 claim share while both
+//! are backlogged; an idle tenant's share is donated), and
+//! `--tenant-quota-mb` caps each tenant's shared-pool bytes — a tenant
+//! at its quota has its own admissions deferred and (with
+//! `--partial-rollouts`) its in-flight sequences preempted via the
+//! persist-then-release path; siblings are untouched. `--tenants 1`
+//! (default) is bit-identical to the pre-tenancy scheduler. `simulate
+//! --experiment tenancy` compares a weighted shared run against
+//! isolated slices. See rust/DESIGN.md "Multi-tenant scheduling".
 
 use anyhow::Result;
 

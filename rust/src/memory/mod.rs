@@ -11,6 +11,147 @@ use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+/// Per-tenant byte accounting over a shared pool: quotas, charges,
+/// high-water marks and backpressure counters.
+///
+/// The pool itself stays tenant-blind (one capacity, one OOM rule); this
+/// registry sits *in front* of it and answers "may tenant `t` take
+/// another `b` bytes?". Callers charge before allocating and uncharge
+/// after freeing, so a tenant at its quota is **deferred** (its own
+/// admission blocks) instead of tripping the pool-wide OOM that would
+/// punish its siblings. A tenant with no registered quota is uncapped —
+/// charges are still tracked (for the per-tenant report) but never
+/// refused, which is also the single-tenant default.
+#[derive(Debug, Default)]
+pub struct TenantQuotas {
+    inner: Mutex<BTreeMap<u32, TenantQuotaState>>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct TenantQuotaState {
+    quota: Option<u64>,
+    charged: u64,
+    high_water: u64,
+    deferrals: u64,
+    preemptions: u64,
+}
+
+/// One tenant's quota accounting, snapshotted for reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TenantQuotaSnapshot {
+    pub quota: Option<u64>,
+    pub charged: u64,
+    pub high_water: u64,
+    pub deferrals: u64,
+    pub preemptions: u64,
+}
+
+impl TenantQuotas {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or clear) a tenant's byte quota. Clearing does not
+    /// forget accumulated charges — only the cap.
+    pub fn set_quota(&self, tenant: u32, bytes: Option<u64>) {
+        self.inner.lock().unwrap().entry(tenant).or_default().quota = bytes;
+    }
+
+    /// Try to charge `bytes` to `tenant`. Returns `false` — and counts a
+    /// deferral — when the charge would push the tenant past its quota;
+    /// the caller must then defer the admission (nothing was charged).
+    pub fn try_charge(&self, tenant: u32, bytes: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(tenant).or_default();
+        if let Some(q) = s.quota {
+            if s.charged + bytes > q {
+                s.deferrals += 1;
+                return false;
+            }
+        }
+        s.charged += bytes;
+        s.high_water = s.high_water.max(s.charged);
+        true
+    }
+
+    /// Can `bytes` be charged to `tenant` right now? Pure check: no
+    /// charge lands, no deferral is counted — schedulers use it to tell
+    /// quota backpressure (skip just this tenant's request) apart from
+    /// pool backpressure (head-block everyone, FIFO).
+    pub fn can_charge(&self, tenant: u32, bytes: u64) -> bool {
+        let g = self.inner.lock().unwrap();
+        match g.get(&tenant) {
+            Some(s) => s.quota.map_or(true, |q| s.charged + bytes <= q),
+            None => true,
+        }
+    }
+
+    /// Charge bytes unconditionally (residency of state that is already
+    /// in the shared flow, where the backpressure point is the *next*
+    /// admission via [`Self::over_quota`], not this charge). High-water
+    /// tracking still applies, and the overrun is what arms preemption.
+    pub fn charge_forced(&self, tenant: u32, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(tenant).or_default();
+        s.charged += bytes;
+        s.high_water = s.high_water.max(s.charged);
+    }
+
+    /// Count an admission the caller deferred on this tenant's quota
+    /// (used by callers that gate on [`Self::over_quota`] rather than
+    /// [`Self::try_charge`]).
+    pub fn note_deferral(&self, tenant: u32) {
+        self.inner.lock().unwrap().entry(tenant).or_default().deferrals += 1;
+    }
+
+    /// Return bytes a tenant no longer holds (saturating: a chaos-path
+    /// double release must not underflow the sibling accounting).
+    pub fn uncharge(&self, tenant: u32, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(tenant).or_default();
+        s.charged = s.charged.saturating_sub(bytes);
+    }
+
+    /// A tenant currently at or over its quota (uncapped tenants never
+    /// are) — the signal the executor uses to pick preemption victims.
+    pub fn over_quota(&self, tenant: u32) -> bool {
+        let g = self.inner.lock().unwrap();
+        match g.get(&tenant) {
+            Some(s) => s.quota.is_some_and(|q| s.charged >= q),
+            None => false,
+        }
+    }
+
+    /// Record that a tenant's live work was preempted (drained and
+    /// persisted) to bring it back under quota.
+    pub fn note_preemption(&self, tenant: u32) {
+        self.inner.lock().unwrap().entry(tenant).or_default().preemptions += 1;
+    }
+
+    pub fn charged(&self, tenant: u32) -> u64 {
+        self.inner.lock().unwrap().get(&tenant).map_or(0, |s| s.charged)
+    }
+
+    /// Per-tenant snapshots (tenant-id ascending) for report assembly.
+    pub fn snapshot(&self) -> Vec<(u32, TenantQuotaSnapshot)> {
+        let g = self.inner.lock().unwrap();
+        g.iter()
+            .map(|(&t, s)| {
+                (
+                    t,
+                    TenantQuotaSnapshot {
+                        quota: s.quota,
+                        charged: s.charged,
+                        high_water: s.high_water,
+                        deferrals: s.deferrals,
+                        preemptions: s.preemptions,
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
 /// Identifies a tracked buffer within a pool.
 pub type BufferId = u64;
 
@@ -239,5 +380,49 @@ mod tests {
         p.alloc("update.w1", 10).unwrap();
         p.alloc("gen.w1", 20).unwrap();
         assert_eq!(p.live_bytes_matching(|l| l.starts_with("update.")), 10);
+    }
+
+    #[test]
+    fn quota_defers_only_the_offending_tenant() {
+        let q = TenantQuotas::new();
+        q.set_quota(1, Some(100));
+        assert!(q.try_charge(1, 80));
+        assert!(!q.try_charge(1, 30), "would exceed quota");
+        assert_eq!(q.charged(1), 80, "refused charge must not land");
+        assert_eq!(q.snapshot()[0].1.deferrals, 1);
+        // a sibling with headroom (or no quota at all) is unaffected
+        assert!(q.try_charge(2, 1 << 30), "uncapped tenant never defers");
+        q.set_quota(3, Some(50));
+        assert!(q.try_charge(3, 50), "exactly at quota is admitted");
+        assert!(q.over_quota(3));
+        assert!(!q.over_quota(2), "uncapped tenants are never over quota");
+    }
+
+    #[test]
+    fn high_water_survives_uncharge() {
+        let q = TenantQuotas::new();
+        q.set_quota(0, Some(1000));
+        assert!(q.try_charge(0, 600));
+        q.uncharge(0, 600);
+        assert_eq!(q.charged(0), 0);
+        let (_, s) = q.snapshot()[0];
+        assert_eq!(s.high_water, 600, "high water persists across frees");
+        // saturating: a chaos double-release must not underflow
+        q.uncharge(0, 999);
+        assert_eq!(q.charged(0), 0);
+    }
+
+    #[test]
+    fn uncharge_reopens_admission() {
+        let q = TenantQuotas::new();
+        q.set_quota(7, Some(64));
+        assert!(q.try_charge(7, 64));
+        assert!(!q.try_charge(7, 1));
+        q.uncharge(7, 32);
+        assert!(q.try_charge(7, 32), "freed bytes reopen the quota");
+        q.note_preemption(7);
+        let (_, s) = q.snapshot()[0];
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.deferrals, 1);
     }
 }

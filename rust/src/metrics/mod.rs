@@ -503,6 +503,110 @@ impl DockShardReport {
     }
 }
 
+/// One tenant's raw scheduling/quota counters (additive across merges;
+/// every ratio is derived on read).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantLane {
+    /// tenant id (0 = the default tenant)
+    pub tenant: u32,
+    /// configured claim weight the fair-share gate compares against
+    pub weight: u32,
+    /// samples the flow handed this tenant's claimants
+    pub claims: u64,
+    /// response tokens this tenant's retired samples carried
+    pub tokens: u64,
+    /// per-tenant quota high-water mark (bytes)
+    pub quota_high_water: u64,
+    /// admissions deferred because this tenant hit its quota
+    pub quota_deferrals: u64,
+    /// times this tenant's live work was preempted to reclaim quota
+    pub preemptions: u64,
+}
+
+/// Per-tenant accounting for a multi-tenant run (`--tenants N`): claim
+/// share vs configured weight, per-tenant throughput, quota pressure.
+/// Empty (or a single lane) for single-tenant runs, which stay out of
+/// summaries entirely.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantReport {
+    /// one lane per tenant, tenant-id ascending
+    pub lanes: Vec<TenantLane>,
+}
+
+impl TenantReport {
+    /// Merge another report in: lanes match on tenant id, raw counters
+    /// add, weights agree by construction (same run config) — a lane
+    /// only seen on one side is appended as-is.
+    pub fn merge(&mut self, other: &Self) {
+        for theirs in &other.lanes {
+            match self.lanes.iter_mut().find(|l| l.tenant == theirs.tenant) {
+                Some(mine) => {
+                    if mine.weight == 0 {
+                        mine.weight = theirs.weight;
+                    }
+                    mine.claims += theirs.claims;
+                    mine.tokens += theirs.tokens;
+                    mine.quota_high_water = mine.quota_high_water.max(theirs.quota_high_water);
+                    mine.quota_deferrals += theirs.quota_deferrals;
+                    mine.preemptions += theirs.preemptions;
+                }
+                None => self.lanes.push(theirs.clone()),
+            }
+        }
+        self.lanes.sort_by_key(|l| l.tenant);
+    }
+
+    pub fn total_claims(&self) -> u64 {
+        self.lanes.iter().map(|l| l.claims).sum()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.lanes.iter().map(|l| l.tokens).sum()
+    }
+
+    /// This tenant's fraction of all claims handed out (0 when nothing
+    /// was handed out yet).
+    pub fn claim_share(&self, tenant: u32) -> f64 {
+        let total = self.total_claims();
+        if total == 0 {
+            return 0.0;
+        }
+        self.lanes
+            .iter()
+            .find(|l| l.tenant == tenant)
+            .map_or(0.0, |l| l.claims as f64 / total as f64)
+    }
+
+    /// Jain fairness index over weight-normalized claim shares,
+    /// `J = (Σx)² / (n·Σx²)` with `x_t = claim_share_t / weight_t`.
+    /// 1.0 = every tenant's share exactly tracks its weight; `1/n` =
+    /// one tenant took everything. Degenerate inputs (≤1 lane, or no
+    /// claims yet) report 1.0 — nothing has been shared unfairly.
+    pub fn jain_index(&self) -> f64 {
+        if self.lanes.len() <= 1 || self.total_claims() == 0 {
+            return 1.0;
+        }
+        let xs: Vec<f64> = self
+            .lanes
+            .iter()
+            .map(|l| self.claim_share(l.tenant) / l.weight.max(1) as f64)
+            .collect();
+        let sum: f64 = xs.iter().sum();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sq == 0.0 {
+            return 1.0;
+        }
+        (sum * sum) / (xs.len() as f64 * sq)
+    }
+
+    /// Anything to report? Single-tenant runs stay out of summaries —
+    /// one lane's share is 100% by definition and its quota counters
+    /// already surface through the stream/partial clauses.
+    pub fn active(&self) -> bool {
+        self.lanes.len() > 1
+    }
+}
+
 /// Wall-clock vs per-stage busy time for one trainer run — the overlap
 /// accounting the pipelined executor reports.
 ///
@@ -538,6 +642,9 @@ pub struct PipelineReport {
     /// per-controller-shard dispatch counters (empty unless the run drove
     /// a sharded dock, `--dock-shards > 1`)
     pub dock: DockShardReport,
+    /// per-tenant claim/quota accounting (≤ 1 lane unless the run
+    /// multiplexed tenants, `--tenants > 1`)
+    pub tenants: TenantReport,
 }
 
 impl PipelineReport {
@@ -668,8 +775,32 @@ impl PipelineReport {
                 t.reclaimed
             )
         };
+        let tenants = if !self.tenants.active() {
+            String::new()
+        } else {
+            let lanes = self
+                .tenants
+                .lanes
+                .iter()
+                .map(|l| {
+                    format!(
+                        "t{}:w{}={:.0}%",
+                        l.tenant,
+                        l.weight,
+                        self.tenants.claim_share(l.tenant) * 100.0
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            let defer: u64 = self.tenants.lanes.iter().map(|l| l.quota_deferrals).sum();
+            let preempt: u64 = self.tenants.lanes.iter().map(|l| l.preemptions).sum();
+            format!(
+                " tenants[jain={:.2} {lanes} defer={defer} preempt={preempt}]",
+                self.tenants.jain_index()
+            )
+        };
         format!(
-            "[{}] wall={} overlap={}{}{}{}{}{}{}{} {}",
+            "[{}] wall={} overlap={}{}{}{}{}{}{}{}{} {}",
             self.mode,
             crate::util::fmt_secs(self.wall_secs),
             overlap,
@@ -680,6 +811,7 @@ impl PipelineReport {
             partial,
             rec,
             dock,
+            tenants,
             stages
         )
     }
@@ -1065,6 +1197,127 @@ mod tests {
             "{}",
             loud.summary()
         );
+    }
+
+    #[test]
+    fn tenant_report_jain_tracks_weight_normalized_shares() {
+        // perfect 3:1 split at weights 3:1 → weight-normalized shares are
+        // equal → J = 1.0
+        let fair = TenantReport {
+            lanes: vec![
+                TenantLane { tenant: 0, weight: 3, claims: 75, ..Default::default() },
+                TenantLane { tenant: 1, weight: 1, claims: 25, ..Default::default() },
+            ],
+        };
+        assert!((fair.jain_index() - 1.0).abs() < 1e-12, "{}", fair.jain_index());
+        assert!((fair.claim_share(0) - 0.75).abs() < 1e-12);
+        // the same split at equal weights is maximally skewed for n=2
+        // short of total starvation
+        let skewed = TenantReport {
+            lanes: vec![
+                TenantLane { tenant: 0, weight: 1, claims: 75, ..Default::default() },
+                TenantLane { tenant: 1, weight: 1, claims: 25, ..Default::default() },
+            ],
+        };
+        assert!(skewed.jain_index() < 0.9, "{}", skewed.jain_index());
+        // total starvation bottoms out at 1/n
+        let starved = TenantReport {
+            lanes: vec![
+                TenantLane { tenant: 0, weight: 1, claims: 100, ..Default::default() },
+                TenantLane { tenant: 1, weight: 1, claims: 0, ..Default::default() },
+            ],
+        };
+        assert!((starved.jain_index() - 0.5).abs() < 1e-12);
+        // degenerate inputs report 1.0, never NaN
+        assert_eq!(TenantReport::default().jain_index(), 1.0);
+        let idle = TenantReport {
+            lanes: vec![
+                TenantLane { tenant: 0, weight: 1, ..Default::default() },
+                TenantLane { tenant: 1, weight: 1, ..Default::default() },
+            ],
+        };
+        assert_eq!(idle.jain_index(), 1.0, "no claims yet: nothing unfair");
+    }
+
+    #[test]
+    fn tenant_report_merges_lanes_by_id() {
+        let mut a = TenantReport {
+            lanes: vec![TenantLane {
+                tenant: 0,
+                weight: 3,
+                claims: 10,
+                tokens: 100,
+                quota_high_water: 64,
+                quota_deferrals: 1,
+                preemptions: 0,
+            }],
+        };
+        let b = TenantReport {
+            lanes: vec![
+                TenantLane {
+                    tenant: 1,
+                    weight: 1,
+                    claims: 5,
+                    tokens: 50,
+                    ..Default::default()
+                },
+                TenantLane {
+                    tenant: 0,
+                    weight: 3,
+                    claims: 2,
+                    tokens: 20,
+                    quota_high_water: 32,
+                    quota_deferrals: 0,
+                    preemptions: 1,
+                },
+            ],
+        };
+        a.merge(&b);
+        assert_eq!(a.lanes.len(), 2);
+        assert_eq!(a.lanes[0].tenant, 0, "lanes sorted by tenant id");
+        assert_eq!(a.lanes[0].claims, 12);
+        assert_eq!(a.lanes[0].tokens, 120);
+        assert_eq!(a.lanes[0].quota_high_water, 64, "high water is a max, not a sum");
+        assert_eq!(a.lanes[0].preemptions, 1);
+        assert_eq!(a.lanes[1].claims, 5);
+        assert_eq!(a.total_claims(), 17);
+        assert_eq!(a.total_tokens(), 170);
+    }
+
+    #[test]
+    fn tenant_summary_clause_gated_on_multi_tenant() {
+        let quiet = PipelineReport { mode: "pipelined".into(), wall_secs: 1.0, ..Default::default() };
+        assert!(!quiet.summary().contains("tenants["));
+        // a single lane (the default tenant) also stays silent
+        let single = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            tenants: TenantReport {
+                lanes: vec![TenantLane { tenant: 0, weight: 1, claims: 40, ..Default::default() }],
+            },
+            ..Default::default()
+        };
+        assert!(!single.summary().contains("tenants["), "single tenant: share is 100% by definition");
+        let loud = PipelineReport {
+            mode: "pipelined".into(),
+            wall_secs: 1.0,
+            tenants: TenantReport {
+                lanes: vec![
+                    TenantLane { tenant: 0, weight: 3, claims: 75, ..Default::default() },
+                    TenantLane {
+                        tenant: 1,
+                        weight: 1,
+                        claims: 25,
+                        quota_deferrals: 2,
+                        preemptions: 1,
+                        ..Default::default()
+                    },
+                ],
+            },
+            ..Default::default()
+        };
+        let s = loud.summary();
+        assert!(s.contains("tenants[jain=1.00 t0:w3=75% t1:w1=25% defer=2 preempt=1]"), "{s}");
     }
 
     #[test]

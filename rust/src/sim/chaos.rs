@@ -15,14 +15,16 @@
 //! byte conservation.
 
 use anyhow::Result;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::TaskGenerator;
+use crate::memory::TenantQuotas;
 use crate::metrics::{FlowRecovery, StageScaling};
 use crate::runtime::Tensor;
+use crate::trainers::TenantSet;
 use crate::trainers::autoscale::{
     finish_scaling, observe_and_scale, spawn_initial, AutoscaleConfig, Autoscaler, ReplicaSet,
     StageReplicas, SCALABLE_STAGES,
@@ -80,6 +82,26 @@ pub struct ChaosConfig {
     /// cross-shard steal threshold — the harness twin of
     /// `--steal-threshold` (only meaningful with `dock_shards > 1`)
     pub steal_threshold: usize,
+    /// tenant roster size — the harness twin of `--tenants`. Groups
+    /// stripe round-robin over tenants by group id; 1 (default) is the
+    /// single-tenant bit-identical pre-tenancy path
+    pub tenants: usize,
+    /// positional per-tenant claim weights (short list pads with 1) —
+    /// the harness twin of `--tenant-weight`; installs deficit-weighted
+    /// round-robin handout on the flow when `tenants > 1`
+    pub tenant_weights: Vec<u32>,
+    /// positional per-tenant quotas in MiB (short list = uncapped) — the
+    /// harness twin of `--tenant-quota-mb`. Each admitted sample charges
+    /// a flat [`SYNTH_TENANT_BYTES`] against its tenant until retire, so
+    /// a quota of Q MiB bounds that tenant to Q·16 samples in flight;
+    /// over-quota tenants' fresh admissions defer (per-tenant FIFO)
+    /// while siblings admit freely
+    pub tenant_quota_mb: Vec<u64>,
+    /// admit only this tenant's groups — the isolated-slice run of the
+    /// multi-tenant differential oracle. The task stream is consumed in
+    /// full either way, so the filtered run sees exactly the groups the
+    /// shared run assigns that tenant
+    pub tenant_filter: Option<u32>,
     /// hard wall-clock bound — a wedged run fails loudly, never hangs CI
     pub deadline: Duration,
 }
@@ -102,14 +124,39 @@ impl Default for ChaosConfig {
             partial_rollouts: false,
             dock_shards: 1,
             steal_threshold: 0,
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            tenant_quota_mb: Vec::new(),
+            tenant_filter: None,
             deadline: Duration::from_secs(60),
         }
     }
 }
 
 impl ChaosConfig {
+    /// Samples this run admits (and must retire): every group under the
+    /// full roster, only the filtered tenant's groups in an
+    /// isolated-slice run.
     pub fn total_samples(&self) -> usize {
-        self.iterations * self.prompts_per_iter * self.group_size
+        let groups = self.iterations * self.prompts_per_iter;
+        let owned = match self.tenant_filter {
+            Some(t) => {
+                let n = self.tenants.max(1);
+                (0..groups).filter(|g| g % n == t as usize).count()
+            }
+            None => groups,
+        };
+        owned * self.group_size
+    }
+
+    /// The validated tenant roster for this run.
+    pub fn roster(&self) -> Result<TenantSet> {
+        TenantSet::from_config(self.tenants.max(1), &self.tenant_weights, &self.tenant_quota_mb)
+    }
+
+    /// Which tenant owns a group (groups stripe round-robin).
+    pub fn tenant_of_group(&self, group: u64) -> u32 {
+        (group % self.tenants.max(1) as u64) as u32
     }
 
     /// Initial replicas per stage: the explicit per-stage counts when
@@ -126,6 +173,14 @@ impl ChaosConfig {
 /// the executor's `PARTIAL_CKPT_STEPS`, shrunk so short synthetic
 /// budgets (1..=7 steps) still cross a checkpoint boundary.
 pub const SYNTH_CKPT_STEPS: u64 = 2;
+
+/// Flat synthetic per-sample quota charge: every admitted sample holds
+/// this many bytes against its tenant's quota until it retires, so a
+/// `tenant_quota_mb` of Q bounds the tenant to exactly Q·16 resident
+/// samples — deterministic backpressure without a real KV pool. The
+/// 1 MiB quota floor therefore always admits at least 16 samples:
+/// quota deferral can stall a tenant, never wedge it.
+pub const SYNTH_TENANT_BYTES: u64 = 64 << 10;
 
 /// Streaming decode-work accounting: decode steps actually executed vs
 /// the workload's intrinsic budget — the bounded-recompute half of the
@@ -191,6 +246,11 @@ pub struct ChaosOutcome {
     /// streaming decode-work accounting (default for batch-mode runs
     /// and the baseline)
     pub work: DecodeWork,
+    /// per-tenant claim counts from the flow's weighted-fair ledger
+    /// (empty for single-tenant runs — the fast path never counts)
+    pub tenant_claims: Vec<(u32, u64)>,
+    /// quota-deferred admissions summed over tenants (0 without quotas)
+    pub tenant_deferrals: u64,
 }
 
 impl ChaosOutcome {
@@ -466,6 +526,34 @@ fn synthetic_streaming_gen(
     }
 }
 
+/// Build one iteration's sample groups, tenant-striped by group id. An
+/// isolated-slice run (`tenant_filter`) keeps only the filtered tenant's
+/// groups but still consumes the full task stream, so the i-th group
+/// tenant `t` sees here is exactly the i-th group the shared run assigns
+/// it — the alignment the differential oracle re-keys on.
+fn build_iteration(
+    task_gen: &mut TaskGenerator,
+    cfg: &ChaosConfig,
+    iter: usize,
+) -> Vec<Sample> {
+    let tasks = task_gen.batch(cfg.prompts_per_iter);
+    let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
+    for (gi, t) in tasks.iter().enumerate() {
+        let group = (iter * cfg.prompts_per_iter + gi) as u64;
+        let tenant = cfg.tenant_of_group(group);
+        if cfg.tenant_filter.is_some_and(|f| f != tenant) {
+            continue;
+        }
+        for _ in 0..cfg.group_size {
+            samples.push(
+                Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer)
+                    .with_tenant(tenant),
+            );
+        }
+    }
+    samples
+}
+
 /// Admit one iteration's sample groups; returns the decode-step budget
 /// the admission added (Σ [`synth_budget`] — the uninterrupted decode
 /// work, the yardstick of the bounded-recompute differential).
@@ -475,16 +563,11 @@ fn admit_iteration(
     cfg: &ChaosConfig,
     iter: usize,
 ) -> Result<u64> {
-    let tasks = task_gen.batch(cfg.prompts_per_iter);
-    let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
-    for (gi, t) in tasks.iter().enumerate() {
-        let group = (iter * cfg.prompts_per_iter + gi) as u64;
-        for _ in 0..cfg.group_size {
-            samples.push(Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer));
-        }
-    }
+    let samples = build_iteration(task_gen, cfg, iter);
     let budget = samples.iter().map(synth_budget).sum();
-    flow.put_samples(samples)?;
+    if !samples.is_empty() {
+        flow.put_samples(samples)?;
+    }
     Ok(budget)
 }
 
@@ -503,11 +586,24 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         cfg.dock_shards,
         cfg.steal_threshold,
     ));
+    let roster = cfg.roster()?;
+    // weighted-fair handout + quotas apply only to the shared run: an
+    // isolated-slice run (`tenant_filter`) has nothing to arbitrate
+    if roster.is_multi() && cfg.tenant_filter.is_none() {
+        flow.set_tenant_weights(&roster.weights());
+    }
+    let quotas: Option<TenantQuotas> = (cfg.tenant_filter.is_none() && roster.has_quotas())
+        .then(|| {
+            let q = TenantQuotas::new();
+            for s in roster.specs() {
+                q.set_quota(s.id, s.quota_bytes);
+            }
+            q
+        });
     let injector: Option<Arc<FaultInjector>> =
         cfg.plan.enabled().then(|| Arc::new(FaultInjector::new(cfg.plan)));
     let shutdown = Arc::new(AtomicBool::new(false));
     let mut task_gen = TaskGenerator::train(cfg.seed);
-    let per_iter = cfg.prompts_per_iter * cfg.group_size;
     let window = cfg.max_inflight_iters.max(1);
     let replicas0 = cfg.initial_replicas();
 
@@ -597,6 +693,10 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                      sets: &mut Vec<ReplicaSet>,
                      scaler: &mut Option<Autoscaler>|
          -> Result<()> {
+            // per-tenant FIFO of quota-deferred samples: an over-quota
+            // tenant's admissions park here (order preserved) while its
+            // siblings admit freely past it
+            let mut deferred: BTreeMap<u32, VecDeque<Sample>> = BTreeMap::new();
             while *completed < cfg.iterations {
                 anyhow::ensure!(
                     Instant::now() < deadline,
@@ -605,11 +705,51 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                     cfg.total_samples(),
                     flow.lease_stats()
                 );
+                // re-open tenants whose retires cleared the quota: drain
+                // each FIFO while the tenant stays under, in park order
+                if let Some(q) = &quotas {
+                    for (t, queue) in deferred.iter_mut() {
+                        let mut batch = Vec::new();
+                        while !queue.is_empty() && !q.over_quota(*t) {
+                            q.charge_forced(*t, SYNTH_TENANT_BYTES);
+                            batch.push(queue.pop_front().expect("checked non-empty"));
+                        }
+                        if !batch.is_empty() {
+                            flow.put_samples(batch)?;
+                        }
+                    }
+                }
                 while *admitted < cfg.iterations && *admitted < *completed + window {
-                    *budget_steps +=
-                        admit_iteration(flow.as_ref(), &mut task_gen, cfg, *admitted)?;
-                    remaining.insert(*admitted, per_iter);
+                    let samples = build_iteration(&mut task_gen, cfg, *admitted);
+                    *budget_steps += samples.iter().map(synth_budget).sum::<u64>();
+                    remaining.insert(*admitted, samples.len());
+                    if let Some(q) = &quotas {
+                        let mut ready = Vec::new();
+                        for s in samples {
+                            let t = s.tenant;
+                            let queued_behind =
+                                deferred.get(&t).is_some_and(|d| !d.is_empty());
+                            if queued_behind || q.over_quota(t) {
+                                q.note_deferral(t);
+                                deferred.entry(t).or_default().push_back(s);
+                            } else {
+                                q.charge_forced(t, SYNTH_TENANT_BYTES);
+                                ready.push(s);
+                            }
+                        }
+                        if !ready.is_empty() {
+                            flow.put_samples(ready)?;
+                        }
+                    } else if !samples.is_empty() {
+                        flow.put_samples(samples)?;
+                    }
                     *admitted += 1;
+                }
+                // a filtered run's iteration may own zero groups: it
+                // completes right here, without ever seeing a retire
+                while remaining.get(completed).copied() == Some(0) {
+                    remaining.remove(completed);
+                    *completed += 1;
                 }
                 let fresh = flow.wait_ready(Stage::Update, usize::MAX, Duration::from_millis(5))?;
                 if fresh.is_empty() {
@@ -627,6 +767,9 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
                 }
                 for m in &fresh {
                     let Some(s) = flow.retire(m.index) else { continue };
+                    if let Some(q) = &quotas {
+                        q.uncharge(s.tenant, SYNTH_TENANT_BYTES);
+                    }
                     let dup = retired
                         .insert(s.index, (s.group, s.prompt_text.clone(), s.behavior_version));
                     anyhow::ensure!(dup.is_none(), "sample {} retired twice", s.index);
@@ -682,6 +825,10 @@ pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
             resumes: stream_counters.resumes.load(Ordering::Relaxed),
             saved_steps: stream_counters.saved.load(Ordering::Relaxed),
         },
+        tenant_claims: flow.tenant_claims(),
+        tenant_deferrals: quotas
+            .as_ref()
+            .map_or(0, |q| q.snapshot().iter().map(|(_, s)| s.deferrals).sum()),
     })
 }
 
@@ -743,6 +890,8 @@ pub fn run_baseline(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
         ticks: 0,
         scaling: StageScaling::default(),
         work: DecodeWork::default(),
+        tenant_claims: flow.tenant_claims(),
+        tenant_deferrals: 0,
     })
 }
 
@@ -933,5 +1082,81 @@ mod tests {
              or duplication: {:?}",
             out.recovery
         );
+    }
+
+    /// Per-tenant view of a retired map: group → (members, prompt,
+    /// stamp). Indices shift between shared and isolated runs (admission
+    /// order assigns them), so the oracle compares group-keyed views.
+    fn tenant_view(
+        out: &ChaosOutcome,
+        cfg: &ChaosConfig,
+        tenant: u32,
+    ) -> BTreeMap<u64, (usize, String, u64)> {
+        let mut view: BTreeMap<u64, (usize, String, u64)> = BTreeMap::new();
+        for (group, prompt, stamp) in out.retired.values() {
+            if cfg.tenant_of_group(*group) != tenant {
+                continue;
+            }
+            let e = view.entry(*group).or_insert_with(|| (0, prompt.clone(), *stamp));
+            e.0 += 1;
+            assert_eq!(&e.1, prompt, "group {group} members disagree on the prompt");
+            assert_eq!(e.2, *stamp, "group {group} members disagree on the stamp");
+        }
+        view
+    }
+
+    #[test]
+    fn multi_tenant_striping_matches_isolated_slices() {
+        // the multi-tenant differential in miniature (the weight × quota
+        // × faults × K sweep lives in tests/multi_tenant.rs): each
+        // tenant's slice of a shared weighted run must equal the run
+        // that admits only that tenant's groups
+        let shared = ChaosConfig {
+            lease_ticks: 256,
+            tenants: 2,
+            tenant_weights: vec![3, 1],
+            ..Default::default()
+        };
+        let out = run_chaos(&shared).unwrap();
+        assert!(out.lossless(&shared), "{:?}", out.recovery);
+        assert!(!out.tenant_claims.is_empty(), "multi-tenant run must count claims");
+        for t in 0..2 {
+            let iso_cfg = ChaosConfig { tenant_filter: Some(t), ..shared.clone() };
+            let iso = run_chaos(&iso_cfg).unwrap();
+            assert!(iso.lossless(&iso_cfg), "{:?}", iso.recovery);
+            assert_eq!(
+                tenant_view(&out, &shared, t),
+                tenant_view(&iso, &iso_cfg, t),
+                "tenant {t}'s shared-run slice must equal its isolated run"
+            );
+        }
+    }
+
+    #[test]
+    fn tenant_quota_defers_without_loss() {
+        // a window wide enough to outrun the 1 MiB (= 16-sample) quotas:
+        // admissions must park in the per-tenant FIFO and re-admit as
+        // retires uncharge — reordering admission, never the outcome
+        let cfg = ChaosConfig {
+            iterations: 8,
+            max_inflight_iters: 8,
+            lease_ticks: 256,
+            tenants: 2,
+            tenant_quota_mb: vec![1, 1],
+            ..Default::default()
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert!(out.lossless(&cfg), "{:?}", out.recovery);
+        assert!(out.tenant_deferrals > 0, "quota pressure must actually defer");
+        let free = ChaosConfig { tenant_quota_mb: Vec::new(), ..cfg.clone() };
+        let base = run_chaos(&free).unwrap();
+        assert!(base.lossless(&free), "{:?}", base.recovery);
+        for t in 0..2 {
+            assert_eq!(
+                tenant_view(&out, &cfg, t),
+                tenant_view(&base, &free, t),
+                "tenant {t}'s quota-deferred run diverged from the unquota'd run"
+            );
+        }
     }
 }

@@ -21,6 +21,9 @@
 //! * dispatch — central buffer vs K-sharded dock controllers: dispatch
 //!   seconds and weak-scaling linearity to hundreds of nodes (drives the
 //!   real flows and reads their ledgers)
+//! * tenancy — two tenant jobs over one shared replica pool: static
+//!   slices vs a weighted shared pool (cost model), and weighted-fair
+//!   claim shares + quota backpressure through the real dock ([`chaos`])
 
 pub mod chaos;
 mod costmodel;
@@ -29,6 +32,7 @@ mod systems;
 
 pub use chaos::{
     run_baseline, run_chaos, ChaosConfig, ChaosOutcome, DecodeWork, SYNTH_CKPT_STEPS,
+    SYNTH_TENANT_BYTES,
 };
 pub use costmodel::{
     long_tail_lengths, ClusterSpec, DeviceSpec, GenSim, PaperModel, RlWorkload, SeqSpec,
@@ -37,6 +41,8 @@ pub use costmodel::{
 pub use experiments::{
     chaos_rows, dispatch_rows, dispatch_rows_for, fig11_series, fig7_rows, fig9_rows,
     overlap_rows, run_named_experiment, scaling_rows, streaming_rows, table1_rows_out,
-    ChaosRow, DispatchRow, Fig7Row, Fig9Row, OverlapRow, ScalingRow, StreamingRow, Table1Row,
+    tenancy_claim_probe, tenancy_pool_summary, tenancy_rows, ChaosRow, DispatchRow, Fig7Row,
+    Fig9Row, OverlapRow,
+    ScalingRow, StreamingRow, Table1Row, TenancyPoolSummary, TenancyRow,
 };
 pub use systems::{SystemKind, SystemModel};

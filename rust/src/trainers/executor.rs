@@ -28,7 +28,7 @@
 //! policy even while generation runs ahead of the update. See DESIGN.md.
 
 use anyhow::{anyhow, Result};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -37,10 +37,10 @@ use crate::data::TaskGenerator;
 use crate::generation::{
     GenEngine, GenSession, KvBlockAllocator, SamplingParams, SeqExport, StreamConfig,
 };
-use crate::memory::MemoryPool;
+use crate::memory::{MemoryPool, TenantQuotas};
 use crate::metrics::{
     throughput_tps, PartialRolloutReport, PipelineReport, StageScaling, StageTimers,
-    StreamGenReport, VersionLag,
+    StreamGenReport, TenantLane, TenantReport, VersionLag,
 };
 use crate::rewards::group_advantages;
 use crate::runtime::{Engine, Policy, Tensor, TrainStats};
@@ -59,6 +59,7 @@ use super::autoscale::{
 use super::eval::evaluate;
 use super::faults::{FaultInjector, FaultKind, StageExit};
 use super::grpo::{assemble_batch, GrpoConfig, IterationMetrics, TrainReport};
+use super::tenancy::TenantSet;
 
 /// Which execution model drives the worker states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -128,22 +129,235 @@ pub(crate) fn run(
 }
 
 /// Admit iteration `iter`'s G × N prompt samples into the flow.
+///
+/// Tenancy: the deterministic prompt stream stripes round-robin over the
+/// roster by *group id* (one prompt = one group = one tenant — GRPO's
+/// within-group advantage normalization must never span tenants), so the
+/// i-th group tenant `t` sees in a shared run is exactly the i-th group
+/// it would admit running isolated on its slice (the re-keying
+/// `tests/multi_tenant.rs` relies on). A single-tenant roster tags
+/// everything 0 and charges nothing: bit-identical to the pre-tenancy
+/// admission path.
+///
+/// `backlog` enables per-tenant admission backpressure (pipelined mode):
+/// a sample whose tenant is over quota — or queued behind earlier
+/// deferred samples of the same tenant — parks in that tenant's FIFO
+/// instead of entering the dock, and only that tenant waits. Sync mode
+/// passes `None`: its barrier retires the whole iteration before the next
+/// admission, so deferral would deadlock the barrier and quota pressure
+/// degenerates to accounting (high-water, over-quota visibility).
 fn admit_iteration(
     flow: &dyn SampleFlow,
     task_gen: &mut TaskGenerator,
     cfg: &GrpoConfig,
     iter: usize,
+    roster: &TenantSet,
+    charges: &mut PayloadCharges,
+    backlog: Option<&mut BTreeMap<u32, VecDeque<Sample>>>,
 ) -> Result<()> {
     let tasks = task_gen.batch(cfg.prompts_per_iter);
     let mut samples = Vec::with_capacity(cfg.prompts_per_iter * cfg.group_size);
     for (gi, t) in tasks.iter().enumerate() {
         let group = (iter * cfg.prompts_per_iter + gi) as u64;
+        let tenant = roster.tenant_of_position(group);
         for _ in 0..cfg.group_size {
-            samples.push(Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer));
+            samples.push(
+                Sample::new_prompt(u64::MAX, group, t.prompt.clone(), t.answer)
+                    .with_tenant(tenant),
+            );
         }
     }
-    flow.put_samples(samples)?;
-    Ok(())
+    match backlog {
+        Some(backlog) => admit_or_defer(flow, charges, backlog, samples),
+        None => {
+            for s in &samples {
+                charges.charge(s.tenant, s.payload_bytes() as u64);
+            }
+            flow.put_samples(samples)
+        }
+    }
+}
+
+/// Per-tenant payload-residency charges held between admission and
+/// retirement. Sample indices are assigned *inside* `put_samples`, so the
+/// retire path cannot look its own admission charge up by index; instead
+/// each tenant's open charges retire FIFO — conservation is exact (every
+/// charge is uncharged exactly once) even when groups complete out of
+/// admission order, and the instantaneous ledger is off by at most the
+/// spread of per-sample payload sizes within one tenant.
+///
+/// Liveness: payload admission is soft-capped at **half** the tenant's
+/// quota (`soft_cap`). The other half stays reserved for the KV side —
+/// `KvBlockAllocator::try_admit_for` refuses strictly at the quota, so an
+/// admission wave that consumed the whole budget would wedge the tenant's
+/// own decode admission permanently (payload only drains at retire, and
+/// retire needs decode). With the reserve, an admitted sample can always
+/// eventually decode.
+struct PayloadCharges {
+    quotas: Option<Arc<TenantQuotas>>,
+    /// per-tenant open admission charges, oldest first
+    open: BTreeMap<u32, VecDeque<u64>>,
+    /// per-tenant sum of `open` (the payload-only residency)
+    held: BTreeMap<u32, u64>,
+    /// half the tenant's quota; absent = uncapped
+    soft_cap: BTreeMap<u32, u64>,
+}
+
+impl PayloadCharges {
+    fn new(roster: &TenantSet, quotas: Option<Arc<TenantQuotas>>) -> Self {
+        let soft_cap = roster
+            .specs()
+            .iter()
+            .filter_map(|s| s.quota_bytes.map(|q| (s.id, (q / 2).max(1))))
+            .collect();
+        Self { quotas, open: BTreeMap::new(), held: BTreeMap::new(), soft_cap }
+    }
+
+    /// Would admitting another sample for `tenant` right now defer it?
+    fn would_defer(&self, tenant: u32) -> bool {
+        let Some(q) = &self.quotas else { return false };
+        if q.over_quota(tenant) {
+            return true;
+        }
+        match self.soft_cap.get(&tenant) {
+            Some(cap) => self.held.get(&tenant).copied().unwrap_or(0) >= *cap,
+            None => false,
+        }
+    }
+
+    /// Charge an admission (forced: the breaching sample still enters —
+    /// the backpressure point is the *next* admission).
+    fn charge(&mut self, tenant: u32, bytes: u64) {
+        let Some(q) = &self.quotas else { return };
+        q.charge_forced(tenant, bytes);
+        self.open.entry(tenant).or_default().push_back(bytes);
+        *self.held.entry(tenant).or_insert(0) += bytes;
+    }
+
+    fn note_deferral(&self, tenant: u32) {
+        if let Some(q) = &self.quotas {
+            q.note_deferral(tenant);
+        }
+    }
+
+    /// Retire one of `tenant`'s admissions: pop its oldest open charge.
+    fn release(&mut self, tenant: u32) {
+        let Some(q) = &self.quotas else { return };
+        if let Some(bytes) = self.open.get_mut(&tenant).and_then(|d| d.pop_front()) {
+            q.uncharge(tenant, bytes);
+            let h = self.held.entry(tenant).or_insert(0);
+            *h = h.saturating_sub(bytes);
+        }
+    }
+}
+
+/// Admit what fits, defer the rest per tenant. A tenant with queued
+/// deferred samples keeps admitting through its queue (FIFO per tenant)
+/// even if its quota momentarily reopened mid-batch.
+fn admit_or_defer(
+    flow: &dyn SampleFlow,
+    charges: &mut PayloadCharges,
+    backlog: &mut BTreeMap<u32, VecDeque<Sample>>,
+    samples: Vec<Sample>,
+) -> Result<()> {
+    let mut admit = Vec::with_capacity(samples.len());
+    for s in samples {
+        let t = s.tenant;
+        let queued = backlog.get(&t).is_some_and(|d| !d.is_empty());
+        if queued || charges.would_defer(t) {
+            charges.note_deferral(t);
+            backlog.entry(t).or_default().push_back(s);
+        } else {
+            charges.charge(t, s.payload_bytes() as u64);
+            admit.push(s);
+        }
+    }
+    if admit.is_empty() {
+        Ok(())
+    } else {
+        flow.put_samples(admit)
+    }
+}
+
+/// Drain every tenant's deferred FIFO as far as its reopened quota
+/// allows. Deferrals were counted when the samples first parked; a flush
+/// retry is not another deferral.
+fn flush_deferred(
+    flow: &dyn SampleFlow,
+    charges: &mut PayloadCharges,
+    backlog: &mut BTreeMap<u32, VecDeque<Sample>>,
+) -> Result<()> {
+    let mut admit = Vec::new();
+    for (t, dq) in backlog.iter_mut() {
+        while !dq.is_empty() && !charges.would_defer(*t) {
+            let s = dq.pop_front().unwrap();
+            charges.charge(*t, s.payload_bytes() as u64);
+            admit.push(s);
+        }
+    }
+    if admit.is_empty() {
+        Ok(())
+    } else {
+        flow.put_samples(admit)
+    }
+}
+
+/// Assemble the run's per-tenant lanes: configured weights from the
+/// roster, claim counts from the flow's DRR ledger, quota counters from
+/// the registry, token counts from the driver's retire loop. Empty for a
+/// plain single-tenant run — the report clause stays silent.
+fn tenant_report(
+    roster: &TenantSet,
+    flow: &dyn SampleFlow,
+    quotas: Option<&TenantQuotas>,
+    tokens: &BTreeMap<u32, u64>,
+) -> TenantReport {
+    if !roster.is_multi() && quotas.is_none() {
+        return TenantReport::default();
+    }
+    let claims: BTreeMap<u32, u64> = flow.tenant_claims().into_iter().collect();
+    let snaps: BTreeMap<u32, crate::memory::TenantQuotaSnapshot> = quotas
+        .map(|q| q.snapshot().into_iter().collect())
+        .unwrap_or_default();
+    let lanes = roster
+        .specs()
+        .iter()
+        .map(|spec| {
+            let snap = snaps.get(&spec.id);
+            TenantLane {
+                tenant: spec.id,
+                weight: spec.weight,
+                claims: claims.get(&spec.id).copied().unwrap_or(0),
+                tokens: tokens.get(&spec.id).copied().unwrap_or(0),
+                quota_high_water: snap.map_or(0, |s| s.high_water),
+                quota_deferrals: snap.map_or(0, |s| s.deferrals),
+                preemptions: snap.map_or(0, |s| s.preemptions),
+            }
+        })
+        .collect();
+    TenantReport { lanes }
+}
+
+/// Build the run's tenancy context from the config: DRR weights are
+/// installed on the flow only for multi-tenant rosters (the single-tenant
+/// flow keeps its index-order fast path, bit-identical to pre-tenancy),
+/// and the quota registry exists only when some tenant is capped.
+fn tenancy_setup(
+    cfg: &GrpoConfig,
+    flow: &dyn SampleFlow,
+) -> Result<(TenantSet, Option<Arc<TenantQuotas>>)> {
+    let roster = cfg.tenant_set()?;
+    if roster.is_multi() {
+        flow.set_tenant_weights(&roster.weights());
+    }
+    let quotas = roster.has_quotas().then(|| {
+        let q = TenantQuotas::new();
+        for spec in roster.specs() {
+            q.set_quota(spec.id, spec.quota_bytes);
+        }
+        Arc::new(q)
+    });
+    Ok((roster, quotas))
 }
 
 // ----------------------------------------------------------------- sync
@@ -160,6 +374,9 @@ fn run_sync(
     let placement = StagePlacement::spread(cfg.nodes);
     let mut rng = Rng::new(cfg.seed);
     let mut task_gen = TaskGenerator::train(cfg.seed);
+    let (roster, quotas) = tenancy_setup(cfg, flow.as_ref())?;
+    let mut charges = PayloadCharges::new(&roster, quotas.clone());
+    let mut tenant_tokens: BTreeMap<u32, u64> = BTreeMap::new();
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     let net = NetworkModel::paper();
 
@@ -202,8 +419,8 @@ fn run_sync(
     for iter in 0..cfg.iterations {
         let t_iter = Instant::now();
 
-        // 1. admit prompts (G × N samples, grouped)
-        admit_iteration(flow.as_ref(), &mut task_gen, cfg, iter)?;
+        // 1. admit prompts (G × N samples, grouped, tenant-striped)
+        admit_iteration(flow.as_ref(), &mut task_gen, cfg, iter, &roster, &mut charges, None)?;
 
         // 2. generation until drained
         let t0 = Instant::now();
@@ -252,6 +469,10 @@ fn run_sync(
         }
         for sm in &ready {
             flow.retire(sm.index);
+            charges.release(sm.tenant);
+            if roster.is_multi() {
+                *tenant_tokens.entry(sm.tenant).or_insert(0) += sm.resp_len as u64;
+            }
         }
         // the iteration ran entirely under one version: zero lag, by
         // construction — recorded so sync and pipelined reports stay
@@ -328,6 +549,7 @@ fn run_sync(
         // sync never abandons a sequence mid-decode: nothing to persist
         partial: PartialRolloutReport::default(),
         dock: flow.dock_report(),
+        tenants: tenant_report(&roster, flow.as_ref(), quotas.as_deref(), &tenant_tokens),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);
@@ -454,11 +676,12 @@ fn generation_stage(
     busy: &Mutex<StageTimers>,
     stream_acc: &Mutex<StreamGenReport>,
     partial_acc: &Mutex<PartialRolloutReport>,
+    quotas: Option<&Arc<TenantQuotas>>,
 ) -> Result<StageExit> {
     if cfg.gen_streaming {
         return streaming_generation_stage(
             engine, cfg, placement, flow, bus, replica_pool, replica_id, retire, busy_slots,
-            faults, shutdown, busy, stream_acc, partial_acc,
+            faults, shutdown, busy, stream_acc, partial_acc, quotas,
         );
     }
     let gen_engine = GenEngine::from_manifest(
@@ -578,6 +801,7 @@ fn streaming_generation_stage(
     busy: &Mutex<StageTimers>,
     stream_acc: &Mutex<StreamGenReport>,
     partial_acc: &Mutex<PartialRolloutReport>,
+    quotas: Option<&Arc<TenantQuotas>>,
 ) -> Result<StageExit> {
     let gen_engine = GenEngine::from_manifest(
         engine,
@@ -623,6 +847,14 @@ fn streaming_generation_stage(
         scfg,
         KvBlockAllocator::new(Arc::clone(&kv_pool), cfg.kv_block_tokens, bytes_per_token),
     );
+    if let Some(q) = quotas {
+        session.attach_tenant_quotas(Arc::clone(q));
+    }
+    // per-tenant quota preemption latch: fires once per over-quota
+    // episode (cleared when the tenant drops back under), so the
+    // tenant's re-claimed resumes may decode while it stays capped —
+    // repeat-preempting payload-held quota would starve the tenant
+    let mut quota_preempted: HashSet<u32> = HashSet::new();
     // per-sequence context a writeback needs: encoded prompt + the weight
     // version the sequence was admitted (stamped) under
     let mut prompts: HashMap<u64, Vec<i32>> = HashMap::new();
@@ -728,6 +960,10 @@ fn streaming_generation_stage(
             let samples = flow.fetch_resident(placement.actor, &metas)?;
             let (requests, prompt_map) = actor.prepare_requests(&samples)?;
             prompts.extend(prompt_map);
+            // tenant tags, captured before the partials loop consumes
+            // the fetched samples (request id == sample index)
+            let tenants_of: HashMap<u64, u32> =
+                samples.iter().map(|s| (s.index, s.tenant)).collect();
             // resumable sequences carry their persisted prefix with them
             let mut partials: HashMap<u64, PartialRollout> = HashMap::new();
             if cfg.partial_rollouts {
@@ -739,6 +975,7 @@ fn streaming_generation_stage(
             }
             for r in requests {
                 stamps.insert(r.id, v);
+                let tenant = tenants_of.get(&r.id).copied().unwrap_or(0);
                 match partials.remove(&r.id) {
                     Some(p) if !p.response_ids.is_empty() => {
                         pr.resumed += 1;
@@ -746,9 +983,46 @@ fn streaming_generation_stage(
                         // the fetched prefix is by definition persisted
                         persisted_len.insert(r.id, p.token_len());
                         closed_segs.insert(r.id, p.segments.clone());
-                        session.submit_resume(r, p.response_ids, p.response_logprobs);
+                        session.submit_resume_for_tenant(
+                            r,
+                            p.response_ids,
+                            p.response_logprobs,
+                            tenant,
+                        );
                     }
-                    _ => session.submit(r),
+                    _ => session.submit_for_tenant(r, tenant),
+                }
+            }
+        }
+
+        // quota preemption: a tenant past its byte budget has its
+        // in-flight sequences drained to persisted partial rollouts and
+        // the claims handed back — the single-tenant drain-then-retire
+        // path scoped to one tenant, so siblings' slots keep decoding
+        // and no decoded token is lost
+        if cfg.partial_rollouts {
+            if let Some(q) = quotas {
+                quota_preempted.retain(|t| q.over_quota(*t));
+                for t in session.tenants_in_flight() {
+                    if !q.over_quota(t) || !quota_preempted.insert(t) {
+                        continue;
+                    }
+                    let exports = session.export_partials_for(|x| x == t);
+                    if exports.is_empty() {
+                        continue;
+                    }
+                    let ids = persist_exports(
+                        flow, placement.actor, exports, &stamps,
+                        &mut closed_segs, &mut persisted_len, &mut pr,
+                    )?;
+                    flow.release(Stage::Generation, &ids);
+                    for id in &ids {
+                        prompts.remove(id);
+                        stamps.remove(id);
+                        closed_segs.remove(id);
+                        persisted_len.remove(id);
+                    }
+                    q.note_preemption(t);
                 }
             }
         }
@@ -1222,6 +1496,7 @@ fn run_pipelined(
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     let net = NetworkModel::paper();
     let mut task_gen = TaskGenerator::train(cfg.seed);
+    let (roster, quotas) = tenancy_setup(cfg, flow.as_ref())?;
 
     let mut policy = Policy::load_initial(engine, cfg.lr)?;
     let a = engine.manifest.artifact("train_step")?.clone();
@@ -1266,6 +1541,12 @@ fn run_pipelined(
     let mut iterations = Vec::with_capacity(cfg.iterations);
     let mut version_lags = Vec::with_capacity(cfg.iterations);
     let mut evals = Vec::new();
+    // tenancy driver state: open payload charges, per-tenant deferred
+    // admission FIFOs, per-tenant retired-token counters — all owned by
+    // the update thread (the only admitter and retirer)
+    let mut charges = PayloadCharges::new(&roster, quotas.clone());
+    let mut deferred: BTreeMap<u32, VecDeque<Sample>> = BTreeMap::new();
+    let mut tenant_tokens: BTreeMap<u32, u64> = BTreeMap::new();
     // replica sets + autoscaler live outside the scope so their final
     // slot-time accounting runs after every replica thread has joined —
     // busy totals are final by then, which is what bounds replica-aware
@@ -1319,6 +1600,7 @@ fn run_pipelined(
                              exited: Arc<AtomicBool>| {
             let flow = Arc::clone(&flow);
             let bus = Arc::clone(&bus);
+            let quotas = quotas.clone();
             let lp_serial = Arc::clone(&lp_serial);
             let replica_pool = Arc::clone(&replica_pool);
             let stream_acc = Arc::clone(&stream_acc);
@@ -1349,6 +1631,7 @@ fn run_pipelined(
                         &busy,
                         &stream_acc,
                         &partial_acc,
+                        quotas.as_ref(),
                     )
                 ),
                 Stage::OldLogprob => supervise!(
@@ -1434,9 +1717,20 @@ fn run_pipelined(
                     anyhow::bail!(msg);
                 }
 
-                // admit ahead, bounded by the staleness window
+                // quota-deferred admissions first (per-tenant FIFO,
+                // reopened quotas drain oldest-first), then admit ahead,
+                // bounded by the staleness window
+                flush_deferred(flow.as_ref(), &mut charges, &mut deferred)?;
                 while admitted < cfg.iterations && admitted < completed + window {
-                    admit_iteration(flow.as_ref(), &mut task_gen, cfg, admitted)?;
+                    admit_iteration(
+                        flow.as_ref(),
+                        &mut task_gen,
+                        cfg,
+                        admitted,
+                        &roster,
+                        &mut charges,
+                        Some(&mut deferred),
+                    )?;
                     accs.insert(admitted, IterAcc::new(per_iter));
                     admitted += 1;
                 }
@@ -1528,6 +1822,7 @@ fn run_pipelined(
                             );
                             for m in &ms {
                                 flow.retire(m.index);
+                                charges.release(m.tenant);
                             }
                         }
                     }
@@ -1566,6 +1861,11 @@ fn run_pipelined(
                     }
                     for sm in slice {
                         flow.retire(sm.index);
+                        charges.release(sm.tenant);
+                        if roster.is_multi() {
+                            *tenant_tokens.entry(sm.tenant).or_insert(0) +=
+                                sm.resp_len as u64;
+                        }
                         acc.prompt_tokens += sm.prompt_len as u64;
                         // behavior-policy staleness of this sample at the
                         // moment the update consumed it: publishes between
@@ -1698,6 +1998,7 @@ fn run_pipelined(
         gen_stream: *stream_acc.lock().unwrap(),
         partial: *partial_acc.lock().unwrap(),
         dock: flow.dock_report(),
+        tenants: tenant_report(&roster, flow.as_ref(), quotas.as_deref(), &tenant_tokens),
     };
     for (stage, secs, _count) in timers.entries() {
         pipeline.busy.insert(stage, secs);

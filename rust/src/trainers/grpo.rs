@@ -135,6 +135,20 @@ pub struct GrpoConfig {
     /// head instead of finishing its long tail under stale weights —
     /// trades a resume round-trip for fresher behavior policy
     pub preempt_on_publish: bool,
+    /// tenant jobs multiplexed over the shared stage pools (1 = the
+    /// single default tenant, bit-identical to pre-tenancy behavior).
+    /// Tenants stripe the prompt stream round-robin by admission
+    /// position; claims are handed out deficit-weighted round robin
+    pub tenants: usize,
+    /// positional per-tenant claim weights (`--tenant-weight 3,1`);
+    /// omitted tenants weigh 1
+    pub tenant_weights: Vec<u32>,
+    /// positional per-tenant byte quotas in MiB (`--tenant-quota-mb 64`);
+    /// omitted tenants are uncapped. A tenant at its quota has its own
+    /// admissions deferred (KV and prompt alike); with
+    /// `--partial-rollouts` an over-quota tenant's in-flight decodes are
+    /// preempted via persist-and-release, losing no tokens
+    pub tenant_quota_mb: Vec<u64>,
     /// evaluate every k iterations (0 = only at the end)
     pub eval_every: usize,
     pub eval_size: usize,
@@ -206,6 +220,10 @@ impl GrpoConfig {
             "--preempt-on-publish requires --partial-rollouts (preemption \
              without persistence would discard decoded prefixes)"
         );
+        // the tenant roster's own invariants (counts, weight/quota list
+        // lengths and ranges) — built once here so a bad `--tenant-weight`
+        // fails at config load, not mid-run
+        self.tenant_set()?;
         if let Some(ac) = self.autoscale_config() {
             ac.validate()?;
             anyhow::ensure!(
@@ -233,6 +251,15 @@ impl GrpoConfig {
             up_ticks: self.autoscale_up_ticks,
             down_ticks: self.autoscale_down_ticks,
         })
+    }
+
+    /// The configured tenant roster (always at least the default tenant).
+    pub fn tenant_set(&self) -> Result<super::tenancy::TenantSet> {
+        super::tenancy::TenantSet::from_config(
+            self.tenants,
+            &self.tenant_weights,
+            &self.tenant_quota_mb,
+        )
     }
 
     /// The configured chaos schedule, if any (None when both rates are 0).
@@ -288,6 +315,9 @@ impl Default for GrpoConfig {
             kv_block_tokens: 16,
             partial_rollouts: false,
             preempt_on_publish: false,
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            tenant_quota_mb: Vec::new(),
             eval_every: 0,
             eval_size: 64,
             log_every: 10,
@@ -781,5 +811,44 @@ mod tests {
         }
         // both runs must have moved real bytes through the dock
         assert!(b.final_ledger.total_bytes() > 0);
+    }
+
+    #[test]
+    fn tenancy_config_gating() {
+        // the default config is the single default tenant
+        let cfg = GrpoConfig::default();
+        let roster = cfg.tenant_set().unwrap();
+        assert_eq!(roster.len(), 1);
+        assert!(!roster.is_multi());
+        cfg.validate().unwrap();
+
+        // a weighted two-tenant roster validates and exposes its weights
+        let cfg = GrpoConfig {
+            tenants: 2,
+            tenant_weights: vec![3, 1],
+            tenant_quota_mb: vec![64],
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let roster = cfg.tenant_set().unwrap();
+        assert_eq!(roster.weights(), vec![(0, 3), (1, 1)]);
+        assert_eq!(roster.spec(0).unwrap().quota_bytes, Some(64 << 20));
+        assert_eq!(roster.spec(1).unwrap().quota_bytes, None);
+
+        // bad rosters fail at validate, not mid-run
+        let zero = GrpoConfig { tenants: 0, ..Default::default() };
+        assert!(zero.validate().is_err(), "zero tenants must be rejected");
+        let extra = GrpoConfig {
+            tenants: 1,
+            tenant_weights: vec![1, 2],
+            ..Default::default()
+        };
+        assert!(extra.validate().is_err(), "more weights than tenants must be rejected");
+        let zero_w = GrpoConfig {
+            tenants: 2,
+            tenant_weights: vec![0],
+            ..Default::default()
+        };
+        assert!(zero_w.validate().is_err(), "zero weight must be rejected");
     }
 }

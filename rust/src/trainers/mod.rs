@@ -11,6 +11,7 @@ mod eval;
 mod executor;
 pub mod faults;
 mod grpo;
+pub mod tenancy;
 mod variants;
 
 pub use autoscale::{AutoscaleConfig, Autoscaler, ReplicaSet, ScaleDecision, StageReplicas};
@@ -18,4 +19,5 @@ pub use eval::{evaluate, EvalResult};
 pub use executor::{PipelineMode, StagePlacement};
 pub use faults::{FaultInjector, FaultKind, FaultPlan, StageExit};
 pub use grpo::{run_grpo, run_grpo_on_flow, GrpoConfig, IterationMetrics, TrainReport};
+pub use tenancy::{TenantSet, TenantSpec};
 pub use variants::{AdvantageKind, filter_groups_dapo, pf_ppo_reweight, ppo_gae_advantages};

@@ -1,0 +1,198 @@
+//! Multi-tenant job specs: several RL jobs multiplexed over one shared
+//! set of stage replica pools.
+//!
+//! A **tenant** is one logical training job — its own dataset slice, its
+//! own reward function, its own staleness window — sharing the
+//! generation / logprob / reward replicas with every other tenant instead
+//! of carving the cluster into static slices. Two mechanisms keep the
+//! sharing honest:
+//!
+//! * **weighted-fair claims** — every [`crate::transfer_dock::SampleFlow`]
+//!   hands out ready samples by deficit-weighted round robin over
+//!   backlogged tenants (see `SampleFlow::set_tenant_weights`), so a
+//!   tenant's long-run claim share tracks its [`TenantSpec::weight`]
+//!   without reserving replicas for idle tenants (an idle tenant's share
+//!   is donated, not wasted).
+//! * **byte quotas** — KV blocks and bus retention are charged per
+//!   tenant against [`TenantSpec::quota_bytes`]; a tenant at its quota is
+//!   deferred (admission backpressure) or preempted via the
+//!   drain-then-retire + partial-rollout persist path, so its overrun
+//!   never evicts a sibling's live state and no decoded tokens are lost.
+//!
+//! Tenant id 0 is the **default tenant**: a run configured with one
+//! tenant takes every bit-identical pre-tenancy code path (placement salt
+//! 0, empty dock tenant map, index-order handout).
+
+use anyhow::{ensure, Result};
+
+/// One tenant job's scheduling contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Stable tenant id (0 = the default tenant).
+    pub id: u32,
+    /// Relative claim weight (≥ 1): a weight-3 tenant receives 3× the
+    /// claims of a weight-1 tenant while both are backlogged.
+    pub weight: u32,
+    /// Shared-pool byte quota (KV blocks + bus retention). `None` means
+    /// uncapped — the single-tenant default.
+    pub quota_bytes: Option<u64>,
+    /// Per-tenant staleness window override (max iterations in flight);
+    /// `None` inherits the run-level window.
+    pub max_inflight_iters: Option<usize>,
+}
+
+impl TenantSpec {
+    /// The default tenant: weight 1, no quota, inherited staleness.
+    pub fn default_tenant() -> Self {
+        Self { id: 0, weight: 1, quota_bytes: None, max_inflight_iters: None }
+    }
+}
+
+/// The full tenant roster for a run. Always non-empty; a fresh set holds
+/// exactly the default tenant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSet {
+    specs: Vec<TenantSpec>,
+}
+
+impl Default for TenantSet {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+impl TenantSet {
+    /// The single-tenant roster (id 0, weight 1, uncapped) — the
+    /// configuration every pre-tenancy run is equivalent to.
+    pub fn single() -> Self {
+        Self { specs: vec![TenantSpec::default_tenant()] }
+    }
+
+    /// Build a roster of `n` tenants with ids `0..n`. `weights` and
+    /// `quota_mb` are positional per-tenant lists; short lists are padded
+    /// with the defaults (weight 1, uncapped) so `--tenant-weight 3`
+    /// alone weights tenant 0 and leaves the rest at 1.
+    pub fn from_config(n: usize, weights: &[u32], quota_mb: &[u64]) -> Result<Self> {
+        ensure!(n >= 1, "a run needs at least one tenant, got {n}");
+        ensure!(
+            weights.len() <= n,
+            "{} tenant weights for {n} tenants",
+            weights.len()
+        );
+        ensure!(
+            quota_mb.len() <= n,
+            "{} tenant quotas for {n} tenants",
+            quota_mb.len()
+        );
+        for (t, &w) in weights.iter().enumerate() {
+            ensure!(w >= 1, "tenant {t} weight must be >= 1, got {w}");
+        }
+        for (t, &q) in quota_mb.iter().enumerate() {
+            ensure!(q >= 1, "tenant {t} quota must be >= 1 MiB, got {q}");
+        }
+        let specs = (0..n)
+            .map(|t| TenantSpec {
+                id: t as u32,
+                weight: weights.get(t).copied().unwrap_or(1),
+                quota_bytes: quota_mb.get(t).map(|&mb| mb * (1 << 20)),
+                max_inflight_iters: None,
+            })
+            .collect();
+        Ok(Self { specs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a roster always holds at least the default tenant
+    }
+
+    /// More than one tenant shares the pools — the gate for every
+    /// tenancy-only code path (DRR handout, quota registry, placement
+    /// salt). Single-tenant runs must stay bit-identical to pre-tenancy.
+    pub fn is_multi(&self) -> bool {
+        self.specs.len() > 1
+    }
+
+    pub fn specs(&self) -> &[TenantSpec] {
+        &self.specs
+    }
+
+    pub fn spec(&self, id: u32) -> Option<&TenantSpec> {
+        self.specs.iter().find(|s| s.id == id)
+    }
+
+    /// Whether any tenant carries a byte quota — the gate for building
+    /// the run's [`crate::memory::TenantQuotas`] registry at all.
+    pub fn has_quotas(&self) -> bool {
+        self.specs.iter().any(|s| s.quota_bytes.is_some())
+    }
+
+    /// `(tenant, weight)` pairs for `SampleFlow::set_tenant_weights`.
+    pub fn weights(&self) -> Vec<(u32, u32)> {
+        self.specs.iter().map(|s| (s.id, s.weight)).collect()
+    }
+
+    /// Sum of the roster's weights (the denominator of expected claim
+    /// shares: tenant t's fair share is `weight_t / total_weight`).
+    pub fn total_weight(&self) -> u64 {
+        self.specs.iter().map(|s| s.weight as u64).sum()
+    }
+
+    /// The dataset slice: which tenant owns the sample at global
+    /// admission position `pos`. Tenants stripe the deterministic prompt
+    /// stream round-robin, so the i-th prompt of tenant t in a shared run
+    /// is exactly the i-th prompt tenant t would admit running isolated —
+    /// the re-keying the differential oracle relies on.
+    pub fn tenant_of_position(&self, pos: u64) -> u32 {
+        (pos % self.specs.len() as u64) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_roster_is_the_default_tenant() {
+        let t = TenantSet::single();
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_multi());
+        assert_eq!(t.specs()[0], TenantSpec::default_tenant());
+        assert_eq!(t.weights(), vec![(0, 1)]);
+        assert_eq!(t.total_weight(), 1);
+        for pos in 0..16 {
+            assert_eq!(t.tenant_of_position(pos), 0);
+        }
+    }
+
+    #[test]
+    fn from_config_pads_short_lists_with_defaults() {
+        let t = TenantSet::from_config(3, &[3], &[64]).unwrap();
+        assert_eq!(t.len(), 3);
+        assert!(t.is_multi());
+        assert_eq!(t.weights(), vec![(0, 3), (1, 1), (2, 1)]);
+        assert_eq!(t.total_weight(), 5);
+        assert_eq!(t.spec(0).unwrap().quota_bytes, Some(64 << 20));
+        assert_eq!(t.spec(1).unwrap().quota_bytes, None);
+        assert_eq!(t.spec(3), None);
+    }
+
+    #[test]
+    fn from_config_rejects_bad_rosters() {
+        assert!(TenantSet::from_config(0, &[], &[]).is_err(), "zero tenants");
+        assert!(TenantSet::from_config(1, &[1, 1], &[]).is_err(), "more weights than tenants");
+        assert!(TenantSet::from_config(1, &[], &[1, 1]).is_err(), "more quotas than tenants");
+        assert!(TenantSet::from_config(2, &[0], &[]).is_err(), "zero weight");
+        assert!(TenantSet::from_config(2, &[], &[0]).is_err(), "zero quota");
+    }
+
+    #[test]
+    fn position_striping_is_round_robin() {
+        let t = TenantSet::from_config(3, &[], &[]).unwrap();
+        let seq: Vec<u32> = (0..9).map(|p| t.tenant_of_position(p)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+}

@@ -25,6 +25,10 @@ use crate::metrics::FlowRecovery;
 pub struct SampleMeta {
     pub index: u64,
     pub group: u64,
+    /// tenant job id (0 = the default single-tenant job), replicated so
+    /// claim handouts can deficit-share across tenant jobs without
+    /// fetching payloads
+    pub tenant: u32,
     pub warehouse: usize,
     pub present: u8,
     pub prompt_len: u32,
@@ -36,10 +40,10 @@ pub struct SampleMeta {
 }
 
 impl SampleMeta {
-    /// Nominal wire size of a metadata record: 7 scalars × 4 bytes
-    /// (the paper's M∈[3,5] per-sample scalar count plus routing and the
-    /// behavior-policy version stamp).
-    pub const WIRE_BYTES: u64 = 28;
+    /// Nominal wire size of a metadata record: 8 scalars × 4 bytes
+    /// (the paper's M∈[3,5] per-sample scalar count plus routing, the
+    /// behavior-policy version stamp, and the tenant id).
+    pub const WIRE_BYTES: u64 = 32;
 
     fn has(&self, f: FieldKind) -> bool {
         self.present & f.bit() != 0
@@ -86,6 +90,12 @@ struct Inner {
     leases: LeaseTable,
     /// metadata traffic received (bytes), for Eq. (4) accounting
     meta_bytes: u64,
+    /// configured per-tenant scheduling weights (empty = every tenant at
+    /// weight 1, the single-tenant degenerate case)
+    tenant_weights: BTreeMap<u32, u32>,
+    /// samples handed out per tenant since the weights were set — the
+    /// deficit state of the weighted round robin
+    tenant_served: BTreeMap<u32, u64>,
 }
 
 impl Controller {
@@ -115,6 +125,25 @@ impl Controller {
     /// Register how many replica workers concurrently pull this stage.
     pub fn set_pullers(&self, n: usize) {
         self.pullers.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Register per-tenant scheduling weights for deficit-weighted claim
+    /// handouts. Resets the round robin's deficit state — weights are a
+    /// job-level reconfiguration, not a per-claim knob. Tenants absent
+    /// from the list (and every tenant when the list is empty) run at
+    /// weight 1, the single-tenant degenerate case.
+    pub fn set_tenant_weights(&self, weights: &[(u32, u32)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.tenant_weights = weights.iter().map(|&(t, w)| (t, w.max(1))).collect();
+        g.tenant_served.clear();
+    }
+
+    /// Samples handed out per tenant since the weights were last set —
+    /// the claim-share evidence behind `TenantReport` and the fairness
+    /// gates.
+    pub fn tenant_served(&self) -> Vec<(u32, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.tenant_served.iter().map(|(&t, &n)| (t, n)).collect()
     }
 
     /// Receive a metadata broadcast from a warehouse.
@@ -157,6 +186,14 @@ impl Controller {
     /// `wait_ready` each take a fair share of the ready queue instead
     /// of the first one draining it into a single oversized batch and
     /// starving its peers.
+    ///
+    /// With more than one tenant backlogged, the picks inside the cap
+    /// are **deficit-weighted round robin** across tenants: each pick
+    /// goes to the backlogged tenant with the smallest served/weight
+    /// ratio, so the long-run claim share tracks the configured weights
+    /// without ever reserving slots for an idle tenant (a zero-backlog
+    /// tenant is simply absent, donating its share). With one tenant
+    /// this degenerates to the historical index-order handout exactly.
     pub fn request(&self, max_n: usize) -> Vec<SampleMeta> {
         let now = self.clock.now();
         let pullers = self.pullers.load(Ordering::Relaxed).max(1);
@@ -167,13 +204,45 @@ impl Controller {
         } else {
             max_n
         };
-        let mut out = Vec::new();
+        // bucket the ready pool per tenant, index-ascending within each
+        // (the BTreeMap order the pre-tenancy handout used globally)
+        let mut queues: BTreeMap<u32, Vec<SampleMeta>> = BTreeMap::new();
         for (&idx, meta) in g.metas.iter() {
-            if out.len() >= cap {
-                break;
-            }
             if !g.leases.is_claimed(idx) {
-                out.push(*meta);
+                queues.entry(meta.tenant).or_default().push(*meta);
+            }
+        }
+        let mut out = Vec::new();
+        if queues.len() <= 1 {
+            if let Some((t, q)) = queues.into_iter().next() {
+                out.extend(q.into_iter().take(cap));
+                *g.tenant_served.entry(t).or_insert(0) += out.len() as u64;
+            }
+        } else {
+            // integer cross-multiplied ratio compare (no float drift);
+            // ties break to the lower tenant id for determinism
+            let mut cursors: BTreeMap<u32, usize> = BTreeMap::new();
+            while out.len() < cap {
+                let mut best: Option<(u32, u64, u64)> = None; // (tenant, served, weight)
+                for (&t, q) in queues.iter() {
+                    if cursors.get(&t).copied().unwrap_or(0) >= q.len() {
+                        continue;
+                    }
+                    let served = g.tenant_served.get(&t).copied().unwrap_or(0);
+                    let weight = g.tenant_weights.get(&t).copied().unwrap_or(1) as u64;
+                    let better = match best {
+                        None => true,
+                        Some((_, bs, bw)) => served * bw < bs * weight,
+                    };
+                    if better {
+                        best = Some((t, served, weight));
+                    }
+                }
+                let Some((t, _, _)) = best else { break };
+                let cur = cursors.entry(t).or_insert(0);
+                out.push(queues[&t][*cur]);
+                *cur += 1;
+                *g.tenant_served.entry(t).or_insert(0) += 1;
             }
         }
         for m in &out {
@@ -233,12 +302,17 @@ mod tests {
         SampleMeta {
             index,
             group: 0,
+            tenant: 0,
             warehouse: 0,
             present,
             prompt_len: 5,
             resp_len: 0,
             behavior_version: 0,
         }
+    }
+
+    fn tenant_meta(index: u64, tenant: u32) -> SampleMeta {
+        SampleMeta { tenant, ..meta(index, 0) }
     }
 
     #[test]
@@ -327,6 +401,57 @@ mod tests {
         // deregistering pullers restores the greedy handout
         c.set_pullers(1);
         assert_eq!(c.request(usize::MAX).len(), 3);
+    }
+
+    #[test]
+    fn weighted_round_robin_tracks_configured_weights() {
+        let c = Controller::new(Stage::Generation, 0);
+        c.set_tenant_weights(&[(0, 3), (1, 1)]);
+        for i in 0..24 {
+            c.on_broadcast(tenant_meta(i, (i % 2) as u32));
+        }
+        // 8 picks over tenants at 3:1 → 6 for tenant 0, 2 for tenant 1
+        let got = c.request(8);
+        let t0 = got.iter().filter(|m| m.tenant == 0).count();
+        assert_eq!((t0, got.len() - t0), (6, 2), "3:1 weights must yield a 3:1 split");
+        // deficit carries over: the next handout keeps the long-run ratio
+        let got = c.request(4);
+        let served = c.tenant_served();
+        let s0 = served.iter().find(|(t, _)| *t == 0).unwrap().1;
+        let s1 = served.iter().find(|(t, _)| *t == 1).unwrap().1;
+        assert_eq!(got.len(), 4);
+        assert_eq!((s0, s1), (9, 3), "cumulative shares must stay 3:1");
+    }
+
+    #[test]
+    fn zero_backlog_tenant_donates_its_share() {
+        let c = Controller::new(Stage::Generation, 0);
+        c.set_tenant_weights(&[(0, 1), (1, 9)]);
+        // tenant 1 (weight 9) has no backlog: tenant 0 takes everything
+        for i in 0..4 {
+            c.on_broadcast(tenant_meta(i, 0));
+        }
+        assert_eq!(c.request(10).len(), 4, "idle tenant must not stall siblings");
+    }
+
+    #[test]
+    fn weighted_handout_never_double_dispatches() {
+        let c = Controller::new(Stage::Generation, 0);
+        c.set_tenant_weights(&[(0, 2), (1, 1), (2, 1)]);
+        for i in 0..12 {
+            c.on_broadcast(tenant_meta(i, (i % 3) as u32));
+        }
+        let mut seen = std::collections::HashSet::new();
+        loop {
+            let got = c.request(3);
+            if got.is_empty() {
+                break;
+            }
+            for m in got {
+                assert!(seen.insert(m.index), "index {} dispatched twice", m.index);
+            }
+        }
+        assert_eq!(seen.len(), 12, "every sample claimed exactly once");
     }
 
     #[test]

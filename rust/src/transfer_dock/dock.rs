@@ -12,7 +12,7 @@
 //! pre-sharding dock bit-for-bit.
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -94,6 +94,13 @@ pub struct TransferDock {
     /// flow-wide logical clock the claim leases are measured against;
     /// advanced only via [`SampleFlow::tick_lease_clock`]
     clock: Arc<LeaseClock>,
+    /// tenant of each resident *non-default-tenant* sample. Placement is
+    /// tenant-aware ([`Placement::shard_of_t`]), but most routing sites
+    /// (retire / release / renew / writeback) receive only an index, so
+    /// the dock remembers the tenant from admission to retirement.
+    /// Default-tenant samples are never inserted — single-tenant runs
+    /// keep an empty map and the exact pre-tenancy routing.
+    tenant_of: Mutex<HashMap<u64, u32>>,
 }
 
 impl TransferDock {
@@ -176,6 +183,7 @@ impl TransferDock {
             shard_claims: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             shard_steals: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             clock,
+            tenant_of: Mutex::new(HashMap::new()),
         }
     }
 
@@ -199,8 +207,20 @@ impl TransferDock {
         &self.placement
     }
 
+    /// Tenant recorded at admission (0 for default-tenant samples and
+    /// for anything already retired — routing retired indices lands on
+    /// the tenant-0 policy, which is where pre-tenancy samples lived).
+    fn tenant_lookup(&self, index: u64) -> u32 {
+        *self.tenant_of.lock().unwrap().get(&index).unwrap_or(&0)
+    }
+
+    /// Owning controller shard of an index, tenant-aware.
+    fn shard_of_idx(&self, index: u64) -> usize {
+        self.placement.shard_of_t(index, self.tenant_lookup(index))
+    }
+
     fn warehouse_for(&self, index: u64) -> &Arc<Warehouse> {
-        &self.warehouses[self.placement.warehouse_of(index)]
+        &self.warehouses[self.placement.warehouse_of_t(index, self.tenant_lookup(index))]
     }
 
     fn link(&self, a: usize, b: usize) -> LinkClass {
@@ -216,7 +236,7 @@ impl TransferDock {
     /// C controller copies + the warehouse's own bookkeeping write).
     /// Callers must hold the owning shard's `meta_order` lock.
     fn broadcast(&self, from_node: usize, meta: SampleMeta) {
-        let shard = self.placement.shard_of(meta.index);
+        let shard = self.placement.shard_of_t(meta.index, meta.tenant);
         self.ledger.record(LinkClass::Local, SampleMeta::WIRE_BYTES); // warehouse bookkeeping
         for cs in self.controllers.values() {
             let c = &cs[shard];
@@ -229,6 +249,7 @@ impl TransferDock {
         SampleMeta {
             index: s.index,
             group: s.group,
+            tenant: s.tenant,
             warehouse,
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,
@@ -310,7 +331,7 @@ impl TransferDock {
     /// payload from its warehouse and retire the metadata at its owning
     /// shard everywhere.
     fn retire_inner(&self, index: u64) -> Option<Sample> {
-        let shard = self.placement.shard_of(index);
+        let shard = self.shard_of_idx(index);
         let _order = self.meta_order[shard].lock().unwrap();
         let w = self.warehouse_for(index).clone();
         let s = w.remove(index)?;
@@ -319,6 +340,10 @@ impl TransferDock {
             self.ledger.record(self.link(w.node, c.node), SampleMeta::WIRE_BYTES);
             c.on_retire(index);
         }
+        // the sample is gone from every table: drop its tenant routing
+        // entry (late stale writebacks route via tenant 0 and land on
+        // the Superseded path regardless of warehouse)
+        self.tenant_of.lock().unwrap().remove(&index);
         Some(s)
     }
 
@@ -365,12 +390,15 @@ impl SampleFlow for TransferDock {
         for mut s in samples {
             let index = self.next_index.fetch_add(1, Ordering::Relaxed);
             s.index = index;
-            let w = self.warehouse_for(index).clone();
+            if s.tenant != 0 {
+                self.tenant_of.lock().unwrap().insert(index, s.tenant);
+            }
+            let w = self.warehouses[self.placement.warehouse_of_t(index, s.tenant)].clone();
             // admission: payload moves from the ingest node (node of
             // warehouse 0, where the data loader runs) to the shard
             self.ledger
                 .record(self.link(ingest_node, w.node), s.payload_bytes() as u64);
-            by_shard[self.placement.shard_of(index)].push((w.id, self.meta_of(&s, w.id)));
+            by_shard[self.placement.shard_of_t(index, s.tenant)].push((w.id, self.meta_of(&s, w.id)));
             touched.push(w.id);
             w.put(s)?;
             indices.push(index);
@@ -437,7 +465,7 @@ impl SampleFlow for TransferDock {
             }
             let mut woke = vec![false; cs.len()];
             for &i in indices {
-                let shard = self.placement.shard_of(i);
+                let shard = self.shard_of_idx(i);
                 cs[shard].release(&[i]);
                 woke[shard] = true;
             }
@@ -479,7 +507,7 @@ impl SampleFlow for TransferDock {
                 return;
             }
             for &i in indices {
-                cs[self.placement.shard_of(i)].renew(&[i]);
+                cs[self.shard_of_idx(i)].renew(&[i]);
             }
         }
     }
@@ -513,6 +541,33 @@ impl SampleFlow for TransferDock {
                 c.set_pullers(n / k + usize::from(shard < n % k));
             }
         }
+    }
+
+    /// Thread the tenant weights to every controller shard of every
+    /// stage: the deficit round robin runs per shard (each shard owns an
+    /// independent slice of the ready pool), and the work-stealing path
+    /// applies the victim shard's weights — the same authority rule as
+    /// leases.
+    fn set_tenant_weights(&self, weights: &[(u32, u32)]) {
+        for cs in self.controllers.values() {
+            for c in cs {
+                c.set_tenant_weights(weights);
+            }
+        }
+    }
+
+    /// Claim share per tenant, summed over every stage and shard —
+    /// the numerator of the Jain fairness gate.
+    fn tenant_claims(&self) -> Vec<(u32, u64)> {
+        let mut acc: BTreeMap<u32, u64> = BTreeMap::new();
+        for cs in self.controllers.values() {
+            for c in cs {
+                for (t, n) in c.tenant_served() {
+                    *acc.entry(t).or_insert(0) += n;
+                }
+            }
+        }
+        acc.into_iter().collect()
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {
@@ -629,7 +684,8 @@ impl SampleFlow for TransferDock {
     }
 
     fn retire(&self, index: u64) -> Option<Sample> {
-        let shard = self.placement.shard_of(index);
+        // resolve the shard before retire_inner drops the tenant entry
+        let shard = self.shard_of_idx(index);
         let out = self.retire_inner(index);
         self.notify[shard].notify();
         out
@@ -707,7 +763,7 @@ impl TransferDock {
         // mask, so broadcast order is monotone per sample while payload
         // stores (above) run concurrently across stage threads — and
         // across shards, broadcasts never serialize at all
-        let shard = self.placement.shard_of(index);
+        let shard = self.shard_of_idx(index);
         let _order = self.meta_order[shard].lock().unwrap();
         let meta = w.fetch_meta_snapshot(index)?;
         self.broadcast(w.node, meta);

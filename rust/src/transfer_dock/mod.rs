@@ -115,6 +115,19 @@ pub trait SampleFlow: Send + Sync {
     /// their controller shards (the fair-share cap is **per shard**: a
     /// shard serving 2 of 8 pullers caps at ⌈its ready/2⌉).
     fn note_pullers(&self, _stage: Stage, _n: usize) {}
+    /// Register per-tenant scheduling weights: claim handouts become
+    /// deficit-weighted round robin across backlogged tenants, so each
+    /// tenant's long-run claim share tracks its weight without reserving
+    /// slots for idle tenants. Flows without tenancy support ignore it —
+    /// every tenant then runs at weight 1, which is also the behavior
+    /// for tenants absent from the list.
+    fn set_tenant_weights(&self, _weights: &[(u32, u32)]) {}
+    /// Samples handed out per tenant since the weights were set — the
+    /// claim-share evidence behind `TenantReport` and the Jain fairness
+    /// gate. Empty for flows without tenancy support.
+    fn tenant_claims(&self) -> Vec<(u32, u64)> {
+        Vec::new()
+    }
     /// Fetch full payloads for the given metadata (records comm bytes).
     fn fetch(&self, requester_node: usize, metas: &[SampleMeta]) -> Result<Vec<Sample>>;
     /// Lease-tolerant fetch for stage workers: metas whose sample is no

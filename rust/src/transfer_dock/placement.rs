@@ -67,13 +67,30 @@ impl Placement {
         x ^ (x >> 33)
     }
 
+    /// Per-tenant salt folded into the home-shard mix. Zero for the
+    /// default tenant — tenant-0 routing is bit-identical to the
+    /// pre-tenancy policy, which is what pins single-tenant runs to the
+    /// historical retired maps. Non-zero tenants get a full-width odd
+    /// multiplier (golden-ratio constant) so one tenant's sequential
+    /// admission burst cannot pile onto the shard sequence another
+    /// tenant's burst landed on.
+    fn tenant_salt(tenant: u32) -> u64 {
+        (tenant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
     /// Which controller shard owns this sample. Stable for the sample's
     /// whole lifetime; 0 for every index when K = 1.
     pub fn shard_of(&self, index: u64) -> usize {
+        self.shard_of_t(index, 0)
+    }
+
+    /// Tenant-aware shard ownership: the tenant id is hashed into the
+    /// splitmix64 input, decorrelating tenants' shard sequences.
+    pub fn shard_of_t(&self, index: u64, tenant: u32) -> usize {
         if self.shards <= 1 {
             0
         } else {
-            (Self::mix(index) % self.shards as u64) as usize
+            (Self::mix(index ^ Self::tenant_salt(tenant)) % self.shards as u64) as usize
         }
     }
 
@@ -81,8 +98,16 @@ impl Placement {
     /// co-located warehouse when K > 1 and one exists, else the modulo
     /// policy (and always the modulo policy at K = 1).
     pub fn warehouse_of(&self, index: u64) -> usize {
+        self.warehouse_of_t(index, 0)
+    }
+
+    /// Tenant-aware warehouse placement: affinity follows the
+    /// tenant-aware owning shard; the modulo fallback stays a pure
+    /// function of the index (payload striping need not decorrelate —
+    /// only the controller home must).
+    pub fn warehouse_of_t(&self, index: u64, tenant: u32) -> usize {
         if self.shards > 1 {
-            if let Some(w) = self.affinity[self.shard_of(index)] {
+            if let Some(w) = self.affinity[self.shard_of_t(index, tenant)] {
                 return w;
             }
         }
@@ -149,6 +174,37 @@ mod tests {
         let p = Placement::sharded(4, vec![None, None, None]);
         for i in 0..64u64 {
             assert_eq!(p.warehouse_of(i), (i % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn tenant_zero_routing_is_bit_identical_to_tenant_blind() {
+        // the pre-tenancy differential pin: default-tenant samples must
+        // route exactly as every sample did before tenancy existed
+        let p = Placement::sharded(4, vec![Some(0), Some(1), None, Some(3)]);
+        for i in 0..256u64 {
+            assert_eq!(p.shard_of_t(i, 0), p.shard_of(i));
+            assert_eq!(p.warehouse_of_t(i, 0), p.warehouse_of(i));
+        }
+    }
+
+    #[test]
+    fn tenants_decorrelate_the_shard_sequence() {
+        // two tenants admitting the same index burst must not land on
+        // the same shard sequence — that is the tenant-blind pileup the
+        // salt exists to break
+        let p = Placement::sharded(4, vec![None; 4]);
+        let same = (0..256u64).filter(|&i| p.shard_of_t(i, 1) == p.shard_of_t(i, 2)).count();
+        assert!(same < 128, "tenant shard sequences barely differ: {same}/256 identical");
+        // and each tenant's own sequence still covers every shard
+        for t in [1u32, 2, 3] {
+            let mut counts = vec![0usize; 4];
+            for i in 0..256u64 {
+                counts[p.shard_of_t(i, t)] += 1;
+            }
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(c > 32, "tenant {t} starves shard {s}: {counts:?}");
+            }
         }
     }
 }

@@ -50,6 +50,12 @@ struct Inner {
     admitted_bytes: u64,
     retired_bytes: u64,
     superseded: u64,
+    /// per-tenant scheduling weights (empty = tenancy off, the
+    /// single-tenant degenerate case with the historical scan semantics)
+    tenant_weights: BTreeMap<u32, u32>,
+    /// claims handed out per tenant — the weighted round robin's deficit
+    /// state, shared across stages (the central store has one queue)
+    tenant_served: BTreeMap<u32, u64>,
 }
 
 impl Inner {
@@ -88,6 +94,7 @@ impl ReplayBuffer {
         SampleMeta {
             index: s.index,
             group: s.group,
+            tenant: s.tenant,
             warehouse: 0,
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,
@@ -106,29 +113,72 @@ impl ReplayBuffer {
         let now = self.clock.now();
         let mut g = self.inner.lock().unwrap();
         let pullers = g.pullers.get(&stage).copied().unwrap_or(1);
+        // tenancy forces a full candidate scan (the deficit round robin
+        // needs every backlogged tenant's queue); with weights unset the
+        // historical early-break scan — and its scanned-count accounting
+        // — is preserved exactly
+        let multi_tenant = !g.tenant_weights.is_empty();
         let mut out = Vec::new();
         let mut scanned = 0u64;
-        let mut picked = Vec::new();
         for (&idx, s) in g.samples.iter() {
             scanned += 1;
-            if pullers <= 1 && out.len() >= max_n {
+            if !multi_tenant && pullers <= 1 && out.len() >= max_n {
                 break;
             }
             let meta = Self::meta_of(s);
             if meta.ready_for(stage) && !g.leases.get(&stage).is_some_and(|t| t.is_claimed(idx)) {
                 out.push(meta);
-                picked.push(idx);
             }
         }
-        if pullers > 1 {
-            let cap = max_n.min(out.len().div_ceil(pullers).max(1));
+        let cap = if pullers > 1 {
+            max_n.min(out.len().div_ceil(pullers).max(1))
+        } else {
+            max_n
+        };
+        let inner = &mut *g;
+        if multi_tenant && out.len() > cap {
+            // deficit-weighted round robin over the candidates: each pick
+            // goes to the backlogged tenant with the smallest
+            // served/weight ratio (integer cross-multiplication, ties to
+            // the lower tenant id) — identical policy to the dock
+            // controller's handout
+            let mut queues: BTreeMap<u32, Vec<SampleMeta>> = BTreeMap::new();
+            for m in out.drain(..) {
+                queues.entry(m.tenant).or_default().push(m);
+            }
+            let mut cursors: BTreeMap<u32, usize> = BTreeMap::new();
+            while out.len() < cap {
+                let mut best: Option<(u32, u64, u64)> = None;
+                for (&t, q) in queues.iter() {
+                    if cursors.get(&t).copied().unwrap_or(0) >= q.len() {
+                        continue;
+                    }
+                    let served = inner.tenant_served.get(&t).copied().unwrap_or(0);
+                    let weight = inner.tenant_weights.get(&t).copied().unwrap_or(1) as u64;
+                    let better = match best {
+                        None => true,
+                        Some((_, bs, bw)) => served * bw < bs * weight,
+                    };
+                    if better {
+                        best = Some((t, served, weight));
+                    }
+                }
+                let Some((t, _, _)) = best else { break };
+                let cur = cursors.entry(t).or_insert(0);
+                out.push(queues[&t][*cur]);
+                *cur += 1;
+                *inner.tenant_served.entry(t).or_insert(0) += 1;
+            }
+        } else {
             out.truncate(cap);
-            picked.truncate(cap);
+            for m in &out {
+                *inner.tenant_served.entry(m.tenant).or_insert(0) += 1;
+            }
         }
         let ticks = self.lease_ticks;
         let table = g.lease(stage);
-        for idx in picked {
-            table.claim(idx, now, ticks);
+        for m in &out {
+            table.claim(m.index, now, ticks);
         }
         (out, scanned)
     }
@@ -364,6 +414,17 @@ impl SampleFlow for ReplayBuffer {
 
     fn note_pullers(&self, stage: Stage, n: usize) {
         self.inner.lock().unwrap().pullers.insert(stage, n.max(1));
+    }
+
+    fn set_tenant_weights(&self, weights: &[(u32, u32)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.tenant_weights = weights.iter().map(|&(t, w)| (t, w.max(1))).collect();
+        g.tenant_served.clear();
+    }
+
+    fn tenant_claims(&self) -> Vec<(u32, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.tenant_served.iter().map(|(&t, &n)| (t, n)).collect()
     }
 
     fn request_ready(&self, stage: Stage, max_n: usize) -> Result<Vec<SampleMeta>> {

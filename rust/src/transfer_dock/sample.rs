@@ -176,6 +176,12 @@ pub struct Sample {
     pub index: u64,
     /// group id: samples of the same prompt share it (GRPO group)
     pub group: u64,
+    /// tenant job this sample belongs to (0 = the default single-tenant
+    /// job). Assigned at admission and immutable for the sample's
+    /// lifetime; routed on every metadata broadcast so claim handouts
+    /// can be weighted-fair across tenants and memory charges can be
+    /// attributed per tenant.
+    pub tenant: u32,
     pub prompt_len: usize,
     pub resp_len: usize,
     /// weight version active when this sample's response was generated
@@ -206,6 +212,7 @@ impl Sample {
         Self {
             index,
             group,
+            tenant: 0,
             prompt_len: prompt_text.len() + 1, // + BOS
             resp_len: 0,
             behavior_version: 0,
@@ -216,6 +223,12 @@ impl Sample {
             segments: Vec::new(),
             fields: BTreeMap::new(),
         }
+    }
+
+    /// Builder-style tenant assignment (admission-time only).
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
     }
 
     pub fn put(&mut self, kind: FieldKind, t: Tensor) {
@@ -247,10 +260,10 @@ impl Sample {
     }
 
     /// Scalar metadata bytes (the `M` term of Eq. 1): index, group,
-    /// prompt_len, resp_len, answer, behavior_version — 6 scalars ×
-    /// 4 bytes nominal.
+    /// tenant, prompt_len, resp_len, answer, behavior_version —
+    /// 7 scalars × 4 bytes nominal.
     pub fn scalar_bytes(&self) -> usize {
-        6 * 4
+        7 * 4
     }
 
     /// Which stages still need to produce data for this sample.

@@ -241,6 +241,7 @@ impl Warehouse {
         Ok(super::controller::SampleMeta {
             index: s.index,
             group: s.group,
+            tenant: s.tenant,
             warehouse: self.id,
             present: s.present_mask(),
             prompt_len: s.prompt_len as u32,

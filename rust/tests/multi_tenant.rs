@@ -1,0 +1,273 @@
+//! Multi-tenant differential oracle (`--tenants`, `--tenant-weight`,
+//! `--tenant-quota-mb`).
+//!
+//! The tentpole invariant: for ANY weight/quota schedule, the union of
+//! per-tenant retired maps of a shared run equals the maps of the same
+//! tenants run isolated (`tenant_filter` admits only one tenant's groups
+//! while consuming the identical task stream). Weighted-fair handout and
+//! quota backpressure are *scheduling* choices — they may reorder
+//! admission and claims, never change what gets trained. Stamps are
+//! compared too: a re-weighted or deferred sample must retire with the
+//! same behavior-version stamp.
+//!
+//! Sample indices are assigned in admission order, so they legitimately
+//! differ between shared and isolated runs — the oracle compares
+//! group-keyed views `group → (members, prompt, stamp)` per tenant.
+//!
+//! Composed with chaos kills/stalls, K ∈ {1, 4} controller shards (the
+//! CI `DOCK_SHARDS` matrix), streaming generation, and resumable partial
+//! rollouts. Fixed seeds by default; `CHAOS_RANDOM_SEEDS=1` (the
+//! scheduled CI job) appends time-derived seeds, printing a
+//! `[multi-tenant]` marker line the workflow greps for.
+
+use std::collections::BTreeMap;
+
+use mindspeed_rl::sim::chaos::{run_chaos, ChaosConfig, ChaosOutcome};
+use mindspeed_rl::trainers::faults::FaultPlan;
+
+fn base_cfg(seed: u64) -> ChaosConfig {
+    // the CI chaos jobs run a DOCK_SHARDS ∈ {1, 4} matrix: the tenant
+    // oracle must hold unchanged at any controller-shard count
+    let dock_shards: usize = std::env::var("DOCK_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    ChaosConfig {
+        iterations: 4,
+        prompts_per_iter: 4,
+        group_size: 2,
+        seed,
+        tenants: 2,
+        dock_shards: dock_shards.max(1),
+        steal_threshold: if dock_shards > 1 { 1 } else { 0 },
+        ..Default::default()
+    }
+}
+
+fn seeds() -> Vec<u64> {
+    let mut seeds = vec![5, 42];
+    if std::env::var("CHAOS_RANDOM_SEEDS").as_deref() == Ok("1") {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64;
+        for i in 0..2u64 {
+            seeds.push(t ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        eprintln!("[multi-tenant] randomized-seed mode: {seeds:?}");
+    }
+    seeds
+}
+
+/// Per-tenant view of a retired map: group → (members, prompt, stamp),
+/// asserting along the way that every member of a group agrees on the
+/// prompt and the stamp (a group is one GRPO advantage-normalization
+/// unit — tenancy must never split or mix one).
+fn tenant_view(
+    out: &ChaosOutcome,
+    cfg: &ChaosConfig,
+    tenant: u32,
+) -> BTreeMap<u64, (usize, String, u64)> {
+    let mut view: BTreeMap<u64, (usize, String, u64)> = BTreeMap::new();
+    for (group, prompt, stamp) in out.retired.values() {
+        if cfg.tenant_of_group(*group) != tenant {
+            continue;
+        }
+        let e = view.entry(*group).or_insert_with(|| (0, prompt.clone(), *stamp));
+        e.0 += 1;
+        assert_eq!(&e.1, prompt, "group {group}: members disagree on the prompt");
+        assert_eq!(e.2, *stamp, "group {group}: members disagree on the stamp");
+    }
+    view
+}
+
+/// The oracle proper: the shared run is lossless, and each tenant's
+/// group-keyed slice of it equals a fault-free isolated run that admits
+/// only that tenant's groups. Weights/quotas/faults are stripped from
+/// the isolated runs — they are the clean-room reference.
+fn assert_tenant_oracle(name: &str, cfg: &ChaosConfig, out: &ChaosOutcome) {
+    assert!(
+        out.lossless(cfg),
+        "{name}: loss — retired {}/{} resident {} recovery {:?}",
+        out.retired.len(),
+        cfg.total_samples(),
+        out.resident_after,
+        out.recovery
+    );
+    let r = &out.recovery;
+    assert!(r.consistent(), "{name}: recovery accounting inconsistent: {r:?}");
+    assert_eq!(r.reclaimed, r.attempt_bumps, "{name}: {r:?}");
+    for t in 0..cfg.tenants as u32 {
+        let iso_cfg = ChaosConfig {
+            tenant_filter: Some(t),
+            lease_ticks: 256,
+            plan: FaultPlan::default(),
+            ..cfg.clone()
+        };
+        let iso = run_chaos(&iso_cfg).unwrap();
+        assert!(
+            iso.lossless(&iso_cfg),
+            "{name}: isolated run for tenant {t} lost samples: {:?}",
+            iso.recovery
+        );
+        assert_eq!(
+            tenant_view(out, cfg, t),
+            tenant_view(&iso, &iso_cfg, t),
+            "{name}: tenant {t}'s shared-run slice diverged from its isolated run \
+             (set, counts, prompts, or stamps)"
+        );
+    }
+}
+
+// ----------------------------------------------------- schedule sweeps
+
+/// Any weight schedule, fault-free: weighted-fair arbitration reorders
+/// claims, never the per-tenant outcome. Includes a 3-tenant roster —
+/// striping and DRR must compose beyond the pairwise case.
+#[test]
+fn any_weight_schedule_matches_isolated_slices() {
+    for seed in seeds() {
+        for (tenants, weights) in [
+            (2usize, vec![]),
+            (2, vec![3, 1]),
+            (2, vec![7, 1]),
+            (3, vec![1, 2, 3]),
+        ] {
+            let cfg = ChaosConfig {
+                lease_ticks: 256,
+                workers_per_stage: 2,
+                tenants,
+                tenant_weights: weights.clone(),
+                ..base_cfg(seed)
+            };
+            let out = run_chaos(&cfg).unwrap();
+            assert_tenant_oracle(&format!("weights={weights:?} seed={seed}"), &cfg, &out);
+            assert_eq!(
+                out.recovery.reclaimed, 0,
+                "weights={weights:?} seed={seed}: fault-free run must not reclaim"
+            );
+        }
+    }
+}
+
+/// Any quota schedule: backpressure parks an over-quota tenant's
+/// admissions in its FIFO and re-admits as retires uncharge — deferrals
+/// must actually fire, siblings must not lose anything, and the views
+/// still match the (uncapped) isolated runs.
+#[test]
+fn any_quota_schedule_only_reorders_admission() {
+    for (quota_mb, must_defer) in [(vec![1], true), (vec![1, 1], true), (vec![64], false)] {
+        let cfg = ChaosConfig {
+            iterations: 8,
+            // a window wide enough to outrun a 1 MiB (16-sample) quota
+            max_inflight_iters: 8,
+            lease_ticks: 256,
+            tenant_weights: vec![3, 1],
+            tenant_quota_mb: quota_mb.clone(),
+            ..base_cfg(42)
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert_tenant_oracle(&format!("quota={quota_mb:?}"), &cfg, &out);
+        if must_defer {
+            assert!(
+                out.tenant_deferrals > 0,
+                "quota={quota_mb:?}: a 1 MiB cap under an 8-iteration window must defer"
+            );
+        } else {
+            assert_eq!(
+                out.tenant_deferrals, 0,
+                "quota={quota_mb:?}: a 64 MiB cap must never defer this workload"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ chaos composed
+
+/// Worker kills under a weighted schedule: reclaimed claims redispatch
+/// across tenants without mixing them — the per-tenant views converge
+/// to the isolated runs.
+#[test]
+fn kills_compose_with_weighted_tenants() {
+    let cfg = ChaosConfig {
+        iterations: 5,
+        lease_ticks: 4,
+        tenant_weights: vec![3, 1],
+        plan: FaultPlan { seed: 9, kill_rate: 0.4, ..Default::default() },
+        ..base_cfg(42)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    assert_tenant_oracle("kills w=3:1", &cfg, &out);
+    assert!(out.recovery.kills > 0, "plan must fire: {:?}", out.recovery);
+    assert!(out.recovery.reclaimed > 0, "kills must surface as reclaims");
+}
+
+/// Stalls with twin replicas + quota backpressure: the zombie's late
+/// writebacks drop as superseded, the quota FIFO re-admits in order,
+/// and the tenant views are unchanged.
+#[test]
+fn stalls_and_quotas_compose() {
+    let cfg = ChaosConfig {
+        iterations: 8,
+        max_inflight_iters: 8,
+        workers_per_stage: 2,
+        lease_ticks: 3,
+        tenant_quota_mb: vec![1, 1],
+        plan: FaultPlan { seed: 21, stall_rate: 0.4, stall_ticks: 10, ..Default::default() },
+        ..base_cfg(11)
+    };
+    let out = run_chaos(&cfg).unwrap();
+    assert_tenant_oracle("stalls+quotas", &cfg, &out);
+    assert!(out.recovery.stalls > 0, "plan must fire: {:?}", out.recovery);
+    assert!(out.tenant_deferrals > 0, "quota must bite under the wide window");
+}
+
+/// Streaming generation + partial rollouts + kills under a weighted
+/// quota'd schedule: killed sequences persist tenant-tagged prefixes,
+/// resume (possibly under a different claim), and each tenant's retired
+/// view — stamps included — still equals its isolated run.
+#[test]
+fn streaming_partial_rollouts_survive_kills_per_tenant() {
+    for k in [1usize, 4] {
+        let cfg = ChaosConfig {
+            lease_ticks: 4,
+            gen_streaming: true,
+            partial_rollouts: true,
+            tenant_weights: vec![3, 1],
+            dock_shards: k,
+            steal_threshold: if k > 1 { 1 } else { 0 },
+            plan: FaultPlan { seed: 0xc4a0_5, kill_rate: 0.3, ..Default::default() },
+            ..base_cfg(3)
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert_tenant_oracle(&format!("streaming+partial K={k}"), &cfg, &out);
+    }
+}
+
+// -------------------------------------------------- randomized matrix
+
+/// The fuzz hook the scheduled CI job leans on: mixed kills + stalls
+/// over weighted, quota'd, streaming multi-tenant runs across the seed
+/// list (fixed, plus time-derived under `CHAOS_RANDOM_SEEDS=1`).
+#[test]
+fn mixed_fault_sweep_holds_the_tenant_oracle_across_seeds() {
+    for seed in seeds() {
+        let cfg = ChaosConfig {
+            iterations: 5,
+            workers_per_stage: 2,
+            gen_streaming: true,
+            partial_rollouts: true,
+            tenant_weights: vec![2, 1],
+            plan: FaultPlan {
+                seed: seed ^ 0xdead_beef,
+                kill_rate: 0.2,
+                stall_rate: 0.2,
+                stall_ticks: 8,
+                ..Default::default()
+            },
+            ..base_cfg(seed)
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert_tenant_oracle(&format!("mixed seed={seed}"), &cfg, &out);
+    }
+}

@@ -738,3 +738,139 @@ fn per_shard_fair_share_cap_holds() {
     }
     assert_eq!(seen.len(), idx.len(), "every sample claimed exactly once");
 }
+
+// ------------------------------------------------------------ tenancy
+
+/// `n` samples striped round-robin over `tenants` tenant jobs by group
+/// (two samples per group, like the GRPO workload).
+fn tenant_prompts(n: usize, tenants: u32) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let group = i as u64 / 2;
+            Sample::new_prompt(u64::MAX, group, format!("{i}+1="), i as i64 + 1)
+                .with_tenant((group % tenants as u64) as u32)
+        })
+        .collect()
+}
+
+/// Weighted-fair handout: with both tenants backlogged at weights 3:1,
+/// 16 single-sample claims split 12/4 — deficit-weighted round robin
+/// tracks the ratio within one claim batch of slack. Holds identically
+/// for both flow implementations.
+#[test]
+fn weighted_tenants_split_claims_three_to_one() {
+    for (name, flow) in flows() {
+        flow.set_tenant_weights(&[(0, 3), (1, 1)]);
+        flow.put_samples(tenant_prompts(32, 2)).unwrap();
+        let mut counts = (0i64, 0i64);
+        for _ in 0..16 {
+            for m in flow.request_ready(Stage::Generation, 1).unwrap() {
+                match m.tenant {
+                    0 => counts.0 += 1,
+                    _ => counts.1 += 1,
+                }
+            }
+        }
+        assert_eq!(counts.0 + counts.1, 16, "{name}: backlogged pool must fill every claim");
+        assert!(
+            (counts.0 - 12).abs() <= 2,
+            "{name}: 3:1 weights must hand out ~12/4, got {}/{}",
+            counts.0,
+            counts.1
+        );
+        // the ledger the reports read agrees with what we observed
+        let claims = flow.tenant_claims();
+        let served = |t: u32| claims.iter().find(|(id, _)| *id == t).map_or(0, |(_, c)| *c);
+        assert_eq!(served(0), counts.0 as u64, "{name}");
+        assert_eq!(served(1), counts.1 as u64, "{name}");
+    }
+}
+
+/// Work conservation: a tenant with zero backlog donates its share — the
+/// backlogged tenant takes the whole pool instead of idling behind a
+/// reservation, and arbitration resumes the moment the idle tenant's
+/// work arrives.
+#[test]
+fn zero_backlog_tenant_donates_its_share() {
+    for (name, flow) in flows() {
+        flow.set_tenant_weights(&[(0, 3), (1, 1)]);
+        let all = tenant_prompts(32, 2);
+        // only tenant 1 has work: its claims must not be throttled to a
+        // 1-in-4 share by the absent heavyweight
+        let t1_first: Vec<Sample> =
+            all.iter().filter(|s| s.tenant == 1).take(4).cloned().collect();
+        flow.put_samples(t1_first).unwrap();
+        let metas = flow.request_ready(Stage::Generation, 4).unwrap();
+        assert_eq!(metas.len(), 4, "{name}: the idle tenant's share must be donated");
+        assert!(metas.iter().all(|m| m.tenant == 1), "{name}");
+        // the heavyweight's backlog arrives (alongside more tenant-1
+        // work): the donation was a deficit, not a forfeit — tenant 0
+        // catches up before tenant 1 is served again
+        let rest: Vec<Sample> = all
+            .into_iter()
+            .filter(|s| s.tenant == 0 || s.group >= 8)
+            .collect();
+        flow.put_samples(rest).unwrap();
+        for i in 0..4 {
+            let m = flow.request_ready(Stage::Generation, 1).unwrap();
+            assert_eq!(m.len(), 1, "{name}");
+            assert_eq!(
+                m[0].tenant, 0,
+                "{name}: claim {i} after the donation must repay tenant 0's deficit"
+            );
+        }
+    }
+}
+
+/// Quota exhaustion is per-tenant: the capped tenant's admissions defer
+/// (strict `try_charge` refuses, nothing is charged), while the other
+/// tenant's admission and `try_claim` path is completely unaffected;
+/// uncharging at retire re-opens the capped tenant.
+#[test]
+fn quota_exhaustion_defers_only_the_capped_tenant() {
+    use mindspeed_rl::memory::TenantQuotas;
+    const BYTES: u64 = 512;
+    for (name, flow) in flows() {
+        let quotas = TenantQuotas::new();
+        quotas.set_quota(0, Some(2 * BYTES)); // tenant 0: two samples resident
+        let mut deferred: Vec<Sample> = Vec::new();
+        for s in tenant_prompts(16, 2) {
+            // the driver's admission gate: strict charge, defer on refusal
+            if quotas.try_charge(s.tenant, BYTES) {
+                flow.put_samples(vec![s]).unwrap();
+            } else {
+                deferred.push(s);
+            }
+        }
+        // tenant 0 capped at 2; tenant 1 (uncapped) fully admitted
+        assert_eq!(deferred.len(), 6, "{name}: exactly tenant 0's overflow defers");
+        assert!(deferred.iter().all(|s| s.tenant == 0), "{name}");
+        let metas = flow.try_claim(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(metas.len(), 10, "{name}: sibling admission must be unaffected");
+        assert_eq!(metas.iter().filter(|m| m.tenant == 1).count(), 8, "{name}");
+        assert_eq!(metas.iter().filter(|m| m.tenant == 0).count(), 2, "{name}");
+        // two tenant-0 retires uncharge; the freed quota re-admits
+        // exactly two deferred samples
+        quotas.uncharge(0, BYTES);
+        quotas.uncharge(0, BYTES);
+        let mut readmitted = 0;
+        deferred.retain(|s| {
+            if quotas.try_charge(s.tenant, BYTES) {
+                flow.put_samples(vec![s.clone()]).unwrap();
+                readmitted += 1;
+                false
+            } else {
+                true
+            }
+        });
+        assert_eq!(readmitted, 2, "{name}: freed quota re-opens the tenant");
+        assert_eq!(deferred.len(), 4, "{name}");
+        let more = flow.try_claim(Stage::Generation, usize::MAX).unwrap();
+        assert_eq!(more.len(), 2, "{name}");
+        assert!(more.iter().all(|m| m.tenant == 0), "{name}");
+        let snap = quotas.snapshot();
+        let t0 = &snap.iter().find(|(t, _)| *t == 0).unwrap().1;
+        assert_eq!(t0.deferrals, 6 + 4, "{name}: every refusal counts a deferral");
+        assert_eq!(t0.high_water, 2 * BYTES, "{name}");
+    }
+}
